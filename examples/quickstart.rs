@@ -1,0 +1,71 @@
+//! Quickstart: the smallest complete tour of the library.
+//!
+//! 1. load the AOT artifact bundle via PJRT and run the pre-compiled
+//!    bf16 GEMM (Layer 1+2, built once by `make artifacts`);
+//! 2. run the same problem through the functional executor (real bytes
+//!    through the BD transform chains) and the reference;
+//! 3. simulate its wall-clock on both NPU generations.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use xdna_gemm::arch::{balanced_config, Generation};
+use xdna_gemm::dtype::{Bf16, Layout, Precision};
+use xdna_gemm::gemm::refimpl;
+use xdna_gemm::mem::Matrix;
+use xdna_gemm::runtime::Runtime;
+use xdna_gemm::sim::{simulate_gemm, BdMode};
+
+fn main() -> Result<()> {
+    // --- 1. PJRT: execute the AOT-compiled JAX/Pallas GEMM ---------------
+    let mut rt = Runtime::load("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let meta = rt.meta("quickstart_bf16").expect("run `make artifacts`").clone();
+    let (m, k, n) = (meta.m, meta.k, meta.n);
+    println!("artifact quickstart_bf16: {m}x{k}x{n} bf16 GEMM");
+
+    let mut a = Matrix::zeroed(m, k, 2, Layout::RowMajor)?;
+    let mut b = Matrix::zeroed(k, n, 2, Layout::RowMajor)?;
+    refimpl::fill_random(&mut a, Precision::Bf16, 1);
+    refimpl::fill_random(&mut b, Precision::Bf16, 2);
+    let af: Vec<f32> = (0..m)
+        .flat_map(|i| (0..k).map(move |j| (i, j)))
+        .map(|(i, j)| a.get_bf16(i, j).to_f32())
+        .collect();
+    let bf: Vec<f32> = (0..k)
+        .flat_map(|i| (0..n).map(move |j| (i, j)))
+        .map(|(i, j)| b.get_bf16(i, j).to_f32())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let out = rt.execute_f32("quickstart_bf16", &[&af, &bf])?;
+    println!("PJRT execute: {:.1} ms (compile included on first call)", t0.elapsed().as_secs_f64() * 1e3);
+
+    // --- 2. cross-check: reference + worst-case error --------------------
+    let want = refimpl::ref_gemm(&a, &b, Precision::Bf16)?;
+    let mut max_rel = 0f32;
+    for i in 0..m {
+        for j in 0..n {
+            let w = want.get_bf16(i, j).to_f32();
+            let g = Bf16::from_f32(out[i * n + j]).to_f32();
+            max_rel = max_rel.max((g - w).abs() / w.abs().max(1.0));
+        }
+    }
+    println!("max relative error vs reference: {max_rel:.2e} (bf16 1-ulp ≈ 7.8e-3)");
+    assert!(max_rel < 2.0f32.powi(-6));
+
+    // --- 3. simulate the same GEMM on both NPU generations ---------------
+    for gen in Generation::ALL {
+        let cfg = balanced_config(gen, Precision::Bf16);
+        let r = simulate_gemm(&cfg, m, k, n, BdMode::Overlapped);
+        println!(
+            "{gen}: design {} → {:.3} ms, {:.2} TOPS ({:?}-bound)",
+            cfg.kernel.label(),
+            r.t_total * 1e3,
+            r.tops,
+            r.bound
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,187 @@
+"""AOT pipeline: lower the Layer-2 model to HLO *text* artifacts + manifest.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the Rust `xla` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Interface-dtype convention (what the Rust runtime feeds/receives):
+
+* int8 precisions: A/B as s8 literals, accumulator in/out as s32 — all
+  natively supported by the `xla` crate.
+* bf16: the Rust side has no bf16 literal type, so artifact boundaries are
+  f32 and the graph converts f32 -> bf16 at entry (and accumulates in f32),
+  preserving bf16 *compute* numerics while keeping marshalling simple.
+
+Artifacts (one HLO module each) per (generation, precision, B layout):
+`step_<gen>_<prec>_<layout>` — the native GEMM step (Sec. 4.2.2) the
+coordinator chains at runtime. Plus `quickstart_bf16` (one full small GEMM)
+and `mlp_bf16` (two chained GEMMs), used by the examples.
+
+Run via `make artifacts`; a no-op when outputs are newer than inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import BALANCED, GENERATIONS, PRECISIONS
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _wrap_bf16(fn, n_inputs):
+    """f32 interface around a bf16-computing function."""
+
+    def wrapped(*args):
+        conv = [a.astype(jnp.bfloat16) for a in args[:n_inputs]]
+        rest = [a for a in args[n_inputs:]]  # accumulators stay f32
+        out = fn(*conv, *rest)
+        return out.astype(jnp.float32)
+
+    return wrapped
+
+
+def native_step_entry(gen: str, prec: str, b_col_major: bool):
+    """Build (fn, arg_specs, io description) for one native-step artifact."""
+    cfg = BALANCED[(gen, prec)]
+    step = model.make_native_step(cfg, b_col_major)
+    m, k, n = cfg.native_m, cfg.k_mt, cfg.native_n
+    b_shape = (n, k) if b_col_major else (k, n)
+    adt = ref.acc_dtype(prec)
+
+    if prec == "bf16":
+        fn = _wrap_bf16(lambda a, b, acc: step(a, b, acc), 2)
+        specs = [_spec((m, k), jnp.float32), _spec(b_shape, jnp.float32),
+                 _spec((m, n), jnp.float32)]
+        iface = ["f32", "f32", "f32"]
+        out = "f32"
+    else:
+        fn = step
+        specs = [_spec((m, k), jnp.int8), _spec(b_shape, jnp.int8),
+                 _spec((m, n), adt)]
+        iface = ["s8", "s8", "s32"]
+        out = "s32"
+
+    layout = "colmajor" if b_col_major else "rowmajor"
+    name = f"step_{gen}_{prec}_{layout}"
+    meta = {
+        "name": name,
+        "kind": "native_step",
+        "gen": gen,
+        "precision": prec,
+        "b_col_major": b_col_major,
+        "m": m,
+        "k": k,
+        "n": n,
+        "arg_shapes": [list(s.shape) for s in specs],
+        "arg_dtypes": iface,
+        "out_dtype": out,
+        "config": {
+            "m_ct": cfg.m_ct, "k_ct": cfg.k_ct, "n_ct": cfg.n_ct,
+            "k_mt": cfg.k_mt, "m_rows": cfg.m_rows, "n_cols": cfg.n_cols,
+            "micro_tile": list(cfg.micro_tile),
+        },
+    }
+    return fn, specs, meta
+
+
+def quickstart_entry():
+    """One full small bf16 GEMM (XDNA config): 384 x 448 x 384."""
+    cfg = BALANCED[("xdna", "bf16")]
+    m, k, n = cfg.native_m, 2 * cfg.k_mt, cfg.native_n
+    gemm = model.make_gemm(cfg, m, k, n)
+    fn = _wrap_bf16(lambda a, b: gemm(a, b), 2)
+    specs = [_spec((m, k), jnp.float32), _spec((k, n), jnp.float32)]
+    meta = {
+        "name": "quickstart_bf16", "kind": "gemm", "gen": "xdna",
+        "precision": "bf16", "b_col_major": False, "m": m, "k": k, "n": n,
+        "arg_shapes": [list(s.shape) for s in specs],
+        "arg_dtypes": ["f32", "f32"], "out_dtype": "f32",
+    }
+    return fn, specs, meta
+
+
+def mlp_entry():
+    """Two chained bf16 GEMMs (the DL-integration demo).
+
+    Uses a dedicated config (96x48x96 kernel, Table 2's second-ranked bf16
+    shape, with k_mt = 96) so the hidden dimension is aligned both as a GEMM
+    output (multiple of native_n) and as the next GEMM's reduction dim
+    (multiple of k_mt) without padding.
+    """
+    from .configs import NpuConfig
+
+    cfg = NpuConfig("xdna", "bf16", 96, 48, 96, 96, 4, 4)
+    m, d_in, d_h, d_out = cfg.native_m, cfg.native_n, cfg.native_n, cfg.native_n
+    mlp = model.make_mlp(cfg, m, d_in, d_h, d_out)
+    fn = _wrap_bf16(lambda x, w1, w2: mlp(x, w1, w2), 3)
+    specs = [_spec((m, d_in), jnp.float32), _spec((d_in, d_h), jnp.float32),
+             _spec((d_h, d_out), jnp.float32)]
+    meta = {
+        "name": "mlp_bf16", "kind": "mlp", "gen": "xdna", "precision": "bf16",
+        "b_col_major": False, "m": m, "k": d_in, "n": d_out,
+        "arg_shapes": [list(s.shape) for s in specs],
+        "arg_dtypes": ["f32", "f32", "f32"], "out_dtype": "f32",
+        "d_hidden": d_h,
+    }
+    return fn, specs, meta
+
+
+def build_entries(only=None):
+    entries = []
+    for gen in GENERATIONS:
+        for prec in PRECISIONS:
+            for bcm in (False, True):
+                entries.append(native_step_entry(gen, prec, bcm))
+    entries.append(quickstart_entry())
+    entries.append(mlp_entry())
+    if only:
+        entries = [e for e in entries if only in e[2]["name"]]
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for fn, specs, meta in build_entries(args.only):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = meta["name"] + ".hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        meta["file"] = fname
+        manifest.append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

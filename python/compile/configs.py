@@ -1,0 +1,67 @@
+"""Balanced GEMM configurations (paper Tables 2 & 3, bold rows).
+
+This is the Python mirror of `rust/src/arch` — the AOT pipeline uses it to
+decide which native-step artifacts to emit; the Rust coordinator reads the
+same numbers from its own `arch::balanced_config` table plus the generated
+`artifacts/manifest.json`. Keep the two in sync (checked by
+`rust/tests/manifest.rs`).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .kernels.ref import MICRO_TILE
+
+
+@dataclass(frozen=True)
+class NpuConfig:
+    """One (generation, precision) balanced design point."""
+
+    gen: str  # "xdna" | "xdna2"
+    precision: str  # key into ref.PRECISIONS
+    m_ct: int
+    k_ct: int
+    n_ct: int
+    k_mt: int  # contiguity parameter (Sec. 4.2.2)
+    m_rows: int
+    n_cols: int
+
+    @property
+    def micro_tile(self):
+        return MICRO_TILE[self.precision]
+
+    @property
+    def native_m(self) -> int:
+        return self.m_ct * self.m_rows
+
+    @property
+    def native_n(self) -> int:
+        return self.n_ct * self.n_cols
+
+    @property
+    def native_k(self) -> int:
+        return self.k_mt
+
+    def __post_init__(self):
+        r, s, t = MICRO_TILE[self.precision]
+        assert self.m_ct % r == 0 and self.k_ct % s == 0 and self.n_ct % t == 0
+        assert self.k_mt % self.k_ct == 0, "k_mt must hold whole k_ct tiles"
+
+
+#: Optimal balanced kernels (bold rows of Tables 2 and 3) + the paper's
+#: chosen k_mt values (Sec. 5.2.2). XDNA maps 4x4 (no ShimTile in the last
+#: column), XDNA2 maps the full 4x8 array.
+BALANCED = {
+    ("xdna", "i8i8"): NpuConfig("xdna", "i8i8", 112, 112, 112, 448, 4, 4),
+    ("xdna", "i8i16"): NpuConfig("xdna", "i8i16", 96, 112, 96, 448, 4, 4),
+    ("xdna", "i8i32"): NpuConfig("xdna", "i8i32", 80, 88, 96, 352, 4, 4),
+    ("xdna", "bf16"): NpuConfig("xdna", "bf16", 96, 56, 96, 224, 4, 4),
+    ("xdna2", "i8i8"): NpuConfig("xdna2", "i8i8", 144, 72, 144, 432, 4, 8),
+    ("xdna2", "i8i16"): NpuConfig("xdna2", "i8i16", 128, 72, 112, 432, 4, 8),
+    ("xdna2", "i8i32"): NpuConfig("xdna2", "i8i32", 96, 64, 96, 384, 4, 8),
+    ("xdna2", "bf16"): NpuConfig("xdna2", "bf16", 112, 48, 96, 384, 4, 8),
+}
+
+GENERATIONS = ("xdna", "xdna2")
+PRECISIONS = ("i8i8", "i8i16", "i8i32", "bf16")

@@ -1,0 +1,77 @@
+"""Export golden vectors for the Rust reference implementation.
+
+Small, deterministic GEMM cases per precision whose expected outputs come
+from the pytest-validated oracle (`kernels.ref`). The Rust test suite
+(`rust/tests/golden.rs`) replays them through `gemm::refimpl` and the
+functional executor, closing the loop between the two reference
+implementations (DESIGN.md §6, step 2).
+
+Run as `python -m compile.golden --out ../artifacts/golden.json`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+
+CASES = [
+    # (precision, m, k, n, seed, extreme)
+    ("i8i8", 8, 16, 8, 11, False),
+    ("i8i8", 12, 64, 8, 12, True),  # saturating
+    ("i8i16", 8, 16, 8, 13, False),
+    ("i8i16", 4, 256, 8, 14, True),  # saturating past int16
+    ("i8i32", 8, 24, 12, 15, True),
+    ("bf16", 8, 16, 8, 16, False),
+]
+
+
+def f32_bits(x: np.ndarray) -> list:
+    return np.asarray(x, np.float32).reshape(-1).view(np.uint32).tolist()
+
+
+def make_case(prec, m, k, n, seed, extreme):
+    rng = np.random.default_rng(seed)
+    if prec == "bf16":
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.bfloat16)
+    else:
+        lo, hi = (-128, 128) if extreme else (-16, 16)
+        a = jnp.asarray(rng.integers(lo, hi, (m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(lo, hi, (k, n)), jnp.int8)
+    out = ref.ref_gemm(a, b, prec)
+    acc = ref.ref_gemm_acc(a, b, prec)
+    case = {"precision": prec, "m": m, "k": k, "n": n}
+    if prec == "bf16":
+        # bf16 values are exactly representable in f32: ship bit patterns.
+        case["a_f32bits"] = f32_bits(a)
+        case["b_f32bits"] = f32_bits(b)
+        case["out_f32bits"] = f32_bits(out)
+        case["acc_f32bits"] = f32_bits(acc)
+    else:
+        case["a"] = np.asarray(a, np.int64).reshape(-1).tolist()
+        case["b"] = np.asarray(b, np.int64).reshape(-1).tolist()
+        case["out"] = np.asarray(out, np.int64).reshape(-1).tolist()
+        case["acc"] = np.asarray(acc, np.int64).reshape(-1).tolist()
+    return case
+
+
+def build():
+    return [make_case(*c) for c in CASES]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/golden.json")
+    args = ap.parse_args()
+    with open(args.out, "w") as f:
+        json.dump(build(), f)
+    print(f"wrote {len(CASES)} golden cases to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Layer-1 Pallas GEMM kernel: the paper's single-core compute hot-spot.
+
+The paper's AIE kernel computes an `m_ct x k_ct x n_ct` GEMM out of 64 KB L1
+memory, output-stationary: partial C tiles stay resident while `K/k_ct`
+A/B tile pairs stream through (Sec. 4.2.1), with a vectorized zeroing kernel
+re-initializing C between reductions.
+
+TPU-style adaptation (see DESIGN.md §Hardware-Adaptation):
+
+* L1 residency is expressed with `BlockSpec`s — A blocks `(m_ct, k_ct)`,
+  B blocks `(k_ct, n_ct)`, accumulator blocks `(m_ct, n_ct)` live in
+  VMEM for the duration of a grid step.
+* The reduction-in-time mapping is the innermost grid dimension `k`;
+  `pl.when(k == 0)` performs the zero/accumulator-load step (the paper's
+  zeroing kernel).
+* The AIE-API `r x s x t` micro-tile becomes the MXU-native inner shape of
+  `jnp.dot` with a wide `preferred_element_type` accumulator; `r, s, t`
+  survive as *layout* parameters for the DMA-transform layer (Rust `xform`),
+  exactly as on the NPU where DMAs pre-tile and the core consumes tiles.
+* The AIE-API `transpose` shuffle used when B is column-major in DRAM
+  (Sec. 4.3) becomes an in-kernel block transpose (`b_col_major=True`).
+
+Kernels are executed with `interpret=True` everywhere: the CPU PJRT plugin
+cannot run Mosaic custom-calls, and correctness (vs `ref.py`) is the
+build-time contract. Real-TPU performance is estimated analytically in
+DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """Static configuration of a single-core kernel instance."""
+
+    m_ct: int
+    k_ct: int
+    n_ct: int
+    precision: str  # key into ref.PRECISIONS
+    b_col_major: bool = False  # B arrives transposed (N-major) in VMEM
+
+    def __post_init__(self):
+        r, s, t = ref.MICRO_TILE[self.precision]
+        if self.m_ct % r or self.k_ct % s or self.n_ct % t:
+            raise ValueError(
+                f"kernel {self.m_ct}x{self.k_ct}x{self.n_ct} not a multiple of "
+                f"micro-tile {r}x{s}x{t} for {self.precision}"
+            )
+
+    @property
+    def micro_tile(self):
+        return ref.MICRO_TILE[self.precision]
+
+
+def _gemm_kernel_body(a_ref, b_ref, acc_ref, *, spec: KernelSpec, k_grid: int):
+    """Grid body: one `m_ct x k_ct x n_ct` MAC step, output stationary."""
+    k = pl.program_id(2)
+
+    # The paper's vectorized zeroing kernel: C re-initialized at the start of
+    # each reduction (Sec. 4.2.1).
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if spec.b_col_major:
+        # AIE-API transpose shuffle: B tile arrives N-major, swizzle to K-major.
+        b = b.T
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_ref.dtype)
+
+
+def make_panel_gemm(spec: KernelSpec, m: int, k: int, n: int):
+    """Build a jittable panel GEMM `(m, k) @ (k, n) -> (m, n)` in accumulator
+    precision, tiled over a `(m/m_ct, n/n_ct, k/k_ct)` grid of single-core
+    kernel invocations.
+
+    Grid dims (i, j) model the *spatial* broadcast across the NPU array rows
+    and columns (the same A block feeds every j, the same B block every i);
+    dim k is the paper's reduction *in time*.
+    """
+    if m % spec.m_ct or k % spec.k_ct or n % spec.n_ct:
+        raise ValueError(f"panel {m}x{k}x{n} not tileable by {spec}")
+    adt = ref.acc_dtype(spec.precision)
+    k_grid = k // spec.k_ct
+
+    if spec.b_col_major:
+        b_shape = (n, k)
+        b_block = (spec.n_ct, spec.k_ct)
+        b_index = lambda i, j, kk: (j, kk)
+    else:
+        b_shape = (k, n)
+        b_block = (spec.k_ct, spec.n_ct)
+        b_index = lambda i, j, kk: (kk, j)
+
+    kernel = functools.partial(_gemm_kernel_body, spec=spec, k_grid=k_grid)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(m // spec.m_ct, n // spec.n_ct, k_grid),
+        in_specs=[
+            pl.BlockSpec((spec.m_ct, spec.k_ct), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec(b_block, b_index),
+        ],
+        out_specs=pl.BlockSpec((spec.m_ct, spec.n_ct), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), adt),
+        interpret=True,
+    )
+
+    def panel_gemm(a, b):
+        assert a.shape == (m, k), (a.shape, (m, k))
+        assert b.shape == b_shape, (b.shape, b_shape)
+        return call(a, b)
+
+    return panel_gemm
+
+
+def make_single_core_gemm(spec: KernelSpec):
+    """The L1-resident kernel itself: one `m_ct x k_ct x n_ct` tile GEMM,
+    narrowed to the output precision (the shape the AIE API executes)."""
+    panel = make_panel_gemm(spec, spec.m_ct, spec.k_ct, spec.n_ct)
+
+    def single(a, b):
+        return ref.narrow(panel(a, b), spec.precision)
+
+    return single
+
+
+def _accum_kernel_body(a_ref, b_ref, acc_in_ref, acc_ref, *, spec: KernelSpec):
+    """Like `_gemm_kernel_body` but seeds the accumulator from `acc_in`
+    instead of zero — the native-step building block for K > k_mt reductions
+    (outer-most tiling level, Sec. 4.4)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _seed():
+        acc_ref[...] = acc_in_ref[...]
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if spec.b_col_major:
+        b = b.T
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_ref.dtype)
+
+
+def make_panel_gemm_acc(spec: KernelSpec, m: int, k: int, n: int):
+    """Panel GEMM with carried accumulator: `acc + (m,k) @ (k,n)`."""
+    if m % spec.m_ct or k % spec.k_ct or n % spec.n_ct:
+        raise ValueError(f"panel {m}x{k}x{n} not tileable by {spec}")
+    adt = ref.acc_dtype(spec.precision)
+
+    if spec.b_col_major:
+        b_block = (spec.n_ct, spec.k_ct)
+        b_index = lambda i, j, kk: (j, kk)
+    else:
+        b_block = (spec.k_ct, spec.n_ct)
+        b_index = lambda i, j, kk: (kk, j)
+
+    kernel = functools.partial(_accum_kernel_body, spec=spec)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // spec.m_ct, n // spec.n_ct, k // spec.k_ct),
+        in_specs=[
+            pl.BlockSpec((spec.m_ct, spec.k_ct), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec(b_block, b_index),
+            pl.BlockSpec((spec.m_ct, spec.n_ct), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((spec.m_ct, spec.n_ct), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), adt),
+        interpret=True,
+    )

@@ -1,0 +1,78 @@
+"""Pure-jnp reference oracle for the single-core GEMM kernel.
+
+Mirrors the numerics of the AIE-API GEMM modes used by the paper:
+
+* int8 x int8 inputs accumulate in int32; the result is then narrowed to the
+  requested output precision (int8 / int16 / int32) with saturation — the
+  paper's "precision reduction" (Sec. 5.1).
+* bf16 x bf16 inputs accumulate in float32 (the AIE fp32 accumulator) and the
+  result is stored back as bf16.
+
+This module is the single source of truth for correctness: the Pallas kernel
+(`gemm.py`), the whole-array model (`model.py`) and the Rust reference
+implementation (`gemm::refimpl`, via golden vectors) are all tested against
+it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: (input dtype, accumulator dtype, output dtype) per precision pair.
+PRECISIONS = {
+    "i8i8": (jnp.int8, jnp.int32, jnp.int8),
+    "i8i16": (jnp.int8, jnp.int32, jnp.int16),
+    "i8i32": (jnp.int8, jnp.int32, jnp.int32),
+    "bf16": (jnp.bfloat16, jnp.float32, jnp.bfloat16),
+}
+
+#: AIE-API micro-tile (r, s, t) per precision pair (AIE-ML mmul modes).
+MICRO_TILE = {
+    "i8i8": (4, 8, 8),
+    "i8i16": (4, 8, 8),
+    "i8i32": (4, 8, 8),
+    "bf16": (4, 8, 4),
+}
+
+
+def acc_dtype(precision: str):
+    return PRECISIONS[precision][1]
+
+
+def in_dtype(precision: str):
+    return PRECISIONS[precision][0]
+
+
+def out_dtype(precision: str):
+    return PRECISIONS[precision][2]
+
+
+def narrow(acc, precision: str):
+    """Narrow an accumulator tensor to the output precision, saturating."""
+    _, _, out = PRECISIONS[precision]
+    if out == jnp.int8:
+        return jnp.clip(acc, -128, 127).astype(jnp.int8)
+    if out == jnp.int16:
+        return jnp.clip(acc, -32768, 32767).astype(jnp.int16)
+    if out == jnp.int32:
+        return acc.astype(jnp.int32)
+    # bf16: round-to-nearest-even cast from the f32 accumulator.
+    return acc.astype(jnp.bfloat16)
+
+
+def ref_gemm_acc(a, b, precision: str, acc=None):
+    """GEMM in accumulator precision: acc + a @ b (no narrowing)."""
+    adt = acc_dtype(precision)
+    prod = jnp.matmul(
+        a.astype(in_dtype(precision)),
+        b.astype(in_dtype(precision)),
+        preferred_element_type=adt,
+    )
+    if acc is not None:
+        prod = prod + acc.astype(adt)
+    return prod
+
+
+def ref_gemm(a, b, precision: str):
+    """Full reference GEMM: multiply, accumulate wide, narrow with saturation."""
+    return narrow(ref_gemm_acc(a, b, precision), precision)

@@ -1,0 +1,51 @@
+"""AIE-API `transpose` shuffle analog (Sec. 4.3).
+
+DMA address generation on the NPU works at 32-bit granularity, so when an
+int8/bf16 matrix B is stored column-major in DRAM the element-level swizzle
+cannot be done by the DMAs alone — the paper modifies the GEMM kernel to use
+shuffle instructions (the AIE API transpose function) so that both data
+within tiles and the tiles themselves end up column-major.
+
+Here the same fine-grained swizzle is a Pallas kernel operating on `r x s`
+micro-tiles: the input arrives as the DMA left it (tile-of-tiles, inner
+dimension still K-contiguous) and the kernel emits the transposed tile the
+MAC loop consumes. Used by `gemm.KernelSpec(b_col_major=True)` in fused form;
+standalone version kept for the swizzle unit tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _transpose_body(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+def make_tile_transpose(rows: int, cols: int, dtype=jnp.int8):
+    """Transpose a `(rows, cols)` tile: the in-core shuffle primitive."""
+    return pl.pallas_call(
+        _transpose_body,
+        out_shape=jax.ShapeDtypeStruct((cols, rows), dtype),
+        interpret=True,
+    )
+
+
+def make_blocked_transpose(n: int, k: int, n_ct: int, k_ct: int, dtype=jnp.int8):
+    """Transpose an `(n, k)` panel block-wise in `(n_ct, k_ct)` tiles.
+
+    Models the per-tile shuffle the modified GEMM kernel performs on each
+    B tile it receives, grid-iterated over the whole panel.
+    """
+    if n % n_ct or k % k_ct:
+        raise ValueError("panel not tileable")
+    return pl.pallas_call(
+        _transpose_body,
+        grid=(n // n_ct, k // k_ct),
+        in_specs=[pl.BlockSpec((n_ct, k_ct), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((k_ct, n_ct), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((k, n), dtype),
+        interpret=True,
+    )

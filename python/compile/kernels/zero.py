@@ -1,0 +1,28 @@
+"""The paper's fast vectorized zeroing kernel (Sec. 4.2.1) as a standalone
+Pallas kernel.
+
+On the NPU this runs on the core between complete K-reductions to
+re-initialize the stationary C tile. In the fused GEMM kernel
+(`gemm._gemm_kernel_body`) the same step is expressed with
+`pl.when(k == 0)`; this standalone version exists so the zeroing cost model
+(`sim::core::zeroing_cycles`) has a concrete, testable kernel behind it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _zero_body(o_ref):
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def make_zero_kernel(m_ct: int, n_ct: int, dtype=jnp.int32):
+    """Zero an `(m_ct, n_ct)` tile in place-style (fresh output buffer)."""
+    return pl.pallas_call(
+        _zero_body,
+        out_shape=jax.ShapeDtypeStruct((m_ct, n_ct), dtype),
+        interpret=True,
+    )

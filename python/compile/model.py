@@ -1,0 +1,138 @@
+"""Layer-2 JAX model: whole-array GEMM built from the Pallas kernel.
+
+The paper's "native GEMM size" — `(m_ct*m_rows) x k_mt x (n_ct*n_cols)`
+(Sec. 4.2.2) — is the unit of work dispatched to the NPU array. This module
+expresses it as a JAX function over the Layer-1 Pallas kernel:
+
+* `make_native_step`  — one native-size step with carried accumulator; the
+  Rust coordinator chains these along K and over output tiles (outer-most
+  tiling level, Sec. 4.4), which is exactly the paper's command-processor
+  schedule.
+* `make_gemm`         — a full (padded) GEMM: scan over K panels, narrow at
+  the end. Used for the quickstart artifact and for pytest model tests.
+* `make_mlp`          — two chained GEMMs with narrowing in between; the
+  DL-workload integration demo (GGML-style consumer, Sec. 1).
+
+Everything here lowers to a single HLO module per variant via
+`compile.aot`; Python never runs at serving time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import NpuConfig
+from .kernels import ref
+from .kernels.gemm import KernelSpec, make_panel_gemm, make_panel_gemm_acc
+
+
+def kernel_spec(cfg: NpuConfig, b_col_major: bool = False) -> KernelSpec:
+    return KernelSpec(
+        m_ct=cfg.m_ct,
+        k_ct=cfg.k_ct,
+        n_ct=cfg.n_ct,
+        precision=cfg.precision,
+        b_col_major=b_col_major,
+    )
+
+
+def make_native_step(cfg: NpuConfig, b_col_major: bool = False):
+    """One native GEMM step: `acc + A_panel @ B_panel` in accumulator dtype.
+
+    A_panel: (m_ct*m_rows, k_mt)   — one m_ct x k_mt tile per array row
+    B_panel: (k_mt, n_ct*n_cols)   — one k_mt x n_ct tile per array column
+             (transposed layout when `b_col_major`)
+    acc:     (m_ct*m_rows, n_ct*n_cols), stays resident across K panels —
+             the output-stationary mapping in time.
+    """
+    spec = kernel_spec(cfg, b_col_major)
+    step = make_panel_gemm_acc(spec, cfg.native_m, cfg.k_mt, cfg.native_n)
+
+    def native_step(a_panel, b_panel, acc):
+        return step(a_panel, b_panel, acc)
+
+    return native_step
+
+
+def make_gemm(cfg: NpuConfig, m: int, k: int, n: int, b_col_major: bool = False):
+    """Full GEMM `(m,k) @ (k,n)`, narrowed to the output precision.
+
+    `m, n` must be multiples of the native M/N; `k` a multiple of `k_mt`
+    (the Rust coordinator handles padding of arbitrary sizes before calling
+    the artifact). Reduction over K panels is a `lax.scan` so the lowered
+    HLO stays compact at any K.
+    """
+    if m % cfg.native_m or n % cfg.native_n or k % cfg.k_mt:
+        raise ValueError(
+            f"GEMM {m}x{k}x{n} not aligned to native "
+            f"{cfg.native_m}x{cfg.k_mt}x{cfg.native_n}"
+        )
+    step = make_native_step(cfg, b_col_major)
+    adt = ref.acc_dtype(cfg.precision)
+    n_panels = k // cfg.k_mt
+
+    def gemm(a, b):
+        # Split K into panels: (n_panels, m, k_mt) / (n_panels, k_mt, n).
+        a_p = a.reshape(m, n_panels, cfg.k_mt).transpose(1, 0, 2)
+        if b_col_major:
+            b_p = b.reshape(n, n_panels, cfg.k_mt).transpose(1, 0, 2)
+        else:
+            b_p = b.reshape(n_panels, cfg.k_mt, n)
+
+        # Tile the native step across the (m, n) output grid.
+        mt, nt = m // cfg.native_m, n // cfg.native_n
+
+        def one_output_tile(a_col, b_row):
+            # a_col: (n_panels, native_m, k_mt); b_row: per-tile panels of B.
+            def body(acc, ab):
+                ap, bp = ab
+                return step(ap, bp, acc), None
+
+            init = jnp.zeros((cfg.native_m, cfg.native_n), adt)
+            acc, _ = jax.lax.scan(body, init, (a_col, b_row))
+            return acc
+
+        # Carve A into row blocks and B into column blocks of native size.
+        a_blocks = a_p.reshape(n_panels, mt, cfg.native_m, cfg.k_mt)
+        if b_col_major:
+            b_blocks = b_p.reshape(n_panels, nt, cfg.native_n, cfg.k_mt)
+        else:
+            b_blocks = b_p.reshape(n_panels, cfg.k_mt, nt, cfg.native_n)
+
+        rows = []
+        for i in range(mt):
+            cols = []
+            for j in range(nt):
+                if b_col_major:
+                    b_ij = b_blocks[:, j]
+                else:
+                    b_ij = b_blocks[:, :, j]
+                cols.append(one_output_tile(a_blocks[:, i], b_ij))
+            rows.append(jnp.concatenate(cols, axis=1))
+        acc = jnp.concatenate(rows, axis=0)
+        return ref.narrow(acc, cfg.precision)
+
+    return gemm
+
+
+def make_mlp(cfg: NpuConfig, m: int, d_in: int, d_hidden: int, d_out: int):
+    """Two-layer MLP block: `relu(X @ W1) @ W2`, each GEMM through the
+    Pallas kernel — the paper's motivating DL-workload shape."""
+    gemm1 = make_gemm(cfg, m, d_in, d_hidden)
+    gemm2 = make_gemm(cfg, m, d_hidden, d_out)
+    idt = ref.in_dtype(cfg.precision)
+
+    def mlp(x, w1, w2):
+        h = gemm1(x, w1)
+        h = jnp.maximum(h, jnp.zeros_like(h))  # relu in output precision
+        return gemm2(h.astype(idt), w2)
+
+    return mlp
+
+
+def reference_gemm(cfg: NpuConfig, a, b, b_col_major: bool = False):
+    """Oracle for the above (delegates to kernels.ref)."""
+    if b_col_major:
+        b = b.T
+    return ref.ref_gemm(a, b, cfg.precision)

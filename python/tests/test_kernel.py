@@ -1,0 +1,145 @@
+"""Layer-1 correctness: Pallas GEMM kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the build path: if these pass, the
+HLO that `compile.aot` ships to the Rust runtime computes the paper's
+kernel semantics (int32 accumulate + saturating narrow for int8 modes,
+f32 accumulate for bf16).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gemm import (
+    KernelSpec,
+    make_panel_gemm,
+    make_panel_gemm_acc,
+    make_single_core_gemm,
+)
+
+PRECS = list(ref.PRECISIONS)
+
+
+def rand_inputs(rng, m, k, n, prec, extreme=False):
+    if prec == "bf16":
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.bfloat16)
+    else:
+        lo, hi = (-128, 128) if extreme else (-16, 16)
+        a = jnp.asarray(rng.integers(lo, hi, (m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(lo, hi, (k, n)), jnp.int8)
+    return a, b
+
+
+def assert_matches(got, want, prec, narrowed=False):
+    got = np.asarray(got, np.float64)
+    want = np.asarray(want, np.float64)
+    if prec == "bf16":
+        # f32 accumulation order differs between blocked and one-shot matmul;
+        # after bf16 narrowing values may differ by 1 ulp near ties.
+        tol = 2.0 ** -7 if narrowed else 1e-5
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("prec", PRECS)
+@pytest.mark.parametrize("b_col_major", [False, True])
+def test_panel_gemm_matches_ref(prec, b_col_major):
+    rng = np.random.default_rng(42)
+    spec = KernelSpec(8, 16, 8, prec, b_col_major=b_col_major)
+    m, k, n = 24, 48, 16
+    a, b = rand_inputs(rng, m, k, n, prec)
+    fn = make_panel_gemm(spec, m, k, n)
+    got = fn(a, b.T if b_col_major else b)
+    assert_matches(got, ref.ref_gemm_acc(a, b, prec), prec)
+
+
+@pytest.mark.parametrize("prec", PRECS)
+def test_single_core_kernel_narrowing(prec):
+    """The single-core kernel narrows with saturation (paper Sec. 5.1)."""
+    rng = np.random.default_rng(7)
+    spec = KernelSpec(8, 32, 8, prec)
+    a, b = rand_inputs(rng, 8, 32, 8, prec, extreme=True)
+    got = make_single_core_gemm(spec)(a, b)
+    want = ref.ref_gemm(a, b, prec)
+    assert got.dtype == want.dtype == ref.out_dtype(prec)
+    assert_matches(got, want, prec, narrowed=True)
+    if prec == "i8i8":
+        # int8 x int8 over K=32 virtually always saturates with extreme
+        # inputs — make sure the clamp actually engaged.
+        w = np.asarray(want, np.int64)
+        assert w.max() == 127 or w.min() == -128
+
+
+@pytest.mark.parametrize("prec", PRECS)
+def test_accumulator_carry(prec):
+    """Seeded-accumulator variant: acc' = acc + A@B (native-step semantics)."""
+    rng = np.random.default_rng(3)
+    r, s, t = ref.MICRO_TILE[prec]
+    spec = KernelSpec(r, s, t, prec)
+    m, k, n = 2 * r, 2 * s, 2 * t
+    a, b = rand_inputs(rng, m, k, n, prec)
+    first = ref.ref_gemm_acc(a, b, prec)
+    got = make_panel_gemm_acc(spec, m, k, n)(a, b, first)
+    assert_matches(got, 2 * np.asarray(first, np.float64), prec)
+
+
+def test_micro_tile_validation():
+    with pytest.raises(ValueError):
+        KernelSpec(6, 16, 8, "i8i8")  # m_ct not a multiple of r=4
+    with pytest.raises(ValueError):
+        KernelSpec(8, 12, 8, "i8i8")  # k_ct not a multiple of s=8
+    with pytest.raises(ValueError):
+        KernelSpec(8, 16, 6, "bf16")  # n_ct not a multiple of t=4
+
+
+def test_paper_kernel_shapes_are_valid():
+    """Every kernel size published in Tables 1-3 obeys the micro-tile rule."""
+    table = [
+        ("i8i8", 64, 232, 64), ("i8i16", 64, 216, 64), ("i8i32", 48, 280, 48),
+        ("bf16", 64, 104, 64), ("bf16", 48, 152, 48),
+        ("i8i8", 112, 112, 112), ("i8i16", 96, 112, 96), ("i8i32", 80, 88, 96),
+        ("bf16", 96, 56, 96), ("i8i8", 144, 72, 144), ("i8i16", 128, 72, 112),
+        ("i8i32", 96, 64, 96), ("bf16", 112, 48, 96),
+    ]
+    for prec, m, k, n in table:
+        KernelSpec(m, k, n, prec)  # must not raise
+
+
+# ---- hypothesis sweeps: shapes, dtypes, layouts -----------------------------
+
+tile_counts = st.integers(min_value=1, max_value=3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    prec=st.sampled_from(PRECS),
+    mi=tile_counts, ki=tile_counts, ni=tile_counts,
+    b_col_major=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shapes(prec, mi, ki, ni, b_col_major, seed):
+    r, s, t = ref.MICRO_TILE[prec]
+    m_ct, k_ct, n_ct = 2 * r, s, t
+    spec = KernelSpec(m_ct, k_ct, n_ct, prec, b_col_major=b_col_major)
+    m, k, n = mi * m_ct, ki * k_ct, ni * n_ct
+    rng = np.random.default_rng(seed)
+    a, b = rand_inputs(rng, m, k, n, prec, extreme=True)
+    got = make_panel_gemm(spec, m, k, n)(a, b.T if b_col_major else b)
+    assert_matches(got, ref.ref_gemm_acc(a, b, prec), prec)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_saturation_boundaries(seed):
+    """Saturating narrow near the int8/int16 boundaries matches the oracle."""
+    rng = np.random.default_rng(seed)
+    # K=256 of +/-128 products reaches +/-4M: far past int16.
+    spec = KernelSpec(4, 256, 8, "i8i16")
+    a = jnp.asarray(rng.choice([-128, -1, 1, 127], (4, 256)), jnp.int8)
+    b = jnp.asarray(rng.choice([-128, -1, 1, 127], (256, 8)), jnp.int8)
+    got = make_single_core_gemm(spec)(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.ref_gemm(a, b, "i8i16")))

@@ -1,0 +1,112 @@
+"""Layer-2 correctness: native step, full GEMM, MLP vs the oracle.
+
+Uses a scaled-down NpuConfig (same structure as the paper's balanced
+configs, smaller tiles) so interpret-mode Pallas stays fast.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import BALANCED, NpuConfig
+from compile.kernels import ref
+
+# Scaled-down design points: same (m_rows x n_cols) topologies as the paper,
+# micro-tile-aligned kernels, k_mt holding multiple k_ct tiles.
+TINY = {
+    "xdna": NpuConfig("xdna", "i8i16", 8, 16, 8, 32, 4, 4),
+    "xdna2": NpuConfig("xdna2", "i8i16", 8, 16, 8, 32, 4, 8),
+}
+TINY_BF16 = NpuConfig("xdna", "bf16", 8, 16, 8, 32, 4, 4)
+
+
+def rand_for(cfg, rng, m, k, n):
+    if cfg.precision == "bf16":
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.bfloat16)
+    else:
+        a = jnp.asarray(rng.integers(-64, 64, (m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(-64, 64, (k, n)), jnp.int8)
+    return a, b
+
+
+@pytest.mark.parametrize("gen", ["xdna", "xdna2"])
+@pytest.mark.parametrize("b_col_major", [False, True])
+def test_native_step(gen, b_col_major):
+    cfg = TINY[gen]
+    rng = np.random.default_rng(1)
+    m, k, n = cfg.native_m, cfg.k_mt, cfg.native_n
+    a, b = rand_for(cfg, rng, m, k, n)
+    acc0 = jnp.asarray(rng.integers(-100, 100, (m, n)), jnp.int32)
+    step = model.make_native_step(cfg, b_col_major)
+    got = step(a, b.T if b_col_major else b, acc0)
+    want = ref.ref_gemm_acc(a, b, cfg.precision, acc=acc0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("gen", ["xdna", "xdna2"])
+def test_full_gemm_multi_panel_multi_tile(gen):
+    """2x2 output tiles, 3 K panels: exercises the scan + concat plumbing."""
+    cfg = TINY[gen]
+    rng = np.random.default_rng(2)
+    m, k, n = 2 * cfg.native_m, 3 * cfg.k_mt, 2 * cfg.native_n
+    a, b = rand_for(cfg, rng, m, k, n)
+    got = model.make_gemm(cfg, m, k, n)(a, b)
+    want = ref.ref_gemm(a, b, cfg.precision)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_full_gemm_b_col_major():
+    cfg = TINY["xdna"]
+    rng = np.random.default_rng(4)
+    m, k, n = cfg.native_m, 2 * cfg.k_mt, cfg.native_n
+    a, b = rand_for(cfg, rng, m, k, n)
+    got = model.make_gemm(cfg, m, k, n, b_col_major=True)(a, jnp.asarray(np.asarray(b).T))
+    want = ref.ref_gemm(a, b, cfg.precision)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_full_gemm_bf16():
+    cfg = TINY_BF16
+    rng = np.random.default_rng(5)
+    m, k, n = cfg.native_m, 2 * cfg.k_mt, cfg.native_n
+    a, b = rand_for(cfg, rng, m, k, n)
+    got = np.asarray(model.make_gemm(cfg, m, k, n)(a, b), np.float64)
+    want = np.asarray(ref.ref_gemm(a, b, cfg.precision), np.float64)
+    np.testing.assert_allclose(got, want, rtol=2.0 ** -7, atol=2.0 ** -6)
+
+
+def test_gemm_alignment_errors():
+    cfg = TINY["xdna"]
+    with pytest.raises(ValueError):
+        model.make_gemm(cfg, cfg.native_m + 1, cfg.k_mt, cfg.native_n)
+    with pytest.raises(ValueError):
+        model.make_gemm(cfg, cfg.native_m, cfg.k_mt + 1, cfg.native_n)
+
+
+def test_mlp_chain():
+    cfg = TINY["xdna"]
+    rng = np.random.default_rng(6)
+    m, d_in, d_h, d_out = cfg.native_m, cfg.k_mt, cfg.native_n, cfg.native_n
+    # d_h must be k_mt-alignable for the second GEMM: use k=d_h=32 = k_mt.
+    x, w1 = rand_for(cfg, rng, m, d_in, d_h)
+    _, w2 = rand_for(cfg, rng, d_h, d_h, d_out)
+    got = model.make_mlp(cfg, m, d_in, d_h, d_out)(x, w1, w2)
+    h = ref.ref_gemm(x, w1, cfg.precision)
+    h = jnp.maximum(h, 0).astype(jnp.int8)
+    want = ref.ref_gemm(h, w2, cfg.precision)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_balanced_configs_consistent():
+    """The table aot.py ships must satisfy every structural invariant the
+    Rust side assumes (micro-tile alignment, k_mt multiple of k_ct, array
+    geometry per generation)."""
+    for (gen, prec), cfg in BALANCED.items():
+        assert cfg.gen == gen and cfg.precision == prec
+        assert cfg.m_rows == 4
+        assert cfg.n_cols == (4 if gen == "xdna" else 8)
+        assert cfg.k_mt % cfg.k_ct == 0
+        r, s, t = cfg.micro_tile
+        assert cfg.m_ct % r == 0 and cfg.k_ct % s == 0 and cfg.n_ct % t == 0

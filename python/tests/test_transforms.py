@@ -1,0 +1,94 @@
+"""Swizzle/zero kernels + a jnp mirror of the Fig.-4 DMA layout pipeline.
+
+The authoritative transform implementation lives in Rust (`xform`); this
+file keeps a numpy mirror of the same decomposition so the two sides can be
+cross-checked through identical parameter sets, and tests the Pallas shuffle
+(transpose) and zeroing kernels the modified GEMM kernel relies on.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.transpose import make_blocked_transpose, make_tile_transpose
+from compile.kernels.zero import make_zero_kernel
+
+
+def pretile(a: np.ndarray, r: int, s: int) -> np.ndarray:
+    """Direct pre-tiling oracle: (M, K) row-major -> r x s tiles, tiles
+    row-major, elements within a tile row-major (upper part of Fig. 4)."""
+    m, k = a.shape
+    return (
+        a.reshape(m // r, r, k // s, s).transpose(0, 2, 1, 3).reshape(-1)
+    )
+
+
+def dma_pipeline(a: np.ndarray, r: int, s: int, m_ct: int, k_ct: int, k_mt: int):
+    """The Fig.-4 chain for one `m_ct x K` ShimTile transfer, in numpy:
+
+    1. Shim MM2S 3D:   m_ct x K row-major -> sequence of m_ct x k_mt tiles
+    2. MemTile S2MM 3D: each m_ct x k_mt -> m_ct x k_ct tiles
+    3. MemTile MM2S 4D: m_ct x k_ct -> m_ct x s tiles (linearize r x s)
+    4. CompTile S2MM 3D: (r*s, m_ct, k_ct) -> final pre-tiled layout
+    """
+    m_rows, K = a.shape
+    assert m_rows == m_ct and K % k_mt == 0 and k_mt % k_ct == 0
+    out_tiles = []
+    for kmt0 in range(0, K, k_mt):  # step 1: shim splits K into k_mt tiles
+        panel = a[:, kmt0 : kmt0 + k_mt]
+        for kct0 in range(0, k_mt, k_ct):  # step 2: memtile splits into k_ct
+            tile = panel[:, kct0 : kct0 + k_ct]
+            # step 3: 4D memtile read emits m_ct x s column chunks in
+            # row-of-tiles order => stream order (k-tile, m-tile, r, s)
+            # step 4: comptile 3D regroups r*s words per (m-tile, k-tile).
+            out_tiles.append(pretile(tile, r, s))
+    return np.concatenate(out_tiles)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.sampled_from([2, 4]),
+    s=st.sampled_from([4, 8]),
+    mi=st.integers(1, 3),
+    ki=st.integers(1, 3),
+    kp=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dma_pipeline_equals_direct_pretile(r, s, mi, ki, kp, seed):
+    """Streaming through the 4-hop DMA chain == pre-tiling every k_ct tile
+    in order: the paper's claim that matrices can stay in regular order in
+    DRAM with no explicit pre-tiling."""
+    m_ct, k_ct = mi * r, ki * s
+    k_mt = kp * k_ct
+    K = 2 * k_mt
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, (m_ct, K)).astype(np.int8)
+    got = dma_pipeline(a, r, s, m_ct, k_ct, k_mt)
+    want = np.concatenate(
+        [pretile(a[:, c : c + k_ct], r, s) for c in range(0, K, k_ct)]
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("rows,cols", [(4, 8), (8, 8), (16, 4)])
+def test_tile_transpose(rows, cols):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-128, 128, (rows, cols)), jnp.int8)
+    got = make_tile_transpose(rows, cols)(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x).T)
+
+
+def test_blocked_transpose():
+    rng = np.random.default_rng(1)
+    n, k, n_ct, k_ct = 16, 24, 8, 8
+    x = jnp.asarray(rng.integers(-128, 128, (n, k)), jnp.int8)
+    got = make_blocked_transpose(n, k, n_ct, k_ct)(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x).T)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_zero_kernel(dtype):
+    z = make_zero_kernel(8, 16, dtype)()
+    assert z.shape == (8, 16) and z.dtype == dtype
+    assert not np.any(np.asarray(z))

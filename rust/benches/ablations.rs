@@ -1,0 +1,41 @@
+//! Benches A1–A4 — the ablation studies of Secs. 5.2.2 and 5.3:
+//!   A1 contiguity (optimized k_mt vs the non-contiguous baseline [18]),
+//!   A2 design reuse vs per-size reconfiguration (coordinator policy),
+//!   A3 single vs double C buffering,
+//!   A4 overlapped vs sequential BD reconfiguration.
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::harness;
+use xdna_gemm::util::bench::{black_box, Bench};
+
+fn main() {
+    let a1 = harness::ablation_baseline();
+    a1.print();
+    a1.save_csv("ablation_a1_baseline").unwrap();
+    // Paper: 2.4x (XDNA bf16) and 3.6x (XDNA2 int8-int16). Shape check:
+    // both speedups must be substantial, XDNA2's larger.
+    let x: f64 = a1.rows[0][4].trim_end_matches('x').parse().unwrap();
+    let x2: f64 = a1.rows[1][4].trim_end_matches('x').parse().unwrap();
+    assert!(x > 1.8, "XDNA baseline speedup too small: {x}");
+    assert!(x2 > x, "XDNA2 must gain more from contiguity ({x2} vs {x})");
+
+    let a2 = harness::ablation_reconfig(Generation::Xdna2);
+    a2.print();
+    a2.save_csv("ablation_a2_reconfig").unwrap();
+
+    let a3 = harness::ablation_cbuffer();
+    a3.print();
+    a3.save_csv("ablation_a3_cbuffer").unwrap();
+
+    let a4 = harness::ablation_bd_overlap();
+    a4.print();
+    a4.save_csv("ablation_a4_bd_overlap").unwrap();
+    for row in &a4.rows {
+        let drop: f64 = row[4].trim_end_matches('%').parse().unwrap();
+        assert!((20.0..35.0).contains(&drop), "BD-overlap drop {drop}% vs paper 27-28%");
+    }
+
+    let b = Bench::new("ablations");
+    b.case("a1_baseline", || black_box(harness::ablation_baseline()));
+    b.case("a4_bd_overlap", || black_box(harness::ablation_bd_overlap()));
+}

@@ -1,0 +1,27 @@
+//! Bench F6 — regenerates Fig. 6 (GEMM TOPS vs the contiguity parameter
+//! k_mt) for both showcased kernels and asserts the published shape: low
+//! at k_mt = k_ct, saturating at the paper's chosen value.
+
+use xdna_gemm::harness;
+use xdna_gemm::util::bench::Bench;
+
+fn main() {
+    let series = harness::fig6();
+    for (s, paper) in &series {
+        println!("{}", s.to_ascii(60, 12));
+        for (x, y) in &s.points {
+            println!("  k_mt={x:>5} → {y:6.2} TOPS");
+        }
+        println!("paper saturated value: {paper:.2} | model max: {:.2}", s.max_y());
+        s.save_csv(&format!("fig6_{}", s.name.replace([' ', '/'], "_"))).unwrap();
+
+        // Shape assertions (the Fig. 6 story).
+        let first = s.points[0].1;
+        let max = s.max_y();
+        assert!(max > 2.0 * first, "{}: k_mt must matter", s.name);
+        assert!((max - paper).abs() / paper < 0.15, "{}: saturates at {max} vs {paper}", s.name);
+    }
+
+    let b = Bench::new("fig6");
+    b.case("full_kmt_sweep_both_gens", harness::fig6);
+}

@@ -1,0 +1,45 @@
+//! Bench F7 — regenerates Fig. 7 (XDNA roofline sweeps: >400 GEMM sizes
+//! ≤ 8K per precision and B layout) and checks the published peaks
+//! (6.76 / 6.05 / 3.14 TOPS) and the col-vs-row gaps (4.8 / 4.4 / 0.57%).
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::dtype::{Layout, Precision};
+use xdna_gemm::harness;
+use xdna_gemm::util::bench::{black_box, Bench};
+
+fn main() {
+    let gen = Generation::Xdna;
+    // (precision, paper max TOPS, paper col-over-row gap %)
+    let cases = [
+        (Precision::I8I8, 6.76, 4.8),
+        (Precision::I8I16, 6.05, 4.4),
+        (Precision::Bf16, 3.14, 0.57),
+    ];
+    for (p, paper_peak, paper_gap) in cases {
+        let col = harness::roofline(gen, p, Layout::ColMajor, 400);
+        let row = harness::roofline(gen, p, Layout::RowMajor, 400);
+        println!("{}", col.to_ascii(64, 10));
+        col.save_csv(&format!("fig7_{}_col", p.name())).unwrap();
+        row.save_csv(&format!("fig7_{}_row", p.name())).unwrap();
+        let mean = |s: &xdna_gemm::report::Series| {
+            s.points.iter().map(|q| q.1).sum::<f64>() / s.points.len() as f64
+        };
+        let gap = 100.0 * (mean(&col) / mean(&row) - 1.0);
+        println!(
+            "{}: peak {:.2} TOPS (paper {paper_peak}) | col-over-row {gap:.1}% (paper {paper_gap}%)\n",
+            p.paper_name(),
+            col.max_y()
+        );
+        assert!(
+            (col.max_y() - paper_peak).abs() / paper_peak < 0.10,
+            "{p}: peak {:.2} vs paper {paper_peak}",
+            col.max_y()
+        );
+        assert!(gap > -0.5, "{p}: col-major must not lose to row-major");
+    }
+
+    let b = Bench::new("fig7");
+    b.case("roofline_400pts", || {
+        black_box(harness::roofline(gen, Precision::I8I8, Layout::ColMajor, 400))
+    });
+}

@@ -1,0 +1,48 @@
+//! Bench F8 — regenerates Fig. 8 (XDNA2 roofline sweeps) and checks the
+//! published peaks (38.05 / 31.52 / 14.71 TOPS) and the much larger
+//! col-vs-row gaps (19.1 / 25.2 / 8.7%) of Sec. 5.2.3.
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::dtype::{Layout, Precision};
+use xdna_gemm::harness;
+use xdna_gemm::util::bench::{black_box, Bench};
+
+fn main() {
+    let gen = Generation::Xdna2;
+    let cases = [
+        (Precision::I8I8, 38.05, 19.1),
+        (Precision::I8I16, 31.52, 25.2),
+        (Precision::Bf16, 14.71, 8.7),
+    ];
+    let mut gaps = Vec::new();
+    for (p, paper_peak, paper_gap) in cases {
+        let col = harness::roofline(gen, p, Layout::ColMajor, 400);
+        let row = harness::roofline(gen, p, Layout::RowMajor, 400);
+        println!("{}", col.to_ascii(64, 10));
+        col.save_csv(&format!("fig8_{}_col", p.name())).unwrap();
+        row.save_csv(&format!("fig8_{}_row", p.name())).unwrap();
+        let mean = |s: &xdna_gemm::report::Series| {
+            s.points.iter().map(|q| q.1).sum::<f64>() / s.points.len() as f64
+        };
+        let gap = 100.0 * (mean(&col) / mean(&row) - 1.0);
+        println!(
+            "{}: peak {:.2} TOPS (paper {paper_peak}) | col-over-row {gap:.1}% (paper {paper_gap}%)\n",
+            p.paper_name(),
+            col.max_y()
+        );
+        assert!(
+            (col.max_y() - paper_peak).abs() / paper_peak < 0.10,
+            "{p}: peak {:.2} vs paper {paper_peak}",
+            col.max_y()
+        );
+        assert!(gap > 3.0, "{p}: XDNA2 must show a clear layout gap, got {gap:.1}%");
+        gaps.push(gap);
+    }
+    // Sec. 5.2.3: int8 gaps exceed the bf16 gap on XDNA2.
+    assert!(gaps[0] > gaps[2] && gaps[1] > gaps[2], "int8 gaps should exceed bf16: {gaps:?}");
+
+    let b = Bench::new("fig8");
+    b.case("roofline_400pts", || {
+        black_box(harness::roofline(gen, Precision::I8I16, Layout::ColMajor, 400))
+    });
+}

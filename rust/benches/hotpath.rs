@@ -1,0 +1,72 @@
+//! Hot-path microbenchmarks for the §Perf optimization pass: the pieces
+//! that dominate sweep-scale workloads (simulate_gemm), functional-mode
+//! serving (BD transforms + micro-kernel) and the coordinator loop.
+
+use xdna_gemm::arch::{balanced_config, Generation};
+use xdna_gemm::coordinator::{Coordinator, CoordinatorOptions, GemmRequest};
+use xdna_gemm::dtype::{Layout, Precision};
+use xdna_gemm::gemm::exec::{Executor, Fidelity};
+use xdna_gemm::gemm::refimpl;
+use xdna_gemm::mem::Matrix;
+use xdna_gemm::sim::{simulate_gemm, BdMode};
+use xdna_gemm::tiling::TilingConfig;
+use xdna_gemm::util::bench::{black_box, Bench};
+use xdna_gemm::workload::GemmShape;
+use xdna_gemm::xform::InputChain;
+
+fn main() {
+    let b = Bench::new("hotpath");
+
+    // L3 sweep engine: the unit of Figs. 7-8 (400+ calls each).
+    let cfg = balanced_config(Generation::Xdna2, Precision::I8I16);
+    let s = b.case("simulate_gemm_4k", || {
+        black_box(simulate_gemm(&cfg, 4096, 4320, 4480, BdMode::Overlapped))
+    });
+    b.throughput("simulate_gemm_4k", 1.0 / s.mean_s, "sims/s");
+
+    // Functional executor at one tiny native tile (serving-path numerics).
+    let tiny = TilingConfig::new(
+        Generation::Xdna,
+        Precision::I8I16,
+        8,
+        16,
+        8,
+        32,
+        4,
+        4,
+        Layout::ColMajor,
+    )
+    .unwrap();
+    let (nm, nk, nn) = tiny.native();
+    let mut a = Matrix::zeroed(nm, 2 * nk, 1, Layout::RowMajor).unwrap();
+    let mut bb_ = Matrix::zeroed(2 * nk, nn, 1, Layout::ColMajor).unwrap();
+    refimpl::fill_random(&mut a, Precision::I8I16, 1);
+    refimpl::fill_random(&mut bb_, Precision::I8I16, 2);
+    for fidelity in [Fidelity::Direct, Fidelity::BdChain] {
+        let exec = Executor::new(tiny, fidelity);
+        b.case(&format!("executor_{fidelity:?}_{nm}x{}x{nn}", 2 * nk), || {
+            black_box(exec.execute(&a, &bb_).unwrap())
+        });
+    }
+
+    // BD transform chain in isolation (bytes/s through the Fig.-4 path).
+    let chain = InputChain { rows: 96, micro_r: 4, micro_s: 8, k_ct: 56, k_mt: 224, elem_bytes: 2 };
+    let ld_w = 448 * 2 / 4;
+    let dram: Vec<u32> = (0..96 * ld_w as u32).collect();
+    let s = b.case("bd_chain_a_panel_96x448_bf16", || {
+        black_box(chain.stream_panel(&dram, 0, ld_w, 448).unwrap())
+    });
+    b.throughput("bd_chain_bytes", (96 * 448 * 2) as f64 / s.mean_s / 1e6, "MB/s");
+
+    // Coordinator round trip (sim backend).
+    let coord = Coordinator::start(CoordinatorOptions::default());
+    let s = b.case("coordinator_roundtrip", || {
+        black_box(
+            coord
+                .call(GemmRequest::sim(GemmShape::new("b", 1024, 1024, 1024, Precision::I8I8)))
+                .unwrap(),
+        )
+    });
+    b.throughput("coordinator", 1.0 / s.mean_s, "req/s");
+    coord.shutdown();
+}

@@ -1,0 +1,34 @@
+//! Bench T1 — regenerates Table 1 (single-core kernels) and measures the
+//! pieces that produce it: the cycle model and the exhaustive IP solve.
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::dtype::Precision;
+use xdna_gemm::harness;
+use xdna_gemm::optimizer::{solve_single_core, IpOptions};
+use xdna_gemm::sim::core;
+use xdna_gemm::tiling::KernelTile;
+use xdna_gemm::util::bench::{black_box, Bench};
+
+fn main() {
+    // The paper artifact itself.
+    let t = harness::table1(None);
+    t.print();
+    t.save_csv("table1").unwrap();
+
+    // Measurement: cycle-model evaluation and full IP solves.
+    let b = Bench::new("table1");
+    b.case("cycle_model_eval", || {
+        let t = KernelTile::new(112, 112, 112);
+        black_box(core::macs_per_cycle(Generation::Xdna, Precision::I8I8, &t))
+    });
+    for (gen, p) in [
+        (Generation::Xdna, Precision::I8I8),
+        (Generation::Xdna2, Precision::Bf16),
+    ] {
+        let s = b.case(&format!("ip_solve/{gen}/{p}"), || {
+            black_box(solve_single_core(gen, p, &IpOptions::default(), 2))
+        });
+        // Paper: "the exhaustive search takes less than 1 s in all cases".
+        assert!(s.mean_s < 1.0, "IP slower than the paper's bound");
+    }
+}

@@ -1,0 +1,32 @@
+//! Bench T2 — regenerates Table 2 (XDNA balanced designs) end to end and
+//! measures the simulator's per-dispatch cost at the paper's sizes.
+
+use xdna_gemm::arch::{balanced_config, Generation};
+use xdna_gemm::dtype::Precision;
+use xdna_gemm::harness;
+use xdna_gemm::sim::{simulate_gemm, BdMode};
+use xdna_gemm::util::bench::{black_box, Bench};
+
+fn main() {
+    let t = harness::table23(Generation::Xdna);
+    t.print();
+    t.save_csv("table2").unwrap();
+
+    let b = Bench::new("table2_xdna");
+    for p in Precision::ALL {
+        let cfg = balanced_config(Generation::Xdna, p);
+        let row = harness::TABLE23_PAPER
+            .iter()
+            .find(|r| r.0 == Generation::Xdna && r.1 == p)
+            .unwrap();
+        let (m, k, n) = row.5;
+        b.case(&format!("simulate/{p}/{m}x{k}x{n}"), || {
+            black_box(simulate_gemm(&cfg, m, k, n, BdMode::Overlapped))
+        });
+        // Reproduction guard in the bench itself: within 5% of the paper.
+        let r = simulate_gemm(&cfg, m, k, n, BdMode::Overlapped);
+        let err = (r.tops - row.6).abs() / row.6;
+        b.throughput(&format!("{p}/model_TOPS(paper {:.2})", row.6), r.tops, "TOPS");
+        assert!(err < 0.05, "{p}: {:.2} vs paper {:.2}", r.tops, row.6);
+    }
+}

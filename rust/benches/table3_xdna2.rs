@@ -1,0 +1,46 @@
+//! Bench T3 — regenerates Table 3 (XDNA2 balanced designs); also measures
+//! the balanced-point search that derives the designs (Sec. 4.5.2 — the
+//! paper's loop takes <30 min with hardware in it; ours runs the whole
+//! search against the simulator in milliseconds).
+
+use xdna_gemm::arch::{balanced_config, Generation};
+use xdna_gemm::dtype::Precision;
+use xdna_gemm::harness;
+use xdna_gemm::optimizer::{optimize_balanced, BalancedOptions};
+use xdna_gemm::sim::{simulate_gemm, BdMode};
+use xdna_gemm::util::bench::{black_box, Bench};
+
+fn main() {
+    let t = harness::table23(Generation::Xdna2);
+    t.print();
+    t.save_csv("table3").unwrap();
+
+    let b = Bench::new("table3_xdna2");
+    for p in Precision::ALL {
+        let cfg = balanced_config(Generation::Xdna2, p);
+        let row = harness::TABLE23_PAPER
+            .iter()
+            .find(|r| r.0 == Generation::Xdna2 && r.1 == p)
+            .unwrap();
+        let (m, k, n) = row.5;
+        b.case(&format!("simulate/{p}/{m}x{k}x{n}"), || {
+            black_box(simulate_gemm(&cfg, m, k, n, BdMode::Overlapped))
+        });
+        let r = simulate_gemm(&cfg, m, k, n, BdMode::Overlapped);
+        let err = (r.tops - row.6).abs() / row.6;
+        b.throughput(&format!("{p}/model_TOPS(paper {:.2})", row.6), r.tops, "TOPS");
+        assert!(err < 0.08, "{p}: {:.2} vs paper {:.2}", r.tops, row.6);
+    }
+
+    let s = b.case("balanced_search/i8i16", || {
+        black_box(optimize_balanced(
+            Generation::Xdna2,
+            Precision::I8I16,
+            &BalancedOptions::default(),
+        ))
+    });
+    println!(
+        "full Sec-4.5.2 search on the simulator: {:.1} ms (paper: <30 min on hardware)",
+        s.mean_s * 1e3
+    );
+}

@@ -1,0 +1,266 @@
+//! NPU architecture descriptions for the two Ryzen AI generations (Sec. 3).
+//!
+//! Facts sourced from the paper and its references ([4, 24, 51]):
+//! XDNA (Phoenix Point): 4×5 CompTile array (20 cores), 1.0 GHz max;
+//! XDNA2 (Krackan Point): 4×8 array (32 cores), 1.8 GHz max. Both have
+//! 64 KB L1 per CompTile and 512 KB per MemTile, 2+2 DMA channels on
+//! Comp/Shim tiles, 6+6 on MemTiles, 16 BDs per ShimTile.
+//!
+//! The paper maps GEMM on a 4×4 sub-array of XDNA (no ShimTile under the
+//! last column) and the full 4×8 of XDNA2 (Sec. 4.2.1).
+
+use crate::dtype::{Layout, Precision};
+use crate::tiling::TilingConfig;
+
+/// NPU generation.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub enum Generation {
+    Xdna,
+    Xdna2,
+}
+
+impl Generation {
+    pub const ALL: [Generation; 2] = [Generation::Xdna, Generation::Xdna2];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Generation::Xdna => "xdna",
+            Generation::Xdna2 => "xdna2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Generation> {
+        match s.to_ascii_lowercase().as_str() {
+            "xdna" | "phoenix" | "xdna1" => Some(Generation::Xdna),
+            "xdna2" | "krackan" => Some(Generation::Xdna2),
+            _ => None,
+        }
+    }
+
+    pub fn spec(self) -> &'static NpuSpec {
+        match self {
+            Generation::Xdna => &XDNA,
+            Generation::Xdna2 => &XDNA2,
+        }
+    }
+}
+
+impl std::fmt::Display for Generation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Static description of one NPU generation.
+#[derive(Clone, Debug)]
+pub struct NpuSpec {
+    pub gen: Generation,
+    /// Physical CompTile array: rows × columns.
+    pub array_rows: usize,
+    pub array_cols: usize,
+    /// Columns with a ShimTile (XDNA's last column has none, Sec. 4.2.1),
+    /// i.e. the columns usable for the paper's symmetric mapping.
+    pub shim_cols: usize,
+    /// L1 bytes per CompTile (1 KB reserved for stack — Eq. 5 uses 63 KB).
+    pub l1_bytes: usize,
+    pub l1_reserved_bytes: usize,
+    /// L2 bytes per MemTile.
+    pub l2_bytes_per_tile: usize,
+    /// MM2S + S2MM DMA channels per tile kind.
+    pub comptile_channels: (usize, usize),
+    pub memtile_channels: (usize, usize),
+    pub shimtile_channels: (usize, usize),
+    /// Buffer descriptors available per ShimTile (Sec. 4.4).
+    pub shim_bds: usize,
+    /// Max tensor-addressing dims per tile DMA (Sec. 3.2).
+    pub comptile_addr_dims: usize,
+    pub memtile_addr_dims: usize,
+    pub shimtile_addr_dims: usize,
+    /// Max clock in turbo mode (Hz).
+    pub clock_hz: f64,
+    /// Full-design reconfiguration latency (Sec. 5.3.1), seconds.
+    pub reconfig_s: f64,
+    /// Whether MemTiles may spill buffers into a neighbouring MemTile
+    /// (XDNA2 mapping exploits this, Sec. 4.2.2).
+    pub neighbor_memtile_sharing: bool,
+    /// DMA bandwidth per channel between adjacent memory levels, in bytes
+    /// per core-cycle (stream switches move 32 bits/cycle; AIE-ML L1/L2
+    /// interfaces sustain 4 B/cycle per channel).
+    pub dma_bytes_per_cycle: f64,
+}
+
+impl NpuSpec {
+    /// Cores used by the paper's GEMM mapping (`m_rows * n_cols`).
+    pub fn mapped_cores(&self) -> usize {
+        self.array_rows * self.shim_cols
+    }
+
+    /// All physical cores.
+    pub fn total_cores(&self) -> usize {
+        self.array_rows * self.array_cols
+    }
+
+    /// Usable L1 for GEMM buffers (Eq. 5's 63 KB).
+    pub fn l1_budget(&self) -> usize {
+        self.l1_bytes - self.l1_reserved_bytes
+    }
+
+    /// Peak MACs/cycle for one core at a precision.
+    ///
+    /// XDNA advertises 10 TOPS int8 at 1.0 GHz over 20 cores →
+    /// 256 MACs/cycle/core; XDNA2 doubles the int8 datapath (50 TOPS class,
+    /// 1.8 GHz, 32 cores → 512). bf16 runs at half the int8 rate on XDNA;
+    /// on XDNA2 the bf16-on-bfp16 emulation reaches ~192 MACs/cycle
+    /// effective (Sec. 5.1, Table 1 fits; see DESIGN.md §5.1). The
+    /// int8→int32 mode pays a wider output shuffle (Table 1: 192/384
+    /// MACs/cycle ceilings → effective peak 224/448).
+    pub fn peak_macs_per_cycle(&self, p: Precision) -> f64 {
+        match (self.gen, p) {
+            (Generation::Xdna, Precision::I8I8) => 256.0,
+            (Generation::Xdna, Precision::I8I16) => 256.0,
+            (Generation::Xdna, Precision::I8I32) => 224.0,
+            (Generation::Xdna, Precision::Bf16) => 128.0,
+            (Generation::Xdna2, Precision::I8I8) => 512.0,
+            (Generation::Xdna2, Precision::I8I16) => 512.0,
+            (Generation::Xdna2, Precision::I8I32) => 448.0,
+            (Generation::Xdna2, Precision::Bf16) => 192.0,
+        }
+    }
+
+    /// Theoretical peak of the *mapped* array in TOPS at max clock
+    /// (`peak_TOPS` in Eq. 9): `2 * cores * MACs/cycle * f`.
+    pub fn peak_tops(&self, p: Precision) -> f64 {
+        2.0 * self.mapped_cores() as f64 * self.peak_macs_per_cycle(p) * self.clock_hz / 1e12
+    }
+
+    /// Total L2 capacity across the mapped MemTiles.
+    pub fn l2_total(&self) -> usize {
+        self.shim_cols * self.l2_bytes_per_tile
+    }
+}
+
+/// XDNA (Ryzen 9 7940HS, Minisforum UM790 Pro).
+pub static XDNA: NpuSpec = NpuSpec {
+    gen: Generation::Xdna,
+    array_rows: 4,
+    array_cols: 5,
+    shim_cols: 4,
+    l1_bytes: 64 * 1024,
+    l1_reserved_bytes: 1024,
+    l2_bytes_per_tile: 512 * 1024,
+    comptile_channels: (2, 2),
+    memtile_channels: (6, 6),
+    shimtile_channels: (2, 2),
+    shim_bds: 16,
+    comptile_addr_dims: 3,
+    memtile_addr_dims: 4,
+    shimtile_addr_dims: 3,
+    clock_hz: 1.0e9,
+    reconfig_s: 3.4e-3,
+    neighbor_memtile_sharing: false,
+    dma_bytes_per_cycle: 4.0,
+};
+
+/// XDNA2 (Ryzen AI 7 350, ASRock 4x4 BOX-AI350).
+pub static XDNA2: NpuSpec = NpuSpec {
+    gen: Generation::Xdna2,
+    array_rows: 4,
+    array_cols: 8,
+    shim_cols: 8,
+    l1_bytes: 64 * 1024,
+    l1_reserved_bytes: 1024,
+    l2_bytes_per_tile: 512 * 1024,
+    comptile_channels: (2, 2),
+    memtile_channels: (6, 6),
+    shimtile_channels: (2, 2),
+    shim_bds: 16,
+    comptile_addr_dims: 3,
+    memtile_addr_dims: 4,
+    shimtile_addr_dims: 3,
+    clock_hz: 1.8e9,
+    reconfig_s: 4.9e-3,
+    neighbor_memtile_sharing: true,
+    // XDNA2 doubles the per-core datapath; its L1 DMA interfaces must be
+    // 8 B/cycle — at 4 B/cycle the Table-1 kernels (n_ct = 64 at 450.6
+    // MACs/cycle) would violate Eq. 4, contradicting the paper's own
+    // hardware measurements.
+    dma_bytes_per_cycle: 8.0,
+};
+
+/// The paper's optimal *balanced* configurations (Tables 2 & 3 bold rows +
+/// the `k_mt` choices of Sec. 5.2.2). These are also what
+/// `optimizer::balanced` re-derives and what `python/compile/configs.py`
+/// ships as AOT artifacts (consistency checked in `rust/tests/manifest.rs`).
+pub fn balanced_config(gen: Generation, p: Precision) -> TilingConfig {
+    let (m_ct, k_ct, n_ct, k_mt) = match (gen, p) {
+        (Generation::Xdna, Precision::I8I8) => (112, 112, 112, 448),
+        (Generation::Xdna, Precision::I8I16) => (96, 112, 96, 448),
+        (Generation::Xdna, Precision::I8I32) => (80, 88, 96, 352),
+        (Generation::Xdna, Precision::Bf16) => (96, 56, 96, 224),
+        (Generation::Xdna2, Precision::I8I8) => (144, 72, 144, 432),
+        (Generation::Xdna2, Precision::I8I16) => (128, 72, 112, 432),
+        (Generation::Xdna2, Precision::I8I32) => (96, 64, 96, 384),
+        (Generation::Xdna2, Precision::Bf16) => (112, 48, 96, 384),
+    };
+    let spec = gen.spec();
+    TilingConfig::new(
+        gen,
+        p,
+        m_ct,
+        k_ct,
+        n_ct,
+        k_mt,
+        spec.array_rows,
+        spec.shim_cols,
+        Layout::ColMajor,
+    )
+    .expect("paper configs are valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        assert_eq!(XDNA.total_cores(), 20);
+        assert_eq!(XDNA.mapped_cores(), 16);
+        assert_eq!(XDNA2.total_cores(), 32);
+        assert_eq!(XDNA2.mapped_cores(), 32);
+    }
+
+    #[test]
+    fn peak_tops_match_paper_class() {
+        // XDNA ~10 TOPS int8 over all 20 cores; our mapped 16 cores → 8.19.
+        let t = XDNA.peak_tops(Precision::I8I8);
+        assert!((8.0..8.4).contains(&t), "{t}");
+        // XDNA2: 2*32*512*1.8e9 = 59 TOPS class (50 TOPS marketing at
+        // nominal clocks).
+        let t2 = XDNA2.peak_tops(Precision::I8I8);
+        assert!((58.0..60.0).contains(&t2), "{t2}");
+    }
+
+    #[test]
+    fn table_kernel_peaks_consistent_with_measurements() {
+        // Table 1 measured MACs/cycle must not exceed the modeled peaks.
+        assert!(233.0 <= XDNA.peak_macs_per_cycle(Precision::I8I8));
+        assert!(217.6 <= XDNA.peak_macs_per_cycle(Precision::I8I16));
+        assert!(192.0 <= XDNA.peak_macs_per_cycle(Precision::I8I32));
+        assert!(112.6 <= XDNA.peak_macs_per_cycle(Precision::Bf16));
+        assert!(450.6 <= XDNA2.peak_macs_per_cycle(Precision::I8I8));
+        assert!(419.8 <= XDNA2.peak_macs_per_cycle(Precision::I8I16));
+        assert!(384.0 <= XDNA2.peak_macs_per_cycle(Precision::I8I32));
+        assert!(158.1 <= XDNA2.peak_macs_per_cycle(Precision::Bf16));
+    }
+
+    #[test]
+    fn balanced_configs_valid_for_all() {
+        for gen in Generation::ALL {
+            for p in Precision::ALL {
+                let cfg = balanced_config(gen, p);
+                assert_eq!(cfg.m_rows, 4);
+                assert_eq!(cfg.n_cols, gen.spec().shim_cols);
+            }
+        }
+    }
+}

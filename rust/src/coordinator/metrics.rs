@@ -1,0 +1,112 @@
+//! Per-request records and aggregate service statistics.
+
+use crate::util::stats;
+
+/// One completed request's accounting.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub name: String,
+    /// Simulated device time (GEMM + any reconfiguration).
+    pub device_s: f64,
+    /// Host wall-clock from submit to response.
+    pub host_latency_s: f64,
+    pub ops: f64,
+    pub reconfigured: bool,
+    pub verified: Option<bool>,
+}
+
+/// Aggregate view of a service run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub records: Vec<RequestRecord>,
+}
+
+impl Metrics {
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn count(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn total_device_s(&self) -> f64 {
+        self.records.iter().map(|r| r.device_s).sum()
+    }
+
+    pub fn total_ops(&self) -> f64 {
+        self.records.iter().map(|r| r.ops).sum()
+    }
+
+    /// Sustained throughput over simulated device time.
+    pub fn device_tops(&self) -> f64 {
+        let t = self.total_device_s();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.total_ops() / t / 1e12
+        }
+    }
+
+    pub fn reconfigurations(&self) -> usize {
+        self.records.iter().filter(|r| r.reconfigured).count()
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let xs: Vec<f64> = self.records.iter().map(|r| r.host_latency_s).collect();
+        stats::percentile(&xs, p)
+    }
+
+    pub fn device_time_percentile(&self, p: f64) -> f64 {
+        let xs: Vec<f64> = self.records.iter().map(|r| r.device_s).collect();
+        stats::percentile(&xs, p)
+    }
+
+    pub fn all_verified(&self) -> bool {
+        self.records.iter().all(|r| r.verified != Some(false))
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests | device {:.2} ms | {:.2} TOPS sustained | \
+             p50/p99 device {:.2}/{:.2} ms | {} reconfigurations",
+            self.count(),
+            self.total_device_s() * 1e3,
+            self.device_tops(),
+            self.device_time_percentile(50.0) * 1e3,
+            self.device_time_percentile(99.0) * 1e3,
+            self.reconfigurations()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, device_s: f64, ops: f64, reconf: bool) -> RequestRecord {
+        RequestRecord {
+            id,
+            name: format!("r{id}"),
+            device_s,
+            host_latency_s: device_s * 1.1,
+            ops,
+            reconfigured: reconf,
+            verified: Some(true),
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = Metrics::default();
+        m.push(rec(1, 0.010, 1e9, true));
+        m.push(rec(2, 0.020, 4e9, false));
+        assert_eq!(m.count(), 2);
+        assert!((m.total_device_s() - 0.030).abs() < 1e-12);
+        assert!((m.device_tops() - (5e9 / 0.030 / 1e12)).abs() < 1e-9);
+        assert_eq!(m.reconfigurations(), 1);
+        assert!(m.all_verified());
+        assert!(m.summary().contains("2 requests"));
+    }
+}

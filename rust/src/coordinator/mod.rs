@@ -1,0 +1,22 @@
+//! Layer-3 coordinator: GEMM-as-a-service on the simulated NPU.
+//!
+//! The paper ships a *library* (Sec. 1: "enabling the implementation of
+//! high-performance GEMM libraries, similar to GPUs"); this module is that
+//! library's serving shape: a leader thread owns the device (one NPU:
+//! command processor + array), clients submit `GemmRequest`s over
+//! channels, and the scheduler applies the paper's deployment insight
+//! (Sec. 5.3.1): keep one tuned design per (precision, layout) resident,
+//! reconfigure only the two cheap parameters across problem sizes, and
+//! charge the full 3.4 / 4.9 ms reconfiguration cost only on design
+//! switches — which batching minimizes.
+//!
+//! * [`router`]  — design cache + device-state reconfiguration accounting.
+//! * [`service`] — leader/worker machinery, batching scheduler.
+//! * [`metrics`] — per-request records and aggregate statistics.
+
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use router::{DesignCache, DesignKey};
+pub use service::{Backend, Coordinator, CoordinatorOptions, GemmRequest, GemmResponse};

@@ -1,0 +1,134 @@
+//! Request routing: pick the resident design for a request and account
+//! for NPU reconfiguration (Sec. 5.3.1).
+
+use std::collections::HashMap;
+
+use crate::arch::{balanced_config, Generation};
+use crate::dtype::{Layout, Precision};
+use crate::tiling::TilingConfig;
+
+/// What identifies a loaded NPU design: same-key requests reuse the
+/// configuration, changing only the cheap per-size parameters
+/// (`M·N/(m_ct·n_ct)` and `K/k_ct` — "negligible reconfiguration").
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct DesignKey {
+    pub precision: Precision,
+    pub b_layout: Layout,
+}
+
+/// Tuned design per key. Defaults to the paper's balanced configs;
+/// `insert` lets the autotuner (optimizer::balanced) override.
+#[derive(Clone, Debug)]
+pub struct DesignCache {
+    gen: Generation,
+    designs: HashMap<DesignKey, TilingConfig>,
+}
+
+impl DesignCache {
+    pub fn new(gen: Generation) -> DesignCache {
+        let mut designs = HashMap::new();
+        for p in Precision::ALL {
+            for layout in [Layout::RowMajor, Layout::ColMajor] {
+                designs.insert(
+                    DesignKey { precision: p, b_layout: layout },
+                    balanced_config(gen, p).with_b_layout(layout),
+                );
+            }
+        }
+        DesignCache { gen, designs }
+    }
+
+    pub fn gen(&self) -> Generation {
+        self.gen
+    }
+
+    pub fn get(&self, key: DesignKey) -> &TilingConfig {
+        self.designs.get(&key).expect("cache is total over keys")
+    }
+
+    /// Override a design (autotuning results).
+    pub fn insert(&mut self, cfg: TilingConfig) {
+        assert_eq!(cfg.gen, self.gen);
+        self.designs.insert(
+            DesignKey { precision: cfg.precision, b_layout: cfg.b_layout },
+            cfg,
+        );
+    }
+}
+
+/// The device's loaded-design state: switching designs costs the full
+/// array reconfiguration latency (3.4 ms XDNA / 4.9 ms XDNA2).
+#[derive(Clone, Debug, Default)]
+pub struct DeviceState {
+    current: Option<DesignKey>,
+    pub reconfigurations: usize,
+}
+
+impl DeviceState {
+    /// Cost (seconds) to make `key` resident; updates the state.
+    pub fn switch_to(&mut self, gen: Generation, key: DesignKey) -> f64 {
+        if self.current == Some(key) {
+            0.0
+        } else {
+            self.current = Some(key);
+            self.reconfigurations += 1;
+            gen.spec().reconfig_s
+        }
+    }
+
+    pub fn current(&self) -> Option<DesignKey> {
+        self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_is_total_and_uses_balanced_defaults() {
+        let c = DesignCache::new(Generation::Xdna2);
+        for p in Precision::ALL {
+            for l in [Layout::RowMajor, Layout::ColMajor] {
+                let cfg = c.get(DesignKey { precision: p, b_layout: l });
+                assert_eq!(cfg.precision, p);
+                assert_eq!(cfg.b_layout, l);
+            }
+        }
+        let k = DesignKey { precision: Precision::I8I16, b_layout: Layout::ColMajor };
+        assert_eq!(c.get(k).kernel.label(), "128x72x112");
+    }
+
+    #[test]
+    fn autotune_override() {
+        let mut c = DesignCache::new(Generation::Xdna);
+        let custom = crate::tiling::TilingConfig::new(
+            Generation::Xdna,
+            Precision::Bf16,
+            96,
+            48,
+            96,
+            192,
+            4,
+            4,
+            Layout::ColMajor,
+        )
+        .unwrap();
+        c.insert(custom);
+        let k = DesignKey { precision: Precision::Bf16, b_layout: Layout::ColMajor };
+        assert_eq!(c.get(k).kernel.k_ct, 48);
+    }
+
+    #[test]
+    fn reconfiguration_charged_only_on_switches() {
+        let mut dev = DeviceState::default();
+        let gen = Generation::Xdna2;
+        let k1 = DesignKey { precision: Precision::I8I8, b_layout: Layout::ColMajor };
+        let k2 = DesignKey { precision: Precision::Bf16, b_layout: Layout::ColMajor };
+        assert_eq!(dev.switch_to(gen, k1), gen.spec().reconfig_s);
+        assert_eq!(dev.switch_to(gen, k1), 0.0);
+        assert_eq!(dev.switch_to(gen, k2), gen.spec().reconfig_s);
+        assert_eq!(dev.switch_to(gen, k1), gen.spec().reconfig_s);
+        assert_eq!(dev.reconfigurations, 3);
+    }
+}

@@ -1,0 +1,335 @@
+//! The service itself: a leader thread owning the (simulated) NPU device,
+//! worker clients submitting over channels, and a batching scheduler that
+//! groups same-design requests to amortize reconfiguration (Sec. 5.3.1).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::arch::Generation;
+use crate::dtype::Layout;
+use crate::gemm::exec::{Executor, Fidelity};
+use crate::gemm::refimpl;
+use crate::mem::Matrix;
+use crate::sim::{simulate_gemm, BdMode, GemmReport};
+use crate::workload::GemmShape;
+
+use super::metrics::{Metrics, RequestRecord};
+use super::router::{DesignCache, DesignKey, DeviceState};
+
+/// How requests execute.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Backend {
+    /// Timing only (sweeps, tables, load tests).
+    SimOnly,
+    /// Timing + real numerics through the functional executor, verified
+    /// against the reference when `verify` is set.
+    Functional,
+}
+
+#[derive(Clone, Debug)]
+pub struct GemmRequest {
+    pub shape: GemmShape,
+    /// Input images for `Backend::Functional` (None → generated inputs).
+    pub data: Option<(Matrix, Matrix)>,
+    /// Check the functional result against `refimpl` (expensive).
+    pub verify: bool,
+    pub bd_mode: BdMode,
+}
+
+impl GemmRequest {
+    pub fn sim(shape: GemmShape) -> GemmRequest {
+        GemmRequest { shape, data: None, verify: false, bd_mode: BdMode::Overlapped }
+    }
+}
+
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub id: u64,
+    pub name: String,
+    /// Simulated performance report (padded sizes, phase times, TOPS).
+    pub sim: GemmReport,
+    /// Device seconds including any design reconfiguration.
+    pub device_s: f64,
+    pub reconfigured: bool,
+    pub verified: Option<bool>,
+    /// Functional result (when requested).
+    pub result: Option<Matrix>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorOptions {
+    pub gen: Generation,
+    pub backend: Backend,
+    /// Scheduler batching window: how many queued requests are drained
+    /// and design-grouped per scheduling round.
+    pub batch_window: usize,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        CoordinatorOptions {
+            gen: Generation::Xdna2,
+            backend: Backend::SimOnly,
+            batch_window: 16,
+        }
+    }
+}
+
+enum Msg {
+    Submit(u64, GemmRequest, Sender<GemmResponse>, Instant),
+    Flush(Sender<Metrics>),
+    Shutdown,
+}
+
+/// Handle to a running coordinator (leader thread).
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<Metrics>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Coordinator {
+    pub fn start(opts: CoordinatorOptions) -> Coordinator {
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::spawn(move || leader_loop(opts, rx));
+        Coordinator { tx, handle: Some(handle), next_id: 0.into() }
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: GemmRequest) -> Receiver<GemmResponse> {
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Msg::Submit(id, req, rtx, Instant::now()))
+            .expect("coordinator thread alive");
+        rrx
+    }
+
+    /// Blocking convenience wrapper.
+    pub fn call(&self, req: GemmRequest) -> Result<GemmResponse> {
+        self.submit(req).recv().map_err(|e| anyhow!("coordinator dropped: {e}"))
+    }
+
+    /// Snapshot current metrics.
+    pub fn metrics(&self) -> Result<Metrics> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Flush(tx)).map_err(|e| anyhow!("send: {e}"))?;
+        rx.recv().map_err(|e| anyhow!("recv: {e}"))
+    }
+
+    /// Stop the leader and return final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle.take().unwrap().join().expect("leader panicked")
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+type Pending = (u64, GemmRequest, Sender<GemmResponse>, Instant);
+
+fn leader_loop(opts: CoordinatorOptions, rx: Receiver<Msg>) -> Metrics {
+    let cache = DesignCache::new(opts.gen);
+    let mut device = DeviceState::default();
+    let mut metrics = Metrics::default();
+
+    loop {
+        // Block for the first message, then drain up to the batch window.
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        let mut batch: Vec<Pending> = Vec::new();
+        let mut shutdown = false;
+        let mut handle_msg = |m: Msg, batch: &mut Vec<Pending>, metrics: &mut Metrics| match m {
+            Msg::Submit(id, req, tx, t0) => batch.push((id, req, tx, t0)),
+            Msg::Flush(tx) => {
+                let _ = tx.send(metrics.clone());
+            }
+            Msg::Shutdown => shutdown = true,
+        };
+        handle_msg(first, &mut batch, &mut metrics);
+        while batch.len() < opts.batch_window {
+            match rx.try_recv() {
+                Ok(m) => handle_msg(m, &mut batch, &mut metrics),
+                Err(_) => break,
+            }
+        }
+
+        // Size-class batching: stable-group by design key so a burst of
+        // mixed-precision traffic pays each reconfiguration once.
+        batch.sort_by_key(|(id, req, _, _)| {
+            (
+                req.shape.precision,
+                req.shape.b_layout == Layout::ColMajor,
+                *id,
+            )
+        });
+
+        for (id, req, tx, t0) in batch {
+            let key = DesignKey { precision: req.shape.precision, b_layout: req.shape.b_layout };
+            let cfg = *cache.get(key);
+            let reconfig_s = device.switch_to(opts.gen, key);
+            let sim = simulate_gemm(&cfg, req.shape.m, req.shape.k, req.shape.n, req.bd_mode);
+
+            let (result, verified) = match opts.backend {
+                Backend::SimOnly => (None, None),
+                Backend::Functional => run_functional(&cfg, &req),
+            };
+
+            let device_s = sim.t_total + reconfig_s;
+            let resp = GemmResponse {
+                id,
+                name: req.shape.name.clone(),
+                sim,
+                device_s,
+                reconfigured: reconfig_s > 0.0,
+                verified,
+                result,
+            };
+            metrics.push(RequestRecord {
+                id,
+                name: req.shape.name.clone(),
+                device_s,
+                host_latency_s: t0.elapsed().as_secs_f64(),
+                ops: req.shape.ops(),
+                reconfigured: reconfig_s > 0.0,
+                verified,
+            });
+            let _ = tx.send(resp);
+        }
+
+        if shutdown {
+            break;
+        }
+    }
+    metrics
+}
+
+fn run_functional(cfg: &crate::tiling::TilingConfig, req: &GemmRequest) -> (Option<Matrix>, Option<bool>) {
+    let p = cfg.precision;
+    let (a, b) = match &req.data {
+        Some((a, b)) => (a.clone(), b.clone()),
+        None => {
+            let mut a = Matrix::zeroed(req.shape.m, req.shape.k, p.ty_in(), Layout::RowMajor)
+                .expect("aligned");
+            let mut b = Matrix::zeroed(req.shape.k, req.shape.n, p.ty_in(), req.shape.b_layout)
+                .expect("aligned");
+            refimpl::fill_random(&mut a, p, req.shape.m as u64 ^ 0xA5A5);
+            refimpl::fill_random(&mut b, p, req.shape.n as u64 ^ 0x5A5A);
+            (a, b)
+        }
+    };
+    let exec = Executor::new(*cfg, Fidelity::Direct);
+    match exec.execute(&a, &b) {
+        Ok(c) => {
+            let verified = if req.verify {
+                let want = refimpl::ref_gemm(&a, &b, p).expect("ref");
+                Some(refimpl::matrices_equal(&c, &want, p))
+            } else {
+                None
+            };
+            (Some(c), verified)
+        }
+        Err(_) => (None, Some(false)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::Precision;
+    use crate::workload::{GemmShape, TransformerConfig};
+
+    #[test]
+    fn sim_requests_round_trip() {
+        let c = Coordinator::start(CoordinatorOptions::default());
+        let resp = c
+            .call(GemmRequest::sim(GemmShape::new("t", 4096, 4320, 4480, Precision::I8I16)))
+            .unwrap();
+        assert!(resp.sim.tops > 25.0, "{}", resp.sim.tops);
+        assert!(resp.reconfigured, "first request loads the design");
+        let resp2 = c
+            .call(GemmRequest::sim(GemmShape::new("t2", 4096, 4320, 4480, Precision::I8I16)))
+            .unwrap();
+        assert!(!resp2.reconfigured, "design reused");
+        let m = c.shutdown();
+        assert_eq!(m.count(), 2);
+        assert_eq!(m.reconfigurations(), 1);
+    }
+
+    #[test]
+    fn transformer_trace_reuses_designs() {
+        // Sec. 5.3.1: one design serves all layer shapes; only the first
+        // request reconfigures.
+        let c = Coordinator::start(CoordinatorOptions {
+            gen: Generation::Xdna,
+            ..Default::default()
+        });
+        let trace = TransformerConfig { seq: 512, ..Default::default() }.trace();
+        let n = trace.len();
+        let rxs: Vec<_> = trace.into_iter().map(|g| c.submit(GemmRequest::sim(g))).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let m = c.shutdown();
+        assert_eq!(m.count(), n);
+        assert_eq!(m.reconfigurations(), 1);
+        assert!(m.device_tops() > 1.0);
+    }
+
+    #[test]
+    fn batching_groups_mixed_precisions() {
+        // 4 precisions interleaved 4x: FIFO would reconfigure 16 times;
+        // the batching scheduler pays ~4 (one per design) when requests
+        // arrive together.
+        let c = Coordinator::start(CoordinatorOptions {
+            batch_window: 32,
+            ..Default::default()
+        });
+        let mut rxs = Vec::new();
+        for round in 0..4 {
+            for p in Precision::ALL {
+                let g = GemmShape::new(&format!("r{round}-{p}"), 1024, 1024, 1024, p);
+                rxs.push(c.submit(GemmRequest::sim(g)));
+            }
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let m = c.shutdown();
+        assert_eq!(m.count(), 16);
+        assert!(
+            m.reconfigurations() <= 8,
+            "batching should coalesce designs: {} reconfigs",
+            m.reconfigurations()
+        );
+    }
+
+    #[test]
+    fn functional_backend_verifies() {
+        let c = Coordinator::start(CoordinatorOptions {
+            gen: Generation::Xdna,
+            backend: Backend::Functional,
+            ..Default::default()
+        });
+        // Tiny shape (pads to one native tile of the balanced design).
+        let mut req = GemmRequest::sim(GemmShape::new("fv", 64, 64, 64, Precision::I8I8));
+        req.verify = true;
+        let resp = c.call(req).unwrap();
+        assert_eq!(resp.verified, Some(true));
+        let out = resp.result.unwrap();
+        assert_eq!((out.rows, out.cols), (64, 64));
+        c.shutdown();
+    }
+}

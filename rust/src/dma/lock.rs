@@ -1,0 +1,160 @@
+//! Hardware lock units (Sec. 3.2): semaphore-style synchronization between
+//! DMA channels and consumers (cores / DRAM).
+//!
+//! AIE-ML locks are small counting semaphores with acquire-greater-equal /
+//! release-with-value semantics. The functional executor uses them to
+//! assert the double-buffering protocol is well-formed (a buffer is never
+//! read while being written); the timing engine models their latency as
+//! part of the DMA setup constants.
+
+use anyhow::{bail, Result};
+
+/// One lock unit with a bounded counter value.
+#[derive(Clone, Debug)]
+pub struct Lock {
+    value: i32,
+    /// AIE-ML lock values are 6-bit; keep the hardware bound.
+    max: i32,
+}
+
+impl Lock {
+    pub fn new(init: i32) -> Self {
+        Lock { value: init, max: 63 }
+    }
+
+    pub fn value(&self) -> i32 {
+        self.value
+    }
+
+    /// Acquire-greater-equal: succeeds (and decrements by `dec`) when
+    /// `value >= dec`. Returns false when it would block.
+    pub fn try_acquire(&mut self, dec: i32) -> bool {
+        if self.value >= dec {
+            self.value -= dec;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release: increments by `inc`, saturating at the hardware bound.
+    pub fn release(&mut self, inc: i32) -> Result<()> {
+        let next = self.value + inc;
+        if next > self.max {
+            bail!("lock overflow: {} + {inc} > {}", self.value, self.max);
+        }
+        self.value = next;
+        Ok(())
+    }
+}
+
+/// A producer/consumer buffer pair guarded by two locks, mirroring the
+/// IRON object-fifo pattern: `prod` counts free slots, `cons` counts
+/// filled slots.
+#[derive(Clone, Debug)]
+pub struct BufferFifo {
+    pub depth: usize,
+    prod: Lock,
+    cons: Lock,
+    /// Write/read cursors for assertions.
+    wr: usize,
+    rd: usize,
+}
+
+impl BufferFifo {
+    /// `depth` = 1 models single buffering (the paper's C tiles), 2 models
+    /// double buffering (A and B tiles).
+    pub fn new(depth: usize) -> Self {
+        BufferFifo {
+            depth,
+            prod: Lock::new(depth as i32),
+            cons: Lock::new(0),
+            wr: 0,
+            rd: 0,
+        }
+    }
+
+    /// Producer side: returns the slot index to fill, or None if full.
+    pub fn try_begin_write(&mut self) -> Option<usize> {
+        if self.prod.try_acquire(1) {
+            let slot = self.wr % self.depth;
+            self.wr += 1;
+            Some(slot)
+        } else {
+            None
+        }
+    }
+
+    pub fn end_write(&mut self) -> Result<()> {
+        self.cons.release(1)
+    }
+
+    /// Consumer side: returns the slot index to drain, or None if empty.
+    pub fn try_begin_read(&mut self) -> Option<usize> {
+        if self.cons.try_acquire(1) {
+            let slot = self.rd % self.depth;
+            self.rd += 1;
+            Some(slot)
+        } else {
+            None
+        }
+    }
+
+    pub fn end_read(&mut self) -> Result<()> {
+        self.prod.release(1)
+    }
+
+    /// Filled slots currently visible to the consumer.
+    pub fn available(&self) -> i32 {
+        self.cons.value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_semantics() {
+        let mut l = Lock::new(2);
+        assert!(l.try_acquire(1));
+        assert!(l.try_acquire(1));
+        assert!(!l.try_acquire(1));
+        l.release(1).unwrap();
+        assert!(l.try_acquire(1));
+        // Overflow guarded.
+        let mut l2 = Lock::new(63);
+        assert!(l2.release(1).is_err());
+    }
+
+    #[test]
+    fn double_buffer_protocol() {
+        let mut f = BufferFifo::new(2);
+        // Producer can fill both buffers ahead of the consumer...
+        assert_eq!(f.try_begin_write(), Some(0));
+        f.end_write().unwrap();
+        assert_eq!(f.try_begin_write(), Some(1));
+        f.end_write().unwrap();
+        // ...but not a third.
+        assert_eq!(f.try_begin_write(), None);
+        // Consumer drains in order.
+        assert_eq!(f.try_begin_read(), Some(0));
+        f.end_read().unwrap();
+        // Slot 0 is free again.
+        assert_eq!(f.try_begin_write(), Some(0));
+    }
+
+    #[test]
+    fn single_buffer_serializes() {
+        // depth=1: write and read strictly alternate — the reason C-tile
+        // drains serialize with compute (Sec. 5.3.2).
+        let mut f = BufferFifo::new(1);
+        assert_eq!(f.try_begin_write(), Some(0));
+        assert_eq!(f.try_begin_write(), None);
+        f.end_write().unwrap();
+        assert_eq!(f.try_begin_read(), Some(0));
+        assert_eq!(f.try_begin_write(), None); // still reading
+        f.end_read().unwrap();
+        assert_eq!(f.try_begin_write(), Some(0));
+    }
+}

@@ -1,0 +1,327 @@
+//! DMA engine model: buffer descriptors with multi-dimensional address
+//! generation (Sec. 3.2).
+//!
+//! A BD describes one DMA transfer as up to four nested loops of
+//! `(size, stride)` pairs over **32-bit words** — address generation in the
+//! NPU DMAs happens at 32-bit granularity, which is why element-level
+//! swizzles of int8/bf16 data need in-core shuffle instructions instead
+//! (Sec. 4.3, `python/compile/kernels/transpose.py`).
+//!
+//! * An **MM2S** channel *gathers*: it walks its BD over memory and pushes
+//!   words to a stream in loop order.
+//! * An **S2MM** channel *scatters*: it walks its BD and writes successive
+//!   stream words to the generated addresses.
+//!
+//! Composing one gather with one scatter per hop reproduces the on-the-fly
+//! layout transformations of Fig. 4 (`crate::xform`). CompTiles and
+//! ShimTiles expose 3 dims, MemTiles 4 (Sec. 3.2); constructors enforce
+//! the limits.
+
+use anyhow::{bail, Result};
+
+pub mod lock;
+
+/// One address-generation loop: `size` iterations advancing `stride` words.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dim {
+    pub size: usize,
+    pub stride: isize,
+}
+
+impl Dim {
+    pub fn new(size: usize, stride: isize) -> Self {
+        Dim { size, stride }
+    }
+}
+
+/// Which tile kind a BD executes on — bounds its dimensionality.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileKind {
+    CompTile,
+    MemTile,
+    ShimTile,
+}
+
+impl TileKind {
+    pub fn max_dims(self) -> usize {
+        match self {
+            TileKind::CompTile | TileKind::ShimTile => 3,
+            TileKind::MemTile => 4,
+        }
+    }
+}
+
+/// A buffer descriptor: base word address + nested loops (outer→inner).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bd {
+    pub tile: TileKind,
+    pub base: usize,
+    /// Loops outer-to-inner. Innermost is typically `(run, 1)`.
+    pub dims: Vec<Dim>,
+}
+
+impl Bd {
+    pub fn new(tile: TileKind, base: usize, dims: Vec<Dim>) -> Result<Bd> {
+        if dims.is_empty() {
+            bail!("BD needs at least one dim");
+        }
+        if dims.len() > tile.max_dims() {
+            bail!(
+                "{:?} supports {}D addressing, got {} dims (the paper's \
+                 Sec. 4.3 decomposition exists precisely to avoid this)",
+                tile,
+                tile.max_dims(),
+                dims.len()
+            );
+        }
+        if dims.iter().any(|d| d.size == 0) {
+            bail!("BD dim with zero size");
+        }
+        Ok(Bd { tile, base, dims })
+    }
+
+    /// Linear transfer of `words` contiguous words.
+    pub fn linear(tile: TileKind, base: usize, words: usize) -> Result<Bd> {
+        Bd::new(tile, base, vec![Dim::new(words, 1)])
+    }
+
+    /// Total words transferred.
+    pub fn len(&self) -> usize {
+        self.dims.iter().map(|d| d.size).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Iterate generated word addresses in loop order.
+    pub fn addresses(&self) -> AddrIter<'_> {
+        AddrIter { bd: self, idx: vec![0; self.dims.len()], done: false }
+    }
+
+    /// Visit the BD's address stream as `(base, run_len)` maximal
+    /// contiguous runs when the innermost dim is unit-stride (always the
+    /// case for the Fig.-4 chains), falling back to single-word runs.
+    /// This is the hot path of the functional mover (§Perf).
+    fn for_each_run(&self, mut f: impl FnMut(usize, usize) -> Result<()>) -> Result<()> {
+        let (outer, run_len) = match self.dims.split_last() {
+            Some((last, rest)) if last.stride == 1 => (rest, last.size),
+            _ => (&self.dims[..], 1),
+        };
+        // Odometer over the outer dims, emitting one run per position.
+        let mut idx = vec![0usize; outer.len()];
+        loop {
+            let mut addr = self.base as isize;
+            for (i, d) in outer.iter().enumerate() {
+                addr += idx[i] as isize * d.stride;
+            }
+            debug_assert!(addr >= 0, "negative DMA address");
+            f(addr as usize, run_len)?;
+            // Increment from the innermost outer dim.
+            let mut done = outer.is_empty();
+            for i in (0..outer.len()).rev() {
+                idx[i] += 1;
+                if idx[i] < outer[i].size {
+                    break;
+                }
+                idx[i] = 0;
+                if i == 0 {
+                    done = true;
+                }
+            }
+            if done {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Gather: read `self.len()` words from `mem` in BD order (MM2S).
+    pub fn gather(&self, mem: &[u32]) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(self.len());
+        self.for_each_run(|base, run| match mem.get(base..base + run) {
+            Some(words) => {
+                out.extend_from_slice(words);
+                Ok(())
+            }
+            None => bail!("gather run {base}+{run} out of bounds ({} words)", mem.len()),
+        })?;
+        Ok(out)
+    }
+
+    /// Scatter: write `stream` into `mem` in BD order (S2MM).
+    pub fn scatter(&self, mem: &mut [u32], stream: &[u32]) -> Result<()> {
+        if stream.len() != self.len() {
+            bail!("scatter stream {} words, BD expects {}", stream.len(), self.len());
+        }
+        let mut pos = 0usize;
+        self.for_each_run(|base, run| match mem.get_mut(base..base + run) {
+            Some(slot) => {
+                slot.copy_from_slice(&stream[pos..pos + run]);
+                pos += run;
+                Ok(())
+            }
+            None => bail!("scatter run {base}+{run} out of bounds ({} words)", mem.len()),
+        })
+    }
+
+    /// Average contiguous run length, in **bytes** — the quantity the
+    /// effective-DRAM-bandwidth model keys on (DESIGN.md §5.2). A run is a
+    /// maximal sequence of consecutive word addresses.
+    pub fn avg_contig_run_bytes(&self) -> f64 {
+        let mut runs = 0u64;
+        let mut prev: Option<usize> = None;
+        for a in self.addresses() {
+            match prev {
+                Some(p) if a == p + 1 => {}
+                _ => runs += 1,
+            }
+            prev = Some(a);
+        }
+        if runs == 0 {
+            return 0.0;
+        }
+        (self.len() as u64 * 4) as f64 / runs as f64
+    }
+}
+
+/// Address iterator over a BD's nested loops.
+pub struct AddrIter<'a> {
+    bd: &'a Bd,
+    idx: Vec<usize>,
+    done: bool,
+}
+
+impl Iterator for AddrIter<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.done {
+            return None;
+        }
+        let mut addr = self.bd.base as isize;
+        for (i, d) in self.bd.dims.iter().enumerate() {
+            addr += self.idx[i] as isize * d.stride;
+        }
+        // Increment odometer from the innermost dim.
+        for i in (0..self.idx.len()).rev() {
+            self.idx[i] += 1;
+            if self.idx[i] < self.bd.dims[i].size {
+                break;
+            }
+            self.idx[i] = 0;
+            if i == 0 {
+                self.done = true;
+            }
+        }
+        debug_assert!(addr >= 0, "negative DMA address");
+        Some(addr as usize)
+    }
+}
+
+/// Bytes→words helper; errors if not word-aligned (the 32-bit granularity
+/// rule).
+pub fn words(elems: usize, elem_bytes: usize) -> Result<usize> {
+    let bytes = elems * elem_bytes;
+    if bytes % 4 != 0 {
+        bail!(
+            "{elems} elements of {elem_bytes} B = {bytes} B: not 32-bit \
+             aligned; DMAs cannot address this (Sec. 4.3)"
+        );
+    }
+    Ok(bytes / 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn linear_bd() {
+        let bd = Bd::linear(TileKind::ShimTile, 3, 5).unwrap();
+        let addrs: Vec<_> = bd.addresses().collect();
+        assert_eq!(addrs, vec![3, 4, 5, 6, 7]);
+        assert_eq!(bd.avg_contig_run_bytes(), 20.0);
+    }
+
+    #[test]
+    fn row_major_submatrix_gather() {
+        // 2x3 tile out of a 2-row x 8-word matrix starting at word 1.
+        let bd = Bd::new(
+            TileKind::ShimTile,
+            1,
+            vec![Dim::new(2, 8), Dim::new(3, 1)],
+        )
+        .unwrap();
+        let mem: Vec<u32> = (0..16).collect();
+        assert_eq!(bd.gather(&mem).unwrap(), vec![1, 2, 3, 9, 10, 11]);
+        // Two runs of 3 words = 12 B average run length.
+        assert_eq!(bd.avg_contig_run_bytes(), 12.0);
+    }
+
+    #[test]
+    fn dim_limits_enforced() {
+        let four = vec![Dim::new(2, 1); 4];
+        assert!(Bd::new(TileKind::MemTile, 0, four.clone()).is_ok());
+        assert!(Bd::new(TileKind::CompTile, 0, four.clone()).is_err());
+        assert!(Bd::new(TileKind::ShimTile, 0, four).is_err());
+    }
+
+    #[test]
+    fn scatter_inverts_gather_for_permutations() {
+        prop_check("scatter∘gather = identity on permutation BDs", 50, |rng| {
+            // Random 2D tile view of a rows x cols matrix: a permutation of
+            // all words when tile == matrix.
+            let rows = 1 + rng.below(6);
+            let cols = 1 + rng.below(6);
+            let bd = Bd::new(
+                TileKind::MemTile,
+                0,
+                vec![Dim::new(cols, 1), Dim::new(rows, cols as isize)],
+            )
+            .unwrap(); // column-major walk
+            let mem: Vec<u32> = (0..(rows * cols) as u32).collect();
+            let stream = bd.gather(&mem).unwrap();
+            let mut back = vec![0u32; mem.len()];
+            bd.scatter(&mut back, &stream).unwrap();
+            assert_eq!(back, mem);
+        });
+    }
+
+    #[test]
+    fn addresses_cover_each_word_exactly_once_for_tilings() {
+        prop_check("BD tiling covers memory exactly once", 60, |rng| {
+            // Tile a (ro*ri) x (co*ci) word matrix into ri x ci tiles: the
+            // classic 4D pre-tiling walk must visit every word once.
+            let ro = 1 + rng.below(4);
+            let ri = 1 + rng.below(4);
+            let co = 1 + rng.below(4);
+            let ci = 1 + rng.below(4);
+            let width = co * ci;
+            let bd = Bd::new(
+                TileKind::MemTile,
+                0,
+                vec![
+                    Dim::new(ro, (ri * width) as isize),
+                    Dim::new(co, ci as isize),
+                    Dim::new(ri, width as isize),
+                    Dim::new(ci, 1),
+                ],
+            )
+            .unwrap();
+            let mut seen = vec![0u8; ro * ri * width];
+            for a in bd.addresses() {
+                seen[a] += 1;
+            }
+            assert!(seen.iter().all(|&c| c == 1), "not a permutation");
+        });
+    }
+
+    #[test]
+    fn words_alignment() {
+        assert_eq!(words(8, 1).unwrap(), 2);
+        assert_eq!(words(2, 2).unwrap(), 1);
+        assert!(words(3, 1).is_err());
+        assert!(words(1, 2).is_err());
+    }
+}

@@ -1,0 +1,259 @@
+//! Precision pairs and element types.
+//!
+//! The paper evaluates four precision pairs (Sec. 5): `int8-int8`,
+//! `int8-int16`, `int8-int32` (int8 inputs, int32 accumulation, output
+//! narrowed with saturation — "precision reduction"), and `bf16-bf16`
+//! (bf16 inputs, fp32 accumulators, bf16 stores). XDNA2 additionally runs
+//! bf16 through its bfp16 datapath, which the simulator models as a higher
+//! effective peak (see `sim::core`).
+
+use std::fmt;
+
+/// Software bfloat16: upper 16 bits of an IEEE-754 f32, rounded
+/// to-nearest-even on conversion — the rounding AIE bf16 stores use.
+#[derive(Clone, Copy, PartialEq, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+
+    /// Convert from f32 with round-to-nearest-even.
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet NaN, preserving sign.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // Round to nearest even on the truncated 16 bits.
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let _ = round_bit;
+        Bf16((rounded >> 16) as u16)
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    #[inline]
+    pub fn from_bits(b: u16) -> Self {
+        Bf16(b)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+}
+
+impl fmt::Debug for Bf16 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}bf16", self.to_f32())
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> f32 {
+        x.to_f32()
+    }
+}
+
+/// Saturating narrowing from a 32-bit accumulator (the AIE `srs` step).
+#[inline]
+pub fn sat_i8(x: i32) -> i8 {
+    x.clamp(-128, 127) as i8
+}
+
+/// Saturating narrowing to int16.
+#[inline]
+pub fn sat_i16(x: i32) -> i16 {
+    x.clamp(-32768, 32767) as i16
+}
+
+/// A GEMM precision pair: input element type + output element type.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub enum Precision {
+    /// int8 inputs, int32 accumulate, saturate to int8 on store.
+    I8I8,
+    /// int8 inputs, int32 accumulate, saturate to int16 on store.
+    I8I16,
+    /// int8 inputs, full int32 outputs.
+    I8I32,
+    /// bf16 inputs, f32 accumulate, bf16 stores.
+    Bf16,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 4] =
+        [Precision::I8I8, Precision::I8I16, Precision::I8I32, Precision::Bf16];
+
+    /// `ty(A)` / `ty(B)`: input element size in bytes (Eqs. 2, 3, 6, 7).
+    #[inline]
+    pub fn ty_in(self) -> usize {
+        match self {
+            Precision::Bf16 => 2,
+            _ => 1,
+        }
+    }
+
+    /// `ty(C)`: output element size in bytes (Eqs. 5, 8).
+    #[inline]
+    pub fn ty_out(self) -> usize {
+        match self {
+            Precision::I8I8 => 1,
+            Precision::I8I16 => 2,
+            Precision::I8I32 => 4,
+            Precision::Bf16 => 2,
+        }
+    }
+
+    /// Accumulator element size in bytes (resident C tile in L1 during the
+    /// reduction; int32 / f32 accumulators are 4 B).
+    ///
+    /// Note Eq. 5 budgets the C tile at its *output* precision — the AIE
+    /// API keeps the accumulator in the vector register file / acc
+    /// registers, and the L1 buffer holds the narrowed tile. We follow the
+    /// paper (`ty_out`) for capacity checks and use `acc_bytes` only for
+    /// host-side functional buffers.
+    #[inline]
+    pub fn acc_bytes(self) -> usize {
+        4
+    }
+
+    /// AIE-API micro-tile `r x s x t` for this precision (AIE-ML modes;
+    /// mirrored in `python/compile/kernels/ref.py::MICRO_TILE`).
+    #[inline]
+    pub fn micro_tile(self) -> (usize, usize, usize) {
+        match self {
+            Precision::Bf16 => (4, 8, 4),
+            _ => (4, 8, 8),
+        }
+    }
+
+    /// Manifest / CLI name (`i8i8`, `i8i16`, `i8i32`, `bf16`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::I8I8 => "i8i8",
+            Precision::I8I16 => "i8i16",
+            Precision::I8I32 => "i8i32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Paper-style name (`int8-int8`, ..., `bf16-bf16`).
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            Precision::I8I8 => "int8-int8",
+            Precision::I8I16 => "int8-int16",
+            Precision::I8I32 => "int8-int32",
+            Precision::Bf16 => "bf16-bf16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "i8i8" | "int8-int8" => Some(Precision::I8I8),
+            "i8i16" | "int8-int16" => Some(Precision::I8I16),
+            "i8i32" | "int8-int32" => Some(Precision::I8I32),
+            "bf16" | "bf16-bf16" => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Storage order of a matrix in DRAM (Sec. 4.2.2): A and C are always
+/// row-major in this work; B may be either.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Layout {
+    RowMajor,
+    ColMajor,
+}
+
+impl Layout {
+    pub fn name(self) -> &'static str {
+        match self {
+            Layout::RowMajor => "rowmajor",
+            Layout::ColMajor => "colmajor",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Layout> {
+        match s {
+            "rowmajor" | "row" | "row-major" => Some(Layout::RowMajor),
+            "colmajor" | "col" | "col-major" | "column-major" => Some(Layout::ColMajor),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_roundtrip_exact() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, -2.5, 3.140625] {
+            // Values with <= 8 significand bits survive exactly.
+            assert_eq!(Bf16::from_f32(x).to_f32(), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn bf16_round_to_nearest_even() {
+        // 1.0039062 = 1 + 2^-8: exactly halfway between bf16(1.0) and
+        // bf16(1.0078125); ties-to-even keeps the even significand (1.0).
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(halfway).to_bits(), 0x3F80);
+        // Just above halfway rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(Bf16::from_f32(above).to_bits(), 0x3F81);
+        // Odd significand + exact tie rounds up to even.
+        let tie_odd = f32::from_bits(0x3F81_8000);
+        assert_eq!(Bf16::from_f32(tie_odd).to_bits(), 0x3F82);
+    }
+
+    #[test]
+    fn bf16_nan_inf() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(sat_i8(127), 127);
+        assert_eq!(sat_i8(128), 127);
+        assert_eq!(sat_i8(-128), -128);
+        assert_eq!(sat_i8(-129), -128);
+        assert_eq!(sat_i8(1 << 20), 127);
+        assert_eq!(sat_i16(32768), 32767);
+        assert_eq!(sat_i16(-40000), -32768);
+    }
+
+    #[test]
+    fn precision_tables() {
+        assert_eq!(Precision::I8I8.ty_in(), 1);
+        assert_eq!(Precision::Bf16.ty_in(), 2);
+        assert_eq!(Precision::I8I32.ty_out(), 4);
+        assert_eq!(Precision::Bf16.micro_tile(), (4, 8, 4));
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+            assert_eq!(Precision::parse(p.paper_name()), Some(p));
+        }
+    }
+}

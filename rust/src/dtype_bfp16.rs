@@ -1,0 +1,204 @@
+//! Block floating-point (bfp16) — XDNA2's native datapath (Sec. 3.1,
+//! future work in Sec. 5.3.4).
+//!
+//! bfp16 stores a block of eight values as one shared 8-bit exponent plus
+//! eight 8-bit two's-complement mantissas (9 bytes per 8 values, 9 bits/
+//! value amortized) [5, 15, 29]. XDNA2 runs bf16 GEMMs by *emulating*
+//! them on this datapath (Table 1's 158.1 MACs/cycle bf16 mode); native
+//! bfp16 kernels would hit the full int8-class rate.
+//!
+//! The paper defers bfp16 GEMM because the shared-exponent blocks break
+//! the 32-bit-granularity DMA transformations of Sec. 4.3 (a block is 9
+//! bytes — not word-aligned, so the Fig.-4 chains cannot re-tile it
+//! without an in-core repack). This module provides the datatype itself —
+//! encode/decode, quantization error bounds, block dot products — as the
+//! substrate that future-work kernel would build on, and quantifies the
+//! layout problem (`dma_alignment_gap`).
+
+#[cfg(test)]
+use crate::dtype::Bf16;
+
+/// Values per block (fixed by the hardware format).
+pub const BLOCK: usize = 8;
+
+/// One bfp16 block: shared power-of-two scale + 8 signed mantissas.
+///
+/// Interpretation: `value[i] = mantissa[i] · 2^(exponent - 127 - 6)`
+/// — mantissas use a Q1.6-style signed range [-128, 127] with the
+/// leading bit weight 2, so a block's largest |value| maps to ~[64, 127].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BfpBlock {
+    pub exponent: u8,
+    pub mantissas: [i8; BLOCK],
+}
+
+impl BfpBlock {
+    /// Bytes a block occupies in memory.
+    pub const BYTES: usize = 1 + BLOCK;
+
+    /// Quantize 8 f32 values to one block (round-to-nearest, shared max
+    /// exponent — the standard MSFP/bfp encoding [29]).
+    pub fn encode(values: &[f32; BLOCK]) -> BfpBlock {
+        let max = values.iter().fold(0f32, |m, v| m.max(v.abs()));
+        if max == 0.0 || !max.is_finite() {
+            return BfpBlock { exponent: 0, mantissas: [0; BLOCK] };
+        }
+        // Exponent of the block max; mantissas scaled so max lands in
+        // [64, 127].
+        let e = max.log2().floor() as i32;
+        let biased = (e + 127).clamp(0, 255) as u8;
+        let scale = 2f32.powi(e - 6);
+        let mut mantissas = [0i8; BLOCK];
+        for (i, v) in values.iter().enumerate() {
+            mantissas[i] = (v / scale).round().clamp(-128.0, 127.0) as i8;
+        }
+        BfpBlock { exponent: biased, mantissas }
+    }
+
+    /// Dequantize back to f32.
+    pub fn decode(&self) -> [f32; BLOCK] {
+        let scale = 2f32.powi(self.exponent as i32 - 127 - 6);
+        let mut out = [0f32; BLOCK];
+        for (i, m) in self.mantissas.iter().enumerate() {
+            out[i] = *m as f32 * scale;
+        }
+        out
+    }
+
+    /// Integer dot product of two blocks (what the XDNA2 MAC array
+    /// executes): `Σ mᵢ·m'ᵢ · 2^(e + e' - 2·(127+6))` accumulated in f32.
+    pub fn dot(&self, other: &BfpBlock) -> f32 {
+        let mut acc = 0i32;
+        for i in 0..BLOCK {
+            acc += self.mantissas[i] as i32 * other.mantissas[i] as i32;
+        }
+        let scale = 2f32.powi(self.exponent as i32 + other.exponent as i32 - 2 * (127 + 6));
+        acc as f32 * scale
+    }
+}
+
+/// Quantize a slice (length multiple of 8) to blocks.
+pub fn encode_slice(values: &[f32]) -> Vec<BfpBlock> {
+    assert!(values.len() % BLOCK == 0, "bfp16 needs whole blocks of 8");
+    values
+        .chunks_exact(BLOCK)
+        .map(|c| BfpBlock::encode(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Dot product of two bfp16-quantized vectors.
+pub fn dot(a: &[BfpBlock], b: &[BfpBlock]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x.dot(y)).sum()
+}
+
+/// The Sec.-4.3 obstruction, quantified: bytes of padding per block needed
+/// to make bfp16 tiles 32-bit addressable by the DMAs (the reason the
+/// paper defers bfp16 GEMM). 9-byte blocks need 3 pad bytes (25% waste)
+/// for word alignment — or an in-core repack kernel.
+pub fn dma_alignment_gap() -> usize {
+    BfpBlock::BYTES.next_multiple_of(4) - BfpBlock::BYTES
+}
+
+/// Worst-case relative quantization error of the encoding for values in a
+/// block whose max is `max`: half a mantissa step relative to the max.
+pub fn max_rel_error_bound() -> f32 {
+    // Mantissa step = max/64 (max maps to >= 64); rounding adds <= step/2.
+    0.5 / 64.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn roundtrip_within_bound() {
+        prop_check("bfp16 roundtrip error bound", 100, |rng| {
+            let mut vals = [0f32; BLOCK];
+            let scale = 2f32.powi(rng.range_i64(-10, 10) as i32);
+            for v in vals.iter_mut() {
+                *v = (rng.normal() as f32) * scale;
+            }
+            let blk = BfpBlock::encode(&vals);
+            let back = blk.decode();
+            let max = vals.iter().fold(0f32, |m, v| m.max(v.abs()));
+            for i in 0..BLOCK {
+                let err = (back[i] - vals[i]).abs();
+                assert!(
+                    err <= max_rel_error_bound() * max * 1.001,
+                    "val {} -> {} (err {err}, max {max})",
+                    vals[i],
+                    back[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn exact_for_powers_of_two() {
+        let vals = [1.0f32, 0.5, -0.25, 2.0, -1.0, 0.0, 0.125, -2.0];
+        let blk = BfpBlock::encode(&vals);
+        assert_eq!(blk.decode(), vals);
+    }
+
+    #[test]
+    fn zero_block() {
+        let blk = BfpBlock::encode(&[0.0; BLOCK]);
+        assert_eq!(blk.decode(), [0.0; BLOCK]);
+        assert_eq!(blk.dot(&blk), 0.0);
+    }
+
+    #[test]
+    fn dot_matches_f32_within_quantization() {
+        prop_check("bfp16 dot ~ f32 dot", 50, |rng| {
+            let n = BLOCK * (1 + rng.below(4));
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let qa = encode_slice(&a);
+            let qb = encode_slice(&b);
+            let got = dot(&qa, &qb);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            // Two quantized operands: ~2x the per-operand bound, times the
+            // L1 mass of the vectors.
+            let l1a: f32 = a.iter().map(|v| v.abs()).sum();
+            let l1b: f32 = b.iter().map(|v| v.abs()).sum();
+            let bound = 2.5 * max_rel_error_bound() * (l1a / n as f32) * (l1b / n as f32) * n as f32
+                + 1e-5;
+            assert!((got - want).abs() <= bound.max(0.05 * want.abs() + 1e-4),
+                "dot {got} vs {want}");
+        });
+    }
+
+    #[test]
+    fn bfp16_vs_bf16_tradeoff() {
+        // The format's actual deal: per-element precision is *coarser*
+        // than bf16 (shared exponent, ~7 effective mantissa bits at the
+        // block max vs bf16's 8 per element) in exchange for int8-rate
+        // MACs — which is why XDNA2's bf16-on-bfp16 *emulation* reaches
+        // only 158-192 MACs/cycle while native bfp16 would hit the
+        // int8-class 512 (Table 1 / Sec. 5.1).
+        let vals = [1.01f32, 1.02, 1.03, 1.04, 1.05, 1.06, 1.07, 1.08];
+        let blk = BfpBlock::encode(&vals).decode();
+        let max = 1.08f32;
+        for i in 0..BLOCK {
+            let bfp_err = (blk[i] - vals[i]).abs();
+            // Within the format's bound...
+            assert!(bfp_err <= max_rel_error_bound() * max * 1.001);
+            // ...but not finer than bf16 for same-binade blocks.
+            let bf16_err = (Bf16::from_f32(vals[i]).to_f32() - vals[i]).abs();
+            assert!(bfp_err >= bf16_err * 0.99 || bfp_err < 1e-7);
+        }
+        // Where bfp16 *wins*: wide-dynamic-range blocks would force bf16's
+        // fixed 8-bit mantissa to round small values relative to
+        // themselves, while storage cost is 9 B vs 16 B per 8 values.
+        assert!(BfpBlock::BYTES < 8 * 2);
+    }
+
+    #[test]
+    fn dma_alignment_obstruction() {
+        // The Sec. 5.3.4 deferral: 9-byte blocks are not word-addressable.
+        assert_eq!(BfpBlock::BYTES, 9);
+        assert_eq!(dma_alignment_gap(), 3);
+    }
+}

@@ -1,0 +1,600 @@
+//! The functional tiled executor: the paper's whole-array GEMM mapping
+//! (Sec. 4.2) run with real bytes on the simulated hierarchy.
+//!
+//! Per output native tile (Fig. 3):
+//! 1. each array row's `m_ct × K` A panel and each column's B panel are
+//!    streamed DRAM → L2 → L1 through the BD transform chains of
+//!    [`crate::xform`] (the Fig.-4 pipeline), arriving *pre-tiled*;
+//! 2. every core runs the output-stationary micro-kernel over `K/k_ct`
+//!    pre-tiled tile pairs (the zeroing step is the accumulator init);
+//! 3. the narrowed C tile is produced in pre-tiled `r × t` layout and
+//!    drained through the MemTile aggregation + 4D de-tiling path back to
+//!    row-major DRAM (Sec. 4.2.2).
+//!
+//! Two fidelity levels produce *identical* bytes (property-tested):
+//! `BdChain` drives every hop through real BD gathers/scatters;
+//! `Direct` uses the algebraic pre-tiling oracle (faster; the default for
+//! examples and the coordinator's functional mode).
+
+use anyhow::{ensure, Result};
+
+use crate::dtype::{Bf16, Layout, Precision};
+use crate::mem::Matrix;
+use crate::tiling::TilingConfig;
+use crate::xform::{pretile_oracle, BRowMajorChain, InputChain, OutputChain};
+
+
+
+/// How faithfully to move the bytes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Fidelity {
+    /// Full BD-chain streaming (every hop of Fig. 4).
+    BdChain,
+    /// Algebraic pre-tiling (same layout, no per-hop simulation).
+    Direct,
+}
+
+pub struct Executor {
+    pub cfg: TilingConfig,
+    pub fidelity: Fidelity,
+}
+
+impl Executor {
+    pub fn new(cfg: TilingConfig, fidelity: Fidelity) -> Executor {
+        Executor { cfg, fidelity }
+    }
+
+    fn a_chain(&self) -> InputChain {
+        let (r, s, _) = self.cfg.precision.micro_tile();
+        InputChain {
+            rows: self.cfg.kernel.m_ct,
+            micro_r: r,
+            micro_s: s,
+            k_ct: self.cfg.kernel.k_ct,
+            k_mt: self.cfg.k_mt,
+            elem_bytes: self.cfg.precision.ty_in(),
+        }
+    }
+
+    fn bt_chain(&self) -> InputChain {
+        let (_, s, t) = self.cfg.precision.micro_tile();
+        InputChain {
+            rows: self.cfg.kernel.n_ct,
+            micro_r: t,
+            micro_s: s,
+            k_ct: self.cfg.kernel.k_ct,
+            k_mt: self.cfg.k_mt,
+            elem_bytes: self.cfg.precision.ty_in(),
+        }
+    }
+
+    fn brm_chain(&self) -> BRowMajorChain {
+        let (_, s, t) = self.cfg.precision.micro_tile();
+        BRowMajorChain {
+            k_ct: self.cfg.kernel.k_ct,
+            n_ct: self.cfg.kernel.n_ct,
+            micro_s: s,
+            micro_t: t,
+            elem_bytes: self.cfg.precision.ty_in(),
+        }
+    }
+
+    fn out_chain(&self) -> OutputChain {
+        let (r, _, t) = self.cfg.precision.micro_tile();
+        OutputChain {
+            m_ct: self.cfg.kernel.m_ct,
+            n_ct: self.cfg.kernel.n_ct,
+            micro_r: r,
+            micro_t: t,
+            elem_bytes: self.cfg.precision.ty_out(),
+        }
+    }
+
+    /// Stream one input panel into per-`k_ct`-tile pre-tiled L1 images.
+    fn stream_input(&self, chain: &InputChain, img: &Matrix, row0: usize, pk: usize) -> Result<Vec<Vec<u32>>> {
+        match self.fidelity {
+            Fidelity::BdChain => chain.stream_panel(&img.data, row0, img.row_words(), pk),
+            Fidelity::Direct => {
+                let k_ct_w = chain.k_ct * chain.elem_bytes / 4;
+                Ok((0..pk / chain.k_ct)
+                    .map(|ti| pretile_oracle(&img.data, img.row_words(), row0, ti * k_ct_w, chain))
+                    .collect())
+            }
+        }
+    }
+
+    fn stream_b_rowmajor(&self, img: &Matrix, col0_w: usize, pk: usize) -> Result<Vec<Vec<u32>>> {
+        let c = self.brm_chain();
+        match self.fidelity {
+            Fidelity::BdChain => c.stream_panel(&img.data, col0_w, img.row_words(), pk),
+            Fidelity::Direct => Ok((0..pk / c.k_ct)
+                .map(|ti| c.pretile_oracle(&img.data, img.row_words(), ti * c.k_ct, col0_w))
+                .collect()),
+        }
+    }
+
+    /// Execute `C = narrow(A @ B)` through the full mapping.
+    ///
+    /// `a`: `m × k` row-major; `b`: `k × n`, layout per `cfg.b_layout`.
+    /// Returns the `m × n` row-major result (padding stripped).
+    pub fn execute(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        let p = self.cfg.precision;
+        ensure!(a.layout == Layout::RowMajor, "A must be row-major");
+        ensure!(b.layout == self.cfg.b_layout, "B layout must match the design");
+        ensure!(a.cols == b.rows, "shape mismatch");
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let (pm, pk, pn) = self.cfg.padded(m, k, n);
+
+        // Zero-pad into fresh DRAM images (the paper's Sec. 5.3.1 notes
+        // the NPU can zero-pad on the fly in MemTile channels; host-side
+        // padding exercises the same aligned code path).
+        let pa = pad_matrix(a, pm, pk)?;
+        let pb = match self.cfg.b_layout {
+            Layout::RowMajor => pad_matrix(b, pk, pn)?,
+            Layout::ColMajor => pad_matrix(b, pk, pn)?,
+        };
+        let mut pc = Matrix::zeroed(pm, pn, p.ty_out(), Layout::RowMajor)?;
+
+        let kt = self.cfg.kernel;
+        let (nm, _, nn) = self.cfg.native();
+        let (r, s, t) = p.micro_tile();
+        let _ = s;
+        let a_chain = self.a_chain();
+        let bt_chain = self.bt_chain();
+        let out_chain = self.out_chain();
+        let k_tiles = pk / kt.k_ct;
+
+        for trow in 0..pm / nm {
+            for tcol in 0..pn / nn {
+                // Per array row: pre-tiled A tiles for the whole reduction.
+                let mut a_tiles: Vec<Vec<Vec<u32>>> = Vec::with_capacity(self.cfg.m_rows);
+                for ar in 0..self.cfg.m_rows {
+                    let row0 = trow * nm + ar * kt.m_ct;
+                    a_tiles.push(self.stream_input(&a_chain, &pa, row0, pk)?);
+                }
+                // Per array column: pre-tiled B tiles.
+                let mut b_tiles: Vec<Vec<Vec<u32>>> = Vec::with_capacity(self.cfg.n_cols);
+                for ac in 0..self.cfg.n_cols {
+                    let tiles = match self.cfg.b_layout {
+                        Layout::ColMajor => {
+                            // Column-major B == row panel of the Bᵀ image.
+                            let row0 = tcol * nn + ac * kt.n_ct;
+                            self.stream_input(&bt_chain, &pb, row0, pk)?
+                        }
+                        Layout::RowMajor => {
+                            let col0_w = (tcol * nn + ac * kt.n_ct) * p.ty_in() / 4;
+                            self.stream_b_rowmajor(&pb, col0_w, pk)?
+                        }
+                    };
+                    b_tiles.push(tiles);
+                }
+
+                // Decode each pre-tiled tile to dense form ONCE (the
+                // broadcast means every A tile feeds n_cols cores and
+                // every B tile m_rows cores — §Perf optimization 2).
+                let a_dense: Vec<Vec<DenseTile>> = a_tiles
+                    .iter()
+                    .map(|tiles| tiles.iter().map(|w| self.decode_a(w)).collect())
+                    .collect();
+                let b_dense: Vec<Vec<DenseTile>> = b_tiles
+                    .iter()
+                    .map(|tiles| tiles.iter().map(|w| self.decode_b(w)).collect())
+                    .collect();
+
+                // Every core computes its output-stationary tile, then each
+                // column drains through its MemTile to DRAM.
+                for ac in 0..self.cfg.n_cols {
+                    let mut column_c: Vec<Vec<u32>> = Vec::with_capacity(self.cfg.m_rows);
+                    for ar in 0..self.cfg.m_rows {
+                        let pretiled_c =
+                            self.core_compute(&a_dense[ar], &b_dense[ac], k_tiles)?;
+                        column_c.push(pretiled_c);
+                    }
+                    let col0_w = (tcol * nn + ac * kt.n_ct) * p.ty_out() / 4;
+                    let ld_w = pc.row_words();
+                    out_chain.drain_column(&column_c, &mut pc.data, trow * nm, col0_w, ld_w)?;
+                }
+                let _ = r;
+                let _ = t;
+            }
+        }
+
+        crop_matrix(&pc, m, n, p.ty_out())
+    }
+
+    /// One core's whole reduction over pre-decoded dense tiles: MAC into
+    /// the stationary accumulator, narrow, re-tile for the output path.
+    fn core_compute(&self, a_tiles: &[DenseTile], b_tiles: &[DenseTile], k_tiles: usize) -> Result<Vec<u32>> {
+        let p = self.cfg.precision;
+        let kt = self.cfg.kernel;
+        let (r, _, t) = p.micro_tile();
+        match p {
+            Precision::Bf16 => {
+                let mut acc = vec![0f32; kt.m_ct * kt.n_ct]; // zeroing kernel
+                for ti in 0..k_tiles {
+                    let (DenseTile::F32(a), DenseTile::F32(b)) = (&a_tiles[ti], &b_tiles[ti])
+                    else {
+                        unreachable!("precision fixed per executor")
+                    };
+                    dense_mac_f32(a, b, &mut acc, kt.m_ct, kt.k_ct, kt.n_ct);
+                }
+                // Narrow to bf16 and lay out pre-tiled r × t.
+                let mut bytes = Vec::with_capacity(kt.m_ct * kt.n_ct * 2);
+                for_each_pretiled(kt.m_ct, kt.n_ct, r, t, |i, j| {
+                    let v = Bf16::from_f32(acc[i * kt.n_ct + j]);
+                    bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+                });
+                Ok(pack_words(&bytes))
+            }
+            _ => {
+                let mut acc = vec![0i32; kt.m_ct * kt.n_ct]; // zeroing kernel
+                for ti in 0..k_tiles {
+                    let (DenseTile::I8(a), DenseTile::I8(b)) = (&a_tiles[ti], &b_tiles[ti])
+                    else {
+                        unreachable!("precision fixed per executor")
+                    };
+                    dense_mac_i32(a, b, &mut acc, kt.m_ct, kt.k_ct, kt.n_ct);
+                }
+                let mut bytes = Vec::with_capacity(kt.m_ct * kt.n_ct * p.ty_out());
+                for_each_pretiled(kt.m_ct, kt.n_ct, r, t, |i, j| {
+                    let v = acc[i * kt.n_ct + j];
+                    match p {
+                        Precision::I8I8 => bytes.push(crate::dtype::sat_i8(v) as u8),
+                        Precision::I8I16 => {
+                            bytes.extend_from_slice(&crate::dtype::sat_i16(v).to_le_bytes())
+                        }
+                        Precision::I8I32 => bytes.extend_from_slice(&v.to_le_bytes()),
+                        Precision::Bf16 => unreachable!(),
+                    }
+                });
+                Ok(pack_words(&bytes))
+            }
+        }
+    }
+
+    /// Decode one pre-tiled A tile to dense `m_ct × k_ct`.
+    fn decode_a(&self, words: &[u32]) -> DenseTile {
+        let kt = self.cfg.kernel;
+        let (r, s, _) = self.cfg.precision.micro_tile();
+        match self.cfg.precision {
+            Precision::Bf16 => {
+                DenseTile::F32(decode_pretiled_bf16(words, kt.m_ct, kt.k_ct, r, s))
+            }
+            _ => DenseTile::I8(decode_pretiled_i8(words, kt.m_ct, kt.k_ct, r, s)),
+        }
+    }
+
+    /// Decode one pre-tiled B tile to dense `k_ct × n_ct` (applying the
+    /// in-core shuffle — the AIE-API transpose — for column-major B).
+    fn decode_b(&self, words: &[u32]) -> DenseTile {
+        let kt = self.cfg.kernel;
+        let (_, s, t) = self.cfg.precision.micro_tile();
+        match self.cfg.precision {
+            Precision::Bf16 => {
+                let mut out = vec![0f32; kt.k_ct * kt.n_ct];
+                let mut write = |dst: usize, src_idx: usize| {
+                    let bits = (words[src_idx >> 1] >> ((src_idx & 1) * 16)) as u16;
+                    out[dst] = Bf16::from_bits(bits).to_f32();
+                };
+                match self.cfg.b_layout {
+                    Layout::ColMajor => decode_bt_blocks(kt.k_ct, kt.n_ct, s, t, &mut write),
+                    Layout::RowMajor => decode_b_blocks(kt.k_ct, kt.n_ct, s, t, &mut write),
+                }
+                DenseTile::F32(out)
+            }
+            _ => {
+                let mut out = vec![0i8; kt.k_ct * kt.n_ct];
+                let mut write = |dst: usize, src_idx: usize| {
+                    out[dst] = (words[src_idx >> 2] >> ((src_idx & 3) * 8)) as u8 as i8;
+                };
+                match self.cfg.b_layout {
+                    Layout::ColMajor => decode_bt_blocks(kt.k_ct, kt.n_ct, s, t, &mut write),
+                    Layout::RowMajor => decode_b_blocks(kt.k_ct, kt.n_ct, s, t, &mut write),
+                }
+                DenseTile::I8(out)
+            }
+        }
+    }
+}
+
+/// A decoded (dense, row-major) operand tile.
+enum DenseTile {
+    I8(Vec<i8>),
+    F32(Vec<f32>),
+}
+
+/// Walk a pre-tiled row-major-B image (`s × t` micro-tiles) in source
+/// order, emitting (dense `k·n_ct + j` index, source index) pairs —
+/// division-free (§Perf optimization 3).
+fn decode_b_blocks(k_ct: usize, n_ct: usize, s: usize, t: usize, f: &mut impl FnMut(usize, usize)) {
+    let mut src = 0;
+    for ko in 0..k_ct / s {
+        for jo in 0..n_ct / t {
+            for ki in 0..s {
+                let row = (ko * s + ki) * n_ct + jo * t;
+                for w in 0..t {
+                    f(row + w, src);
+                    src += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Walk a pre-tiled Bᵀ image (`t × s` micro-tiles of the transposed
+/// panel) in source order; destination indices are transposed — this IS
+/// the in-core shuffle.
+fn decode_bt_blocks(k_ct: usize, n_ct: usize, s: usize, t: usize, f: &mut impl FnMut(usize, usize)) {
+    let mut src = 0;
+    for jo in 0..n_ct / t {
+        for ko in 0..k_ct / s {
+            for ji in 0..t {
+                let col = jo * t + ji;
+                let k0 = ko * s;
+                for ki in 0..s {
+                    f((k0 + ki) * n_ct + col, src);
+                    src += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Visit (i, j) of an `m × n` tile in pre-tiled `r × t` stream order.
+fn for_each_pretiled(m: usize, n: usize, r: usize, t: usize, mut f: impl FnMut(usize, usize)) {
+    for mo in 0..m / r {
+        for jo in 0..n / t {
+            for mi in 0..r {
+                for w in 0..t {
+                    f(mo * r + mi, jo * t + w);
+                }
+            }
+        }
+    }
+}
+
+/// Decode one pre-tiled A tile to dense `m_ct × k_ct` i8 (division-free:
+/// walk micro-tiles in source order — §Perf optimization 3).
+fn decode_pretiled_i8(words: &[u32], m_ct: usize, k_ct: usize, r: usize, s: usize) -> Vec<i8> {
+    // Read bytes straight out of the word image (no intermediate Vec —
+    // §Perf optimization 4).
+    let byte = |i: usize| (words[i >> 2] >> ((i & 3) * 8)) as u8;
+    let mut out = vec![0i8; m_ct * k_ct];
+    let mut src = 0;
+    for mo in 0..m_ct / r {
+        for ko in 0..k_ct / s {
+            for mi in 0..r {
+                let base = (mo * r + mi) * k_ct + ko * s;
+                for si in 0..s {
+                    out[base + si] = byte(src) as i8;
+                    src += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn decode_pretiled_bf16(words: &[u32], m_ct: usize, k_ct: usize, r: usize, s: usize) -> Vec<f32> {
+    let half = |i: usize| (words[i >> 1] >> ((i & 1) * 16)) as u16;
+    let mut out = vec![0f32; m_ct * k_ct];
+    let mut src = 0;
+    for mo in 0..m_ct / r {
+        for ko in 0..k_ct / s {
+            for mi in 0..r {
+                let base = (mo * r + mi) * k_ct + ko * s;
+                for si in 0..s {
+                    out[base + si] = Bf16::from_bits(half(src)).to_f32();
+                    src += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dense micro-kernel: `acc += a @ b` (int32 accumulate — the MAC array).
+fn dense_mac_i32(a: &[i8], b: &[i8], acc: &mut [i32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk] as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut acc[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j] as i32;
+            }
+        }
+    }
+}
+
+/// Dense micro-kernel, f32 accumulators (the bf16 datapath).
+fn dense_mac_f32(a: &[f32], b: &[f32], acc: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut acc[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+fn pack_words(bytes: &[u8]) -> Vec<u32> {
+    assert!(bytes.len() % 4 == 0);
+    bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Zero-pad a matrix image to `rows × cols` (same layout/elem size).
+pub fn pad_matrix(src: &Matrix, rows: usize, cols: usize) -> Result<Matrix> {
+    if src.rows == rows && src.cols == cols {
+        return Ok(src.clone());
+    }
+    let mut out = Matrix::zeroed(rows, cols, src.elem_bytes, src.layout)?;
+    // Copy storage row by storage row; when both images' rows are
+    // word-aligned (the common case — Matrix enforces word-aligned
+    // storage rows), this is a straight word memcpy per row.
+    let src_row_w = src.row_words();
+    let dst_row_w = out.row_words();
+    for sr in 0..src.n_storage_rows() {
+        let s0 = sr * src_row_w;
+        let d0 = sr * dst_row_w;
+        out.data[d0..d0 + src_row_w].copy_from_slice(&src.data[s0..s0 + src_row_w]);
+    }
+    Ok(out)
+}
+
+/// Crop a row-major matrix image to `rows × cols`.
+fn crop_matrix(src: &Matrix, rows: usize, cols: usize, elem_bytes: usize) -> Result<Matrix> {
+    if src.rows == rows && src.cols == cols {
+        return Ok(src.clone());
+    }
+    let mut out = Matrix::zeroed(rows, cols, elem_bytes, Layout::RowMajor)?;
+    for i in 0..rows {
+        for j in 0..cols {
+            for b in 0..elem_bytes {
+                let v = src.get_byte((i * src.cols + j) * elem_bytes + b);
+                out.set_byte((i * cols + j) * elem_bytes + b, v);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Generation;
+    use crate::gemm::refimpl;
+    use crate::tiling::TilingConfig;
+    use crate::util::prop::prop_check;
+
+    /// Scaled-down configs (same structure, small tiles) so the functional
+    /// path stays fast.
+    fn tiny_cfg(gen: Generation, p: Precision, b_layout: Layout) -> TilingConfig {
+        let (_, _, t) = p.micro_tile();
+        let n_ct = 2 * t.max(4);
+        let spec = gen.spec();
+        TilingConfig::new(gen, p, 8, 16, n_ct, 32, spec.array_rows, spec.shim_cols, b_layout)
+            .unwrap()
+    }
+
+    fn run_case(gen: Generation, p: Precision, layout: Layout, fidelity: Fidelity, m: usize, k: usize, n: usize, seed: u64) {
+        let cfg = tiny_cfg(gen, p, layout);
+        let mut a = Matrix::zeroed(m, k, p.ty_in(), Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(k, n, p.ty_in(), layout).unwrap();
+        refimpl::fill_random(&mut a, p, seed);
+        refimpl::fill_random(&mut b, p, seed + 1);
+        let got = Executor::new(cfg, fidelity).execute(&a, &b).unwrap();
+        let want = refimpl::ref_gemm(&a, &b, p).unwrap();
+        assert!(
+            refimpl::matrices_equal(&got, &want, p),
+            "{gen}/{p}/{layout:?}/{fidelity:?} {m}x{k}x{n} mismatch"
+        );
+    }
+
+    #[test]
+    fn all_precisions_native_size_bdchain() {
+        for gen in Generation::ALL {
+            for p in Precision::ALL {
+                for layout in [Layout::ColMajor, Layout::RowMajor] {
+                    let cfg = tiny_cfg(gen, p, layout);
+                    let (nm, nk, nn) = cfg.native();
+                    run_case(gen, p, layout, Fidelity::BdChain, nm, nk, nn, 7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_tile_multi_panel() {
+        // 2x2 native tiles, 3 K panels — exercises the outer tiling level.
+        let cfg = tiny_cfg(Generation::Xdna, Precision::I8I16, Layout::ColMajor);
+        let (nm, nk, nn) = cfg.native();
+        run_case(
+            Generation::Xdna,
+            Precision::I8I16,
+            Layout::ColMajor,
+            Fidelity::Direct,
+            2 * nm,
+            3 * nk,
+            2 * nn,
+            11,
+        );
+    }
+
+    #[test]
+    fn ragged_sizes_are_padded_correctly() {
+        // Non-aligned sizes round up to the native grid; results must
+        // still match the reference exactly on the unpadded region.
+        let cfg = tiny_cfg(Generation::Xdna, Precision::I8I8, Layout::ColMajor);
+        let (nm, nk, nn) = cfg.native();
+        // m is free; k and n stay word-aligned (DMA-visible DRAM images).
+        run_case(
+            Generation::Xdna,
+            Precision::I8I8,
+            Layout::ColMajor,
+            Fidelity::Direct,
+            nm - 3,
+            nk + 4,
+            nn - 4,
+            13,
+        );
+    }
+
+    #[test]
+    fn bd_chain_equals_direct() {
+        prop_check("BdChain ≡ Direct fidelity", 8, |rng| {
+            let gens = [Generation::Xdna, Generation::Xdna2];
+            let precs = Precision::ALL;
+            let layouts = [Layout::RowMajor, Layout::ColMajor];
+            let gen = *rng.pick(&gens);
+            let p = *rng.pick(&precs);
+            let layout = *rng.pick(&layouts);
+            let cfg = tiny_cfg(gen, p, layout);
+            let (nm, nk, nn) = cfg.native();
+            // m is free; k and n move in word-aligned (4-element) steps.
+            let m = nm - rng.below(4);
+            let k = nk + 4 * rng.below(2);
+            let n = nn - 4 * rng.below(2);
+            let mut a = Matrix::zeroed(m, k, p.ty_in(), Layout::RowMajor).unwrap();
+            let mut b = Matrix::zeroed(k, n, p.ty_in(), layout).unwrap();
+            refimpl::fill_random(&mut a, p, rng.next_u64());
+            refimpl::fill_random(&mut b, p, rng.next_u64());
+            let via_bd = Executor::new(cfg, Fidelity::BdChain).execute(&a, &b).unwrap();
+            let direct = Executor::new(cfg, Fidelity::Direct).execute(&a, &b).unwrap();
+            assert!(refimpl::matrices_equal(&via_bd, &direct, p));
+        });
+    }
+
+    #[test]
+    fn saturating_inputs_end_to_end() {
+        // Extreme int8 inputs saturate through the full pipeline exactly
+        // like the reference.
+        run_case(
+            Generation::Xdna2,
+            Precision::I8I8,
+            Layout::ColMajor,
+            Fidelity::Direct,
+            16,
+            64,
+            16,
+            99,
+        );
+    }
+
+    #[test]
+    fn rejects_mismatched_layout() {
+        let cfg = tiny_cfg(Generation::Xdna, Precision::I8I8, Layout::ColMajor);
+        let a = Matrix::zeroed(8, 16, 1, Layout::RowMajor).unwrap();
+        let b = Matrix::zeroed(16, 16, 1, Layout::RowMajor).unwrap(); // wrong
+        assert!(Executor::new(cfg, Fidelity::Direct).execute(&a, &b).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Functional GEMM: bit-accurate numerics through the simulated hierarchy.
+//!
+//! * [`refimpl`] — the Rust reference implementation (the mirror of
+//!   `python/compile/kernels/ref.py`, cross-checked by golden vectors).
+//! * [`exec`]   — the tiled executor: real bytes flow DRAM → L2 → L1
+//!   through the BD transform chains of [`crate::xform`], per-core
+//!   micro-kernels consume pre-tiled tiles, and C drains back through the
+//!   MemTile aggregation path. Proves the paper's mapping end to end.
+
+pub mod exec;
+pub mod refimpl;

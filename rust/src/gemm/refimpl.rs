@@ -1,0 +1,182 @@
+//! Reference GEMM over DRAM matrix images — the Rust mirror of
+//! `python/compile/kernels/ref.py`.
+//!
+//! Semantics per precision pair (Sec. 5.1):
+//! * int8 inputs accumulate in int32; outputs narrow with saturation to
+//!   int8 / int16 / int32 ("precision reduction");
+//! * bf16 inputs accumulate in f32; outputs round-to-nearest-even to bf16.
+//!
+//! Cross-checked against the pytest-validated oracle through
+//! `artifacts/golden.json` (`rust/tests/golden.rs`).
+
+use anyhow::{ensure, Result};
+
+use crate::dtype::{sat_i16, sat_i8, Bf16, Layout, Precision};
+use crate::mem::Matrix;
+
+/// Allocate the output image for an `m × n` result.
+pub fn out_matrix(m: usize, n: usize, p: Precision) -> Result<Matrix> {
+    Matrix::zeroed(m, n, p.ty_out(), Layout::RowMajor)
+}
+
+/// Reference GEMM: `C = narrow(A @ B)`. `a` must be row-major; `b` may be
+/// row- or column-major (accessors hide the layout).
+pub fn ref_gemm(a: &Matrix, b: &Matrix, p: Precision) -> Result<Matrix> {
+    ensure!(a.layout == Layout::RowMajor, "A must be row-major");
+    ensure!(a.cols == b.rows, "shape mismatch: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = out_matrix(m, n, p)?;
+    match p {
+        Precision::Bf16 => {
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0f32;
+                    for kk in 0..k {
+                        acc += a.get_bf16(i, kk).to_f32() * b.get_bf16(kk, j).to_f32();
+                    }
+                    c.set_bf16(i, j, Bf16::from_f32(acc));
+                }
+            }
+        }
+        _ => {
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0i32;
+                    for kk in 0..k {
+                        acc += a.get_i8(i, kk) as i32 * b.get_i8(kk, j) as i32;
+                    }
+                    store_narrowed(&mut c, i, j, acc, p);
+                }
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// Narrow-and-store one accumulator value (the AIE `srs` step).
+pub fn store_narrowed(c: &mut Matrix, i: usize, j: usize, acc: i32, p: Precision) {
+    match p {
+        Precision::I8I8 => c.set_i8(i, j, sat_i8(acc)),
+        Precision::I8I16 => c.set_i16(i, j, sat_i16(acc)),
+        Precision::I8I32 => c.set_i32(i, j, acc),
+        Precision::Bf16 => unreachable!("bf16 uses the f32 path"),
+    }
+}
+
+/// Fill a matrix with deterministic pseudo-random inputs appropriate for
+/// the precision (full int8 range / unit normals for bf16).
+pub fn fill_random(mat: &mut Matrix, p: Precision, seed: u64) {
+    let mut rng = crate::util::rng::Rng::seeded(seed);
+    for i in 0..mat.rows {
+        for j in 0..mat.cols {
+            match p {
+                Precision::Bf16 => mat.set_bf16(i, j, Bf16::from_f32(rng.normal() as f32)),
+                _ => mat.set_i8(i, j, rng.i8()),
+            }
+        }
+    }
+}
+
+/// Exact equality of two matrices of the same precision/shape.
+pub fn matrices_equal(x: &Matrix, y: &Matrix, p: Precision) -> bool {
+    if x.rows != y.rows || x.cols != y.cols {
+        return false;
+    }
+    for i in 0..x.rows {
+        for j in 0..x.cols {
+            let same = match p {
+                Precision::I8I8 => x.get_i8(i, j) == y.get_i8(i, j),
+                Precision::I8I16 => x.get_i16(i, j) == y.get_i16(i, j),
+                Precision::I8I32 => x.get_i32(i, j) == y.get_i32(i, j),
+                Precision::Bf16 => x.get_bf16(i, j).to_bits() == y.get_bf16(i, j).to_bits(),
+            };
+            if !same {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(rows: usize, cols: usize, p: Precision, layout: Layout, vals: &[i8]) -> Matrix {
+        let mut m = Matrix::zeroed(rows, cols, p.ty_in(), layout).unwrap();
+        for i in 0..rows {
+            for j in 0..cols {
+                m.set_i8(i, j, vals[i * cols + j]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn tiny_known_product() {
+        // 2x4 @ 4x4, checked against a hand computation (word-aligned
+        // shapes — the DRAM images are DMA-visible).
+        let a = mk(2, 4, Precision::I8I32, Layout::RowMajor, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let b = mk(
+            4,
+            4,
+            Precision::I8I32,
+            Layout::RowMajor,
+            &[1, 0, 2, 0, 0, 1, 0, 2, 1, 1, 0, 0, 2, 0, 1, 1],
+        );
+        let c = ref_gemm(&a, &b, Precision::I8I32).unwrap();
+        // row0: [1+3+8, 2+3, 2+4, 4+4] = [12, 5, 6, 8]
+        assert_eq!(
+            [c.get_i32(0, 0), c.get_i32(0, 1), c.get_i32(0, 2), c.get_i32(0, 3)],
+            [12, 5, 6, 8]
+        );
+        // row1: [5+7+16, 6+7, 10+8, 12+8] = [28, 13, 18, 20]
+        assert_eq!(
+            [c.get_i32(1, 0), c.get_i32(1, 1), c.get_i32(1, 2), c.get_i32(1, 3)],
+            [28, 13, 18, 20]
+        );
+    }
+
+    #[test]
+    fn col_major_b_gives_same_result() {
+        let vals: Vec<i8> = (1..=16).collect();
+        let a = mk(4, 4, Precision::I8I16, Layout::RowMajor, &vals);
+        let b_row = mk(4, 4, Precision::I8I16, Layout::RowMajor, &vals);
+        // Same logical B stored column-major.
+        let mut b_col = Matrix::zeroed(4, 4, 1, Layout::ColMajor).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                b_col.set_i8(i, j, b_row.get_i8(i, j));
+            }
+        }
+        let c1 = ref_gemm(&a, &b_row, Precision::I8I16).unwrap();
+        let c2 = ref_gemm(&a, &b_col, Precision::I8I16).unwrap();
+        assert!(matrices_equal(&c1, &c2, Precision::I8I16));
+    }
+
+    #[test]
+    fn saturation_engages() {
+        // 127*127*4 = 64516 >> 127: int8 output clamps.
+        let a = mk(1, 4, Precision::I8I8, Layout::RowMajor, &[127; 4]);
+        let b = mk(4, 4, Precision::I8I8, Layout::RowMajor, &[127; 16]);
+        let c = ref_gemm(&a, &b, Precision::I8I8).unwrap();
+        assert_eq!(c.get_i8(0, 0), 127);
+        let c16 = ref_gemm(&a, &b, Precision::I8I16).unwrap();
+        assert_eq!(c16.get_i16(0, 0), 32767);
+        let c32 = ref_gemm(&a, &b, Precision::I8I32).unwrap();
+        assert_eq!(c32.get_i32(0, 0), 64516);
+    }
+
+    #[test]
+    fn bf16_accumulates_in_f32() {
+        let mut a = Matrix::zeroed(1, 4, 2, Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(4, 4, 2, Layout::RowMajor).unwrap();
+        for kk in 0..4 {
+            a.set_bf16(0, kk, Bf16::from_f32(0.5));
+            b.set_bf16(kk, 0, Bf16::from_f32(2.0));
+        }
+        let c = ref_gemm(&a, &b, Precision::Bf16).unwrap();
+        assert_eq!(c.get_bf16(0, 0).to_f32(), 4.0);
+        assert_eq!(c.get_bf16(0, 1).to_f32(), 0.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! # xdna-gemm
+//!
+//! A full-system reproduction of *"Striking the Balance: GEMM Performance
+//! Optimization Across Generations of Ryzen™ AI NPUs"* (Taka et al., 2025)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains everything the paper's methodology needs, built from
+//! scratch (see `DESIGN.md` for the substitution map — no NPU silicon is
+//! required):
+//!
+//! * [`arch`] — XDNA / XDNA2 architecture descriptions (array geometry,
+//!   peaks, clocks, DMA channel/BD budgets).
+//! * [`dtype`] — precision pairs (int8→int8/int16/int32, bf16) and a
+//!   software `bf16` with round-to-nearest-even.
+//! * [`tiling`] — the paper's four-level tiling scheme and capacity rules.
+//! * [`dma`] / [`xform`] — buffer descriptors with 3D/4D address generation
+//!   and the Fig.-4 on-the-fly layout-transformation pipeline.
+//! * [`mem`] — DRAM matrix images and L1/L2 allocators.
+//! * [`sim`] — the calibrated performance simulator (single-core cycle
+//!   model, effective-DRAM-bandwidth model, command-processor BD queues,
+//!   whole-GEMM engine, trace unit).
+//! * [`model`] — the analytical equations (Eqs. 1–10) verbatim.
+//! * [`optimizer`] — the single-core integer program (Sec. 4.5.1) and the
+//!   system-level balanced-point search (Sec. 4.5.2).
+//! * [`gemm`] — bit-accurate reference GEMM and the functional tiled
+//!   executor that moves real bytes through the simulated hierarchy.
+//! * [`runtime`] — PJRT client; loads the AOT Pallas/JAX artifacts
+//!   (`artifacts/*.hlo.txt`) and executes them from the request path.
+//! * [`coordinator`] — GEMM-as-a-service: router, design cache,
+//!   padding, scheduler, metrics.
+//! * [`workload`] — DL GEMM traces (transformer / MLP / sweeps).
+//! * [`report`] — table and CSV emitters used by the bench harness.
+//! * [`util`] — offline stand-ins for clap/criterion/proptest/serde_json.
+
+pub mod arch;
+pub mod coordinator;
+pub mod dma;
+pub mod harness;
+pub mod dtype;
+pub mod dtype_bfp16;
+pub mod gemm;
+pub mod mem;
+pub mod model;
+pub mod optimizer;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tiling;
+pub mod util;
+pub mod workload;
+pub mod xform;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

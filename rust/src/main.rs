@@ -1,0 +1,217 @@
+//! `xdna-gemm` CLI — leader entrypoint for the reproduction harness.
+//!
+//! Subcommands regenerate every paper artifact (DESIGN.md §4) and drive
+//! the coordinator/optimizer interactively:
+//!
+//! ```text
+//! xdna-gemm table1 [--gen xdna|xdna2]        Table 1 (single-core kernels)
+//! xdna-gemm table2                            Table 2 (XDNA balanced)
+//! xdna-gemm table3                            Table 3 (XDNA2 balanced)
+//! xdna-gemm fig6                              Fig. 6 (k_mt sweeps)
+//! xdna-gemm fig7 [--points N]                 Fig. 7 (XDNA rooflines)
+//! xdna-gemm fig8 [--points N]                 Fig. 8 (XDNA2 rooflines)
+//! xdna-gemm ablations [--which a1|a2|a3|a4]   Sec. 5.2.2 / 5.3.x studies
+//! xdna-gemm optimize --gen G --precision P    run the balanced search
+//! xdna-gemm simulate --gen G --precision P --m M --k K --n N [--rowmajor-b]
+//! xdna-gemm serve --requests N [--gen G]      coordinator load demo
+//! xdna-gemm artifacts [--dir artifacts]       list + smoke the AOT bundle
+//! ```
+
+use anyhow::{bail, Result};
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::coordinator::{Coordinator, CoordinatorOptions, GemmRequest};
+use xdna_gemm::dtype::{Layout, Precision};
+use xdna_gemm::harness;
+use xdna_gemm::optimizer::{optimize_balanced, BalancedOptions};
+use xdna_gemm::sim::{simulate_gemm, BdMode};
+use xdna_gemm::util::cli::Args;
+use xdna_gemm::workload::{GemmShape, TransformerConfig};
+
+const USAGE: &str = "usage: xdna-gemm <table1|table2|table3|fig6|fig7|fig8|ablations|optimize|simulate|serve|artifacts> [options]";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let sub = args.subcommand_required(USAGE)?;
+    match sub {
+        "table1" => {
+            let gen = args.get("gen").map(parse_gen).transpose()?;
+            harness::table1(gen).print();
+        }
+        "table2" => {
+            let t = harness::table23(Generation::Xdna);
+            t.print();
+            t.save_csv("table2")?;
+        }
+        "table3" => {
+            let t = harness::table23(Generation::Xdna2);
+            t.print();
+            t.save_csv("table3")?;
+        }
+        "fig6" => {
+            for (s, paper) in harness::fig6() {
+                println!("{}", s.to_ascii(60, 12));
+                println!("paper saturated TOPS: {paper:.2}  model max: {:.2}\n", s.max_y());
+                s.save_csv(&format!("fig6_{}", s.name.replace([' ', '/'], "_")))?;
+            }
+        }
+        "fig7" | "fig8" => {
+            let gen = if sub == "fig7" { Generation::Xdna } else { Generation::Xdna2 };
+            let points = args.usize_opt("points", 400)?;
+            run_roofline(gen, points)?;
+        }
+        "ablations" => {
+            let which = args.get("which").unwrap_or("all");
+            if matches!(which, "a1" | "all") {
+                harness::ablation_baseline().print();
+            }
+            if matches!(which, "a2" | "all") {
+                harness::ablation_reconfig(Generation::Xdna2).print();
+            }
+            if matches!(which, "a3" | "all") {
+                harness::ablation_cbuffer().print();
+            }
+            if matches!(which, "a4" | "all") {
+                harness::ablation_bd_overlap().print();
+            }
+        }
+        "optimize" => {
+            let gen = parse_gen(args.get("gen").unwrap_or("xdna2"))?;
+            let p = parse_precision(args.get("precision").unwrap_or("i8i16"))?;
+            let res = optimize_balanced(gen, p, &BalancedOptions::default())?;
+            println!("balanced search for {gen}/{p}:");
+            for h in &res.history {
+                println!(
+                    "  kernel {:>12} k_mt {:>5} → {:>6.2} TOPS  [{}]",
+                    h.cfg.kernel.label(),
+                    h.cfg.k_mt,
+                    h.tops,
+                    if h.memory_bound { "memory-bound" } else { "compute-bound" }
+                );
+            }
+            println!(
+                "winner: {} k_mt={} → {:.2} TOPS at {}x{}x{}",
+                res.winner.kernel.label(),
+                res.winner.k_mt,
+                res.winner_report.tops,
+                res.eval.0,
+                res.eval.1,
+                res.eval.2
+            );
+        }
+        "simulate" => {
+            let gen = parse_gen(args.get("gen").unwrap_or("xdna2"))?;
+            let p = parse_precision(args.get("precision").unwrap_or("i8i8"))?;
+            let m = args.usize_opt("m", 4096)?;
+            let k = args.usize_opt("k", 4096)?;
+            let n = args.usize_opt("n", 4096)?;
+            let mut cfg = xdna_gemm::arch::balanced_config(gen, p);
+            if args.flag("rowmajor-b") {
+                cfg = cfg.with_b_layout(Layout::RowMajor);
+            }
+            let mode =
+                if args.flag("sequential-bd") { BdMode::Sequential } else { BdMode::Overlapped };
+            let r = simulate_gemm(&cfg, m, k, n, mode);
+            println!("design: {}", cfg.label());
+            println!("padded: {}x{}x{}", r.pm, r.pk, r.pn);
+            println!(
+                "phases: comp {:.3} ms | read {:.3} ms | write {:.3} ms | \
+                 prologue {:.3} ms | bd-stall {:.3} ms | dispatch {:.3} ms",
+                r.t_comp * 1e3,
+                r.t_read * 1e3,
+                r.t_write * 1e3,
+                r.t_prologue * 1e3,
+                r.t_stall * 1e3,
+                r.t_dispatch * 1e3
+            );
+            println!(
+                "total {:.3} ms → {:.2} TOPS ({:?}-bound, eff {:.3}, \
+                 kernel {:.1} MACs/cyc, ARI {:.0})",
+                r.t_total * 1e3,
+                r.tops,
+                r.bound,
+                r.efficiency,
+                r.kernel_macs_per_cycle,
+                r.arithmetic_intensity
+            );
+            println!(
+                "trace: mac {:.0} cyc | zero {:.0} | drain {:.0} | dma-idle {:.0} | util {:.1}%",
+                r.trace.mac_cycles,
+                r.trace.zero_cycles,
+                r.trace.drain_cycles,
+                r.trace.dma_idle_cycles,
+                100.0 * r.trace.mac_utilization()
+            );
+        }
+        "serve" => {
+            let gen = parse_gen(args.get("gen").unwrap_or("xdna2"))?;
+            let n = args.usize_opt("requests", 64)?;
+            let coord = Coordinator::start(CoordinatorOptions { gen, ..Default::default() });
+            // Workload: a GGML-style trace file (`--trace shapes.txt`,
+            // lines of `name M K N precision [layout]`) or the built-in
+            // transformer prefill.
+            let trace = match args.get("trace") {
+                Some(path) => {
+                    xdna_gemm::workload::parse_trace(&std::fs::read_to_string(path)?)?
+                }
+                None => TransformerConfig::default().trace(),
+            };
+            let mut rxs = Vec::new();
+            for i in 0..n {
+                let g = &trace[i % trace.len()];
+                rxs.push(coord.submit(GemmRequest::sim(GemmShape {
+                    name: format!("{}#{i}", g.name),
+                    ..g.clone()
+                })));
+            }
+            for rx in rxs {
+                rx.recv()?;
+            }
+            let m = coord.shutdown();
+            println!("{}", m.summary());
+        }
+        "artifacts" => {
+            let dir = args.get("dir").unwrap_or("artifacts");
+            let mut rt = xdna_gemm::runtime::Runtime::load(dir)?;
+            println!("platform: {}", rt.platform());
+            for name in rt.artifact_names() {
+                let meta = rt.meta(&name).unwrap().clone();
+                print!("  {name}: {}x{}x{} {:?}", meta.m, meta.k, meta.n, meta.arg_dtypes);
+                if args.flag("compile") {
+                    rt.ensure_compiled(&name)?;
+                    print!("  [compiled]");
+                }
+                println!();
+            }
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn run_roofline(gen: Generation, points: usize) -> Result<()> {
+    let figname = if gen == Generation::Xdna { "fig7" } else { "fig8" };
+    let precisions = [Precision::I8I8, Precision::I8I16, Precision::Bf16];
+    for p in precisions {
+        for layout in [Layout::ColMajor, Layout::RowMajor] {
+            let s = harness::roofline(gen, p, layout, points);
+            println!("{}", s.to_ascii(64, 10));
+            println!("peak: {:.2} TOPS over {} points\n", s.max_y(), s.points.len());
+            s.save_csv(&format!("{figname}_{}_{}", p.name(), layout.name()))?;
+        }
+        let (peak, gap) = harness::sweep_summary(gen, p, points.min(100));
+        println!(
+            "{gen} {}: up to {peak:.2} TOPS; col-major beats row-major by {gap:.1}% on average\n",
+            p.paper_name()
+        );
+    }
+    Ok(())
+}
+
+fn parse_gen(s: &str) -> Result<Generation> {
+    Generation::parse(s).ok_or_else(|| anyhow::anyhow!("unknown generation '{s}'"))
+}
+
+fn parse_precision(s: &str) -> Result<Precision> {
+    Precision::parse(s).ok_or_else(|| anyhow::anyhow!("unknown precision '{s}'"))
+}

@@ -1,0 +1,255 @@
+//! Memory substrate: DRAM matrix images (word-addressable, as the DMAs see
+//! them) and on-chip buffer allocators with the capacity rules of Sec. 4.2.
+//!
+//! Matrices live in DRAM in *regular order* — row-major for A and C,
+//! row- or column-major for B (Sec. 4.2.2); there is no explicit
+//! pre-tiling, that's the `xform` pipeline's job.
+
+use anyhow::{bail, Result};
+
+use crate::dtype::{Bf16, Layout};
+
+/// A DRAM-resident matrix as a word-addressable image.
+///
+/// `data` is a `Vec<u32>` so DMA gathers/scatters (32-bit granularity)
+/// operate directly; element accessors pack/unpack within words.
+/// For `Layout::ColMajor` the *storage* is the transposed matrix laid out
+/// row-major (i.e. `data[j * rows + i]` holds element `(i, j)`), which is
+/// byte-identical to textbook column-major.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub elem_bytes: usize,
+    pub layout: Layout,
+    pub data: Vec<u32>,
+}
+
+impl Matrix {
+    pub fn zeroed(rows: usize, cols: usize, elem_bytes: usize, layout: Layout) -> Result<Matrix> {
+        let bytes = rows * cols * elem_bytes;
+        if bytes % 4 != 0 {
+            bail!("matrix image {rows}x{cols}x{elem_bytes}B not word-aligned");
+        }
+        // The *storage row* (contiguous run) must also be word-aligned for
+        // DMA addressing: rows of `cols` elements (row-major) or `rows`
+        // elements (col-major).
+        let run = match layout {
+            Layout::RowMajor => cols * elem_bytes,
+            Layout::ColMajor => rows * elem_bytes,
+        };
+        if run % 4 != 0 {
+            bail!("matrix storage rows of {run} B not word-aligned");
+        }
+        Ok(Matrix { rows, cols, elem_bytes, layout, data: vec![0; bytes / 4] })
+    }
+
+    /// Words per storage row (the DMA row stride).
+    pub fn row_words(&self) -> usize {
+        match self.layout {
+            Layout::RowMajor => self.cols * self.elem_bytes / 4,
+            Layout::ColMajor => self.rows * self.elem_bytes / 4,
+        }
+    }
+
+    /// Number of storage rows.
+    pub fn n_storage_rows(&self) -> usize {
+        match self.layout {
+            Layout::RowMajor => self.rows,
+            Layout::ColMajor => self.cols,
+        }
+    }
+
+    fn byte_index(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.rows && j < self.cols, "({i},{j}) out of bounds");
+        match self.layout {
+            Layout::RowMajor => (i * self.cols + j) * self.elem_bytes,
+            Layout::ColMajor => (j * self.rows + i) * self.elem_bytes,
+        }
+    }
+
+    #[inline]
+    pub fn get_byte(&self, b: usize) -> u8 {
+        (self.data[b / 4] >> (8 * (b % 4))) as u8
+    }
+
+    #[inline]
+    pub fn set_byte(&mut self, b: usize, v: u8) {
+        let w = &mut self.data[b / 4];
+        let sh = 8 * (b % 4);
+        *w = (*w & !(0xFFu32 << sh)) | ((v as u32) << sh);
+    }
+
+    pub fn get_i8(&self, i: usize, j: usize) -> i8 {
+        self.get_byte(self.byte_index(i, j)) as i8
+    }
+
+    pub fn set_i8(&mut self, i: usize, j: usize, v: i8) {
+        let b = self.byte_index(i, j);
+        self.set_byte(b, v as u8);
+    }
+
+    pub fn get_i16(&self, i: usize, j: usize) -> i16 {
+        let b = self.byte_index(i, j);
+        i16::from_le_bytes([self.get_byte(b), self.get_byte(b + 1)])
+    }
+
+    pub fn set_i16(&mut self, i: usize, j: usize, v: i16) {
+        let b = self.byte_index(i, j);
+        let [lo, hi] = v.to_le_bytes();
+        self.set_byte(b, lo);
+        self.set_byte(b + 1, hi);
+    }
+
+    pub fn get_i32(&self, i: usize, j: usize) -> i32 {
+        let b = self.byte_index(i, j);
+        debug_assert_eq!(b % 4, 0);
+        self.data[b / 4] as i32
+    }
+
+    pub fn set_i32(&mut self, i: usize, j: usize, v: i32) {
+        let b = self.byte_index(i, j);
+        debug_assert_eq!(b % 4, 0);
+        self.data[b / 4] = v as u32;
+    }
+
+    pub fn get_bf16(&self, i: usize, j: usize) -> Bf16 {
+        Bf16::from_bits(self.get_i16(i, j) as u16)
+    }
+
+    pub fn set_bf16(&mut self, i: usize, j: usize, v: Bf16) {
+        self.set_i16(i, j, v.to_bits() as i16);
+    }
+}
+
+/// On-chip buffer allocator for one tile's memory (L1 or L2): bump
+/// allocation with capacity accounting — enough to prove the paper's
+/// designs fit and to catch regressions in the functional executor.
+#[derive(Debug)]
+pub struct TileAlloc {
+    pub capacity: usize,
+    used: usize,
+    labels: Vec<(String, usize)>,
+}
+
+impl TileAlloc {
+    pub fn new(capacity: usize) -> Self {
+        TileAlloc { capacity, used: 0, labels: Vec::new() }
+    }
+
+    /// Reserve `bytes`; errors when the tile overflows.
+    pub fn alloc(&mut self, label: &str, bytes: usize) -> Result<usize> {
+        if self.used + bytes > self.capacity {
+            bail!(
+                "{label}: {} + {bytes} B exceeds tile capacity {} B \
+                 (allocations: {:?})",
+                self.used,
+                self.capacity,
+                self.labels
+            );
+        }
+        let offset = self.used;
+        self.used += bytes;
+        self.labels.push((label.to_string(), bytes));
+        Ok(offset)
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used as f64 / self.capacity as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::Precision;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn row_major_element_access() {
+        let mut m = Matrix::zeroed(4, 8, 1, Layout::RowMajor).unwrap();
+        m.set_i8(2, 3, -5);
+        m.set_i8(0, 0, 127);
+        m.set_i8(3, 7, -128);
+        assert_eq!(m.get_i8(2, 3), -5);
+        assert_eq!(m.get_i8(0, 0), 127);
+        assert_eq!(m.get_i8(3, 7), -128);
+        assert_eq!(m.get_i8(1, 1), 0);
+        assert_eq!(m.row_words(), 2);
+    }
+
+    #[test]
+    fn col_major_storage_is_transposed_rowmajor() {
+        let mut m = Matrix::zeroed(4, 8, 1, Layout::ColMajor).unwrap();
+        m.set_i8(1, 2, 42);
+        // Element (1,2) lives at byte 2*4+1 = 9.
+        assert_eq!(m.get_byte(9), 42);
+        assert_eq!(m.row_words(), 1); // 4 elems * 1 B per storage row
+        assert_eq!(m.n_storage_rows(), 8);
+    }
+
+    #[test]
+    fn i16_i32_bf16_roundtrip() {
+        let mut m = Matrix::zeroed(2, 4, 2, Layout::RowMajor).unwrap();
+        m.set_i16(1, 3, -12345);
+        assert_eq!(m.get_i16(1, 3), -12345);
+        m.set_bf16(0, 1, Bf16::from_f32(1.5));
+        assert_eq!(m.get_bf16(0, 1).to_f32(), 1.5);
+
+        let mut w = Matrix::zeroed(2, 2, 4, Layout::RowMajor).unwrap();
+        w.set_i32(1, 1, i32::MIN);
+        assert_eq!(w.get_i32(1, 1), i32::MIN);
+    }
+
+    #[test]
+    fn alignment_rejected() {
+        assert!(Matrix::zeroed(3, 3, 1, Layout::RowMajor).is_err());
+        assert!(Matrix::zeroed(4, 6, 1, Layout::RowMajor).is_err()); // 6B rows
+        assert!(Matrix::zeroed(6, 4, 1, Layout::ColMajor).is_err()); // 6B cols
+    }
+
+    #[test]
+    fn element_access_never_aliases() {
+        prop_check("matrix set/get isolation", 30, |rng| {
+            let rows = 4 * (1 + rng.below(3));
+            let cols = 4 * (1 + rng.below(3));
+            let mut m = Matrix::zeroed(rows, cols, 1, Layout::RowMajor).unwrap();
+            let mut shadow = vec![0i8; rows * cols];
+            for _ in 0..64 {
+                let i = rng.below(rows);
+                let j = rng.below(cols);
+                let v = rng.i8();
+                m.set_i8(i, j, v);
+                shadow[i * cols + j] = v;
+            }
+            for i in 0..rows {
+                for j in 0..cols {
+                    assert_eq!(m.get_i8(i, j), shadow[i * cols + j], "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn tile_alloc_capacity() {
+        let spec = crate::arch::Generation::Xdna.spec();
+        let mut l1 = TileAlloc::new(spec.l1_budget());
+        // The paper's balanced XDNA int8-int8 kernel fits with double A/B.
+        let p = Precision::I8I8;
+        let (m, k, n) = (112, 112, 112);
+        for label in ["a0", "a1"] {
+            l1.alloc(label, m * k * p.ty_in()).unwrap();
+        }
+        for label in ["b0", "b1"] {
+            l1.alloc(label, k * n * p.ty_in()).unwrap();
+        }
+        l1.alloc("c", m * n * p.ty_out()).unwrap();
+        assert!(l1.utilization() > 0.9);
+        // No room for a second C buffer (Sec. 5.3.2).
+        assert!(l1.alloc("c2", m * n * p.ty_out()).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! The paper's analytical model, Eqs. 1–10 (Sec. 4.5), verbatim.
+//!
+//! These closed forms drive the optimizer; the calibrated simulator
+//! (`crate::sim`) supplies the empirical quantities the paper measures on
+//! hardware (`eff` via the cycle model, `DRAM_BW` via the bandwidth
+//! model). Cross-checks against the simulator live in the tests.
+
+use crate::arch::NpuSpec;
+use crate::dtype::Precision;
+use crate::tiling::{KernelTile, TilingConfig};
+
+/// Eq. 1 — single-core GEMM compute cycles:
+/// `C_comp = m_ct·k_ct·n_ct / (eff · peak_MACs)`.
+pub fn c_comp(t: &KernelTile, eff: f64, peak_macs: f64) -> f64 {
+    t.macs() as f64 / (eff * peak_macs)
+}
+
+/// Eq. 2 — DMA cycles for the A tile:
+/// `CA_comm = m_ct·k_ct·ty(A) / DMA_BW`.
+pub fn ca_comm(t: &KernelTile, p: Precision, dma_bw: f64) -> f64 {
+    (t.m_ct * t.k_ct * p.ty_in()) as f64 / dma_bw
+}
+
+/// Eq. 3 — DMA cycles for the B tile:
+/// `CB_comm = k_ct·n_ct·ty(B) / DMA_BW`.
+pub fn cb_comm(t: &KernelTile, p: Precision, dma_bw: f64) -> f64 {
+    (t.k_ct * t.n_ct * p.ty_in()) as f64 / dma_bw
+}
+
+/// Eq. 4 — compute-bound constraint:
+/// `C_comp >= max(CA_comm, CB_comm)` (double-buffered inputs must arrive
+/// no slower than the kernel consumes them).
+pub fn compute_bound(t: &KernelTile, p: Precision, eff: f64, peak_macs: f64, dma_bw: f64) -> bool {
+    let c = c_comp(t, eff, peak_macs);
+    c >= ca_comm(t, p, dma_bw) && c >= cb_comm(t, p, dma_bw)
+}
+
+/// Eq. 5 — L1 capacity: `2·A + 2·B + C <= 63 KB`
+/// (delegates to [`KernelTile::l1_bytes`]).
+pub fn l1_fits(t: &KernelTile, p: Precision, spec: &NpuSpec, c_double_buffered: bool) -> bool {
+    t.l1_bytes(p, c_double_buffered) <= spec.l1_budget()
+}
+
+/// Eq. 6 — DRAM reads for A (bytes):
+/// `A_mem = M·K·N·ty(A) / (n_ct·n_cols)`.
+pub fn a_mem(cfg: &TilingConfig, m: usize, k: usize, n: usize) -> f64 {
+    (m as f64 * k as f64 * n as f64) * cfg.precision.ty_in() as f64
+        / (cfg.kernel.n_ct * cfg.n_cols) as f64
+}
+
+/// Eq. 6, unsimplified form (used by tests to prove the algebra):
+/// `(m_ct·m_rows·K·ty) · (N/(n_ct·n_cols)) · (M/(m_ct·m_rows))`.
+pub fn a_mem_unsimplified(cfg: &TilingConfig, m: usize, k: usize, n: usize) -> f64 {
+    let t = &cfg.kernel;
+    (t.m_ct * cfg.m_rows) as f64
+        * k as f64
+        * cfg.precision.ty_in() as f64
+        * (n as f64 / (t.n_ct * cfg.n_cols) as f64)
+        * (m as f64 / (t.m_ct * cfg.m_rows) as f64)
+}
+
+/// Eq. 7 — DRAM reads for B (bytes):
+/// `B_mem = M·K·N·ty(B) / (m_ct·m_rows)`.
+pub fn b_mem(cfg: &TilingConfig, m: usize, k: usize, n: usize) -> f64 {
+    (m as f64 * k as f64 * n as f64) * cfg.precision.ty_in() as f64
+        / (cfg.kernel.m_ct * cfg.m_rows) as f64
+}
+
+/// Eq. 8 — DRAM writes for C (bytes): `C_mem = M·N·ty(C)`.
+pub fn c_mem(cfg: &TilingConfig, m: usize, n: usize) -> f64 {
+    m as f64 * n as f64 * cfg.precision.ty_out() as f64
+}
+
+/// Eq. 9 — GEMM compute time on the array:
+/// `T_comp = 2·M·K·N / (eff · peak_TOPS)` (seconds; peak_TOPS in ops/s).
+pub fn t_comp(m: usize, k: usize, n: usize, eff: f64, peak_tops: f64) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64 / (eff * peak_tops * 1e12)
+}
+
+/// Eq. 10 — DRAM access time:
+/// `T_mem = (A_mem + B_mem + C_mem) / DRAM_BW` (DRAM_BW in B/s).
+pub fn t_mem(cfg: &TilingConfig, m: usize, k: usize, n: usize, dram_bw: f64) -> f64 {
+    (a_mem(cfg, m, k, n) + b_mem(cfg, m, k, n) + c_mem(cfg, m, n)) / dram_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{balanced_config, Generation};
+    use crate::sim::{simulate_gemm, BdMode};
+
+    #[test]
+    fn eq6_simplification_is_exact() {
+        let cfg = balanced_config(Generation::Xdna2, Precision::I8I16);
+        let (m, k, n) = (4096, 4320, 4480);
+        let full = a_mem_unsimplified(&cfg, m, k, n);
+        let simple = a_mem(&cfg, m, k, n);
+        assert!((full - simple).abs() / simple < 1e-12);
+    }
+
+    #[test]
+    fn traffic_matches_simulator() {
+        // The engine's Eq. 6-8 implementation must agree with this module.
+        for gen in Generation::ALL {
+            for p in Precision::ALL {
+                let cfg = balanced_config(gen, p);
+                let (m, k, n) = {
+                    let (nm, nk, nn) = cfg.native();
+                    (4 * nm, 4 * nk, 4 * nn)
+                };
+                let r = simulate_gemm(&cfg, m, k, n, BdMode::Overlapped);
+                assert!((r.a_bytes - a_mem(&cfg, m, k, n)).abs() < 1.0);
+                assert!((r.b_bytes - b_mem(&cfg, m, k, n)).abs() < 1.0);
+                assert!((r.c_bytes - c_mem(&cfg, m, n)).abs() < 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_relationship_between_compute_and_memory() {
+        // The paper's core observation (Sec. 4.5.2): shrinking m_ct/n_ct
+        // raises efficiency (lower T_comp) but raises DRAM traffic
+        // (higher T_mem).
+        let gen = Generation::Xdna2;
+        let p = Precision::I8I16;
+        let small = balanced_config(gen, p); // 128x72x112
+        let tiny_kernel = crate::tiling::TilingConfig::new(
+            gen, p, 64, 216, 64, 432, 4, 8, crate::dtype::Layout::ColMajor,
+        )
+        .unwrap(); // Table 1's compute-optimal kernel
+        let (m, k, n) = (4608, 4320, 4480);
+
+        let eff_small = crate::sim::engine::simulate_gemm(&small, m, k, n, BdMode::Overlapped);
+        let eff_tiny = crate::sim::engine::simulate_gemm(&tiny_kernel, m, k, n, BdMode::Overlapped);
+        // Tiny kernel: higher single-core efficiency...
+        assert!(eff_tiny.efficiency > eff_small.efficiency);
+        // ...but more DRAM traffic...
+        assert!(
+            a_mem(&tiny_kernel, m, k, n) + b_mem(&tiny_kernel, m, k, n)
+                > a_mem(&small, m, k, n) + b_mem(&small, m, k, n)
+        );
+        // ...so the balanced kernel wins end to end (Sec. 5.2.1: 17.86
+        // vs 30.77 TOPS).
+        assert!(eff_small.tops > eff_tiny.tops * 1.3);
+    }
+
+    #[test]
+    fn eq4_holds_for_published_balanced_kernels() {
+        // Every bold kernel of Tables 2-3 satisfies the compute-bound
+        // constraint with the architecture's DMA bandwidth.
+        for gen in Generation::ALL {
+            for p in Precision::ALL {
+                let cfg = balanced_config(gen, p);
+                let spec = gen.spec();
+                let eff = crate::sim::engine::simulate_gemm(
+                    &cfg,
+                    cfg.native().0,
+                    cfg.native().1,
+                    cfg.native().2,
+                    BdMode::Overlapped,
+                )
+                .efficiency;
+                let dma_bw_cycles = spec.dma_bytes_per_cycle;
+                assert!(
+                    compute_bound(
+                        &cfg.kernel,
+                        p,
+                        eff,
+                        spec.peak_macs_per_cycle(p),
+                        dma_bw_cycles
+                    ) || p == Precision::Bf16,
+                    "{gen}/{p} violates Eq. 4"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn t_comp_matches_table_peak_column() {
+        // Eq. 9 with the model's eff reproduces "Peak Comp. TOPS":
+        // XDNA2 int8-int8 144x72x144 → 39.52 TOPS at eff·peak.
+        let cfg = balanced_config(Generation::Xdna2, Precision::I8I8);
+        let eff = crate::sim::core::efficiency(cfg.gen, cfg.precision, &cfg.kernel);
+        let peak = cfg.gen.spec().peak_tops(cfg.precision);
+        let eff_tops = eff * peak;
+        assert!((eff_tops - 39.52).abs() < 0.5, "{eff_tops}");
+        // And T_comp for the paper's size is ops / (eff·peak).
+        let t = t_comp(4032, 4320, 4608, eff, peak);
+        assert!((t - 4.06e-3).abs() < 0.1e-3, "{t}");
+    }
+}

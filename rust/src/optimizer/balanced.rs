@@ -1,0 +1,316 @@
+//! System-level balanced-point search (Sec. 4.5.2).
+//!
+//! The single-core optimum (huge `k_ct`, small `m_ct·n_ct`) is *memory
+//! bound* at the system level — Eqs. 6–7 put `m_ct`, `n_ct` in the
+//! denominator of DRAM traffic. The paper's procedure walks toward the
+//! balance point:
+//!
+//! 1. start from the single-core IP winner and verify the GEMM is memory
+//!    bound;
+//! 2. each iteration: *decrease* `k_ct` by one `s`-step, re-solve the IP
+//!    with fixed `k_ct` maximizing `m_ct·n_ct` (the smallest possible
+//!    `T_comp` increase with the biggest traffic reduction), pick the
+//!    saturating `k_mt` (Sec. 5.2.2), and **measure** (here: simulate) the
+//!    top-ranked design at the evaluation size;
+//! 3. stop at the first performance drop — the previous iterate is the
+//!    balanced optimum (`T_comp ≈ T_mem`).
+
+use anyhow::{bail, Result};
+
+use crate::arch::Generation;
+use crate::dtype::{Layout, Precision};
+use crate::sim::{simulate_gemm, BdMode, GemmReport};
+use crate::tiling::{round_up, TilingConfig};
+
+use super::ip::{solve_single_core, IpObjective, IpOptions, STEP_K};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BalancedOptions {
+    pub b_layout: Layout,
+    pub c_double_buffered: bool,
+    /// Evaluation GEMM target (~4K square like the paper); rounded up to
+    /// each candidate's native grid.
+    pub eval_size: usize,
+    /// k_mt saturation threshold: pick the smallest k_mt whose simulated
+    /// TOPS is within this fraction of the best feasible k_mt's.
+    pub kmt_saturation: f64,
+    /// Cap on k_mt multiples explored (L2 capacity prunes anyway).
+    pub max_kmt_multiple: usize,
+}
+
+impl Default for BalancedOptions {
+    fn default() -> Self {
+        BalancedOptions {
+            b_layout: Layout::ColMajor,
+            c_double_buffered: false,
+            eval_size: 4000,
+            kmt_saturation: 0.99,
+            max_kmt_multiple: 16,
+        }
+    }
+}
+
+/// One measured iteration of the search.
+#[derive(Clone, Debug)]
+pub struct IterationRecord {
+    pub cfg: TilingConfig,
+    pub eval: (usize, usize, usize),
+    pub tops: f64,
+    pub memory_bound: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct BalancedResult {
+    pub winner: TilingConfig,
+    pub winner_report: GemmReport,
+    pub eval: (usize, usize, usize),
+    pub history: Vec<IterationRecord>,
+}
+
+/// Evaluation size for a config: the paper evaluates at "~4K" GEMMs that
+/// are exact multiples of the native size.
+pub fn eval_size_for(cfg: &TilingConfig, target: usize) -> (usize, usize, usize) {
+    let (nm, nk, nn) = cfg.native();
+    (round_up(target, nm), round_up(target, nk), round_up(target, nn))
+}
+
+/// Pick the contiguity parameter k_mt (Sec. 5.2.2): smallest multiple of
+/// `k_ct` at which performance saturates, subject to L2 capacity.
+pub fn choose_kmt(
+    gen: Generation,
+    p: Precision,
+    kernel: crate::tiling::KernelTile,
+    opts: &BalancedOptions,
+) -> Result<TilingConfig> {
+    let spec = gen.spec();
+    let mut candidates = Vec::new();
+    for mult in 1..=opts.max_kmt_multiple {
+        let k_mt = kernel.k_ct * mult;
+        let cfg = TilingConfig::new(
+            gen,
+            p,
+            kernel.m_ct,
+            kernel.k_ct,
+            kernel.n_ct,
+            k_mt,
+            spec.array_rows,
+            spec.shim_cols,
+            opts.b_layout,
+        );
+        match cfg {
+            Ok(c) => {
+                let c = c.with_c_double_buffered(opts.c_double_buffered);
+                let (m, k, n) = eval_size_for(&c, opts.eval_size);
+                let r = simulate_gemm(&c, m, k, n, BdMode::Overlapped);
+                candidates.push((c, r.tops));
+            }
+            Err(_) => break, // L2 exhausted (incl. neighbor-sharing rule)
+        }
+    }
+    if candidates.is_empty() {
+        bail!("no feasible k_mt for kernel {}", kernel.label());
+    }
+    let best = candidates.iter().map(|(_, t)| *t).fold(0.0, f64::max);
+    let chosen = candidates
+        .iter()
+        .find(|(_, t)| *t >= opts.kmt_saturation * best)
+        .unwrap();
+    Ok(chosen.0)
+}
+
+/// Run the full Sec. 4.5.2 procedure.
+pub fn optimize_balanced(
+    gen: Generation,
+    p: Precision,
+    opts: &BalancedOptions,
+) -> Result<BalancedResult> {
+    // Starting point: the single-core optimum (Sec. 4.5.1).
+    let ip_opts = IpOptions { c_double_buffered: opts.c_double_buffered, ..Default::default() };
+    let start = solve_single_core(gen, p, &ip_opts, 1);
+    let Some(start) = start.first() else {
+        bail!("single-core IP found no feasible kernel for {gen}/{p}")
+    };
+
+    let mut history: Vec<IterationRecord> = Vec::new();
+
+    let measure = |cfg: &TilingConfig, history: &mut Vec<IterationRecord>| {
+        let eval = eval_size_for(cfg, opts.eval_size);
+        let r = simulate_gemm(cfg, eval.0, eval.1, eval.2, BdMode::Overlapped);
+        history.push(IterationRecord {
+            cfg: *cfg,
+            eval,
+            tops: r.tops,
+            memory_bound: matches!(r.bound, crate::sim::engine::Bound::Memory),
+        });
+        r.tops
+    };
+
+    // Iteration 0: the compute-optimal kernel (expected memory bound).
+    let cfg0 = choose_kmt(gen, p, start.tile, opts)?;
+    let tops0 = measure(&cfg0, &mut history);
+    let mut best: Option<(TilingConfig, f64)> = Some((cfg0, tops0));
+
+    // Walk k_ct downward.
+    let mut k_ct = start.tile.k_ct;
+    while k_ct > STEP_K {
+        k_ct -= STEP_K;
+        let sols = solve_single_core(
+            gen,
+            p,
+            &IpOptions {
+                objective: IpObjective::MaxOutputTile { k_ct },
+                c_double_buffered: opts.c_double_buffered,
+                ..Default::default()
+            },
+            1,
+        );
+        let Some(sol) = sols.first() else { continue };
+        let Ok(cfg) = choose_kmt(gen, p, sol.tile, opts) else { continue };
+        let tops = measure(&cfg, &mut history);
+        let (_, best_tops) = best.unwrap();
+        let rec = history.last().unwrap();
+        if tops > best_tops {
+            best = Some((cfg, tops));
+        }
+        // Stop condition (Sec. 4.5.2): performance dropped *and* the GEMM
+        // has become compute bound — compute and memory crossed, the best
+        // iterate so far is the balanced point. (Plateau noise while still
+        // memory bound is not the crossover; keep walking.)
+        if !rec.memory_bound && tops < best_tops {
+            break;
+        }
+    }
+
+    let (winner, _) = best.unwrap();
+    let eval = eval_size_for(&winner, opts.eval_size);
+    let winner_report = simulate_gemm(&winner, eval.0, eval.1, eval.2, BdMode::Overlapped);
+    Ok(BalancedResult { winner, winner_report, eval, history })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{balanced_config, Generation};
+    use crate::sim::engine::Bound;
+
+    #[test]
+    fn search_starts_memory_bound_and_ends_balanced() {
+        let r = optimize_balanced(
+            Generation::Xdna2,
+            Precision::I8I16,
+            &BalancedOptions::default(),
+        )
+        .unwrap();
+        // The compute-optimal starting kernel must be memory bound
+        // (Sec. 5.2.1: 17.86 TOPS vs the 30.77 balanced kernel).
+        assert!(r.history.first().unwrap().memory_bound);
+        // The search must improve on it substantially.
+        let start_tops = r.history.first().unwrap().tops;
+        assert!(r.winner_report.tops > 1.4 * start_tops);
+    }
+
+    #[test]
+    fn winner_matches_paper_balance_point_within_tolerance() {
+        // The search optimizes *our* simulator, so its winner must be at
+        // least as good as the paper's published balanced config under the
+        // same simulator, and the paper's config must be close (the search
+        // landscape near the optimum is flat).
+        for gen in Generation::ALL {
+            for p in Precision::ALL {
+                let res = optimize_balanced(gen, p, &BalancedOptions::default()).unwrap();
+                let paper = balanced_config(gen, p);
+                let eval = eval_size_for(&paper, 4000);
+                let paper_tops =
+                    simulate_gemm(&paper, eval.0, eval.1, eval.2, BdMode::Overlapped).tops;
+                assert!(
+                    res.winner_report.tops >= paper_tops * 0.97,
+                    "{gen}/{p}: search {:.2} vs paper cfg {:.2}",
+                    res.winner_report.tops,
+                    paper_tops
+                );
+                // Gross-drift guard only: the search optimizes *this*
+                // simulator, whose landscape near the flat optimum differs
+                // from the authors' hardware by a few percent (it also
+                // legitimately exploits k_mt headroom beyond the paper's
+                // saturation choice — see DESIGN.md §5.2).
+                assert!(
+                    paper_tops >= res.winner_report.tops * 0.80,
+                    "{gen}/{p}: paper cfg {paper_tops:.2} too far below search {:.2} — \
+                     calibration drift",
+                    res.winner_report.tops
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn winner_is_near_balance() {
+        // At the winner, T_comp and T_mem are within ~35% of each other
+        // (the k_ct grid is coarse, exact equality is not attainable).
+        let r = optimize_balanced(
+            Generation::Xdna,
+            Precision::Bf16,
+            &BalancedOptions::default(),
+        )
+        .unwrap();
+        let rep = &r.winner_report;
+        let ratio = rep.t_comp / rep.t_mem;
+        assert!((0.65..1.55).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn kmt_chooser_prefers_smallest_saturating() {
+        // Paper picks k_mt=224 for XDNA bf16 96x56x96 — 4 multiples of 56.
+        let cfg = choose_kmt(
+            Generation::Xdna,
+            Precision::Bf16,
+            crate::tiling::KernelTile::new(96, 56, 96),
+            &BalancedOptions::default(),
+        )
+        .unwrap();
+        assert!(
+            cfg.k_mt >= 168 && cfg.k_mt <= 336,
+            "k_mt {} not near the paper's 224",
+            cfg.k_mt
+        );
+    }
+
+    #[test]
+    fn double_buffered_c_costs_end_to_end_performance() {
+        // Ablation A3 (Sec. 5.3.2): 18% on XDNA2 int8-int16, 13% on XDNA
+        // bf16. Tolerances are loose — the search re-optimizes around the
+        // constraint.
+        for (gen, p, paper_gain) in [
+            (Generation::Xdna2, Precision::I8I16, 1.18),
+            (Generation::Xdna, Precision::Bf16, 1.13),
+        ] {
+            let single = optimize_balanced(gen, p, &BalancedOptions::default()).unwrap();
+            let dbl = optimize_balanced(
+                gen,
+                p,
+                &BalancedOptions { c_double_buffered: true, ..Default::default() },
+            )
+            .unwrap();
+            let gain = single.winner_report.tops / dbl.winner_report.tops;
+            assert!(
+                gain > 1.02 && (gain - paper_gain).abs() < 0.15,
+                "{gen}/{p}: single/double gain {gain:.3} vs paper {paper_gain}"
+            );
+        }
+    }
+
+    #[test]
+    fn history_records_the_crossover() {
+        let r = optimize_balanced(
+            Generation::Xdna2,
+            Precision::I8I8,
+            &BalancedOptions::default(),
+        )
+        .unwrap();
+        assert!(r.history.len() >= 3, "needs a few iterations");
+        // Winner's bound can be either side of the knife edge, but the
+        // first iterate is memory-bound and some iterate is compute-bound.
+        assert!(r.history.iter().any(|h| h.memory_bound));
+        assert!(r.history.iter().any(|h| !h.memory_bound));
+    }
+}

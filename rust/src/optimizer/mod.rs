@@ -1,0 +1,16 @@
+//! The paper's two-stage optimization methodology (Sec. 4.5).
+//!
+//! * [`ip`] — single-core integer program (Sec. 4.5.1): exhaustively
+//!   maximize kernel MACs (tie-break: minimize the output tile) under the
+//!   DMA-bandwidth (Eq. 4) and L1-capacity (Eq. 5) constraints.
+//! * [`balanced`] — system-level balanced-point search (Sec. 4.5.2):
+//!   walk `k_ct` down from the compute-optimal kernel, re-solve the IP per
+//!   step with the `m_ct·n_ct`-maximizing objective, "measure" each
+//!   candidate on the calibrated simulator, and stop at the first
+//!   performance drop — compute and memory are then balanced.
+
+pub mod balanced;
+pub mod ip;
+
+pub use balanced::{optimize_balanced, BalancedOptions, BalancedResult};
+pub use ip::{solve_single_core, IpObjective, IpOptions, IpSolution};

@@ -1,0 +1,201 @@
+//! Table / series emitters for the bench harness: every paper table and
+//! figure is regenerated as one of these (markdown to stdout, CSV to
+//! `target/reports/` for plotting).
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// A paper-style table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as aligned markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}", self.title);
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, " {c:<w$} |");
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&self.headers, &widths, &mut out);
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<1$}|", "", w + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+
+    /// Write CSV under `target/reports/<name>.csv`; returns the path.
+    pub fn save_csv(&self, name: &str) -> std::io::Result<PathBuf> {
+        let dir = PathBuf::from("target/reports");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// A figure series: (x, y) points with labels — the roofline sweeps and
+/// k_mt curves.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str, x_label: &str, y_label: &str) -> Series {
+        Series {
+            name: name.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn max_y(&self) -> f64 {
+        self.points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Crude terminal scatter plot (for the fig6/7/8 harnesses).
+    pub fn to_ascii(&self, width: usize, height: usize) -> String {
+        if self.points.is_empty() {
+            return String::from("(empty series)\n");
+        }
+        let (mut x_min, mut x_max) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y_min, mut y_max) = (0.0f64, f64::NEG_INFINITY);
+        for &(x, y) in &self.points {
+            x_min = x_min.min(x);
+            x_max = x_max.max(x);
+            y_min = y_min.min(y);
+            y_max = y_max.max(y);
+        }
+        let mut grid = vec![vec![b' '; width]; height];
+        for &(x, y) in &self.points {
+            let xi = if x_max > x_min {
+                ((x - x_min) / (x_max - x_min) * (width - 1) as f64) as usize
+            } else {
+                0
+            };
+            let yi = if y_max > y_min {
+                ((y - y_min) / (y_max - y_min) * (height - 1) as f64) as usize
+            } else {
+                0
+            };
+            grid[height - 1 - yi][xi] = b'*';
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {} vs {}", self.name, self.y_label, self.x_label);
+        let _ = writeln!(out, "y: [{y_min:.2}, {y_max:.2}]  x: [{x_min:.0}, {x_max:.0}]");
+        for row in grid {
+            let _ = writeln!(out, "|{}", String::from_utf8(row).unwrap());
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{},{}", self.x_label, self.y_label);
+        for (x, y) in &self.points {
+            let _ = writeln!(out, "{x},{y}");
+        }
+        out
+    }
+
+    pub fn save_csv(&self, name: &str) -> std::io::Result<PathBuf> {
+        let dir = PathBuf::from("target/reports");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Paper-vs-measured comparison row helper used across harnesses.
+pub fn ratio_cell(measured: f64, paper: f64) -> String {
+    format!("{:.2} ({:+.1}%)", measured, 100.0 * (measured - paper) / paper)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "long-cell".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 1 | long-cell |"));
+        assert!(t.to_csv().contains("a,b\n1,long-cell"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_checks_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn series_plot_contains_points() {
+        let mut s = Series::new("roofline", "ARI", "TOPS");
+        for i in 0..50 {
+            s.push(i as f64, (i as f64).sqrt());
+        }
+        let ascii = s.to_ascii(40, 10);
+        assert!(ascii.contains('*'));
+        assert_eq!(s.max_y(), 7.0);
+        assert!(s.to_csv().lines().count() == 51);
+    }
+}

@@ -1,0 +1,367 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the Rust request path — the XRT-equivalent host runtime
+//! (DESIGN.md §1). Python never runs here.
+//!
+//! Interchange is HLO *text* (`artifacts/*.hlo.txt`): jax ≥ 0.5 emits
+//! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md
+//! and `python/compile/aot.py`).
+//!
+//! Interface-dtype convention (mirrors `aot.py`):
+//! * int8 precisions: A/B as s8 literals, accumulator in/out s32;
+//! * bf16: f32 at the boundary, converted to bf16 inside the graph.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dtype::{Layout, Precision};
+use crate::util::json::Json;
+
+/// Parsed manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub gen: String,
+    pub precision: String,
+    pub b_col_major: bool,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub arg_dtypes: Vec<String>,
+    pub out_dtype: String,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let shapes = j
+            .req("arg_shapes")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("arg_shapes not an array"))?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                    .ok_or_else(|| anyhow!("bad shape"))
+            })
+            .collect::<Result<Vec<Vec<usize>>>>()?;
+        Ok(ArtifactMeta {
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            file: j.req("file")?.as_str().unwrap_or_default().to_string(),
+            kind: j.req("kind")?.as_str().unwrap_or_default().to_string(),
+            gen: j.req("gen")?.as_str().unwrap_or_default().to_string(),
+            precision: j.req("precision")?.as_str().unwrap_or_default().to_string(),
+            b_col_major: j.req("b_col_major")?.as_bool().unwrap_or(false),
+            m: j.req("m")?.as_usize().unwrap_or(0),
+            k: j.req("k")?.as_usize().unwrap_or(0),
+            n: j.req("n")?.as_usize().unwrap_or(0),
+            arg_shapes: shapes,
+            arg_dtypes: j
+                .req("arg_dtypes")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|d| d.as_str().map(str::to_string))
+                .collect(),
+            out_dtype: j.req("out_dtype")?.as_str().unwrap_or_default().to_string(),
+        })
+    }
+}
+
+/// Canonical native-step artifact name for a design point.
+pub fn step_artifact_name(gen: crate::arch::Generation, p: Precision, b_layout: Layout) -> String {
+    format!("step_{}_{}_{}", gen.name(), p.name(), b_layout.name())
+}
+
+/// The PJRT runtime: one CPU client + lazily compiled executables.
+pub struct Runtime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifest: HashMap<String, ArtifactMeta>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the artifact manifest and start the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let parsed = Json::parse(&text)?;
+        let mut manifest = HashMap::new();
+        for entry in parsed.as_arr().ok_or_else(|| anyhow!("manifest not an array"))? {
+            let meta = ArtifactMeta::from_json(entry)?;
+            manifest.insert(meta.name.clone(), meta);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        Ok(Runtime { dir, client, manifest, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn run(&mut self, name: &str, args: &[xla::Literal]) -> Result<xla::Literal> {
+        self.ensure_compiled(name)?;
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True.
+        lit.to_tuple1().map_err(|e| anyhow!("untupling {name}: {e}"))
+    }
+
+    /// Execute an int8 native step: `acc' = acc + A_panel @ B_panel`.
+    pub fn execute_step_i8(
+        &mut self,
+        name: &str,
+        a: &[i8],
+        b: &[i8],
+        acc: &[i32],
+    ) -> Result<Vec<i32>> {
+        let meta = self.meta(name).ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if meta.arg_dtypes.first().map(String::as_str) != Some("s8") {
+            bail!("artifact '{name}' does not take s8 inputs");
+        }
+        let shapes = meta.arg_shapes.clone();
+        let la = lit_i8(a, &shapes[0])?;
+        let lb = lit_i8(b, &shapes[1])?;
+        let lacc = lit_i32(acc, &shapes[2])?;
+        let out = self.run(name, &[la, lb, lacc])?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("result marshal: {e}"))
+    }
+
+    /// Execute a bf16 native step (f32 interface): `acc' = acc + A @ B`.
+    pub fn execute_step_f32(
+        &mut self,
+        name: &str,
+        a: &[f32],
+        b: &[f32],
+        acc: &[f32],
+    ) -> Result<Vec<f32>> {
+        let meta = self.meta(name).ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if meta.arg_dtypes.first().map(String::as_str) != Some("f32") {
+            bail!("artifact '{name}' does not take f32 inputs");
+        }
+        let shapes = meta.arg_shapes.clone();
+        let la = lit_f32(a, &shapes[0])?;
+        let lb = lit_f32(b, &shapes[1])?;
+        let lacc = lit_f32(acc, &shapes[2])?;
+        let out = self.run(name, &[la, lb, lacc])?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("result marshal: {e}"))
+    }
+
+    /// Execute an f32-interface artifact with arbitrary arity
+    /// (quickstart / MLP demos).
+    pub fn execute_f32(&mut self, name: &str, args: &[&[f32]]) -> Result<Vec<f32>> {
+        let meta = self.meta(name).ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if args.len() != meta.arg_shapes.len() {
+            bail!("artifact '{name}' takes {} args, got {}", meta.arg_shapes.len(), args.len());
+        }
+        let shapes = meta.arg_shapes.clone();
+        let lits = args
+            .iter()
+            .zip(shapes.iter())
+            .map(|(a, s)| lit_f32(a, s))
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.run(name, &lits)?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("result marshal: {e}"))
+    }
+}
+
+/// Execute a full GEMM by chaining native-step artifacts — the outer-most
+/// tiling level (Sec. 4.4) driven from Rust, with PJRT executing each
+/// native step. This is the functional serving path of `examples/serve.rs`.
+///
+/// `cfg` must be the balanced config whose step artifact was AOT-compiled
+/// (`step_<gen>_<prec>_<layout>`); arbitrary `a`/`b` sizes are padded to
+/// its native grid.
+pub fn pjrt_gemm(
+    rt: &mut Runtime,
+    cfg: &crate::tiling::TilingConfig,
+    a: &crate::mem::Matrix,
+    b: &crate::mem::Matrix,
+) -> Result<crate::mem::Matrix> {
+    use crate::gemm::exec::pad_matrix;
+    use crate::gemm::refimpl::store_narrowed;
+    use crate::mem::Matrix;
+
+    let p = cfg.precision;
+    let name = step_artifact_name(cfg.gen, p, cfg.b_layout);
+    let meta = rt.meta(&name).ok_or_else(|| anyhow!("no artifact '{name}'"))?.clone();
+    let (nm, nk, nn) = cfg.native();
+    if (meta.m, meta.k, meta.n) != (nm, nk, nn) {
+        bail!(
+            "artifact '{name}' was compiled for native {}x{}x{}, config wants {}x{}x{} — \
+             regenerate artifacts",
+            meta.m,
+            meta.k,
+            meta.n,
+            nm,
+            nk,
+            nn
+        );
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let (pm, pk, pn) = cfg.padded(m, k, n);
+    let pa = pad_matrix(a, pm, pk)?;
+    let pb = pad_matrix(b, pk, pn)?;
+    let mut out = Matrix::zeroed(m, n, p.ty_out(), crate::dtype::Layout::RowMajor)?;
+
+    let is_f32 = p == Precision::Bf16;
+    for trow in 0..pm / nm {
+        for tcol in 0..pn / nn {
+            // Output-stationary accumulator for this native tile.
+            let mut acc_i = vec![0i32; nm * nn];
+            let mut acc_f = vec![0f32; nm * nn];
+            for kp in 0..pk / nk {
+                // A panel: nm x nk row-major.
+                let (mut a_i8, mut a_f32) = (Vec::new(), Vec::new());
+                for i in 0..nm {
+                    for kk in 0..nk {
+                        let (gi, gk) = (trow * nm + i, kp * nk + kk);
+                        if is_f32 {
+                            a_f32.push(pa.get_bf16(gi, gk).to_f32());
+                        } else {
+                            a_i8.push(pa.get_i8(gi, gk));
+                        }
+                    }
+                }
+                // B panel: nk x nn (row-major iface) or nn x nk (col-major).
+                let (mut b_i8, mut b_f32) = (Vec::new(), Vec::new());
+                let push = |b_i8: &mut Vec<i8>, b_f32: &mut Vec<f32>, gk: usize, gj: usize| {
+                    if is_f32 {
+                        b_f32.push(pb.get_bf16(gk, gj).to_f32());
+                    } else {
+                        b_i8.push(pb.get_i8(gk, gj));
+                    }
+                };
+                if meta.b_col_major {
+                    for j in 0..nn {
+                        for kk in 0..nk {
+                            push(&mut b_i8, &mut b_f32, kp * nk + kk, tcol * nn + j);
+                        }
+                    }
+                } else {
+                    for kk in 0..nk {
+                        for j in 0..nn {
+                            push(&mut b_i8, &mut b_f32, kp * nk + kk, tcol * nn + j);
+                        }
+                    }
+                }
+                if is_f32 {
+                    acc_f = rt.execute_step_f32(&name, &a_f32, &b_f32, &acc_f)?;
+                } else {
+                    acc_i = rt.execute_step_i8(&name, &a_i8, &b_i8, &acc_i)?;
+                }
+            }
+            // Narrow into the (cropped) output.
+            for i in 0..nm {
+                let gi = trow * nm + i;
+                if gi >= m {
+                    break;
+                }
+                for j in 0..nn {
+                    let gj = tcol * nn + j;
+                    if gj >= n {
+                        continue;
+                    }
+                    if is_f32 {
+                        out.set_bf16(gi, gj, crate::dtype::Bf16::from_f32(acc_f[i * nn + j]));
+                    } else {
+                        store_narrowed(&mut out, gi, gj, acc_i[i * nn + j], p);
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn check_len(data_len: usize, dims: &[usize]) -> Result<()> {
+    let want: usize = dims.iter().product();
+    if data_len != want {
+        bail!("literal data {} elements, shape {:?} needs {}", data_len, dims, want);
+    }
+    Ok(())
+}
+
+fn lit_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
+    check_len(data.len(), dims)?;
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S8, dims);
+    lit.copy_raw_from(data).map_err(|e| anyhow!("i8 literal: {e}"))?;
+    Ok(lit)
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    check_len(data.len(), dims)?;
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S32, dims);
+    lit.copy_raw_from(data).map_err(|e| anyhow!("i32 literal: {e}"))?;
+    Ok(lit)
+}
+
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    check_len(data.len(), dims)?;
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, dims);
+    lit.copy_raw_from(data).map_err(|e| anyhow!("f32 literal: {e}"))?;
+    Ok(lit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_are_canonical() {
+        assert_eq!(
+            step_artifact_name(crate::arch::Generation::Xdna2, Precision::I8I16, Layout::ColMajor),
+            "step_xdna2_i8i16_colmajor"
+        );
+    }
+
+    #[test]
+    fn literal_length_checked() {
+        assert!(lit_f32(&[1.0; 5], &[2, 3]).is_err());
+        assert!(lit_i8(&[1; 6], &[2, 3]).is_ok());
+    }
+    // PJRT execution tests live in rust/tests/runtime_e2e.rs (they need
+    // `make artifacts` outputs).
+}

@@ -1,0 +1,22 @@
+//! The calibrated NPU performance simulator.
+//!
+//! Stands in for the two mini PCs of the paper's evaluation (DESIGN.md §1):
+//! every constant is either an architecture fact ([`crate::arch`]) or a
+//! parameter fitted against the paper's own published measurements
+//! (Tables 1–3, Fig. 6, Secs. 5.2–5.3) — the fit and residuals live in
+//! DESIGN.md §5 and are re-checked by this module's tests.
+//!
+//! * [`core`]    — single-core kernel cycle model (hardware-trace fit).
+//! * [`dram`]    — effective DRAM bandwidth vs contiguous-run length.
+//! * [`cmdproc`] — command-processor / ShimTile BD queue mechanics
+//!   (overlapped vs sequential reconfiguration, Sec. 4.4).
+//! * [`engine`]  — whole-GEMM wall-clock estimator with phase breakdown.
+//! * [`trace`]   — trace-unit-style per-core cycle accounting.
+
+pub mod cmdproc;
+pub mod core;
+pub mod dram;
+pub mod engine;
+pub mod trace;
+
+pub use engine::{simulate_gemm, BdMode, GemmReport};

@@ -1,0 +1,387 @@
+//! The paper's four-level GEMM tiling scheme (Sec. 4.1) and its capacity
+//! rules.
+//!
+//! Level 1: AIE-API micro-tile `r × s × t` (per precision).
+//! Level 2: single-core kernel `m_ct × k_ct × n_ct` out of L1 (Eq. 5).
+//! Level 3: NPU-array native GEMM `(m_ct·m_rows) × k_mt × (n_ct·n_cols)`
+//!          staged in L2 MemTiles (Sec. 4.2.2).
+//! Level 4: the full `M × K × N` problem, driven by ShimTile↔DRAM BDs
+//!          (Sec. 4.4) with zero-padding to the native size (Sec. 5.3.1).
+
+use anyhow::{bail, Result};
+
+use crate::arch::Generation;
+use crate::dtype::{Layout, Precision};
+
+/// A single-core kernel size (tiling level 2).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct KernelTile {
+    pub m_ct: usize,
+    pub k_ct: usize,
+    pub n_ct: usize,
+}
+
+impl KernelTile {
+    pub fn new(m_ct: usize, k_ct: usize, n_ct: usize) -> Self {
+        KernelTile { m_ct, k_ct, n_ct }
+    }
+
+    /// MACs per kernel invocation — the IP's primary objective (Sec. 4.5.1).
+    pub fn macs(&self) -> u64 {
+        (self.m_ct * self.k_ct * self.n_ct) as u64
+    }
+
+    /// Output-tile element count — the IP's secondary (minimized) objective.
+    pub fn out_elems(&self) -> u64 {
+        (self.m_ct * self.n_ct) as u64
+    }
+
+    /// Micro-tile alignment (level-1 constraint).
+    pub fn aligned(&self, p: Precision) -> bool {
+        let (r, s, t) = p.micro_tile();
+        self.m_ct % r == 0 && self.k_ct % s == 0 && self.n_ct % t == 0
+    }
+
+    /// L1 bytes used under the paper's buffering scheme: A and B
+    /// double-buffered, C single-buffered (Eq. 5).
+    pub fn l1_bytes(&self, p: Precision, c_double_buffered: bool) -> usize {
+        let c_bufs = if c_double_buffered { 2 } else { 1 };
+        2 * self.m_ct * self.k_ct * p.ty_in()
+            + 2 * self.k_ct * self.n_ct * p.ty_in()
+            + c_bufs * self.m_ct * self.n_ct * p.ty_out()
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}x{}", self.m_ct, self.k_ct, self.n_ct)
+    }
+}
+
+/// A complete array-level design point (tiling levels 1–3 + B layout).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct TilingConfig {
+    pub gen: Generation,
+    pub precision: Precision,
+    pub kernel: KernelTile,
+    /// Contiguity parameter: K-extent of the tiles staged in L2
+    /// (Sec. 4.2.2). Must hold whole `k_ct` tiles.
+    pub k_mt: usize,
+    /// Spatial parallelization (Sec. 4.2.1): tiles across array rows/cols.
+    pub m_rows: usize,
+    pub n_cols: usize,
+    /// Storage order of B in DRAM (A and C are always row-major).
+    pub b_layout: Layout,
+    /// Single-buffered C (the paper's choice) vs double-buffered (ablation
+    /// A3 / Sec. 5.3.2).
+    pub c_double_buffered: bool,
+}
+
+impl TilingConfig {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        gen: Generation,
+        precision: Precision,
+        m_ct: usize,
+        k_ct: usize,
+        n_ct: usize,
+        k_mt: usize,
+        m_rows: usize,
+        n_cols: usize,
+        b_layout: Layout,
+    ) -> Result<Self> {
+        let cfg = TilingConfig {
+            gen,
+            precision,
+            kernel: KernelTile::new(m_ct, k_ct, n_ct),
+            k_mt,
+            m_rows,
+            n_cols,
+            b_layout,
+            c_double_buffered: false,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn with_b_layout(mut self, layout: Layout) -> Self {
+        self.b_layout = layout;
+        self
+    }
+
+    pub fn with_c_double_buffered(mut self, dbl: bool) -> Self {
+        self.c_double_buffered = dbl;
+        self
+    }
+
+    /// Check every structural constraint the paper imposes.
+    pub fn validate(&self) -> Result<()> {
+        let spec = self.gen.spec();
+        let k = &self.kernel;
+        if !k.aligned(self.precision) {
+            bail!(
+                "kernel {} not aligned to micro-tile {:?} for {}",
+                k.label(),
+                self.precision.micro_tile(),
+                self.precision
+            );
+        }
+        if self.k_mt % k.k_ct != 0 {
+            bail!("k_mt={} must be a multiple of k_ct={}", self.k_mt, k.k_ct);
+        }
+        if self.m_rows > spec.array_rows || self.n_cols > spec.shim_cols {
+            bail!(
+                "mapping {}x{} exceeds usable array {}x{}",
+                self.m_rows,
+                self.n_cols,
+                spec.array_rows,
+                spec.shim_cols
+            );
+        }
+        let l1 = k.l1_bytes(self.precision, self.c_double_buffered);
+        if l1 > spec.l1_budget() {
+            bail!(
+                "kernel {} needs {} B of L1, budget is {} B (Eq. 5)",
+                k.label(),
+                l1,
+                spec.l1_budget()
+            );
+        }
+        let (l2_used, l2_cap) = self.l2_usage();
+        if l2_used > l2_cap {
+            bail!(
+                "design needs {} B of L2, capacity is {} B",
+                l2_used,
+                l2_cap
+            );
+        }
+        // Per-MemTile placement constraint: the loaded MemTiles hold
+        // double-buffered A and B plus the C aggregation. Without neighbor
+        // sharing each such tile must fit alone; with it (XDNA2), the
+        // even+odd pair shares 2x capacity (Sec. 4.2.2 — this is what
+        // enables the three largest k_mt points of Fig. 6b).
+        let even_load = 2 * self.a_l2_bytes() + 2 * self.b_l2_bytes() + self.c_l2_bytes();
+        let odd_load = 2 * self.b_l2_bytes() + self.c_l2_bytes();
+        let cap = spec.l2_bytes_per_tile;
+        if spec.neighbor_memtile_sharing {
+            if even_load + odd_load > 2 * cap {
+                bail!(
+                    "MemTile pair load {} B exceeds shared capacity {} B",
+                    even_load + odd_load,
+                    2 * cap
+                );
+            }
+        } else if even_load > cap {
+            bail!("MemTile load {} B exceeds capacity {} B", even_load, cap);
+        }
+        Ok(())
+    }
+
+    /// Native GEMM size operating on the whole mapped array (Sec. 4.2.2):
+    /// `(m_ct·m_rows) × k_mt × (n_ct·n_cols)`.
+    pub fn native(&self) -> (usize, usize, usize) {
+        (
+            self.kernel.m_ct * self.m_rows,
+            self.k_mt,
+            self.kernel.n_ct * self.n_cols,
+        )
+    }
+
+    /// L2 bytes of the A tile staged per (even) MemTile: `m_ct × k_mt`.
+    pub fn a_l2_bytes(&self) -> usize {
+        self.kernel.m_ct * self.k_mt * self.precision.ty_in()
+    }
+
+    /// L2 bytes of the B tile staged per MemTile. Column-major B stages a
+    /// `k_mt × n_ct` tile (long contiguous reads); row-major B can only
+    /// stage the CompTile-sized `k_ct × n_ct` (Sec. 4.2.2).
+    pub fn b_l2_bytes(&self) -> usize {
+        match self.b_layout {
+            Layout::ColMajor => self.k_mt * self.kernel.n_ct * self.precision.ty_in(),
+            Layout::RowMajor => self.kernel.k_ct * self.kernel.n_ct * self.precision.ty_in(),
+        }
+    }
+
+    /// L2 bytes of the aggregated output per MemTile: `m_rows` C tiles are
+    /// gathered per column before the ShimTile drains them (Sec. 4.2.2).
+    pub fn c_l2_bytes(&self) -> usize {
+        self.m_rows * self.kernel.m_ct * self.kernel.n_ct * self.precision.ty_out()
+    }
+
+    /// (used, capacity) of L2 across the mapped MemTiles, following the
+    /// paper's placement: every column's MemTile holds double-buffered B
+    /// plus the C aggregation; A tiles (double-buffered) live in one
+    /// MemTile per row — all four on XDNA's 4 MemTiles, the even columns
+    /// on XDNA2 (validated against Tables 2–3 "L2 Total Mem").
+    pub fn l2_usage(&self) -> (usize, usize) {
+        let used = self.n_cols * (2 * self.b_l2_bytes() + self.c_l2_bytes())
+            + self.m_rows * (2 * self.a_l2_bytes());
+        let cap = self.n_cols * self.gen.spec().l2_bytes_per_tile;
+        (used, cap)
+    }
+
+    /// Peak compute of the mapped array at a given single-core throughput
+    /// (Tables 2–3 "Peak Comp. TOPS"): `2 · cores · MACs/cycle · f`.
+    pub fn peak_comp_tops(&self, macs_per_cycle: f64) -> f64 {
+        let spec = self.gen.spec();
+        2.0 * (self.m_rows * self.n_cols) as f64 * macs_per_cycle * spec.clock_hz / 1e12
+    }
+
+    /// Pad an arbitrary problem to the native grid (Sec. 5.3.1):
+    /// M→native_m, N→native_n, K→k_mt.
+    pub fn padded(&self, m: usize, k: usize, n: usize) -> (usize, usize, usize) {
+        let (nm, nk, nn) = self.native();
+        (round_up(m, nm), round_up(k, nk), round_up(n, nn))
+    }
+
+    /// Fraction of padded work that is useful (1.0 when already aligned).
+    pub fn padding_efficiency(&self, m: usize, k: usize, n: usize) -> f64 {
+        let (pm, pk, pn) = self.padded(m, k, n);
+        (m * k * n) as f64 / (pm * pk * pn) as f64
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{} {} k_mt={} {}x{} B={}",
+            self.gen,
+            self.precision,
+            self.kernel.label(),
+            self.k_mt,
+            self.m_rows,
+            self.n_cols,
+            self.b_layout.name()
+        )
+    }
+}
+
+/// Round `x` up to a multiple of `q`.
+pub fn round_up(x: usize, q: usize) -> usize {
+    x.div_ceil(q) * q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{balanced_config, Generation};
+
+    #[test]
+    fn l1_budget_matches_table1() {
+        // Table 1 "L1 Core Mem." column, in KB at 97%/94% utilization.
+        let cases = [
+            (Precision::I8I8, 64, 232, 64, 62.0),
+            (Precision::I8I16, 64, 216, 64, 62.0),
+            (Precision::I8I32, 48, 280, 48, 61.5),
+            (Precision::Bf16, 64, 104, 64, 60.0),
+        ];
+        for (p, m, k, n, kb) in cases {
+            let t = KernelTile::new(m, k, n);
+            let got = t.l1_bytes(p, false) as f64 / 1024.0;
+            assert!((got - kb).abs() < 0.6, "{p}: {got} vs {kb}");
+        }
+    }
+
+    #[test]
+    fn l2_totals_match_tables_2_and_3() {
+        // Table 2/3 "L2 Total Mem." column (KB) for the bold rows.
+        let cases = [
+            (Generation::Xdna, Precision::I8I8, 980.0),
+            (Generation::Xdna, Precision::I8I16, 960.0),
+            (Generation::Xdna, Precision::I8I32, 964.0),
+            (Generation::Xdna, Precision::Bf16, 960.0),
+            (Generation::Xdna2, Precision::I8I8, 2106.0),
+            (Generation::Xdna2, Precision::I8I16, 2084.0),
+            (Generation::Xdna2, Precision::I8I32, 2016.0),
+            (Generation::Xdna2, Precision::Bf16, 2496.0),
+        ];
+        for (gen, p, kb) in cases {
+            let cfg = balanced_config(gen, p);
+            let (used, cap) = cfg.l2_usage();
+            let got = used as f64 / 1024.0;
+            assert!((got - kb).abs() < 1.0, "{gen}/{p}: {got} KB vs paper {kb} KB");
+            assert!(used <= cap);
+        }
+    }
+
+    #[test]
+    fn native_sizes_match_paper() {
+        // Sec. 5.2.2: XDNA bf16 native = 384x224x384; XDNA2 int8-int16
+        // native = 512x432x896.
+        let c = balanced_config(Generation::Xdna, Precision::Bf16);
+        assert_eq!(c.native(), (384, 224, 384));
+        let c2 = balanced_config(Generation::Xdna2, Precision::I8I16);
+        assert_eq!(c2.native(), (512, 432, 896));
+    }
+
+    #[test]
+    fn padding() {
+        let c = balanced_config(Generation::Xdna, Precision::Bf16);
+        assert_eq!(c.padded(384, 224, 384), (384, 224, 384));
+        assert_eq!(c.padded(385, 225, 1), (768, 448, 384));
+        assert!(c.padding_efficiency(384, 224, 384) == 1.0);
+        assert!(c.padding_efficiency(100, 100, 100) < 0.2);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        // Misaligned kernel.
+        assert!(TilingConfig::new(
+            Generation::Xdna,
+            Precision::I8I8,
+            63,
+            112,
+            112,
+            448,
+            4,
+            4,
+            Layout::ColMajor
+        )
+        .is_err());
+        // k_mt not multiple of k_ct.
+        assert!(TilingConfig::new(
+            Generation::Xdna,
+            Precision::I8I8,
+            112,
+            112,
+            112,
+            400,
+            4,
+            4,
+            Layout::ColMajor
+        )
+        .is_err());
+        // L1 blow-up.
+        assert!(TilingConfig::new(
+            Generation::Xdna,
+            Precision::I8I8,
+            256,
+            256,
+            256,
+            256,
+            4,
+            4,
+            Layout::ColMajor
+        )
+        .is_err());
+        // Too many columns for XDNA.
+        assert!(TilingConfig::new(
+            Generation::Xdna,
+            Precision::I8I8,
+            112,
+            112,
+            112,
+            448,
+            4,
+            8,
+            Layout::ColMajor
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn double_buffered_c_shrinks_search_space() {
+        // Sec. 5.3.2: the double-buffered-C variant of the XDNA2 int8-int16
+        // balanced kernel (128x72x112) no longer fits in L1.
+        let t = KernelTile::new(128, 72, 112);
+        let spec = Generation::Xdna2.spec();
+        assert!(t.l1_bytes(Precision::I8I16, false) <= spec.l1_budget());
+        assert!(t.l1_bytes(Precision::I8I16, true) > spec.l1_budget());
+    }
+}

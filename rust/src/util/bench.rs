@@ -1,0 +1,133 @@
+//! Minimal measurement harness (criterion stand-in) for `cargo bench`.
+//!
+//! Each bench target is a plain `main()` (harness = false) that builds a
+//! [`Bench`] and registers timed closures; output is a criterion-style
+//! `name  time: [min mean max]  (n samples)` line per case, plus optional
+//! paper-table rows emitted by the harness itself.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Re-export for bench bodies: prevent the optimizer from deleting work.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+pub struct Bench {
+    name: String,
+    /// Target measurement time per case.
+    budget: Duration,
+    /// Minimum sample count.
+    min_samples: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+    pub samples: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        println!("== bench group: {name} ==");
+        Bench {
+            name: name.to_string(),
+            budget: Duration::from_millis(
+                std::env::var("BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(500),
+            ),
+            min_samples: 10,
+        }
+    }
+
+    pub fn with_budget_ms(mut self, ms: u64) -> Self {
+        self.budget = Duration::from_millis(ms);
+        self
+    }
+
+    /// Time `f`, auto-scaling iteration count to the budget.
+    pub fn case<R>(&self, case: &str, mut f: impl FnMut() -> R) -> Sample {
+        // Warm-up + estimate.
+        let t0 = Instant::now();
+        bb(f());
+        let one = t0.elapsed().max(Duration::from_nanos(50));
+
+        let mut times = Vec::new();
+        let deadline = Instant::now() + self.budget;
+        while times.len() < self.min_samples || (Instant::now() < deadline && times.len() < 5000) {
+            let t = Instant::now();
+            bb(f());
+            times.push(t.elapsed().as_secs_f64());
+            if one > self.budget {
+                break; // single run exceeds budget: one sample is all we get
+            }
+        }
+        let s = Sample {
+            name: format!("{}/{}", self.name, case),
+            mean_s: stats::mean(&times),
+            min_s: stats::min(&times),
+            max_s: stats::max(&times),
+            stddev_s: stats::stddev(&times),
+            samples: times.len(),
+        };
+        println!(
+            "{:<48} time: [{} {} {}]  ({} samples)",
+            s.name,
+            fmt_time(s.min_s),
+            fmt_time(s.mean_s),
+            fmt_time(s.max_s),
+            s.samples
+        );
+        s
+    }
+
+    /// Report a derived throughput metric alongside a case.
+    pub fn throughput(&self, case: &str, value: f64, unit: &str) {
+        println!("{:<48} thrpt: {value:.3} {unit}", format!("{}/{}", self.name, case));
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::new("selftest").with_budget_ms(20);
+        let s = b.case("noop-loop", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(s.samples >= 10);
+        assert!(s.mean_s > 0.0);
+        assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s + 1e-12);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(3.2e-9).contains("ns"));
+        assert!(fmt_time(4.5e-5).contains("µs"));
+        assert!(fmt_time(2.0e-3).contains("ms"));
+        assert!(fmt_time(1.5).contains(" s"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny argument parser (clap stand-in): `prog <subcommand> [--key value]
+//! [--flag] [positional...]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` minus the program name. Tokens starting
+    /// with `--` are options if followed by a non-`--` token, else flags.
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Args {
+        let toks: Vec<String> = raw.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.options.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn usize_opt(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_opt(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    pub fn subcommand_required(&self, usage: &str) -> Result<&str> {
+        match &self.subcommand {
+            Some(s) => Ok(s.as_str()),
+            None => bail!("missing subcommand\n{usage}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // NB: `--flag token` is ambiguous in this grammar (token binds as
+        // the value); pass bare flags last or as `--flag=`-free trailers.
+        let a = parse("table2 --gen xdna --size=4096 pos1 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("table2"));
+        assert_eq!(a.get("gen"), Some("xdna"));
+        assert_eq!(a.get("size"), Some("4096"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 42 --f 2.5");
+        assert_eq!(a.usize_opt("n", 0).unwrap(), 42);
+        assert_eq!(a.usize_opt("missing", 7).unwrap(), 7);
+        assert_eq!(a.f64_opt("f", 0.0).unwrap(), 2.5);
+        assert!(a.usize_opt("f", 0).is_err());
+        assert!(a.require("absent").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Offline stand-ins for crates unavailable in this build environment
+//! (serde_json, criterion, proptest, clap — see DESIGN.md §1).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,578 @@
+//! On-the-fly tensor transformations (Sec. 4.3, Fig. 4).
+//!
+//! The single-core kernels expect *pre-tiled* operands: `r × s` (A) /
+//! `s × t` (B) / `r × t` (C) micro-tiles, tiles row-major, elements within
+//! a tile row-major. Matrices in DRAM stay in regular order; the DMA
+//! chain re-tiles in flight:
+//!
+//! ```text
+//!  A (row-major DRAM)
+//!   └─ Shim MM2S, 3D  (m_ct, k_mt, K)      → m_ct × k_mt tiles
+//!       └─ MemTile S2MM, 3D (m_ct, k_ct, k_mt) → m_ct × k_ct tiles in L2
+//!           └─ MemTile MM2S, 4D (s, m_ct, k_ct, k_mt) → m_ct × s chunks
+//!               └─ CompTile S2MM, 3D (r·s, m_ct, k_ct) → pre-tiled L1
+//! ```
+//!
+//! The MemTile/CompTile split is the paper's workaround for the 5-parameter
+//! transform (r, s, m_ct, k_ct, k_mt) exceeding the MemTile's 4D address
+//! generator: emitting `m_ct × s` chunks *linearizes* each `r × s` tile —
+//! `r` consecutive rows of an `s`-chunk land contiguously — so the CompTile
+//! can finish the job in 3D.
+//!
+//! B column-major runs the same chain on the transposed image (with the
+//! in-core shuffle handling the sub-32-bit element swizzle — see
+//! `python/compile/kernels/transpose.py`); B row-major needs a single 4D
+//! MemTile transform (s, t, k_ct, n_ct); C needs a single 4D de-tiling
+//! (r, t, m_ct, n_ct) plus the aggregation described in Sec. 4.2.2.
+//!
+//! Everything here is *functional*: BDs gather/scatter real words, and
+//! tests prove chain-equals-direct-pre-tiling for every parameter set.
+
+use anyhow::{ensure, Result};
+
+use crate::dma::{words, Bd, Dim, TileKind};
+
+/// Parameters of the input chain for one row-panel operand (A, or Bᵀ when
+/// B is column-major).
+///
+/// `rows` is `m_ct` for A / `n_ct` for Bᵀ; `micro_r`/`micro_s` are the
+/// micro-tile extents along (rows, K) — `(r, s)` for A, `(t, s)` for Bᵀ.
+#[derive(Clone, Copy, Debug)]
+pub struct InputChain {
+    pub rows: usize,
+    pub micro_r: usize,
+    pub micro_s: usize,
+    pub k_ct: usize,
+    pub k_mt: usize,
+    pub elem_bytes: usize,
+}
+
+impl InputChain {
+    pub fn validate(&self, k_total: usize) -> Result<()> {
+        ensure!(self.rows % self.micro_r == 0, "rows % r != 0");
+        ensure!(self.k_ct % self.micro_s == 0, "k_ct % s != 0");
+        ensure!(self.k_mt % self.k_ct == 0, "k_mt % k_ct != 0");
+        ensure!(k_total % self.k_mt == 0, "K % k_mt != 0");
+        words(self.micro_s, self.elem_bytes)?; // s must be word-aligned
+        Ok(())
+    }
+
+    fn s_w(&self) -> usize {
+        self.micro_s * self.elem_bytes / 4
+    }
+
+    fn k_ct_w(&self) -> usize {
+        self.k_ct * self.elem_bytes / 4
+    }
+
+    fn k_mt_w(&self) -> usize {
+        self.k_mt * self.elem_bytes / 4
+    }
+
+    /// Words in one `rows × k_ct` CompTile tile.
+    pub fn tile_words(&self) -> usize {
+        self.rows * self.k_ct_w()
+    }
+
+    /// Words in one `rows × k_mt` MemTile buffer.
+    pub fn l2_words(&self) -> usize {
+        self.rows * self.k_mt_w()
+    }
+
+    /// Shim MM2S (3D, params m_ct/k_mt/K): read a `rows × k_total` panel
+    /// starting at storage row `row0` of a row-major image with row stride
+    /// `ld_w` words, emitting it as consecutive `rows × k_mt` tiles.
+    pub fn shim_mm2s(&self, row0: usize, ld_w: usize, k_total: usize) -> Result<Bd> {
+        let k_tiles = k_total / self.k_mt;
+        Bd::new(
+            TileKind::ShimTile,
+            row0 * ld_w,
+            vec![
+                Dim::new(k_tiles, self.k_mt_w() as isize),
+                Dim::new(self.rows, ld_w as isize),
+                Dim::new(self.k_mt_w(), 1),
+            ],
+        )
+    }
+
+    /// MemTile S2MM (3D, params m_ct/k_ct/k_mt): scatter one incoming
+    /// `rows × k_mt` tile (row-major stream) into L2 as consecutive
+    /// `rows × k_ct` row-major tiles.
+    pub fn memtile_s2mm(&self, base: usize) -> Result<Bd> {
+        Bd::new(
+            TileKind::MemTile,
+            base,
+            vec![
+                Dim::new(self.rows, self.k_ct_w() as isize),
+                Dim::new(self.k_mt / self.k_ct, (self.rows * self.k_ct_w()) as isize),
+                Dim::new(self.k_ct_w(), 1),
+            ],
+        )
+    }
+
+    /// MemTile MM2S (4D, params s/m_ct/k_ct/k_mt): emit the L2 buffer as
+    /// `rows × s` chunks — the address-linearization step.
+    pub fn memtile_mm2s(&self, base: usize) -> Result<Bd> {
+        Bd::new(
+            TileKind::MemTile,
+            base,
+            vec![
+                Dim::new(self.k_mt / self.k_ct, (self.rows * self.k_ct_w()) as isize),
+                Dim::new(self.k_ct / self.micro_s, self.s_w() as isize),
+                Dim::new(self.rows, self.k_ct_w() as isize),
+                Dim::new(self.s_w(), 1),
+            ],
+        )
+    }
+
+    /// CompTile S2MM (3D, effective params r·s/m_ct/k_ct): scatter one
+    /// incoming `rows × k_ct` tile (arriving as `rows × s` chunks) into
+    /// the pre-tiled L1 layout.
+    pub fn comptile_s2mm(&self, base: usize) -> Result<Bd> {
+        let rs_w = self.micro_r * self.s_w();
+        let tiles_per_row = self.k_ct / self.micro_s;
+        Bd::new(
+            TileKind::CompTile,
+            base,
+            vec![
+                Dim::new(tiles_per_row, rs_w as isize),
+                Dim::new(self.rows / self.micro_r, (tiles_per_row * rs_w) as isize),
+                Dim::new(rs_w, 1),
+            ],
+        )
+    }
+
+    /// Run the full chain: DRAM panel → per-CompTile-tile L1 images.
+    ///
+    /// Returns `K/k_ct` pre-tiled tiles of `tile_words()` each — what the
+    /// core consumes in reduction order.
+    pub fn stream_panel(&self, dram: &[u32], row0: usize, ld_w: usize, k_total: usize) -> Result<Vec<Vec<u32>>> {
+        self.validate(k_total)?;
+        let shim = self.shim_mm2s(row0, ld_w, k_total)?;
+        let stream = shim.gather(dram)?;
+
+        let mut tiles = Vec::with_capacity(k_total / self.k_ct);
+        let l2_words = self.l2_words();
+        for mt in stream.chunks(l2_words) {
+            // Hop 2: into L2.
+            let mut l2 = vec![0u32; l2_words];
+            self.memtile_s2mm(0)?.scatter(&mut l2, mt)?;
+            // Hop 3: L2 → stream of m_ct × s chunks.
+            let out = self.memtile_mm2s(0)?.gather(&l2)?;
+            // Hop 4: per k_ct tile into pre-tiled L1.
+            for ct in out.chunks(self.tile_words()) {
+                let mut l1 = vec![0u32; self.tile_words()];
+                self.comptile_s2mm(0)?.scatter(&mut l1, ct)?;
+                tiles.push(l1);
+            }
+        }
+        Ok(tiles)
+    }
+}
+
+/// Direct pre-tiling oracle: extract the `rows × k_ct` tile at
+/// `(row0, k0)` from a row-major word image and lay it out pre-tiled
+/// (micro-tiles row-major, elements within a micro-tile row-major).
+/// Operates at word granularity like the DMAs.
+pub fn pretile_oracle(
+    dram: &[u32],
+    ld_w: usize,
+    row0: usize,
+    k0_w: usize,
+    chain: &InputChain,
+) -> Vec<u32> {
+    let s_w = chain.s_w();
+    let k_ct_w = chain.k_ct_w();
+    let mut out = Vec::with_capacity(chain.tile_words());
+    for mo in 0..chain.rows / chain.micro_r {
+        for j in 0..k_ct_w / s_w {
+            for mi in 0..chain.micro_r {
+                let row = row0 + mo * chain.micro_r + mi;
+                let col_w = k0_w + j * s_w;
+                for w in 0..s_w {
+                    out.push(dram[row * ld_w + col_w + w]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// B row-major: single 4D MemTile transform (params s/t/k_ct/n_ct).
+#[derive(Clone, Copy, Debug)]
+pub struct BRowMajorChain {
+    pub k_ct: usize,
+    pub n_ct: usize,
+    pub micro_s: usize,
+    pub micro_t: usize,
+    pub elem_bytes: usize,
+}
+
+impl BRowMajorChain {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.k_ct % self.micro_s == 0);
+        ensure!(self.n_ct % self.micro_t == 0);
+        words(self.micro_t, self.elem_bytes)?;
+        words(self.n_ct, self.elem_bytes)?;
+        Ok(())
+    }
+
+    fn t_w(&self) -> usize {
+        self.micro_t * self.elem_bytes / 4
+    }
+
+    fn n_ct_w(&self) -> usize {
+        self.n_ct * self.elem_bytes / 4
+    }
+
+    pub fn tile_words(&self) -> usize {
+        self.k_ct * self.n_ct_w()
+    }
+
+    /// Shim MM2S: `k_total × n_ct` column panel of row-major B
+    /// (row stride `ld_w`), k_ct rows at a time. Contiguous run = n_ct
+    /// elements only — the reason row-major B underperforms (Sec. 5.2.3).
+    pub fn shim_mm2s(&self, col0_w: usize, ld_w: usize, k_total: usize) -> Result<Bd> {
+        Bd::new(
+            TileKind::ShimTile,
+            col0_w,
+            vec![Dim::new(k_total, ld_w as isize), Dim::new(self.n_ct_w(), 1)],
+        )
+    }
+
+    /// MemTile S2MM is linear (the stream already matches the
+    /// `k_ct × n_ct` row-major L2 tile).
+    pub fn memtile_s2mm(&self, base: usize) -> Result<Bd> {
+        Bd::linear(TileKind::MemTile, base, self.tile_words())
+    }
+
+    /// MemTile MM2S (4D, params s/t/k_ct/n_ct): pre-tile the L2 tile into
+    /// `s × t` micro-tiles; CompTile S2MM is then linear.
+    pub fn memtile_mm2s(&self, base: usize) -> Result<Bd> {
+        Bd::new(
+            TileKind::MemTile,
+            base,
+            vec![
+                Dim::new(self.k_ct / self.micro_s, (self.micro_s * self.n_ct_w()) as isize),
+                Dim::new(self.n_ct / self.micro_t, self.t_w() as isize),
+                Dim::new(self.micro_s, self.n_ct_w() as isize),
+                Dim::new(self.t_w(), 1),
+            ],
+        )
+    }
+
+    /// Full chain for one `k_total × n_ct` panel → per-tile L1 images.
+    pub fn stream_panel(&self, dram: &[u32], col0_w: usize, ld_w: usize, k_total: usize) -> Result<Vec<Vec<u32>>> {
+        self.validate()?;
+        ensure!(k_total % self.k_ct == 0);
+        let stream = self.shim_mm2s(col0_w, ld_w, k_total)?.gather(dram)?;
+        let mut tiles = Vec::new();
+        for ct in stream.chunks(self.tile_words()) {
+            let mut l2 = vec![0u32; self.tile_words()];
+            self.memtile_s2mm(0)?.scatter(&mut l2, ct)?;
+            let out = self.memtile_mm2s(0)?.gather(&l2)?;
+            tiles.push(out); // CompTile S2MM is linear
+        }
+        Ok(tiles)
+    }
+
+    /// Direct oracle for one `k_ct × n_ct` tile at `(k0, col0_w)`.
+    pub fn pretile_oracle(&self, dram: &[u32], ld_w: usize, k0: usize, col0_w: usize) -> Vec<u32> {
+        let t_w = self.t_w();
+        let mut out = Vec::with_capacity(self.tile_words());
+        for ko in 0..self.k_ct / self.micro_s {
+            for jo in 0..self.n_ct / self.micro_t {
+                for ki in 0..self.micro_s {
+                    let row = k0 + ko * self.micro_s + ki;
+                    for w in 0..t_w {
+                        out.push(dram[row * ld_w + col0_w + jo * t_w + w]);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// C output chain: pre-tiled L1 C → row-major DRAM.
+#[derive(Clone, Copy, Debug)]
+pub struct OutputChain {
+    pub m_ct: usize,
+    pub n_ct: usize,
+    pub micro_r: usize,
+    pub micro_t: usize,
+    pub elem_bytes: usize,
+}
+
+impl OutputChain {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.m_ct % self.micro_r == 0);
+        ensure!(self.n_ct % self.micro_t == 0);
+        words(self.micro_t, self.elem_bytes)?;
+        words(self.n_ct, self.elem_bytes)?;
+        Ok(())
+    }
+
+    fn t_w(&self) -> usize {
+        self.micro_t * self.elem_bytes / 4
+    }
+
+    fn n_ct_w(&self) -> usize {
+        self.n_ct * self.elem_bytes / 4
+    }
+
+    pub fn tile_words(&self) -> usize {
+        self.m_ct * self.n_ct_w()
+    }
+
+    /// MemTile S2MM (4D, params r/t/m_ct/n_ct): de-tile the incoming
+    /// pre-tiled stream into a row-major `m_ct × n_ct` L2 tile.
+    ///
+    /// Stream order (tiles row-major, in-tile row-major) maps to scatter
+    /// loops (mo, jo, mi, w).
+    pub fn memtile_s2mm(&self, base: usize) -> Result<Bd> {
+        Bd::new(
+            TileKind::MemTile,
+            base,
+            vec![
+                Dim::new(self.m_ct / self.micro_r, (self.micro_r * self.n_ct_w()) as isize),
+                Dim::new(self.n_ct / self.micro_t, self.t_w() as isize),
+                Dim::new(self.micro_r, self.n_ct_w() as isize),
+                Dim::new(self.t_w(), 1),
+            ],
+        )
+    }
+
+    /// Shim S2MM: write the aggregated `(m_rows·m_ct) × n_ct` L2 block to
+    /// row-major DRAM at `(row0, col0_w)` with row stride `ld_w`.
+    pub fn shim_s2mm(&self, m_rows: usize, row0: usize, col0_w: usize, ld_w: usize) -> Result<Bd> {
+        Bd::new(
+            TileKind::ShimTile,
+            row0 * ld_w + col0_w,
+            vec![
+                Dim::new(m_rows * self.m_ct, ld_w as isize),
+                Dim::new(self.n_ct_w(), 1),
+            ],
+        )
+    }
+
+    /// Full chain: `m_rows` pre-tiled L1 C tiles (one per array row) →
+    /// DRAM image.
+    pub fn drain_column(
+        &self,
+        l1_tiles: &[Vec<u32>],
+        dram: &mut [u32],
+        row0: usize,
+        col0_w: usize,
+        ld_w: usize,
+    ) -> Result<()> {
+        self.validate()?;
+        // Aggregate the column's tiles into one L2 region (Sec. 4.2.2:
+        // MemTile S2MM channels collect four C tiles before the Shim
+        // drains them).
+        let mut l2 = vec![0u32; l1_tiles.len() * self.tile_words()];
+        for (i, t) in l1_tiles.iter().enumerate() {
+            ensure!(t.len() == self.tile_words());
+            self.memtile_s2mm(i * self.tile_words())?.scatter(&mut l2, t)?;
+        }
+        // CompTile MM2S was linear (pre-tiled already); Shim writes rows.
+        let shim = self.shim_s2mm(l1_tiles.len(), row0, col0_w, ld_w)?;
+        shim.scatter(dram, &l2)
+    }
+
+    /// Oracle: element (i, j) of the row-major tile from a pre-tiled image.
+    pub fn detile_oracle(&self, pretiled: &[u32]) -> Vec<u32> {
+        let t_w = self.t_w();
+        let n_ct_w = self.n_ct_w();
+        let tiles_per_row = self.n_ct / self.micro_t;
+        let mut out = vec![0u32; self.tile_words()];
+        let mut src = 0;
+        for mo in 0..self.m_ct / self.micro_r {
+            for jo in 0..tiles_per_row {
+                for mi in 0..self.micro_r {
+                    let row = mo * self.micro_r + mi;
+                    for w in 0..t_w {
+                        out[row * n_ct_w + jo * t_w + w] = pretiled[src];
+                        src += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    fn rand_words(rng: &mut Rng, n: usize) -> Vec<u32> {
+        (0..n).map(|_| rng.next_u64() as u32).collect()
+    }
+
+    #[test]
+    fn a_chain_equals_pretile_oracle() {
+        prop_check("A chain == direct pre-tiling", 40, |rng| {
+            let micro_r = *rng.pick(&[2usize, 4]);
+            let s_w = *rng.pick(&[1usize, 2]);
+            let micro_s = s_w * 4; // elem_bytes=1: s elems = s bytes
+            let chain = InputChain {
+                rows: micro_r * (1 + rng.below(3)),
+                micro_r,
+                micro_s,
+                k_ct: micro_s * (1 + rng.below(3)),
+                k_mt: 0,
+                elem_bytes: 1,
+            };
+            let chain = InputChain { k_mt: chain.k_ct * (1 + rng.below(3)), ..chain };
+            let k_total = chain.k_mt * (1 + rng.below(2));
+            let extra_rows = rng.below(3);
+            let ld_w = k_total / 4 + rng.below(4); // slack columns allowed
+            let n_rows = chain.rows + extra_rows;
+            let dram = rand_words(rng, n_rows * ld_w);
+
+            let tiles = chain.stream_panel(&dram, extra_rows, ld_w, k_total).unwrap();
+            assert_eq!(tiles.len(), k_total / chain.k_ct);
+            for (ti, tile) in tiles.iter().enumerate() {
+                let want = pretile_oracle(
+                    &dram,
+                    ld_w,
+                    extra_rows,
+                    ti * chain.k_ct * chain.elem_bytes / 4,
+                    &chain,
+                );
+                assert_eq!(tile, &want, "tile {ti}");
+            }
+        });
+    }
+
+    #[test]
+    fn a_chain_bd_dims_respect_hardware() {
+        let chain = InputChain { rows: 96, micro_r: 4, micro_s: 8, k_ct: 56, k_mt: 224, elem_bytes: 2 };
+        chain.validate(448).unwrap();
+        assert!(chain.shim_mm2s(0, 224, 448).unwrap().dims.len() <= 3);
+        assert!(chain.memtile_s2mm(0).unwrap().dims.len() <= 3);
+        assert_eq!(chain.memtile_mm2s(0).unwrap().dims.len(), 4);
+        assert!(chain.comptile_s2mm(0).unwrap().dims.len() <= 3);
+    }
+
+    #[test]
+    fn b_row_major_chain_equals_oracle() {
+        prop_check("B row-major 4D == oracle", 40, |rng| {
+            let micro_s = *rng.pick(&[4usize, 8]);
+            let t_w = *rng.pick(&[1usize, 2]);
+            let micro_t = t_w * 4;
+            let c = BRowMajorChain {
+                k_ct: micro_s * (1 + rng.below(3)),
+                n_ct: micro_t * (1 + rng.below(3)),
+                micro_s,
+                micro_t,
+                elem_bytes: 1,
+            };
+            let k_total = c.k_ct * (1 + rng.below(3));
+            let n_total_w = c.n_ct_w() * (1 + rng.below(2)) + rng.below(3);
+            let col0_w = rng.below(n_total_w - c.n_ct_w() + 1);
+            let dram = rand_words(rng, k_total * n_total_w);
+            let tiles = c.stream_panel(&dram, col0_w, n_total_w, k_total).unwrap();
+            for (ti, tile) in tiles.iter().enumerate() {
+                let want = c.pretile_oracle(&dram, n_total_w, ti * c.k_ct, col0_w);
+                assert_eq!(tile, &want, "tile {ti}");
+            }
+        });
+    }
+
+    #[test]
+    fn c_chain_roundtrip() {
+        prop_check("C drain: pre-tiled L1 -> row-major DRAM", 40, |rng| {
+            let micro_r = *rng.pick(&[2usize, 4]);
+            let t_w = *rng.pick(&[1usize, 2]);
+            let micro_t = t_w * 4;
+            let c = OutputChain {
+                m_ct: micro_r * (1 + rng.below(3)),
+                n_ct: micro_t * (1 + rng.below(3)),
+                micro_r,
+                micro_t,
+                elem_bytes: 1,
+            };
+            let m_rows = 1 + rng.below(4);
+            let tiles: Vec<Vec<u32>> =
+                (0..m_rows).map(|_| rand_words(rng, c.tile_words())).collect();
+            let ld_w = c.n_ct_w() + rng.below(4);
+            let total_rows = m_rows * c.m_ct + rng.below(3);
+            let mut dram = vec![0u32; total_rows * ld_w];
+            c.drain_column(&tiles, &mut dram, 0, 0, ld_w).unwrap();
+            // Every tile's de-tiled rows must appear at the right offset.
+            for (i, t) in tiles.iter().enumerate() {
+                let want = c.detile_oracle(t);
+                for row in 0..c.m_ct {
+                    let dr = i * c.m_ct + row;
+                    assert_eq!(
+                        &dram[dr * ld_w..dr * ld_w + c.n_ct_w()],
+                        &want[row * c.n_ct_w()..(row + 1) * c.n_ct_w()],
+                        "tile {i} row {row}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn paper_configs_build_valid_chains() {
+        // Every balanced config must produce BDs within hardware dims.
+        for gen in crate::arch::Generation::ALL {
+            for p in crate::dtype::Precision::ALL {
+                let cfg = crate::arch::balanced_config(gen, p);
+                let (r, s, t) = p.micro_tile();
+                let a = InputChain {
+                    rows: cfg.kernel.m_ct,
+                    micro_r: r,
+                    micro_s: s,
+                    k_ct: cfg.kernel.k_ct,
+                    k_mt: cfg.k_mt,
+                    elem_bytes: p.ty_in(),
+                };
+                a.validate(cfg.k_mt * 2).unwrap();
+                let bt = InputChain {
+                    rows: cfg.kernel.n_ct,
+                    micro_r: t,
+                    micro_s: s,
+                    k_ct: cfg.kernel.k_ct,
+                    k_mt: cfg.k_mt,
+                    elem_bytes: p.ty_in(),
+                };
+                bt.validate(cfg.k_mt * 2).unwrap();
+                let brm = BRowMajorChain {
+                    k_ct: cfg.kernel.k_ct,
+                    n_ct: cfg.kernel.n_ct,
+                    micro_s: s,
+                    micro_t: t,
+                    elem_bytes: p.ty_in(),
+                };
+                brm.validate().unwrap();
+                let c = OutputChain {
+                    m_ct: cfg.kernel.m_ct,
+                    n_ct: cfg.kernel.n_ct,
+                    micro_r: r,
+                    micro_t: t,
+                    elem_bytes: p.ty_out(),
+                };
+                c.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn shim_contiguity_matches_kmt() {
+        // The A-chain Shim BD's average contiguous run is k_mt elements —
+        // the quantity Fig. 6 sweeps.
+        let chain = InputChain { rows: 8, micro_r: 4, micro_s: 8, k_ct: 16, k_mt: 64, elem_bytes: 1 };
+        let bd = chain.shim_mm2s(0, 64, 256).unwrap();
+        assert_eq!(bd.avg_contig_run_bytes(), 64.0);
+        // ...except when k_mt spans the whole row: then rows merge.
+        let chain2 = InputChain { k_mt: 256, ..chain };
+        let bd2 = chain2.shim_mm2s(0, 64, 256).unwrap();
+        assert_eq!(bd2.avg_contig_run_bytes(), (256 * 8) as f64);
+    }
+}

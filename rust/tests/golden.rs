@@ -1,0 +1,127 @@
+//! Golden-vector cross-check: the Rust reference implementation must agree
+//! bit-for-bit with the pytest-validated jnp oracle (DESIGN.md §6 step 2).
+//! Vectors come from `python -m compile.golden` (part of `make artifacts`).
+
+use xdna_gemm::dtype::{Bf16, Layout, Precision};
+use xdna_gemm::gemm::exec::{Executor, Fidelity};
+use xdna_gemm::gemm::refimpl;
+use xdna_gemm::mem::Matrix;
+use xdna_gemm::tiling::TilingConfig;
+use xdna_gemm::util::json::Json;
+
+fn load_cases() -> Vec<Json> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden.json");
+    let text = std::fs::read_to_string(&path).expect("run `make artifacts` first");
+    match Json::parse(&text).unwrap() {
+        Json::Arr(v) => v,
+        _ => panic!("golden.json should be an array"),
+    }
+}
+
+fn int_matrix(case: &Json, key: &str, rows: usize, cols: usize, layout: Layout) -> Matrix {
+    let vals = case.req(key).unwrap().as_arr().unwrap();
+    let mut m = Matrix::zeroed(rows, cols, 1, layout).unwrap();
+    for i in 0..rows {
+        for j in 0..cols {
+            m.set_i8(i, j, vals[i * cols + j].as_i64().unwrap() as i8);
+        }
+    }
+    m
+}
+
+fn bf16_matrix(case: &Json, key: &str, rows: usize, cols: usize) -> Matrix {
+    let bits = case.req(key).unwrap().as_arr().unwrap();
+    let mut m = Matrix::zeroed(rows, cols, 2, Layout::RowMajor).unwrap();
+    for i in 0..rows {
+        for j in 0..cols {
+            let f32bits = bits[i * cols + j].as_f64().unwrap() as u32;
+            m.set_bf16(i, j, Bf16::from_f32(f32::from_bits(f32bits)));
+        }
+    }
+    m
+}
+
+#[test]
+fn refimpl_matches_jnp_oracle_exactly() {
+    let cases = load_cases();
+    assert!(cases.len() >= 6, "expected at least 6 golden cases");
+    for case in &cases {
+        let prec = Precision::parse(case.req("precision").unwrap().as_str().unwrap()).unwrap();
+        let m = case.req("m").unwrap().as_usize().unwrap();
+        let k = case.req("k").unwrap().as_usize().unwrap();
+        let n = case.req("n").unwrap().as_usize().unwrap();
+
+        let (a, b, want) = if prec == Precision::Bf16 {
+            (
+                bf16_matrix(case, "a_f32bits", m, k),
+                bf16_matrix(case, "b_f32bits", k, n),
+                bf16_matrix(case, "out_f32bits", m, n),
+            )
+        } else {
+            let a = int_matrix(case, "a", m, k, Layout::RowMajor);
+            let b = int_matrix(case, "b", k, n, Layout::RowMajor);
+            let out_vals = case.req("out").unwrap().as_arr().unwrap();
+            let mut want = Matrix::zeroed(m, n, prec.ty_out(), Layout::RowMajor).unwrap();
+            for i in 0..m {
+                for j in 0..n {
+                    let v = out_vals[i * n + j].as_i64().unwrap();
+                    match prec {
+                        Precision::I8I8 => want.set_i8(i, j, v as i8),
+                        Precision::I8I16 => want.set_i16(i, j, v as i16),
+                        Precision::I8I32 => want.set_i32(i, j, v as i32),
+                        Precision::Bf16 => unreachable!(),
+                    }
+                }
+            }
+            (a, b, want)
+        };
+
+        let got = refimpl::ref_gemm(&a, &b, prec).unwrap();
+        assert!(
+            refimpl::matrices_equal(&got, &want, prec),
+            "{prec} {m}x{k}x{n}: Rust reference diverges from the jnp oracle"
+        );
+    }
+}
+
+#[test]
+fn functional_executor_matches_jnp_oracle() {
+    // Close the full loop: golden inputs through the BD-chain executor.
+    let cases = load_cases();
+    for case in &cases {
+        let prec = Precision::parse(case.req("precision").unwrap().as_str().unwrap()).unwrap();
+        let m = case.req("m").unwrap().as_usize().unwrap();
+        let k = case.req("k").unwrap().as_usize().unwrap();
+        let n = case.req("n").unwrap().as_usize().unwrap();
+
+        let (a, b) = if prec == Precision::Bf16 {
+            (bf16_matrix(case, "a_f32bits", m, k), bf16_matrix(case, "b_f32bits", k, n))
+        } else {
+            (
+                int_matrix(case, "a", m, k, Layout::RowMajor),
+                int_matrix(case, "b", k, n, Layout::RowMajor),
+            )
+        };
+        let want = refimpl::ref_gemm(&a, &b, prec).unwrap();
+
+        // A tiny design; executor pads the golden shapes up to it.
+        let (_, _, t) = prec.micro_tile();
+        let cfg = TilingConfig::new(
+            xdna_gemm::arch::Generation::Xdna,
+            prec,
+            8,
+            16,
+            2 * t.max(4),
+            32,
+            4,
+            4,
+            Layout::RowMajor,
+        )
+        .unwrap();
+        let got = Executor::new(cfg, Fidelity::BdChain).execute(&a, &b).unwrap();
+        assert!(
+            refimpl::matrices_equal(&got, &want, prec),
+            "{prec} {m}x{k}x{n}: executor diverges from the jnp oracle"
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Manifest ↔ arch consistency: the AOT artifacts shipped by
+//! `python/compile/configs.py` must match `arch::balanced_config` exactly
+//! (the two tables are maintained in parallel — DESIGN.md §3).
+
+use xdna_gemm::arch::{balanced_config, Generation};
+use xdna_gemm::dtype::{Layout, Precision};
+use xdna_gemm::runtime::{step_artifact_name, Runtime};
+
+fn runtime() -> Runtime {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::load(dir).expect("run `make artifacts` first")
+}
+
+#[test]
+fn every_design_point_has_both_layout_artifacts() {
+    let rt = runtime();
+    for gen in Generation::ALL {
+        for p in Precision::ALL {
+            for layout in [Layout::RowMajor, Layout::ColMajor] {
+                let name = step_artifact_name(gen, p, layout);
+                assert!(rt.meta(&name).is_some(), "missing artifact {name}");
+            }
+        }
+    }
+    assert!(rt.meta("quickstart_bf16").is_some());
+    assert!(rt.meta("mlp_bf16").is_some());
+}
+
+#[test]
+fn artifact_shapes_match_balanced_configs() {
+    let rt = runtime();
+    for gen in Generation::ALL {
+        for p in Precision::ALL {
+            let cfg = balanced_config(gen, p);
+            let (nm, nk, nn) = cfg.native();
+            for layout in [Layout::RowMajor, Layout::ColMajor] {
+                let name = step_artifact_name(gen, p, layout);
+                let meta = rt.meta(&name).unwrap();
+                assert_eq!(
+                    (meta.m, meta.k, meta.n),
+                    (nm, nk, nn),
+                    "{name}: python configs.py drifted from rust arch.rs"
+                );
+                assert_eq!(meta.b_col_major, layout == Layout::ColMajor);
+                // Interface convention (aot.py docstring).
+                if p == Precision::Bf16 {
+                    assert!(meta.arg_dtypes.iter().all(|d| d == "f32"));
+                } else {
+                    assert_eq!(meta.arg_dtypes[0], "s8");
+                    assert_eq!(meta.arg_dtypes[2], "s32");
+                }
+                // B panel shape follows the layout.
+                let want_b = if meta.b_col_major { vec![nn, nk] } else { vec![nk, nn] };
+                assert_eq!(meta.arg_shapes[1], want_b, "{name}");
+            }
+        }
+    }
+}

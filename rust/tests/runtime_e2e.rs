@@ -1,0 +1,109 @@
+//! PJRT end-to-end: load AOT artifacts, execute, check numerics vs the
+//! Rust reference. Requires `make artifacts`.
+
+use xdna_gemm::dtype::{Bf16, Layout, Precision};
+use xdna_gemm::gemm::refimpl;
+use xdna_gemm::mem::Matrix;
+use xdna_gemm::runtime::Runtime;
+use xdna_gemm::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn quickstart_artifact_matches_reference() {
+    let mut rt = Runtime::load(artifacts_dir()).expect("run `make artifacts` first");
+    let meta = rt.meta("quickstart_bf16").unwrap().clone();
+    let (m, k, n) = (meta.m, meta.k, meta.n);
+
+    let mut rng = Rng::seeded(42);
+    let mut a = Matrix::zeroed(m, k, 2, Layout::RowMajor).unwrap();
+    let mut b = Matrix::zeroed(k, n, 2, Layout::RowMajor).unwrap();
+    refimpl::fill_random(&mut a, Precision::Bf16, rng.next_u64());
+    refimpl::fill_random(&mut b, Precision::Bf16, rng.next_u64());
+
+    // f32 interface views (bf16 values are exact in f32).
+    let af: Vec<f32> = (0..m).flat_map(|i| (0..k).map(move |j| (i, j)))
+        .map(|(i, j)| a.get_bf16(i, j).to_f32()).collect();
+    let bf: Vec<f32> = (0..k).flat_map(|i| (0..n).map(move |j| (i, j)))
+        .map(|(i, j)| b.get_bf16(i, j).to_f32()).collect();
+
+    let out = rt.execute_f32("quickstart_bf16", &[&af, &bf]).unwrap();
+    assert_eq!(out.len(), m * n);
+
+    let want = refimpl::ref_gemm(&a, &b, Precision::Bf16).unwrap();
+    let mut max_err = 0.0f32;
+    for i in 0..m {
+        for j in 0..n {
+            let w = want.get_bf16(i, j).to_f32();
+            let g = Bf16::from_f32(out[i * n + j]).to_f32();
+            let err = (g - w).abs() / w.abs().max(1.0);
+            max_err = max_err.max(err);
+        }
+    }
+    // bf16 one-ulp tolerance (different f32 accumulation orders).
+    assert!(max_err < 2.0f32.powi(-6), "max rel err {max_err}");
+}
+
+#[test]
+fn int8_native_step_matches_reference() {
+    // The XDNA int8-int16 native step (384x448x384) with saturating
+    // narrow applied host-side to the returned int32 accumulators.
+    let mut rt = Runtime::load(artifacts_dir()).expect("run `make artifacts` first");
+    let name = "step_xdna_i8i16_colmajor";
+    let meta = rt.meta(name).unwrap().clone();
+    let (m, k, n) = (meta.m, meta.k, meta.n);
+
+    let mut rng = Rng::seeded(7);
+    let a: Vec<i8> = (0..m * k).map(|_| rng.i8()).collect();
+    let bt: Vec<i8> = (0..n * k).map(|_| rng.i8()).collect(); // B^T (col-major iface)
+    let acc0: Vec<i32> = (0..m * n).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+
+    let got = rt.execute_step_i8(name, &a, &bt, &acc0).unwrap();
+    assert_eq!(got.len(), m * n);
+
+    // Reference: acc + A @ B in int32 (spot-check a grid of entries; the
+    // full check is O(m*k*n) = 66M MACs, fine once).
+    for i in (0..m).step_by(97) {
+        for j in (0..n).step_by(89) {
+            let mut want = acc0[i * n + j];
+            for kk in 0..k {
+                want += a[i * k + kk] as i32 * bt[j * k + kk] as i32;
+            }
+            assert_eq!(got[i * n + j], want, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn pjrt_gemm_chains_steps_correctly() {
+    // Full GEMM via chained native steps (the serve example's path):
+    // 2 K-panels + ragged N forces padding and accumulation carry.
+    use xdna_gemm::arch::{balanced_config, Generation};
+    use xdna_gemm::runtime::pjrt_gemm;
+
+    let mut rt = Runtime::load(artifacts_dir()).expect("run `make artifacts` first");
+    let cfg = balanced_config(Generation::Xdna, Precision::Bf16);
+    let (nm, nk, nn) = cfg.native();
+    let (m, k, n) = (nm, 2 * nk, nn - 8);
+
+    let mut a = Matrix::zeroed(m, k, 2, Layout::RowMajor).unwrap();
+    let mut b = Matrix::zeroed(k, n, 2, Layout::ColMajor).unwrap();
+    refimpl::fill_random(&mut a, Precision::Bf16, 31);
+    refimpl::fill_random(&mut b, Precision::Bf16, 32);
+
+    let got = pjrt_gemm(&mut rt, &cfg, &a, &b).unwrap();
+    let want = refimpl::ref_gemm(&a, &b, Precision::Bf16).unwrap();
+    assert_eq!((got.rows, got.cols), (m, n));
+    for i in 0..m {
+        for j in 0..n {
+            let w = want.get_bf16(i, j).to_f32();
+            let g = got.get_bf16(i, j).to_f32();
+            assert!(
+                (g - w).abs() <= 2.0f32.powi(-6) * w.abs().max(1.0),
+                "({i},{j}): {g} vs {w}"
+            );
+        }
+    }
+}
