@@ -1,135 +1,55 @@
-//! End-to-end serving driver (the system-prompt's E2E requirement): load
-//! the AOT artifact bundle, serve batched GEMM requests with REAL numerics
-//! — every request executes through the PJRT-compiled JAX/Pallas native
-//! step chained by the Rust coordinator logic — and report
-//! latency/throughput percentiles. Timing of the simulated NPU runs
-//! alongside for each request.
+//! Multi-device serving demo: a sharded coordinator fleet under a
+//! skewed mixed-design trace (docs/serving.md).
 //!
-//! Python never runs here: the artifacts were compiled once by
-//! `make artifacts`.
+//! A fleet of simulated NPUs (generations mixable) serves a transformer
+//! prefill stream with a hot int8 design plus mixed-precision/layout
+//! tails. The admission router keeps each design resident where it
+//! already lives, spills hot designs across devices when backlogs
+//! exceed a reconfiguration, and the run ends with the per-device and
+//! fleet rollups. A single-device baseline on the same trace shows the
+//! aggregate-throughput win.
 //!
-//! Run: `cargo run --release --example serve -- [n_requests] [xdna|xdna2]`
+//! Run: `cargo run --release --example serve -- [n_requests] [n_devices] [mix]`
+//! e.g. `cargo run --release --example serve -- 512 4 xdna:xdna2`
 
 use anyhow::Result;
-use std::time::Instant;
 
-use xdna_gemm::arch::{balanced_config, Generation};
-use xdna_gemm::dtype::{Layout, Precision};
-use xdna_gemm::gemm::refimpl;
-use xdna_gemm::mem::Matrix;
-use xdna_gemm::runtime::{pjrt_gemm, Runtime};
-use xdna_gemm::sim::{simulate_gemm, BdMode};
-use xdna_gemm::util::rng::Rng;
-use xdna_gemm::util::stats;
+use xdna_gemm::coordinator::{expand_mix, parse_mix, CoordinatorOptions};
+use xdna_gemm::harness;
+use xdna_gemm::workload::skewed_trace;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(12);
-    let gen = args.get(1).and_then(|s| Generation::parse(s)).unwrap_or(Generation::Xdna);
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(256);
+    let n_devices: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let pattern = parse_mix(args.get(2).map(String::as_str).unwrap_or("xdna:xdna2"))?;
 
-    // Serve bf16 requests on the generation's balanced design. The design
-    // is resident once (one reconfiguration); requests then stream.
-    let prec = Precision::Bf16;
-    let cfg = balanced_config(gen, prec);
-    let (nm, nk, nn) = cfg.native();
+    let devices = expand_mix(&pattern, n_devices);
+    let trace = skewed_trace(n_requests.max(1), 2025);
     println!(
-        "serving GEMM on {gen}/{} | design {} k_mt={} | native {}x{}x{}",
-        prec.paper_name(),
-        cfg.kernel.label(),
-        cfg.k_mt,
-        nm,
-        nk,
-        nn
+        "serving {n_requests} skewed requests on a {n_devices}-device fleet {:?}\n",
+        devices.iter().map(|g| g.name()).collect::<Vec<_>>()
     );
 
-    let mut rt = Runtime::load("artifacts")?;
-    println!("PJRT platform: {}\n", rt.platform());
+    let fleet = harness::serve_trace(CoordinatorOptions::fleet(devices), &trace, n_requests)?;
+    println!("{}\n", fleet.summary());
 
-    // Mixed request sizes: multiples of the native grid (the library
-    // case) plus ragged ones that exercise padding.
-    let mut rng = Rng::seeded(2025);
-    let mut sizes = Vec::new();
-    for i in 0..n_requests {
-        let (m, k, n) = if i % 3 == 2 {
-            // Ragged request (padded internally).
-            (nm + 4 * (1 + rng.below(8)), nk, nn)
-        } else {
-            ((1 + rng.below(2)) * nm, (1 + rng.below(2)) * nk, (1 + rng.below(2)) * nn)
-        };
-        sizes.push((m, k, n));
-    }
+    // Single-device baseline on the identical trace with the same
+    // (leading) generation: same total work, one leader — the fleet's
+    // makespan win is the whole point.
+    let baseline_opts = CoordinatorOptions::fleet(expand_mix(&pattern, 1));
+    let baseline = harness::serve_trace(baseline_opts, &trace, n_requests)?;
+    println!("single-device baseline:\n{}\n", baseline.summary());
 
-    let mut host_lat = Vec::new();
-    let mut device_lat = Vec::new();
-    let mut total_ops = 0.0;
-    let mut verified = 0usize;
-    let t_serve = Instant::now();
-    for (i, (m, k, n)) in sizes.iter().copied().enumerate() {
-        let mut a = Matrix::zeroed(m, k, prec.ty_in(), Layout::RowMajor)?;
-        let mut b = Matrix::zeroed(k, n, prec.ty_in(), cfg.b_layout)?;
-        refimpl::fill_random(&mut a, prec, 100 + i as u64);
-        refimpl::fill_random(&mut b, prec, 200 + i as u64);
-
-        let t0 = Instant::now();
-        let out = pjrt_gemm(&mut rt, &cfg, &a, &b)?; // REAL numerics via PJRT
-        let host_s = t0.elapsed().as_secs_f64();
-        let sim = simulate_gemm(&cfg, m, k, n, BdMode::Overlapped);
-
-        // Verify a sample of responses bit-for-bit against the reference.
-        let check = i % 4 == 0;
-        let ok = if check {
-            let want = refimpl::ref_gemm(&a, &b, prec)?;
-            // bf16: same narrowing, different f32 summation order across
-            // panel boundaries → compare with 1-ulp tolerance.
-            let mut ok = true;
-            for ii in 0..m {
-                for jj in 0..n {
-                    let w = want.get_bf16(ii, jj).to_f32();
-                    let g = out.get_bf16(ii, jj).to_f32();
-                    if (g - w).abs() > 2.0f32.powi(-6) * w.abs().max(1.0) {
-                        ok = false;
-                    }
-                }
-            }
-            verified += 1;
-            ok
-        } else {
-            true
-        };
-        assert!(ok, "request {i}: numerics mismatch");
-
-        host_lat.push(host_s);
-        device_lat.push(sim.t_total);
-        total_ops += 2.0 * m as f64 * k as f64 * n as f64;
-        println!(
-            "req {i:>3}: {m:>5}x{k:>5}x{n:>5}  host {:>8.1} ms | simulated NPU {:>7.3} ms \
-             ({:>5.2} TOPS){}",
-            host_s * 1e3,
-            sim.t_total * 1e3,
-            sim.tops,
-            if check { "  [verified]" } else { "" }
-        );
-    }
-    let wall = t_serve.elapsed().as_secs_f64();
-
-    println!("\n== serving summary ==");
-    println!("requests: {n_requests} | verified: {verified} (all passed)");
+    let speedup = if baseline.fleet_tops() > 0.0 {
+        fleet.fleet_tops() / baseline.fleet_tops()
+    } else {
+        0.0
+    };
     println!(
-        "host latency  p50 {:.1} ms | p95 {:.1} ms | mean {:.1} ms",
-        stats::median(&host_lat) * 1e3,
-        stats::percentile(&host_lat, 95.0) * 1e3,
-        stats::mean(&host_lat) * 1e3
-    );
-    println!(
-        "simulated NPU p50 {:.3} ms | p95 {:.3} ms | sustained {:.2} TOPS",
-        stats::median(&device_lat) * 1e3,
-        stats::percentile(&device_lat, 95.0) * 1e3,
-        total_ops / device_lat.iter().sum::<f64>() / 1e12
-    );
-    println!(
-        "host throughput: {:.2} req/s ({:.2} GFLOP/s functional on CPU-PJRT)",
-        n_requests as f64 / wall,
-        total_ops / wall / 1e9
+        "aggregate throughput: fleet {:.2} TOPS vs single-device {:.2} TOPS ({speedup:.2}x)",
+        fleet.fleet_tops(),
+        baseline.fleet_tops()
     );
     Ok(())
 }

@@ -1,12 +1,26 @@
-//! Per-request records and aggregate service statistics.
+//! Per-request records, per-device aggregates, and fleet-level rollups.
+//!
+//! Two throughput views matter for a sharded service (Sec. 5.3):
+//!
+//! * **sustained** (`device_tops`) — total ops over *summed* device
+//!   seconds: how efficiently device time is spent, comparable to the
+//!   paper's Tables 2–3 numbers;
+//! * **fleet** (`fleet_tops`) — total ops over the *makespan* (the
+//!   busiest device's total): what the service as a whole delivers,
+//!   which is what adding devices improves.
 
+use crate::arch::Generation;
 use crate::util::stats;
+
+use super::router::CacheStats;
 
 /// One completed request's accounting.
 #[derive(Clone, Debug)]
 pub struct RequestRecord {
     pub id: u64,
     pub name: String,
+    /// Fleet device index that served the request.
+    pub device: usize,
     /// Simulated device time (GEMM + any reconfiguration).
     pub device_s: f64,
     /// Host wall-clock from submit to response.
@@ -16,7 +30,7 @@ pub struct RequestRecord {
     pub verified: Option<bool>,
 }
 
-/// Aggregate view of a service run.
+/// Aggregate view of one device's (or a merged) request stream.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub records: Vec<RequestRecord>,
@@ -81,14 +95,178 @@ impl Metrics {
     }
 }
 
+/// One device's slice of a fleet run.
+#[derive(Clone, Debug)]
+pub struct DeviceMetrics {
+    pub gen: Generation,
+    pub metrics: Metrics,
+    /// Design-cache accounting for this device's leader.
+    pub cache: CacheStats,
+}
+
+/// Aggregated view of a fleet run: per-device slices plus the admission
+/// router's affinity accounting.
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetrics {
+    pub devices: Vec<DeviceMetrics>,
+    /// Requests routed to a device already holding their design.
+    pub router_hits: u64,
+    /// Requests that installed their design on a new device.
+    pub router_misses: u64,
+    /// Misses that replicated an already-resident design (skew spill).
+    pub router_spills: u64,
+}
+
+impl FleetMetrics {
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn count(&self) -> usize {
+        self.devices.iter().map(|d| d.metrics.count()).sum()
+    }
+
+    pub fn total_ops(&self) -> f64 {
+        self.devices.iter().map(|d| d.metrics.total_ops()).sum()
+    }
+
+    /// Summed busy seconds across all devices.
+    pub fn total_device_s(&self) -> f64 {
+        self.devices.iter().map(|d| d.metrics.total_device_s()).sum()
+    }
+
+    /// The busiest device's total busy time — the simulated wall-clock
+    /// for the whole run, since devices execute in parallel.
+    pub fn makespan_s(&self) -> f64 {
+        self.devices.iter().map(|d| d.metrics.total_device_s()).fold(0.0, f64::max)
+    }
+
+    /// Sustained throughput over summed device time (efficiency view).
+    pub fn device_tops(&self) -> f64 {
+        let t = self.total_device_s();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.total_ops() / t / 1e12
+        }
+    }
+
+    /// Aggregate service throughput over the makespan (capacity view).
+    pub fn fleet_tops(&self) -> f64 {
+        let t = self.makespan_s();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.total_ops() / t / 1e12
+        }
+    }
+
+    pub fn reconfigurations(&self) -> usize {
+        self.devices.iter().map(|d| d.metrics.reconfigurations()).sum()
+    }
+
+    pub fn all_verified(&self) -> bool {
+        self.devices.iter().all(|d| d.metrics.all_verified())
+    }
+
+    /// Host-latency percentile over every record in the fleet.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let xs: Vec<f64> = self
+            .devices
+            .iter()
+            .flat_map(|d| d.metrics.records.iter().map(|r| r.host_latency_s))
+            .collect();
+        stats::percentile(&xs, p)
+    }
+
+    /// Device-time percentile over every record in the fleet.
+    pub fn device_time_percentile(&self, p: f64) -> f64 {
+        let xs: Vec<f64> = self
+            .devices
+            .iter()
+            .flat_map(|d| d.metrics.records.iter().map(|r| r.device_s))
+            .collect();
+        stats::percentile(&xs, p)
+    }
+
+    /// Fraction of requests that found their design already resident on
+    /// the routed device.
+    pub fn router_hit_rate(&self) -> f64 {
+        let total = self.router_hits + self.router_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.router_hits as f64 / total as f64
+        }
+    }
+
+    /// All records merged into one stream (legacy single-device view).
+    pub fn merged(&self) -> Metrics {
+        let mut m = Metrics::default();
+        for d in &self.devices {
+            m.records.extend(d.metrics.records.iter().cloned());
+        }
+        m
+    }
+
+    /// Multi-line human-readable report: one line per device, then the
+    /// fleet rollup with p50/p95/p99 latency.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "fleet: {} device(s) | {} requests | fleet {:.2} TOPS over {:.2} ms makespan | \
+             sustained {:.2} TOPS | {} reconfigurations",
+            self.n_devices(),
+            self.count(),
+            self.fleet_tops(),
+            self.makespan_s() * 1e3,
+            self.device_tops(),
+            self.reconfigurations()
+        );
+        for (i, d) in self.devices.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "  dev{i} {:>5}: {:>5} req | busy {:>9.2} ms | {:>6.2} TOPS | \
+                 {} reconfig | design cache {:.0}% hit",
+                d.gen.name(),
+                d.metrics.count(),
+                d.metrics.total_device_s() * 1e3,
+                d.metrics.device_tops(),
+                d.metrics.reconfigurations(),
+                100.0 * d.cache.hit_rate()
+            );
+        }
+        let _ = writeln!(
+            s,
+            "latency: device p50/p95/p99 {:.3}/{:.3}/{:.3} ms | host p95 {:.3} ms",
+            self.device_time_percentile(50.0) * 1e3,
+            self.device_time_percentile(95.0) * 1e3,
+            self.device_time_percentile(99.0) * 1e3,
+            self.latency_percentile(95.0) * 1e3
+        );
+        let _ = write!(
+            s,
+            "router: {} affinity hits / {} misses ({} spills) | hit rate {:.1}%",
+            self.router_hits,
+            self.router_misses,
+            self.router_spills,
+            100.0 * self.router_hit_rate()
+        );
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn rec(id: u64, device_s: f64, ops: f64, reconf: bool) -> RequestRecord {
+    fn rec(id: u64, device: usize, device_s: f64, ops: f64, reconf: bool) -> RequestRecord {
         RequestRecord {
             id,
             name: format!("r{id}"),
+            device,
             device_s,
             host_latency_s: device_s * 1.1,
             ops,
@@ -100,13 +278,63 @@ mod tests {
     #[test]
     fn aggregates() {
         let mut m = Metrics::default();
-        m.push(rec(1, 0.010, 1e9, true));
-        m.push(rec(2, 0.020, 4e9, false));
+        m.push(rec(1, 0, 0.010, 1e9, true));
+        m.push(rec(2, 0, 0.020, 4e9, false));
         assert_eq!(m.count(), 2);
         assert!((m.total_device_s() - 0.030).abs() < 1e-12);
         assert!((m.device_tops() - (5e9 / 0.030 / 1e12)).abs() < 1e-9);
         assert_eq!(m.reconfigurations(), 1);
         assert!(m.all_verified());
         assert!(m.summary().contains("2 requests"));
+    }
+
+    #[test]
+    fn fleet_rollup_separates_makespan_from_busy_time() {
+        let mut d0 = Metrics::default();
+        d0.push(rec(1, 0, 0.010, 1e9, true));
+        d0.push(rec(2, 0, 0.010, 1e9, false));
+        let mut d1 = Metrics::default();
+        d1.push(rec(3, 1, 0.030, 3e9, true));
+        let fm = FleetMetrics {
+            devices: vec![
+                DeviceMetrics {
+                    gen: Generation::Xdna,
+                    metrics: d0,
+                    cache: CacheStats { hits: 1, misses: 1, evictions: 0 },
+                },
+                DeviceMetrics {
+                    gen: Generation::Xdna2,
+                    metrics: d1,
+                    cache: CacheStats::default(),
+                },
+            ],
+            router_hits: 2,
+            router_misses: 1,
+            router_spills: 0,
+        };
+        assert_eq!(fm.count(), 3);
+        assert_eq!(fm.n_devices(), 2);
+        assert!((fm.total_device_s() - 0.050).abs() < 1e-12);
+        assert!((fm.makespan_s() - 0.030).abs() < 1e-12);
+        // Fleet throughput uses the makespan; sustained uses busy time.
+        assert!((fm.fleet_tops() - (5e9 / 0.030 / 1e12)).abs() < 1e-9);
+        assert!((fm.device_tops() - (5e9 / 0.050 / 1e12)).abs() < 1e-9);
+        assert!(fm.fleet_tops() > fm.device_tops());
+        assert_eq!(fm.reconfigurations(), 2);
+        assert_eq!(fm.merged().count(), 3);
+        assert!((fm.router_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        let s = fm.summary();
+        assert!(s.contains("2 device(s)") && s.contains("router:"), "{s}");
+    }
+
+    #[test]
+    fn empty_fleet_is_all_zeros() {
+        let fm = FleetMetrics::default();
+        assert_eq!(fm.count(), 0);
+        assert_eq!(fm.fleet_tops(), 0.0);
+        assert_eq!(fm.device_tops(), 0.0);
+        assert_eq!(fm.makespan_s(), 0.0);
+        assert_eq!(fm.router_hit_rate(), 0.0);
+        assert!(fm.all_verified());
     }
 }

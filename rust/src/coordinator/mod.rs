@@ -1,22 +1,33 @@
-//! Layer-3 coordinator: GEMM-as-a-service on the simulated NPU.
+//! Layer-3 coordinator: sharded GEMM-as-a-service on a fleet of
+//! simulated NPUs.
 //!
 //! The paper ships a *library* (Sec. 1: "enabling the implementation of
-//! high-performance GEMM libraries, similar to GPUs"); this module is that
-//! library's serving shape: a leader thread owns the device (one NPU:
-//! command processor + array), clients submit `GemmRequest`s over
-//! channels, and the scheduler applies the paper's deployment insight
-//! (Sec. 5.3.1): keep one tuned design per (precision, layout) resident,
-//! reconfigure only the two cheap parameters across problem sizes, and
-//! charge the full 3.4 / 4.9 ms reconfiguration cost only on design
-//! switches — which batching minimizes.
+//! high-performance GEMM libraries, similar to GPUs"); this module is
+//! that library's serving shape, scaled past one device (DESIGN.md §7,
+//! `docs/serving.md`). An admission/router thread buckets requests by
+//! design key and forwards each to one of N leader threads — every
+//! leader owns one simulated device (generations mixable, XDNA next to
+//! XDNA2). The scheduler applies the paper's deployment insight
+//! (Sec. 5.3.1) at two levels: requests stick to the device whose
+//! design cache already holds their `(precision, layout)` design —
+//! spilling to the least-loaded device only when the holder's backlog
+//! exceeds a reconfiguration — and each leader sorts its batches by
+//! design key so the full 3.4 / 4.9 ms reconfiguration cost is paid
+//! only on design switches, which batching minimizes.
 //!
-//! * [`router`]  — design cache + device-state reconfiguration accounting.
-//! * [`service`] — leader/worker machinery, batching scheduler.
-//! * [`metrics`] — per-request records and aggregate statistics.
+//! * [`router`]  — design cache (LRU + hit accounting), device state,
+//!   and the fleet's affinity/least-loaded device selector.
+//! * [`service`] — admission queue, leader pool, batching scheduler,
+//!   backpressure, drain-on-shutdown.
+//! * [`metrics`] — per-request records, per-device aggregates, and the
+//!   fleet rollup (fleet vs sustained TOPS, latency percentiles).
 
 pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use router::{DesignCache, DesignKey};
-pub use service::{Backend, Coordinator, CoordinatorOptions, GemmRequest, GemmResponse};
+pub use metrics::{DeviceMetrics, FleetMetrics, Metrics, RequestRecord};
+pub use router::{CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter, RouteKind};
+pub use service::{
+    expand_mix, parse_mix, Backend, Coordinator, CoordinatorOptions, GemmRequest, GemmResponse,
+};

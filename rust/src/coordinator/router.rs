@@ -1,11 +1,21 @@
-//! Request routing: pick the resident design for a request and account
-//! for NPU reconfiguration (Sec. 5.3.1).
+//! Request routing: design residency per device and device selection
+//! across the fleet (Sec. 5.3.1 applied at two levels).
+//!
+//! * [`DesignCache`] — per-device tuned-design store with LRU eviction and
+//!   hit/miss accounting. Unbounded by default (eight keys fit easily);
+//!   a capacity models firmware that can pin only a few designs.
+//! * [`DeviceState`] — which design is loaded on the array right now, and
+//!   what switching costs (3.4 ms XDNA / 4.9 ms XDNA2).
+//! * [`FleetRouter`] — the admission queue's device selector: sticky
+//!   design affinity with load-aware spill, the scheduling-domain
+//!   equivalent of the paper's balanced-point search.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::arch::{balanced_config, Generation};
 use crate::dtype::{Layout, Precision};
 use crate::tiling::TilingConfig;
+use crate::workload::GemmShape;
 
 /// What identifies a loaded NPU design: same-key requests reuse the
 /// configuration, changing only the cheap per-size parameters
@@ -16,43 +26,155 @@ pub struct DesignKey {
     pub b_layout: Layout,
 }
 
-/// Tuned design per key. Defaults to the paper's balanced configs;
-/// `insert` lets the autotuner (optimizer::balanced) override.
+impl DesignKey {
+    /// The design a request needs: its precision/layout bucket.
+    pub fn for_shape(shape: &GemmShape) -> DesignKey {
+        DesignKey { precision: shape.precision, b_layout: shape.b_layout }
+    }
+}
+
+/// Hit/miss/eviction counters for one design cache (surfaced per device
+/// in the fleet metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Tuned design per key, with LRU eviction when bounded. Defaults to the
+/// paper's balanced configs on a miss; `insert` lets the autotuner
+/// (`optimizer::balanced`) override.
 #[derive(Clone, Debug)]
 pub struct DesignCache {
     gen: Generation,
+    /// Max resident designs; 0 = unbounded.
+    capacity: usize,
     designs: HashMap<DesignKey, TilingConfig>,
+    /// Least-recently-used at the front, most-recent at the back.
+    lru: VecDeque<DesignKey>,
+    stats: CacheStats,
 }
 
 impl DesignCache {
+    /// Unbounded cache pre-warmed with every balanced design (the cache
+    /// is total over keys; first touches count as hits).
     pub fn new(gen: Generation) -> DesignCache {
-        let mut designs = HashMap::new();
+        let mut c = DesignCache::with_capacity(gen, 0);
         for p in Precision::ALL {
             for layout in [Layout::RowMajor, Layout::ColMajor] {
-                designs.insert(
-                    DesignKey { precision: p, b_layout: layout },
-                    balanced_config(gen, p).with_b_layout(layout),
-                );
+                c.warm(DesignKey { precision: p, b_layout: layout });
             }
         }
-        DesignCache { gen, designs }
+        c
+    }
+
+    /// Empty cache holding at most `capacity` designs (0 = unbounded).
+    /// Designs are derived lazily from the balanced defaults, so the
+    /// first touch of each key counts as a miss.
+    pub fn with_capacity(gen: Generation, capacity: usize) -> DesignCache {
+        DesignCache {
+            gen,
+            capacity,
+            designs: HashMap::new(),
+            lru: VecDeque::new(),
+            stats: CacheStats::default(),
+        }
     }
 
     pub fn gen(&self) -> Generation {
         self.gen
     }
 
-    pub fn get(&self, key: DesignKey) -> &TilingConfig {
-        self.designs.get(&key).expect("cache is total over keys")
+    pub fn len(&self) -> usize {
+        self.designs.len()
     }
 
-    /// Override a design (autotuning results).
+    pub fn is_empty(&self) -> bool {
+        self.designs.is_empty()
+    }
+
+    pub fn contains(&self, key: DesignKey) -> bool {
+        self.designs.contains_key(&key)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Resident keys in LRU order (front = next to evict) — reported to
+    /// the router so its residency model can reconcile with reality.
+    pub fn resident(&self) -> Vec<DesignKey> {
+        self.lru.iter().copied().collect()
+    }
+
+    /// Resident design for `key`, deriving the balanced default on a miss
+    /// (evicting the least-recently-used entry when bounded).
+    pub fn get(&mut self, key: DesignKey) -> &TilingConfig {
+        if self.designs.contains_key(&key) {
+            self.stats.hits += 1;
+            self.touch(key);
+        } else {
+            self.stats.misses += 1;
+            self.admit(key, balanced_config(self.gen, key.precision).with_b_layout(key.b_layout));
+        }
+        self.designs.get(&key).expect("resident after get")
+    }
+
+    /// Pre-load `key`'s design without touching the hit/miss counters
+    /// (the warmup path: residency is being arranged, not requested).
+    pub fn warm(&mut self, key: DesignKey) {
+        if self.designs.contains_key(&key) {
+            self.touch(key);
+        } else {
+            self.admit(key, balanced_config(self.gen, key.precision).with_b_layout(key.b_layout));
+        }
+    }
+
+    /// Override a design (autotuning results). Counts as a warm insert.
     pub fn insert(&mut self, cfg: TilingConfig) {
         assert_eq!(cfg.gen, self.gen);
-        self.designs.insert(
-            DesignKey { precision: cfg.precision, b_layout: cfg.b_layout },
-            cfg,
-        );
+        let key = DesignKey { precision: cfg.precision, b_layout: cfg.b_layout };
+        if self.designs.contains_key(&key) {
+            self.designs.insert(key, cfg);
+            self.touch(key);
+        } else {
+            self.admit(key, cfg);
+        }
+    }
+
+    fn admit(&mut self, key: DesignKey, cfg: TilingConfig) {
+        if self.capacity > 0 {
+            while self.designs.len() >= self.capacity {
+                match self.lru.pop_front() {
+                    Some(old) => {
+                        self.designs.remove(&old);
+                        self.stats.evictions += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        self.designs.insert(key, cfg);
+        self.lru.push_back(key);
+    }
+
+    fn touch(&mut self, key: DesignKey) {
+        if let Some(pos) = self.lru.iter().position(|k| *k == key) {
+            self.lru.remove(pos);
+        }
+        self.lru.push_back(key);
     }
 }
 
@@ -81,22 +203,231 @@ impl DeviceState {
     }
 }
 
+/// Why the router picked a device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteKind {
+    /// A device already holding the design was cheapest.
+    Affinity,
+    /// No device held the design; least-loaded device takes it.
+    LeastLoaded,
+    /// Devices held the design but were backlogged past the
+    /// reconfiguration cost — the design is replicated onto a fresh
+    /// device (fairness under skew).
+    Spill,
+}
+
+/// One routing decision.
+#[derive(Clone, Copy, Debug)]
+pub struct RouteDecision {
+    /// Fleet device index.
+    pub device: usize,
+    /// Estimated execution seconds charged to that device's load.
+    pub est_s: f64,
+    pub kind: RouteKind,
+}
+
+/// Admission-queue device selector: sticky design affinity with
+/// load-aware spill — the paper's Sec. 5.3 deployment balance applied to
+/// scheduling.
+///
+/// Load is tracked in *virtual device seconds*: the cumulative estimated
+/// execution time assigned to each device (ops over that generation's
+/// precision peak). Reconfiguration enters only as a one-time routing
+/// penalty for devices not holding the design, so a holder keeps
+/// winning until its backlog exceeds an idle device's reconfiguration
+/// cost — at which point the design spills (replicates) to the
+/// least-loaded device. Routing minimizes the greedy makespan in
+/// simulated time and is a deterministic function of submission order,
+/// independent of host thread timing.
+#[derive(Clone, Debug)]
+pub struct FleetRouter {
+    gens: Vec<Generation>,
+    /// Per-device resident designs in LRU order (front = oldest):
+    /// an optimistic mirror of each leader's [`DesignCache`], updated on
+    /// every routing decision and reconciled with the leader's
+    /// authoritative state on batch completion (`sync_residency`), so
+    /// affinity is invalidated when a bounded cache evicts the design.
+    held: Vec<VecDeque<DesignKey>>,
+    /// Per-device design capacity (0 = unbounded), matching
+    /// `CoordinatorOptions::design_capacity`.
+    capacity: usize,
+    /// Cumulative assigned virtual seconds per device.
+    load_s: Vec<f64>,
+    pub hits: u64,
+    pub misses: u64,
+    pub spills: u64,
+}
+
+impl FleetRouter {
+    /// Router over devices with unbounded design caches.
+    pub fn new(gens: Vec<Generation>) -> FleetRouter {
+        FleetRouter::with_capacity(gens, 0)
+    }
+
+    /// Router whose residency model evicts like a `design_capacity`-bounded
+    /// [`DesignCache`] (0 = unbounded).
+    pub fn with_capacity(gens: Vec<Generation>, design_capacity: usize) -> FleetRouter {
+        assert!(!gens.is_empty(), "fleet needs at least one device");
+        let n = gens.len();
+        FleetRouter {
+            gens,
+            held: vec![VecDeque::new(); n],
+            capacity: design_capacity,
+            load_s: vec![0.0; n],
+            hits: 0,
+            misses: 0,
+            spills: 0,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.gens.len()
+    }
+
+    pub fn device_gen(&self, device: usize) -> Generation {
+        self.gens[device]
+    }
+
+    /// Virtual-seconds load per device (cumulative assigned work).
+    pub fn loads(&self) -> &[f64] {
+        &self.load_s
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Whether device `d`'s modeled cache currently holds `key`.
+    pub fn holds(&self, d: usize, key: DesignKey) -> bool {
+        self.held[d].contains(&key)
+    }
+
+    /// Devices currently holding `key`'s design.
+    pub fn holders(&self, key: DesignKey) -> Vec<usize> {
+        (0..self.gens.len()).filter(|&d| self.holds(d, key)).collect()
+    }
+
+    /// Mark `key` resident on `d`, evicting the LRU design when the
+    /// modeled capacity is exceeded (mirrors `DesignCache::admit`).
+    fn assign(&mut self, d: usize, key: DesignKey) {
+        if self.capacity > 0 {
+            while self.held[d].len() >= self.capacity {
+                if self.held[d].pop_front().is_none() {
+                    break;
+                }
+            }
+        }
+        self.held[d].push_back(key);
+    }
+
+    fn touch_held(&mut self, d: usize, key: DesignKey) {
+        if let Some(pos) = self.held[d].iter().position(|k| *k == key) {
+            self.held[d].remove(pos);
+        }
+        self.held[d].push_back(key);
+    }
+
+    /// Replace device `d`'s modeled residency with the leader's
+    /// authoritative LRU state (from a batch completion). Leaders
+    /// execute batches sorted by design key, so their eviction order
+    /// can differ from the router's submission-order mirror; this
+    /// reconciliation bounds the divergence to the in-flight window.
+    pub fn sync_residency(&mut self, d: usize, resident: &[DesignKey]) {
+        self.held[d] = resident.iter().copied().collect();
+    }
+
+    /// Estimated execution seconds for `ops` at `precision` on `device`
+    /// (the generation's theoretical peak — an optimistic but
+    /// generation-aware cost model).
+    pub fn est_s(&self, device: usize, precision: Precision, ops: f64) -> f64 {
+        ops / (self.gens[device].spec().peak_tops(precision) * 1e12)
+    }
+
+    /// Pick the device for a request needing `key` with `ops` operations:
+    /// argmin over devices of `load + est + (reconfig unless holding)`.
+    pub fn route(&mut self, key: DesignKey, ops: f64) -> RouteDecision {
+        let mut best = 0usize;
+        let mut best_total = f64::INFINITY;
+        for d in 0..self.gens.len() {
+            let est = self.est_s(d, key.precision, ops);
+            let reconfig =
+                if self.holds(d, key) { 0.0 } else { self.gens[d].spec().reconfig_s };
+            let total = self.load_s[d] + est + reconfig;
+            if total < best_total {
+                best = d;
+                best_total = total;
+            }
+        }
+        let holds = self.holds(best, key);
+        let had_holders = (0..self.gens.len()).any(|d| self.holds(d, key));
+        let est = self.est_s(best, key.precision, ops);
+        let kind = if holds {
+            self.hits += 1;
+            self.touch_held(best, key);
+            RouteKind::Affinity
+        } else {
+            self.misses += 1;
+            self.assign(best, key);
+            if had_holders {
+                self.spills += 1;
+                RouteKind::Spill
+            } else {
+                RouteKind::LeastLoaded
+            }
+        };
+        self.load_s[best] += est;
+        RouteDecision { device: best, est_s: est, kind }
+    }
+
+    /// Cache-warmup: assign `key` to the least-loaded device to preload
+    /// and return it (a no-op returning an existing holder if the design
+    /// is already resident). Warmup happens off the request path, so no
+    /// load is charged.
+    pub fn warm(&mut self, key: DesignKey) -> usize {
+        if let Some(d) = (0..self.gens.len()).find(|&d| self.holds(d, key)) {
+            return d;
+        }
+        let mut best = 0usize;
+        let mut best_load = f64::INFINITY;
+        for (d, load) in self.load_s.iter().enumerate() {
+            if *load < best_load {
+                best = d;
+                best_load = *load;
+            }
+        }
+        self.assign(best, key);
+        best
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn key(p: Precision, l: Layout) -> DesignKey {
+        DesignKey { precision: p, b_layout: l }
+    }
+
     #[test]
     fn cache_is_total_and_uses_balanced_defaults() {
-        let c = DesignCache::new(Generation::Xdna2);
+        let mut c = DesignCache::new(Generation::Xdna2);
         for p in Precision::ALL {
             for l in [Layout::RowMajor, Layout::ColMajor] {
-                let cfg = c.get(DesignKey { precision: p, b_layout: l });
+                let cfg = *c.get(key(p, l));
                 assert_eq!(cfg.precision, p);
                 assert_eq!(cfg.b_layout, l);
             }
         }
-        let k = DesignKey { precision: Precision::I8I16, b_layout: Layout::ColMajor };
+        let k = key(Precision::I8I16, Layout::ColMajor);
         assert_eq!(c.get(k).kernel.label(), "128x72x112");
+        // Pre-warmed: every get above was a hit.
+        assert_eq!(c.stats().misses, 0);
+        assert_eq!(c.stats().hits, 9);
     }
 
     #[test]
@@ -115,20 +446,147 @@ mod tests {
         )
         .unwrap();
         c.insert(custom);
-        let k = DesignKey { precision: Precision::Bf16, b_layout: Layout::ColMajor };
+        let k = key(Precision::Bf16, Layout::ColMajor);
         assert_eq!(c.get(k).kernel.k_ct, 48);
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c = DesignCache::with_capacity(Generation::Xdna2, 0);
+        let k1 = key(Precision::I8I8, Layout::ColMajor);
+        let k2 = key(Precision::Bf16, Layout::ColMajor);
+        c.get(k1); // miss (lazy fill)
+        c.get(k1); // hit
+        c.get(k2); // miss
+        c.get(k1); // hit
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (2, 2, 0));
+        assert!((c.stats().hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn lru_eviction_when_bounded() {
+        let mut c = DesignCache::with_capacity(Generation::Xdna2, 2);
+        let k1 = key(Precision::I8I8, Layout::ColMajor);
+        let k2 = key(Precision::I8I16, Layout::ColMajor);
+        let k3 = key(Precision::Bf16, Layout::ColMajor);
+        c.get(k1); // miss → {k1}
+        c.get(k2); // miss → {k1, k2}
+        c.get(k1); // hit, k1 becomes most-recent → LRU order k2, k1
+        c.get(k3); // miss → evicts k2 → {k1, k3}
+        assert!(c.contains(k1) && c.contains(k3) && !c.contains(k2));
+        assert_eq!(c.stats().evictions, 1);
+        c.get(k2); // miss again → evicts k1 (LRU)
+        assert!(!c.contains(k1));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 4, 2));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn warm_and_insert_do_not_count_as_traffic() {
+        let mut c = DesignCache::with_capacity(Generation::Xdna, 0);
+        c.warm(key(Precision::I8I8, Layout::ColMajor));
+        assert_eq!(c.stats(), CacheStats::default());
+        c.get(key(Precision::I8I8, Layout::ColMajor)); // hit thanks to warm
+        assert_eq!((c.stats().hits, c.stats().misses), (1, 0));
     }
 
     #[test]
     fn reconfiguration_charged_only_on_switches() {
         let mut dev = DeviceState::default();
         let gen = Generation::Xdna2;
-        let k1 = DesignKey { precision: Precision::I8I8, b_layout: Layout::ColMajor };
-        let k2 = DesignKey { precision: Precision::Bf16, b_layout: Layout::ColMajor };
+        let k1 = key(Precision::I8I8, Layout::ColMajor);
+        let k2 = key(Precision::Bf16, Layout::ColMajor);
         assert_eq!(dev.switch_to(gen, k1), gen.spec().reconfig_s);
         assert_eq!(dev.switch_to(gen, k1), 0.0);
         assert_eq!(dev.switch_to(gen, k2), gen.spec().reconfig_s);
         assert_eq!(dev.switch_to(gen, k1), gen.spec().reconfig_s);
         assert_eq!(dev.reconfigurations, 3);
+    }
+
+    #[test]
+    fn router_affinity_matches_across_precisions_and_layouts() {
+        let mut r = FleetRouter::new(vec![Generation::Xdna2, Generation::Xdna2]);
+        let ops = 2.0 * 1024.0 * 1024.0 * 1024.0;
+        let ka = key(Precision::I8I8, Layout::ColMajor);
+        let kb = key(Precision::Bf16, Layout::ColMajor);
+        let d_a = r.route(ka, ops);
+        assert_eq!(d_a.kind, RouteKind::LeastLoaded);
+        // Same key sticks to its device; distinct keys land elsewhere.
+        assert_eq!(r.route(ka, ops).device, d_a.device);
+        let d_b = r.route(kb, ops);
+        assert_ne!(d_b.device, d_a.device, "new design goes to the idle device");
+        // A layout change is a different design key even at the same
+        // precision — it must not match d_a's residency.
+        let ka_row = key(Precision::I8I8, Layout::RowMajor);
+        let d_row = r.route(ka_row, ops);
+        assert_eq!(d_row.kind, RouteKind::LeastLoaded);
+        assert_eq!(r.hits, 1);
+        assert_eq!(r.misses, 3);
+    }
+
+    #[test]
+    fn router_spills_under_skew() {
+        let mut r = FleetRouter::new(vec![Generation::Xdna2; 4]);
+        let ops = 2.0 * 2048.0f64.powi(3); // ~0.29 ms estimated per request
+        let k = key(Precision::I8I8, Layout::ColMajor);
+        let mut devices_used = std::collections::BTreeSet::new();
+        for _ in 0..300 {
+            devices_used.insert(r.route(k, ops).device);
+        }
+        assert_eq!(devices_used.len(), 4, "hot design must spill across the fleet");
+        assert!(r.spills >= 3, "{} spills", r.spills);
+        // Loads end up balanced within one spill threshold.
+        let max = r.loads().iter().cloned().fold(0.0, f64::max);
+        let min = r.loads().iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max - min < 2.0 * Generation::Xdna2.spec().reconfig_s + 1e-9);
+    }
+
+    #[test]
+    fn router_prefers_faster_generation_once_engaged() {
+        let mut r = FleetRouter::new(vec![Generation::Xdna, Generation::Xdna2]);
+        let ops = 2.0 * 1024.0f64.powi(3);
+        let k = key(Precision::I8I8, Layout::ColMajor);
+        let mut counts = [0usize; 2];
+        for _ in 0..200 {
+            counts[r.route(k, ops).device] += 1;
+        }
+        assert!(counts[0] > 0 && counts[1] > 0);
+        assert!(
+            counts[1] > counts[0],
+            "XDNA2 should absorb more of the stream: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn bounded_router_evicts_affinity_with_the_cache() {
+        // Capacity-1 model, one device, alternating designs: the router
+        // must forget the evicted design, matching the leader's cache —
+        // every request is a miss, never a stale affinity hit.
+        let mut r = FleetRouter::with_capacity(vec![Generation::Xdna2], 1);
+        let k1 = key(Precision::I8I8, Layout::ColMajor);
+        let k2 = key(Precision::Bf16, Layout::ColMajor);
+        for _ in 0..3 {
+            assert_ne!(r.route(k1, 1e9).kind, RouteKind::Affinity);
+            assert_ne!(r.route(k2, 1e9).kind, RouteKind::Affinity);
+        }
+        assert_eq!((r.hits, r.misses), (0, 6));
+        // Back-to-back same key still hits within the capacity.
+        assert_eq!(r.route(k1, 1e9).kind, RouteKind::LeastLoaded);
+        assert_eq!(r.route(k1, 1e9).kind, RouteKind::Affinity);
+    }
+
+    #[test]
+    fn warm_assigns_affinity_without_traffic() {
+        let mut r = FleetRouter::new(vec![Generation::Xdna2, Generation::Xdna2]);
+        let k = key(Precision::I8I16, Layout::ColMajor);
+        let d = r.warm(k);
+        assert_eq!(r.warm(k), d, "idempotent");
+        let decision = r.route(k, 1e9);
+        assert_eq!(decision.device, d);
+        assert_eq!(decision.kind, RouteKind::Affinity);
+        assert_eq!((r.hits, r.misses), (1, 0));
     }
 }

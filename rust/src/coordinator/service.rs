@@ -1,12 +1,24 @@
-//! The service itself: a leader thread owning the (simulated) NPU device,
-//! worker clients submitting over channels, and a batching scheduler that
-//! groups same-design requests to amortize reconfiguration (Sec. 5.3.1).
+//! The service itself: an admission/router thread fronting a pool of
+//! leader threads, one per simulated NPU device.
+//!
+//! Clients submit over a bounded channel (admission backpressure); the
+//! router buckets each request by its [`DesignKey`] and forwards it to
+//! the device chosen by the [`FleetRouter`] — the device already holding
+//! the design when its backlog allows, the least-loaded device otherwise
+//! (Sec. 5.3.1 applied fleet-wide). Each leader owns its device
+//! (design cache + loaded-design state), drains its queue in batches,
+//! and sorts every batch by design key so a burst of mixed-precision
+//! traffic pays each reconfiguration once. The router keeps at most
+//! `max_in_flight` requests outstanding per device; completions flow
+//! back to refill the window, and shutdown drains every queue before
+//! the leaders exit.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::arch::Generation;
 use crate::dtype::Layout;
@@ -16,8 +28,8 @@ use crate::mem::Matrix;
 use crate::sim::{simulate_gemm, BdMode, GemmReport};
 use crate::workload::GemmShape;
 
-use super::metrics::{Metrics, RequestRecord};
-use super::router::{DesignCache, DesignKey, DeviceState};
+use super::metrics::{DeviceMetrics, FleetMetrics, Metrics, RequestRecord};
+use super::router::{CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter};
 
 /// How requests execute.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -49,6 +61,8 @@ impl GemmRequest {
 pub struct GemmResponse {
     pub id: u64,
     pub name: String,
+    /// Fleet device index that served the request.
+    pub device: usize,
     /// Simulated performance report (padded sizes, phase times, TOPS).
     pub sim: GemmReport,
     /// Device seconds including any design reconfiguration.
@@ -59,13 +73,32 @@ pub struct GemmResponse {
     pub result: Option<Matrix>,
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct CoordinatorOptions {
+    /// Generation of the single device when `devices` is empty.
     pub gen: Generation,
     pub backend: Backend,
-    /// Scheduler batching window: how many queued requests are drained
-    /// and design-grouped per scheduling round.
+    /// Scheduler batching window: how many queued requests a leader
+    /// drains and design-groups per scheduling round.
     pub batch_window: usize,
+    /// Device fleet: one leader thread per entry, generations mixable
+    /// (`serve --devices N --mix xdna:xdna2`). Empty → `vec![gen]`.
+    pub devices: Vec<Generation>,
+    /// Bounded per-device in-flight window: the router keeps at most
+    /// this many requests forwarded to a leader at once; excess requests
+    /// wait in the router's per-device queue, where routing decisions
+    /// can still see (and rebalance around) the backlog.
+    pub max_in_flight: usize,
+    /// Per-device design-cache capacity (0 = unbounded). The fleet
+    /// router mirrors this bound, so affinity is forgotten when a
+    /// leader's cache would have evicted the design.
+    pub design_capacity: usize,
+    /// Admission-channel bound: `submit` blocks once this many messages
+    /// are in transit to the router. Note this caps the client→router
+    /// pipe, not total queued work — the router drains it continuously
+    /// (completions share the channel), so its per-device queues grow
+    /// without bound if producers outpace the fleet indefinitely.
+    pub admission_capacity: usize,
 }
 
 impl Default for CoordinatorOptions {
@@ -74,36 +107,106 @@ impl Default for CoordinatorOptions {
             gen: Generation::Xdna2,
             backend: Backend::SimOnly,
             batch_window: 16,
+            devices: Vec::new(),
+            max_in_flight: 64,
+            design_capacity: 0,
+            admission_capacity: 4096,
         }
     }
 }
 
+impl CoordinatorOptions {
+    /// Options for an explicit device fleet.
+    pub fn fleet(devices: Vec<Generation>) -> CoordinatorOptions {
+        CoordinatorOptions { devices, ..Default::default() }
+    }
+
+    /// The resolved fleet (at least one device).
+    pub fn device_gens(&self) -> Vec<Generation> {
+        if self.devices.is_empty() {
+            vec![self.gen]
+        } else {
+            self.devices.clone()
+        }
+    }
+}
+
+/// Parse a `--mix` pattern like `xdna:xdna2` (also accepts commas) into
+/// a generation cycle.
+pub fn parse_mix(s: &str) -> Result<Vec<Generation>> {
+    let mut out = Vec::new();
+    for tok in s.split(|c: char| c == ':' || c == ',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        match Generation::parse(tok) {
+            Some(g) => out.push(g),
+            None => bail!("unknown generation '{tok}' in mix '{s}'"),
+        }
+    }
+    if out.is_empty() {
+        bail!("empty device mix '{s}'");
+    }
+    Ok(out)
+}
+
+/// Cycle `pattern` to fill `n` device slots: `expand_mix(&[Xdna, Xdna2],
+/// 4)` → `[Xdna, Xdna2, Xdna, Xdna2]`. An empty pattern yields an empty
+/// fleet (callers fall back to `CoordinatorOptions::gen`).
+pub fn expand_mix(pattern: &[Generation], n: usize) -> Vec<Generation> {
+    if pattern.is_empty() {
+        return Vec::new();
+    }
+    (0..n).map(|i| pattern[i % pattern.len()]).collect()
+}
+
+/// A submitted request travelling router → leader.
+struct Pending {
+    id: u64,
+    req: GemmRequest,
+    tx: Sender<GemmResponse>,
+    t0: Instant,
+}
+
 enum Msg {
-    Submit(u64, GemmRequest, Sender<GemmResponse>, Instant),
-    Flush(Sender<Metrics>),
+    Submit(Box<Pending>),
+    Warm(DesignKey),
+    Flush(Sender<FleetMetrics>),
+    /// Leader → router: a batch completed. `resident` is the leader's
+    /// authoritative design-cache LRU state for residency reconciliation.
+    Done { dev: usize, records: Vec<RequestRecord>, cache: CacheStats, resident: Vec<DesignKey> },
     Shutdown,
 }
 
-/// Handle to a running coordinator (leader thread).
+enum DeviceMsg {
+    Run(Box<Pending>),
+    Warm(DesignKey),
+    Shutdown,
+}
+
+/// Handle to a running coordinator (router thread + leader pool).
 pub struct Coordinator {
-    tx: Sender<Msg>,
-    handle: Option<JoinHandle<Metrics>>,
+    tx: SyncSender<Msg>,
+    handle: Option<JoinHandle<FleetMetrics>>,
     next_id: std::sync::atomic::AtomicU64,
 }
 
 impl Coordinator {
     pub fn start(opts: CoordinatorOptions) -> Coordinator {
-        let (tx, rx) = channel::<Msg>();
-        let handle = std::thread::spawn(move || leader_loop(opts, rx));
+        let (tx, rx) = sync_channel::<Msg>(opts.admission_capacity.max(1));
+        let done_tx = tx.clone();
+        let handle = std::thread::spawn(move || router_loop(opts, rx, done_tx));
         Coordinator { tx, handle: Some(handle), next_id: 0.into() }
     }
 
     /// Submit a request; the response arrives on the returned channel.
+    /// Blocks only when the admission queue is full (backpressure).
     pub fn submit(&self, req: GemmRequest) -> Receiver<GemmResponse> {
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (rtx, rrx) = channel();
         self.tx
-            .send(Msg::Submit(id, req, rtx, Instant::now()))
+            .send(Msg::Submit(Box::new(Pending { id, req, tx: rtx, t0: Instant::now() })))
             .expect("coordinator thread alive");
         rrx
     }
@@ -113,17 +216,26 @@ impl Coordinator {
         self.submit(req).recv().map_err(|e| anyhow!("coordinator dropped: {e}"))
     }
 
-    /// Snapshot current metrics.
-    pub fn metrics(&self) -> Result<Metrics> {
+    /// Pre-load `key`'s design onto a device off the request path: the
+    /// router records the affinity and the chosen leader reconfigures
+    /// immediately, so the first real request for `key` pays no
+    /// reconfiguration.
+    pub fn warm(&self, key: DesignKey) {
+        let _ = self.tx.send(Msg::Warm(key));
+    }
+
+    /// Snapshot current fleet metrics.
+    pub fn metrics(&self) -> Result<FleetMetrics> {
         let (tx, rx) = channel();
         self.tx.send(Msg::Flush(tx)).map_err(|e| anyhow!("send: {e}"))?;
         rx.recv().map_err(|e| anyhow!("recv: {e}"))
     }
 
-    /// Stop the leader and return final metrics.
-    pub fn shutdown(mut self) -> Metrics {
+    /// Stop accepting work, drain every queue, stop the leaders, and
+    /// return the final fleet metrics.
+    pub fn shutdown(mut self) -> FleetMetrics {
         let _ = self.tx.send(Msg::Shutdown);
-        self.handle.take().unwrap().join().expect("leader panicked")
+        self.handle.take().unwrap().join().expect("router panicked")
     }
 }
 
@@ -136,12 +248,146 @@ impl Drop for Coordinator {
     }
 }
 
-type Pending = (u64, GemmRequest, Sender<GemmResponse>, Instant);
+/// Forward queued work to leader `d` while its in-flight window allows.
+fn pump(
+    d: usize,
+    max_in_flight: usize,
+    queues: &mut [VecDeque<Box<Pending>>],
+    in_flight: &mut [usize],
+    leader_txs: &[Sender<DeviceMsg>],
+) {
+    while in_flight[d] < max_in_flight {
+        match queues[d].pop_front() {
+            Some(p) => {
+                in_flight[d] += 1;
+                let _ = leader_txs[d].send(DeviceMsg::Run(p));
+            }
+            None => break,
+        }
+    }
+}
 
-fn leader_loop(opts: CoordinatorOptions, rx: Receiver<Msg>) -> Metrics {
-    let cache = DesignCache::new(opts.gen);
+fn router_loop(opts: CoordinatorOptions, rx: Receiver<Msg>, done_tx: SyncSender<Msg>) -> FleetMetrics {
+    let gens = opts.device_gens();
+    let n_dev = gens.len();
+    let max_in_flight = opts.max_in_flight.max(1);
+
+    let mut fleet = FleetRouter::with_capacity(gens.clone(), opts.design_capacity);
+    let mut queues: Vec<VecDeque<Box<Pending>>> = (0..n_dev).map(|_| VecDeque::new()).collect();
+    let mut in_flight = vec![0usize; n_dev];
+    let mut per_dev: Vec<Metrics> = (0..n_dev).map(|_| Metrics::default()).collect();
+    let mut caches = vec![CacheStats::default(); n_dev];
+
+    let mut leader_txs: Vec<Sender<DeviceMsg>> = Vec::with_capacity(n_dev);
+    let mut leader_handles: Vec<JoinHandle<CacheStats>> = Vec::with_capacity(n_dev);
+    for (d, gen) in gens.iter().copied().enumerate() {
+        let (ltx, lrx) = channel::<DeviceMsg>();
+        let o = opts.clone();
+        let done = done_tx.clone();
+        leader_handles.push(std::thread::spawn(move || leader_loop(d, gen, o, lrx, done)));
+        leader_txs.push(ltx);
+    }
+    // The router's own clone kept the channel open for the leaders'
+    // `Done` sends; those have their own clones now.
+    drop(done_tx);
+
+    let assemble = |per_dev: &[Metrics], caches: &[CacheStats], fleet: &FleetRouter| {
+        let mut fm = FleetMetrics {
+            devices: Vec::with_capacity(n_dev),
+            router_hits: fleet.hits,
+            router_misses: fleet.misses,
+            router_spills: fleet.spills,
+        };
+        for d in 0..n_dev {
+            fm.devices.push(DeviceMetrics {
+                gen: gens[d],
+                metrics: per_dev[d].clone(),
+                cache: caches[d],
+            });
+        }
+        fm
+    };
+
+    let mut draining = false;
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            // All senders gone: clients dropped and every leader exited.
+            Err(_) => break,
+        };
+        match msg {
+            Msg::Submit(p) => {
+                let key = DesignKey::for_shape(&p.req.shape);
+                let d = fleet.route(key, p.req.shape.ops()).device;
+                queues[d].push_back(p);
+                pump(d, max_in_flight, &mut queues, &mut in_flight, &leader_txs);
+            }
+            Msg::Warm(key) => {
+                let d = fleet.warm(key);
+                let _ = leader_txs[d].send(DeviceMsg::Warm(key));
+            }
+            Msg::Flush(tx) => {
+                let _ = tx.send(assemble(&per_dev, &caches, &fleet));
+            }
+            Msg::Done { dev, records, cache, resident } => {
+                in_flight[dev] -= records.len();
+                caches[dev] = cache;
+                fleet.sync_residency(dev, &resident);
+                for r in records {
+                    per_dev[dev].push(r);
+                }
+                pump(dev, max_in_flight, &mut queues, &mut in_flight, &leader_txs);
+            }
+            Msg::Shutdown => draining = true,
+        }
+        let idle = queues.iter().all(VecDeque::is_empty) && in_flight.iter().all(|&n| n == 0);
+        if draining && idle {
+            break;
+        }
+    }
+
+    // Leaders are idle (every forwarded request was acknowledged), so a
+    // Shutdown is the next message each will see.
+    for ltx in &leader_txs {
+        let _ = ltx.send(DeviceMsg::Shutdown);
+    }
+    drop(leader_txs);
+    for (d, h) in leader_handles.into_iter().enumerate() {
+        if let Ok(stats) = h.join() {
+            caches[d] = stats;
+        }
+    }
+    assemble(&per_dev, &caches, &fleet)
+}
+
+/// Absorb one message into the leader's batch / state.
+fn absorb(
+    m: DeviceMsg,
+    gen: Generation,
+    batch: &mut Vec<Box<Pending>>,
+    cache: &mut DesignCache,
+    device: &mut DeviceState,
+    shutdown: &mut bool,
+) {
+    match m {
+        DeviceMsg::Run(p) => batch.push(p),
+        DeviceMsg::Warm(key) => {
+            cache.warm(key);
+            device.switch_to(gen, key);
+        }
+        DeviceMsg::Shutdown => *shutdown = true,
+    }
+}
+
+fn leader_loop(
+    dev: usize,
+    gen: Generation,
+    opts: CoordinatorOptions,
+    rx: Receiver<DeviceMsg>,
+    done: SyncSender<Msg>,
+) -> CacheStats {
+    let mut cache = DesignCache::with_capacity(gen, opts.design_capacity);
     let mut device = DeviceState::default();
-    let mut metrics = Metrics::default();
 
     loop {
         // Block for the first message, then drain up to the batch window.
@@ -149,37 +395,29 @@ fn leader_loop(opts: CoordinatorOptions, rx: Receiver<Msg>) -> Metrics {
             Ok(m) => m,
             Err(_) => break,
         };
-        let mut batch: Vec<Pending> = Vec::new();
+        let mut batch: Vec<Box<Pending>> = Vec::new();
         let mut shutdown = false;
-        let mut handle_msg = |m: Msg, batch: &mut Vec<Pending>, metrics: &mut Metrics| match m {
-            Msg::Submit(id, req, tx, t0) => batch.push((id, req, tx, t0)),
-            Msg::Flush(tx) => {
-                let _ = tx.send(metrics.clone());
-            }
-            Msg::Shutdown => shutdown = true,
-        };
-        handle_msg(first, &mut batch, &mut metrics);
-        while batch.len() < opts.batch_window {
+        absorb(first, gen, &mut batch, &mut cache, &mut device, &mut shutdown);
+        while batch.len() < opts.batch_window.max(1) {
             match rx.try_recv() {
-                Ok(m) => handle_msg(m, &mut batch, &mut metrics),
+                Ok(m) => absorb(m, gen, &mut batch, &mut cache, &mut device, &mut shutdown),
                 Err(_) => break,
             }
         }
 
         // Size-class batching: stable-group by design key so a burst of
         // mixed-precision traffic pays each reconfiguration once.
-        batch.sort_by_key(|(id, req, _, _)| {
-            (
-                req.shape.precision,
-                req.shape.b_layout == Layout::ColMajor,
-                *id,
-            )
+        batch.sort_by_key(|p| {
+            (p.req.shape.precision, p.req.shape.b_layout == Layout::ColMajor, p.id)
         });
 
-        for (id, req, tx, t0) in batch {
-            let key = DesignKey { precision: req.shape.precision, b_layout: req.shape.b_layout };
+        let mut records = Vec::with_capacity(batch.len());
+        let mut responses = Vec::with_capacity(batch.len());
+        for p in batch {
+            let Pending { id, req, tx, t0 } = *p;
+            let key = DesignKey::for_shape(&req.shape);
             let cfg = *cache.get(key);
-            let reconfig_s = device.switch_to(opts.gen, key);
+            let reconfig_s = device.switch_to(gen, key);
             let sim = simulate_gemm(&cfg, req.shape.m, req.shape.k, req.shape.n, req.bd_mode);
 
             let (result, verified) = match opts.backend {
@@ -188,24 +426,42 @@ fn leader_loop(opts: CoordinatorOptions, rx: Receiver<Msg>) -> Metrics {
             };
 
             let device_s = sim.t_total + reconfig_s;
-            let resp = GemmResponse {
+            records.push(RequestRecord {
                 id,
                 name: req.shape.name.clone(),
-                sim,
-                device_s,
-                reconfigured: reconfig_s > 0.0,
-                verified,
-                result,
-            };
-            metrics.push(RequestRecord {
-                id,
-                name: req.shape.name.clone(),
+                device: dev,
                 device_s,
                 host_latency_s: t0.elapsed().as_secs_f64(),
                 ops: req.shape.ops(),
                 reconfigured: reconfig_s > 0.0,
                 verified,
             });
+            responses.push((
+                tx,
+                GemmResponse {
+                    id,
+                    name: req.shape.name,
+                    device: dev,
+                    sim,
+                    device_s,
+                    reconfigured: reconfig_s > 0.0,
+                    verified,
+                    result,
+                },
+            ));
+        }
+        // Acknowledge to the router before responding to clients: a
+        // client holding its response can then rely on a subsequent
+        // metrics snapshot including its request.
+        if !records.is_empty() {
+            let _ = done.send(Msg::Done {
+                dev,
+                records,
+                cache: cache.stats(),
+                resident: cache.resident(),
+            });
+        }
+        for (tx, resp) in responses {
             let _ = tx.send(resp);
         }
 
@@ -213,7 +469,7 @@ fn leader_loop(opts: CoordinatorOptions, rx: Receiver<Msg>) -> Metrics {
             break;
         }
     }
-    metrics
+    cache.stats()
 }
 
 fn run_functional(cfg: &crate::tiling::TilingConfig, req: &GemmRequest) -> (Option<Matrix>, Option<bool>) {
@@ -266,6 +522,7 @@ mod tests {
         let m = c.shutdown();
         assert_eq!(m.count(), 2);
         assert_eq!(m.reconfigurations(), 1);
+        assert_eq!(m.n_devices(), 1, "default options run one device");
     }
 
     #[test]
@@ -286,6 +543,7 @@ mod tests {
         assert_eq!(m.count(), n);
         assert_eq!(m.reconfigurations(), 1);
         assert!(m.device_tops() > 1.0);
+        assert_eq!(m.router_misses, 1, "one design key in the whole trace");
     }
 
     #[test]
@@ -331,5 +589,24 @@ mod tests {
         let out = resp.result.unwrap();
         assert_eq!((out.rows, out.cols), (64, 64));
         c.shutdown();
+    }
+
+    #[test]
+    fn mix_parsing_and_expansion() {
+        assert_eq!(parse_mix("xdna:xdna2").unwrap(), vec![Generation::Xdna, Generation::Xdna2]);
+        assert_eq!(parse_mix("xdna2").unwrap(), vec![Generation::Xdna2]);
+        assert_eq!(parse_mix("xdna, xdna2").unwrap(), vec![Generation::Xdna, Generation::Xdna2]);
+        assert!(parse_mix("tpu").is_err());
+        assert!(parse_mix(":").is_err());
+        assert_eq!(
+            expand_mix(&[Generation::Xdna, Generation::Xdna2], 5),
+            vec![
+                Generation::Xdna,
+                Generation::Xdna2,
+                Generation::Xdna,
+                Generation::Xdna2,
+                Generation::Xdna,
+            ]
+        );
     }
 }

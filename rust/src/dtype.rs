@@ -178,7 +178,7 @@ impl fmt::Display for Precision {
 
 /// Storage order of a matrix in DRAM (Sec. 4.2.2): A and C are always
 /// row-major in this work; B may be either.
-#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
 pub enum Layout {
     RowMajor,
     ColMajor,

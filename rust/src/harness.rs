@@ -302,6 +302,32 @@ pub fn ablation_reconfig(gen: Generation) -> Table {
     t
 }
 
+/// Drive a coordinator fleet over `trace` (cycled to `n` requests,
+/// request names suffixed with their index) and return the final fleet
+/// metrics after a drained shutdown. Shared by `xdna-gemm serve`, the
+/// `serve` example, and the fleet integration tests (DESIGN.md §4).
+pub fn serve_trace(
+    opts: crate::coordinator::CoordinatorOptions,
+    trace: &[crate::workload::GemmShape],
+    n: usize,
+) -> crate::Result<crate::coordinator::FleetMetrics> {
+    use crate::coordinator::{Coordinator, GemmRequest};
+    anyhow::ensure!(!trace.is_empty(), "empty trace");
+    let coord = Coordinator::start(opts);
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let g = &trace[i % trace.len()];
+        rxs.push(coord.submit(GemmRequest::sim(crate::workload::GemmShape {
+            name: format!("{}#{i}", g.name),
+            ..g.clone()
+        })));
+    }
+    for rx in rxs {
+        rx.recv()?;
+    }
+    Ok(coord.shutdown())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -26,8 +26,9 @@
 //!   executor that moves real bytes through the simulated hierarchy.
 //! * [`runtime`] — PJRT client; loads the AOT Pallas/JAX artifacts
 //!   (`artifacts/*.hlo.txt`) and executes them from the request path.
-//! * [`coordinator`] — GEMM-as-a-service: router, design cache,
-//!   padding, scheduler, metrics.
+//! * [`coordinator`] — sharded GEMM-as-a-service: admission queue,
+//!   design-affinity fleet router, per-device leader threads with
+//!   batching and backpressure, fleet metrics (`docs/serving.md`).
 //! * [`workload`] — DL GEMM traces (transformer / MLP / sweeps).
 //! * [`report`] — table and CSV emitters used by the bench harness.
 //! * [`util`] — offline stand-ins for clap/criterion/proptest/serde_json.

@@ -13,20 +13,22 @@
 //! xdna-gemm ablations [--which a1|a2|a3|a4]   Sec. 5.2.2 / 5.3.x studies
 //! xdna-gemm optimize --gen G --precision P    run the balanced search
 //! xdna-gemm simulate --gen G --precision P --m M --k K --n N [--rowmajor-b]
-//! xdna-gemm serve --requests N [--gen G]      coordinator load demo
+//! xdna-gemm serve --requests N [--devices D] [--mix xdna:xdna2] [--gen G]
+//!                 [--window W] [--in-flight F] [--skew | --trace FILE]
+//!                                             sharded coordinator load demo
 //! xdna-gemm artifacts [--dir artifacts]       list + smoke the AOT bundle
 //! ```
 
 use anyhow::{bail, Result};
 
 use xdna_gemm::arch::Generation;
-use xdna_gemm::coordinator::{Coordinator, CoordinatorOptions, GemmRequest};
+use xdna_gemm::coordinator::{expand_mix, parse_mix, CoordinatorOptions};
 use xdna_gemm::dtype::{Layout, Precision};
 use xdna_gemm::harness;
 use xdna_gemm::optimizer::{optimize_balanced, BalancedOptions};
 use xdna_gemm::sim::{simulate_gemm, BdMode};
 use xdna_gemm::util::cli::Args;
-use xdna_gemm::workload::{GemmShape, TransformerConfig};
+use xdna_gemm::workload::TransformerConfig;
 
 const USAGE: &str = "usage: xdna-gemm <table1|table2|table3|fig6|fig7|fig8|ablations|optimize|simulate|serve|artifacts> [options]";
 
@@ -146,28 +148,35 @@ fn main() -> Result<()> {
         "serve" => {
             let gen = parse_gen(args.get("gen").unwrap_or("xdna2"))?;
             let n = args.usize_opt("requests", 64)?;
-            let coord = Coordinator::start(CoordinatorOptions { gen, ..Default::default() });
+            let n_devices = args.usize_opt("devices", 1)?;
+            if n_devices == 0 {
+                bail!("--devices must be at least 1");
+            }
+            // `--mix xdna:xdna2` cycles generations across the fleet;
+            // without it every device is `--gen`.
+            let pattern = match args.get("mix") {
+                Some(s) => parse_mix(s)?,
+                None => vec![gen],
+            };
+            let opts = CoordinatorOptions {
+                gen,
+                devices: expand_mix(&pattern, n_devices),
+                batch_window: args.usize_opt("window", 16)?,
+                max_in_flight: args.usize_opt("in-flight", 64)?,
+                ..Default::default()
+            };
             // Workload: a GGML-style trace file (`--trace shapes.txt`,
-            // lines of `name M K N precision [layout]`) or the built-in
+            // lines of `name M K N precision [layout]`), the skewed
+            // mixed-design serving mix (`--skew`), or the built-in
             // transformer prefill.
             let trace = match args.get("trace") {
                 Some(path) => {
                     xdna_gemm::workload::parse_trace(&std::fs::read_to_string(path)?)?
                 }
+                None if args.flag("skew") => xdna_gemm::workload::skewed_trace(n.max(1), 7),
                 None => TransformerConfig::default().trace(),
             };
-            let mut rxs = Vec::new();
-            for i in 0..n {
-                let g = &trace[i % trace.len()];
-                rxs.push(coord.submit(GemmRequest::sim(GemmShape {
-                    name: format!("{}#{i}", g.name),
-                    ..g.clone()
-                })));
-            }
-            for rx in rxs {
-                rx.recv()?;
-            }
-            let m = coord.shutdown();
+            let m = harness::serve_trace(opts, &trace, n)?;
             println!("{}", m.summary());
         }
         "artifacts" => {

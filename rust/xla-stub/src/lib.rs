@@ -1,0 +1,187 @@
+//! API-compatible stub for the `xla` (xla_extension / PJRT) bindings
+//! that `xdna_gemm::runtime` programs against.
+//!
+//! The real backing is the prebuilt `xla_extension` C++ library, which
+//! is not vendorable in this workspace (DESIGN.md §1). This stub keeps
+//! the whole runtime layer compiling with the identical surface;
+//! every entry point that would need the native library reports a
+//! clear error at runtime instead. [`PjRtClient::cpu`] is the single
+//! gate: it fails, so `Runtime::load` fails before any other stubbed
+//! call can be reached, and the artifact-dependent tests skip
+//! themselves when no artifact bundle is present.
+//!
+//! Swap in the real bindings by replacing this path dependency (e.g.
+//! a `[patch]` section pointing at a local xla-rs checkout).
+
+use std::fmt;
+
+/// Error type mirroring the native bindings' (a message string).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA PJRT native runtime is not available in this build \
+         (stub crate rust/xla-stub — see DESIGN.md §1)"
+    ))
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the runtime marshals.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PrimitiveType {
+    S8,
+    S32,
+    F32,
+}
+
+/// Host-side tensor literal.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    pub ty: PrimitiveType,
+    pub dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let elem = match ty {
+            PrimitiveType::S8 => 1,
+            PrimitiveType::S32 | PrimitiveType::F32 => 4,
+        };
+        let n: usize = dims.iter().product();
+        Literal { ty, dims: dims.to_vec(), bytes: vec![0; n * elem] }
+    }
+
+    /// Raw byte copy from a typed slice (layout-compatible PODs only,
+    /// matching the native bindings' contract).
+    pub fn copy_raw_from<T: Copy>(&mut self, data: &[T]) -> Result<()> {
+        let want = self.bytes.len();
+        let got = std::mem::size_of_val(data);
+        if want != got {
+            return Err(Error(format!("literal expects {want} bytes, got {got}")));
+        }
+        // Safety: T is Copy/POD by contract and sizes were checked.
+        let src =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, got) };
+        self.bytes.copy_from_slice(src);
+        Ok(())
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        let elem = std::mem::size_of::<T>();
+        if elem == 0 || self.bytes.len() % elem != 0 {
+            return Err(Error("element size mismatch".to_string()));
+        }
+        let n = self.bytes.len() / elem;
+        let mut out = Vec::with_capacity(n);
+        // Safety: bounds derived from the buffer length just checked.
+        unsafe {
+            let src = self.bytes.as_ptr();
+            for i in 0..n {
+                out.push(std::ptr::read_unaligned(src.add(i * elem) as *const T));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Unwrap a 1-tuple result (aot.py lowers with `return_tuple=True`).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+}
+
+/// Parsed HLO module (text form). The stub only records the path.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if std::path::Path::new(path).exists() {
+            Ok(HloModuleProto { path: path.to_string() })
+        } else {
+            Err(Error(format!("no such HLO text file: {path}")))
+        }
+    }
+}
+
+/// A computation handle built from a parsed module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    pub module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.clone() }
+    }
+}
+
+/// PJRT client handle. The stub cannot construct one: [`PjRtClient::cpu`]
+/// is the gate that makes `Runtime::load` fail cleanly.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_bytes() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::S32, &[2, 3]);
+        lit.copy_raw_from(&[1i32, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(lit.copy_raw_from(&[1i32]).is_err());
+    }
+
+    #[test]
+    fn client_is_gated() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Pre-PR gate (documented in README.md): release build, tests, and a
+# rustdoc pass with warnings denied so the doc layer cannot rot.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo doc --no-deps (rustdoc warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "==> all checks passed"
