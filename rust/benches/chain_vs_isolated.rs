@@ -1,0 +1,100 @@
+//! Chain planner vs isolated dispatches: the fused speedup per
+//! generation and precision, with the phase breakdown showing where the
+//! time goes (ISSUE 2 acceptance artifact; docs/workloads.md).
+//!
+//! Rows cover the default transformer prefill (seq 512) and a small-M
+//! decode-like prefill (seq 64) where dispatch overhead dominates and
+//! chaining pays the most, plus the mixed int8+bf16 workload where the
+//! planner's design grouping removes interleaving reconfigurations.
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::dtype::Precision;
+use xdna_gemm::plan::{
+    evaluate, mixed_transformer_chains, transformer_chains, ChainPlan, PlanReport, Planner,
+};
+use xdna_gemm::report::Table;
+use xdna_gemm::sim::BdMode;
+use xdna_gemm::util::bench::{black_box, Bench};
+use xdna_gemm::workload::TransformerConfig;
+
+fn reports(gen: Generation, chains: &[xdna_gemm::plan::GemmChain]) -> (PlanReport, PlanReport) {
+    let planner = Planner::new(gen);
+    let fused = evaluate(&planner.plan(chains), BdMode::Overlapped);
+    let isolated = evaluate(&planner.plan_isolated(chains), BdMode::Overlapped);
+    (fused, isolated)
+}
+
+fn main() {
+    let b = Bench::new("chain_vs_isolated");
+
+    let mut t = Table::new(
+        "Fused chain schedule vs isolated dispatches (transformer prefill)",
+        &[
+            "dev", "precision", "seq", "fused edges", "isolated ms", "chained ms",
+            "dispatch saved ms", "reconfig saved ms", "DRAM saved MB", "speedup",
+        ],
+    );
+
+    for gen in Generation::ALL {
+        for p in [Precision::I8I8, Precision::Bf16] {
+            for seq in [512usize, 64] {
+                let cfg = TransformerConfig { precision: p, seq, n_layers: 4, ..Default::default() };
+                let chains = transformer_chains(&cfg);
+                let (fused, isolated) = reports(gen, &chains);
+                assert!(
+                    fused.t_total() < isolated.t_total(),
+                    "{gen}/{p} seq={seq}: chained {:.3} ms !< isolated {:.3} ms",
+                    fused.t_total() * 1e3,
+                    isolated.t_total() * 1e3
+                );
+                t.row(vec![
+                    gen.to_string(),
+                    p.paper_name().to_string(),
+                    seq.to_string(),
+                    fused.fused_edges.to_string(),
+                    format!("{:.3}", isolated.t_total() * 1e3),
+                    format!("{:.3}", fused.t_total() * 1e3),
+                    format!("{:.3}", (isolated.t_dispatch - fused.t_dispatch) * 1e3),
+                    format!("{:.3}", (isolated.t_reconfig - fused.t_reconfig) * 1e3),
+                    format!("{:.1}", (isolated.dram_bytes - fused.dram_bytes) / 1e6),
+                    format!("{:.2}x", fused.speedup_over(&isolated)),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    // Mixed int8+bf16 layers: the reconfiguration column becomes the
+    // headline saving (design grouping pays each design once).
+    let mut t2 = Table::new(
+        "Mixed int8+bf16 workload (design grouping)",
+        &["dev", "isolated reconfigs", "chained reconfigs", "reconfig saved ms", "speedup"],
+    );
+    for gen in Generation::ALL {
+        let i8 = TransformerConfig { n_layers: 4, ..Default::default() };
+        let mixed = mixed_transformer_chains(&i8, Precision::Bf16);
+        let (fused, isolated) = reports(gen, &mixed);
+        assert!(fused.reconfigurations < isolated.reconfigurations, "{gen}: grouping failed");
+        t2.row(vec![
+            gen.to_string(),
+            isolated.reconfigurations.to_string(),
+            fused.reconfigurations.to_string(),
+            format!("{:.1}", (isolated.t_reconfig - fused.t_reconfig) * 1e3),
+            format!("{:.2}x", fused.speedup_over(&isolated)),
+        ]);
+    }
+    t2.print();
+
+    // Planner + evaluation cost itself (the serving hot path: a plan is
+    // recompiled whenever a chain arrives with new shapes).
+    let cfg = TransformerConfig { n_layers: 12, ..Default::default() };
+    let chains = transformer_chains(&cfg);
+    let planner = Planner::new(Generation::Xdna2);
+    b.case("plan_12_layer_transformer", || {
+        black_box::<ChainPlan>(planner.plan(&chains))
+    });
+    let plan = planner.plan(&chains);
+    b.case("evaluate_49_dispatch_plan", || {
+        black_box(evaluate(&plan, BdMode::Overlapped))
+    });
+}

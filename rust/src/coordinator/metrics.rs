@@ -28,6 +28,27 @@ pub struct RequestRecord {
     pub ops: f64,
     pub reconfigured: bool,
     pub verified: Option<bool>,
+    /// Chain id when the request arrived as part of a planned chain
+    /// (`Coordinator::submit_chain`).
+    pub chain: Option<u64>,
+}
+
+/// One completed chain's accounting: every op ran back to back on one
+/// device (chain affinity), so `device_s` *is* the chain's makespan.
+#[derive(Clone, Debug)]
+pub struct ChainRecord {
+    pub id: u64,
+    pub name: String,
+    /// Fleet device index the whole chain landed on.
+    pub device: usize,
+    pub ops_count: usize,
+    /// Edges executed with the C kept L2-resident.
+    pub fused_edges: usize,
+    /// Same-design ops that rode the first op's host submission.
+    pub elided_dispatches: usize,
+    /// Chain makespan: summed device seconds of its ops, including any
+    /// reconfigurations they triggered.
+    pub device_s: f64,
 }
 
 /// Aggregate view of one device's (or a merged) request stream.
@@ -115,6 +136,9 @@ pub struct FleetMetrics {
     pub router_misses: u64,
     /// Misses that replicated an already-resident design (skew spill).
     pub router_spills: u64,
+    /// Per-chain completions (`Coordinator::submit_chain`), in
+    /// completion order.
+    pub chains: Vec<ChainRecord>,
 }
 
 impl FleetMetrics {
@@ -189,6 +213,16 @@ impl FleetMetrics {
         stats::percentile(&xs, p)
     }
 
+    /// Longest single chain makespan in the run (0 when no chains ran).
+    pub fn chain_makespan_s(&self) -> f64 {
+        self.chains.iter().map(|c| c.device_s).fold(0.0, f64::max)
+    }
+
+    /// Fused edges executed across every chain.
+    pub fn chain_fused_edges(&self) -> usize {
+        self.chains.iter().map(|c| c.fused_edges).sum()
+    }
+
     /// Fraction of requests that found their design already resident on
     /// the routed device.
     pub fn router_hit_rate(&self) -> f64 {
@@ -246,6 +280,17 @@ impl FleetMetrics {
             self.device_time_percentile(99.0) * 1e3,
             self.latency_percentile(95.0) * 1e3
         );
+        if !self.chains.is_empty() {
+            let _ = writeln!(
+                s,
+                "chains: {} completed | longest makespan {:.3} ms | {} fused edges | \
+                 {} elided dispatches",
+                self.chains.len(),
+                self.chain_makespan_s() * 1e3,
+                self.chain_fused_edges(),
+                self.chains.iter().map(|c| c.elided_dispatches).sum::<usize>()
+            );
+        }
         let _ = write!(
             s,
             "router: {} affinity hits / {} misses ({} spills) | hit rate {:.1}%",
@@ -272,6 +317,7 @@ mod tests {
             ops,
             reconfigured: reconf,
             verified: Some(true),
+            chain: None,
         }
     }
 
@@ -311,6 +357,7 @@ mod tests {
             router_hits: 2,
             router_misses: 1,
             router_spills: 0,
+            chains: Vec::new(),
         };
         assert_eq!(fm.count(), 3);
         assert_eq!(fm.n_devices(), 2);
@@ -328,9 +375,36 @@ mod tests {
     }
 
     #[test]
+    fn chain_records_roll_up() {
+        let mut fm = FleetMetrics::default();
+        fm.chains.push(ChainRecord {
+            id: 0,
+            name: "layer0".into(),
+            device: 0,
+            ops_count: 4,
+            fused_edges: 2,
+            elided_dispatches: 3,
+            device_s: 0.004,
+        });
+        fm.chains.push(ChainRecord {
+            id: 1,
+            name: "layer1".into(),
+            device: 1,
+            ops_count: 4,
+            fused_edges: 1,
+            elided_dispatches: 3,
+            device_s: 0.007,
+        });
+        assert!((fm.chain_makespan_s() - 0.007).abs() < 1e-12);
+        assert_eq!(fm.chain_fused_edges(), 3);
+        assert!(fm.summary().contains("chains: 2 completed"), "{}", fm.summary());
+    }
+
+    #[test]
     fn empty_fleet_is_all_zeros() {
         let fm = FleetMetrics::default();
         assert_eq!(fm.count(), 0);
+        assert_eq!(fm.chain_makespan_s(), 0.0);
         assert_eq!(fm.fleet_tops(), 0.0);
         assert_eq!(fm.device_tops(), 0.0);
         assert_eq!(fm.makespan_s(), 0.0);

@@ -15,6 +15,12 @@
 //! design key so the full 3.4 / 4.9 ms reconfiguration cost is paid
 //! only on design switches, which batching minimizes.
 //!
+//! Whole GEMM *chains* (`crate::plan`) are first-class requests: a
+//! chain routes as one unit by its leading design key, lands on one
+//! leader with its design cache-hot, and executes back to back with
+//! fused L2-resident edges and amortized dispatches; per-chain makespan
+//! surfaces in the fleet metrics.
+//!
 //! * [`router`]  — design cache (LRU + hit accounting), device state,
 //!   and the fleet's affinity/least-loaded device selector.
 //! * [`service`] — admission queue, leader pool, batching scheduler,
@@ -26,8 +32,9 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use metrics::{DeviceMetrics, FleetMetrics, Metrics, RequestRecord};
+pub use metrics::{ChainRecord, DeviceMetrics, FleetMetrics, Metrics, RequestRecord};
 pub use router::{CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter, RouteKind};
 pub use service::{
-    expand_mix, parse_mix, Backend, Coordinator, CoordinatorOptions, GemmRequest, GemmResponse,
+    expand_mix, parse_mix, Backend, ChainResponse, Coordinator, CoordinatorOptions, GemmRequest,
+    GemmResponse,
 };

@@ -384,6 +384,16 @@ impl FleetRouter {
         RouteDecision { device: best, est_s: est, kind }
     }
 
+    /// Chain affinity: route a whole chain as one unit. The chain's
+    /// leading design key picks the device exactly like [`Self::route`],
+    /// but the decision is charged with the chain's *total* ops, so the
+    /// whole chain lands on one leader, its design stays cache-hot, and
+    /// the load model sees the chain's real footprint. Counts one
+    /// hit/miss/spill per chain, not per op.
+    pub fn route_chain(&mut self, key: DesignKey, total_ops: f64) -> RouteDecision {
+        self.route(key, total_ops)
+    }
+
     /// Cache-warmup: assign `key` to the least-loaded device to preload
     /// and return it (a no-op returning an existing holder if the design
     /// is already resident). Warmup happens off the request path, so no

@@ -21,14 +21,16 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::arch::Generation;
-use crate::dtype::Layout;
+use crate::dtype::{Layout, Precision};
 use crate::gemm::exec::{Executor, Fidelity};
 use crate::gemm::refimpl;
 use crate::mem::Matrix;
-use crate::sim::{simulate_gemm, BdMode, GemmReport};
+use crate::plan::{overrides_for, GemmChain};
+use crate::sim::{simulate_gemm, simulate_gemm_with, BdMode, GemmReport};
+use crate::tiling::TilingConfig;
 use crate::workload::GemmShape;
 
-use super::metrics::{DeviceMetrics, FleetMetrics, Metrics, RequestRecord};
+use super::metrics::{ChainRecord, DeviceMetrics, FleetMetrics, Metrics, RequestRecord};
 use super::router::{CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter};
 
 /// How requests execute.
@@ -55,6 +57,23 @@ impl GemmRequest {
     pub fn sim(shape: GemmShape) -> GemmRequest {
         GemmRequest { shape, data: None, verify: false, bd_mode: BdMode::Overlapped }
     }
+}
+
+/// One completed chain (`Coordinator::submit_chain`): every op ran back
+/// to back on one device, fused edges kept the intermediate C in L2,
+/// and same-design ops rode the first op's host submission.
+#[derive(Debug)]
+pub struct ChainResponse {
+    pub id: u64,
+    pub name: String,
+    /// Fleet device index that served the whole chain.
+    pub device: usize,
+    /// Chain makespan: summed device seconds including reconfigurations.
+    pub device_s: f64,
+    pub fused_edges: usize,
+    pub elided_dispatches: usize,
+    /// Per-op simulation reports, in chain order.
+    pub reports: Vec<GemmReport>,
 }
 
 #[derive(Debug)]
@@ -169,18 +188,65 @@ struct Pending {
     t0: Instant,
 }
 
+/// A submitted chain travelling router → leader as one unit.
+struct PendingChain {
+    id: u64,
+    chain: GemmChain,
+    bd_mode: BdMode,
+    tx: Sender<ChainResponse>,
+    t0: Instant,
+}
+
+/// One schedulable unit in a router queue / leader batch: a single
+/// request or a whole chain (which stays contiguous and in order).
+enum Unit {
+    Req(Box<Pending>),
+    Chain(Box<PendingChain>),
+}
+
+impl Unit {
+    /// In-flight slots / record count this unit accounts for.
+    fn len(&self) -> usize {
+        match self {
+            Unit::Req(_) => 1,
+            Unit::Chain(c) => c.chain.len(),
+        }
+    }
+
+    /// Design-grouping sort key (chains group by their leading op).
+    fn sort_key(&self) -> (Precision, bool, u64) {
+        match self {
+            Unit::Req(p) => {
+                (p.req.shape.precision, p.req.shape.b_layout == Layout::ColMajor, p.id)
+            }
+            Unit::Chain(c) => {
+                let s = &c.chain.ops[0].shape;
+                (s.precision, s.b_layout == Layout::ColMajor, c.id)
+            }
+        }
+    }
+}
+
 enum Msg {
     Submit(Box<Pending>),
+    SubmitChain(Box<PendingChain>),
     Warm(DesignKey),
     Flush(Sender<FleetMetrics>),
     /// Leader → router: a batch completed. `resident` is the leader's
     /// authoritative design-cache LRU state for residency reconciliation.
-    Done { dev: usize, records: Vec<RequestRecord>, cache: CacheStats, resident: Vec<DesignKey> },
+    Done {
+        dev: usize,
+        records: Vec<RequestRecord>,
+        chains: Vec<ChainRecord>,
+        cache: CacheStats,
+        resident: Vec<DesignKey>,
+    },
     Shutdown,
 }
 
 enum DeviceMsg {
     Run(Box<Pending>),
+    RunChain(Box<PendingChain>),
     Warm(DesignKey),
     Shutdown,
 }
@@ -216,6 +282,38 @@ impl Coordinator {
         self.submit(req).recv().map_err(|e| anyhow!("coordinator dropped: {e}"))
     }
 
+    /// Submit a whole chain: the router places it on one device by its
+    /// leading design key (chain affinity — the design stays cache-hot
+    /// for the entire run), and the leader executes the ops back to
+    /// back, fusing L2-resident edges and amortizing same-design
+    /// dispatches exactly like the offline planner
+    /// (`crate::plan::overrides_for` against the leader's own design
+    /// cache). Chains ride the timing path (`Backend::SimOnly`
+    /// semantics); the functional staged-C path is
+    /// `gemm::exec::Executor::execute_chain`.
+    pub fn submit_chain(&self, chain: GemmChain) -> Result<Receiver<ChainResponse>> {
+        if chain.is_empty() {
+            bail!("empty chain '{}'", chain.name);
+        }
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Msg::SubmitChain(Box::new(PendingChain {
+                id,
+                chain,
+                bd_mode: BdMode::Overlapped,
+                tx: rtx,
+                t0: Instant::now(),
+            })))
+            .expect("coordinator thread alive");
+        Ok(rrx)
+    }
+
+    /// Blocking convenience wrapper for [`Self::submit_chain`].
+    pub fn call_chain(&self, chain: GemmChain) -> Result<ChainResponse> {
+        self.submit_chain(chain)?.recv().map_err(|e| anyhow!("coordinator dropped: {e}"))
+    }
+
     /// Pre-load `key`'s design onto a device off the request path: the
     /// router records the affinity and the chosen leader reconfigures
     /// immediately, so the first real request for `key` pays no
@@ -249,18 +347,25 @@ impl Drop for Coordinator {
 }
 
 /// Forward queued work to leader `d` while its in-flight window allows.
+/// A chain counts its full length against the window but is forwarded
+/// whole whenever any window remains (it may overshoot — splitting it
+/// would forfeit the fused edges, and a chain longer than the window
+/// must not deadlock).
 fn pump(
     d: usize,
     max_in_flight: usize,
-    queues: &mut [VecDeque<Box<Pending>>],
+    queues: &mut [VecDeque<Unit>],
     in_flight: &mut [usize],
     leader_txs: &[Sender<DeviceMsg>],
 ) {
     while in_flight[d] < max_in_flight {
         match queues[d].pop_front() {
-            Some(p) => {
-                in_flight[d] += 1;
-                let _ = leader_txs[d].send(DeviceMsg::Run(p));
+            Some(unit) => {
+                in_flight[d] += unit.len();
+                let _ = leader_txs[d].send(match unit {
+                    Unit::Req(p) => DeviceMsg::Run(p),
+                    Unit::Chain(c) => DeviceMsg::RunChain(c),
+                });
             }
             None => break,
         }
@@ -273,10 +378,11 @@ fn router_loop(opts: CoordinatorOptions, rx: Receiver<Msg>, done_tx: SyncSender<
     let max_in_flight = opts.max_in_flight.max(1);
 
     let mut fleet = FleetRouter::with_capacity(gens.clone(), opts.design_capacity);
-    let mut queues: Vec<VecDeque<Box<Pending>>> = (0..n_dev).map(|_| VecDeque::new()).collect();
+    let mut queues: Vec<VecDeque<Unit>> = (0..n_dev).map(|_| VecDeque::new()).collect();
     let mut in_flight = vec![0usize; n_dev];
     let mut per_dev: Vec<Metrics> = (0..n_dev).map(|_| Metrics::default()).collect();
     let mut caches = vec![CacheStats::default(); n_dev];
+    let mut chain_records: Vec<ChainRecord> = Vec::new();
 
     let mut leader_txs: Vec<Sender<DeviceMsg>> = Vec::with_capacity(n_dev);
     let mut leader_handles: Vec<JoinHandle<CacheStats>> = Vec::with_capacity(n_dev);
@@ -291,12 +397,16 @@ fn router_loop(opts: CoordinatorOptions, rx: Receiver<Msg>, done_tx: SyncSender<
     // `Done` sends; those have their own clones now.
     drop(done_tx);
 
-    let assemble = |per_dev: &[Metrics], caches: &[CacheStats], fleet: &FleetRouter| {
+    let assemble = |per_dev: &[Metrics],
+                    caches: &[CacheStats],
+                    fleet: &FleetRouter,
+                    chain_records: &[ChainRecord]| {
         let mut fm = FleetMetrics {
             devices: Vec::with_capacity(n_dev),
             router_hits: fleet.hits,
             router_misses: fleet.misses,
             router_spills: fleet.spills,
+            chains: chain_records.to_vec(),
         };
         for d in 0..n_dev {
             fm.devices.push(DeviceMetrics {
@@ -319,7 +429,15 @@ fn router_loop(opts: CoordinatorOptions, rx: Receiver<Msg>, done_tx: SyncSender<
             Msg::Submit(p) => {
                 let key = DesignKey::for_shape(&p.req.shape);
                 let d = fleet.route(key, p.req.shape.ops()).device;
-                queues[d].push_back(p);
+                queues[d].push_back(Unit::Req(p));
+                pump(d, max_in_flight, &mut queues, &mut in_flight, &leader_txs);
+            }
+            Msg::SubmitChain(c) => {
+                // Chain affinity: one routing decision for the whole
+                // chain, charged with its total ops.
+                let key = DesignKey::for_shape(&c.chain.ops[0].shape);
+                let d = fleet.route_chain(key, c.chain.total_ops()).device;
+                queues[d].push_back(Unit::Chain(c));
                 pump(d, max_in_flight, &mut queues, &mut in_flight, &leader_txs);
             }
             Msg::Warm(key) => {
@@ -327,15 +445,16 @@ fn router_loop(opts: CoordinatorOptions, rx: Receiver<Msg>, done_tx: SyncSender<
                 let _ = leader_txs[d].send(DeviceMsg::Warm(key));
             }
             Msg::Flush(tx) => {
-                let _ = tx.send(assemble(&per_dev, &caches, &fleet));
+                let _ = tx.send(assemble(&per_dev, &caches, &fleet, &chain_records));
             }
-            Msg::Done { dev, records, cache, resident } => {
+            Msg::Done { dev, records, chains, cache, resident } => {
                 in_flight[dev] -= records.len();
                 caches[dev] = cache;
                 fleet.sync_residency(dev, &resident);
                 for r in records {
                     per_dev[dev].push(r);
                 }
+                chain_records.extend(chains);
                 pump(dev, max_in_flight, &mut queues, &mut in_flight, &leader_txs);
             }
             Msg::Shutdown => draining = true,
@@ -357,26 +476,90 @@ fn router_loop(opts: CoordinatorOptions, rx: Receiver<Msg>, done_tx: SyncSender<
             caches[d] = stats;
         }
     }
-    assemble(&per_dev, &caches, &fleet)
+    assemble(&per_dev, &caches, &fleet, &chain_records)
 }
 
 /// Absorb one message into the leader's batch / state.
 fn absorb(
     m: DeviceMsg,
     gen: Generation,
-    batch: &mut Vec<Box<Pending>>,
+    batch: &mut Vec<Unit>,
     cache: &mut DesignCache,
     device: &mut DeviceState,
     shutdown: &mut bool,
 ) {
     match m {
-        DeviceMsg::Run(p) => batch.push(p),
+        DeviceMsg::Run(p) => batch.push(Unit::Req(p)),
+        DeviceMsg::RunChain(c) => batch.push(Unit::Chain(c)),
         DeviceMsg::Warm(key) => {
             cache.warm(key);
             device.switch_to(gen, key);
         }
         DeviceMsg::Shutdown => *shutdown = true,
     }
+}
+
+/// Execute one chain on the leader's device: designs resolved from the
+/// leader's cache, fused edges and dispatch amortization from the same
+/// rule the offline planner uses, reconfiguration charged through the
+/// shared device state.
+fn run_chain(
+    dev: usize,
+    gen: Generation,
+    pc: PendingChain,
+    cache: &mut DesignCache,
+    device: &mut DeviceState,
+    records: &mut Vec<RequestRecord>,
+) -> (ChainRecord, Sender<ChainResponse>, ChainResponse) {
+    let PendingChain { id, chain, bd_mode, tx, t0 } = pc;
+    let cfgs: Vec<TilingConfig> =
+        chain.ops.iter().map(|o| *cache.get(DesignKey::for_shape(&o.shape))).collect();
+    let ovs = overrides_for(&cfgs, &chain);
+    let mut chain_s = 0.0;
+    let mut fused = 0;
+    let mut elided = 0;
+    let mut reports = Vec::with_capacity(chain.len());
+    for (i, op) in chain.ops.iter().enumerate() {
+        let key = DesignKey::for_shape(&op.shape);
+        let reconfig_s = device.switch_to(gen, key);
+        let sim =
+            simulate_gemm_with(&cfgs[i], op.shape.m, op.shape.k, op.shape.n, bd_mode, ovs[i]);
+        let device_s = sim.t_total + reconfig_s;
+        chain_s += device_s;
+        fused += ovs[i].a_in_l2 as usize;
+        elided += ovs[i].elide_dispatch as usize;
+        records.push(RequestRecord {
+            id,
+            name: op.shape.name.clone(),
+            device: dev,
+            device_s,
+            host_latency_s: t0.elapsed().as_secs_f64(),
+            ops: op.shape.ops(),
+            reconfigured: reconfig_s > 0.0,
+            verified: None,
+            chain: Some(id),
+        });
+        reports.push(sim);
+    }
+    let record = ChainRecord {
+        id,
+        name: chain.name.clone(),
+        device: dev,
+        ops_count: chain.len(),
+        fused_edges: fused,
+        elided_dispatches: elided,
+        device_s: chain_s,
+    };
+    let response = ChainResponse {
+        id,
+        name: chain.name,
+        device: dev,
+        device_s: chain_s,
+        fused_edges: fused,
+        elided_dispatches: elided,
+        reports,
+    };
+    (record, tx, response)
 }
 
 fn leader_loop(
@@ -395,7 +578,7 @@ fn leader_loop(
             Ok(m) => m,
             Err(_) => break,
         };
-        let mut batch: Vec<Box<Pending>> = Vec::new();
+        let mut batch: Vec<Unit> = Vec::new();
         let mut shutdown = false;
         absorb(first, gen, &mut batch, &mut cache, &mut device, &mut shutdown);
         while batch.len() < opts.batch_window.max(1) {
@@ -406,49 +589,62 @@ fn leader_loop(
         }
 
         // Size-class batching: stable-group by design key so a burst of
-        // mixed-precision traffic pays each reconfiguration once.
-        batch.sort_by_key(|p| {
-            (p.req.shape.precision, p.req.shape.b_layout == Layout::ColMajor, p.id)
-        });
+        // mixed-precision traffic pays each reconfiguration once. Chains
+        // group by their leading op and stay contiguous.
+        batch.sort_by_key(Unit::sort_key);
 
         let mut records = Vec::with_capacity(batch.len());
-        let mut responses = Vec::with_capacity(batch.len());
-        for p in batch {
-            let Pending { id, req, tx, t0 } = *p;
-            let key = DesignKey::for_shape(&req.shape);
-            let cfg = *cache.get(key);
-            let reconfig_s = device.switch_to(gen, key);
-            let sim = simulate_gemm(&cfg, req.shape.m, req.shape.k, req.shape.n, req.bd_mode);
+        let mut chain_records = Vec::new();
+        let mut responses = Vec::new();
+        let mut chain_responses = Vec::new();
+        for unit in batch {
+            match unit {
+                Unit::Chain(pc) => {
+                    let (rec, tx, resp) =
+                        run_chain(dev, gen, *pc, &mut cache, &mut device, &mut records);
+                    chain_records.push(rec);
+                    chain_responses.push((tx, resp));
+                }
+                Unit::Req(p) => {
+                    let Pending { id, req, tx, t0 } = *p;
+                    let key = DesignKey::for_shape(&req.shape);
+                    let cfg = *cache.get(key);
+                    let reconfig_s = device.switch_to(gen, key);
+                    let sim =
+                        simulate_gemm(&cfg, req.shape.m, req.shape.k, req.shape.n, req.bd_mode);
 
-            let (result, verified) = match opts.backend {
-                Backend::SimOnly => (None, None),
-                Backend::Functional => run_functional(&cfg, &req),
-            };
+                    let (result, verified) = match opts.backend {
+                        Backend::SimOnly => (None, None),
+                        Backend::Functional => run_functional(&cfg, &req),
+                    };
 
-            let device_s = sim.t_total + reconfig_s;
-            records.push(RequestRecord {
-                id,
-                name: req.shape.name.clone(),
-                device: dev,
-                device_s,
-                host_latency_s: t0.elapsed().as_secs_f64(),
-                ops: req.shape.ops(),
-                reconfigured: reconfig_s > 0.0,
-                verified,
-            });
-            responses.push((
-                tx,
-                GemmResponse {
-                    id,
-                    name: req.shape.name,
-                    device: dev,
-                    sim,
-                    device_s,
-                    reconfigured: reconfig_s > 0.0,
-                    verified,
-                    result,
-                },
-            ));
+                    let device_s = sim.t_total + reconfig_s;
+                    records.push(RequestRecord {
+                        id,
+                        name: req.shape.name.clone(),
+                        device: dev,
+                        device_s,
+                        host_latency_s: t0.elapsed().as_secs_f64(),
+                        ops: req.shape.ops(),
+                        reconfigured: reconfig_s > 0.0,
+                        verified,
+                        chain: None,
+                    });
+                    responses.push((
+                        tx,
+                        GemmResponse {
+                            id,
+                            name: req.shape.name,
+                            device: dev,
+                            sim,
+                            device_s,
+                            reconfigured: reconfig_s > 0.0,
+                            verified,
+                            result,
+                        },
+                    ));
+                }
+            }
         }
         // Acknowledge to the router before responding to clients: a
         // client holding its response can then rely on a subsequent
@@ -457,11 +653,15 @@ fn leader_loop(
             let _ = done.send(Msg::Done {
                 dev,
                 records,
+                chains: chain_records,
                 cache: cache.stats(),
                 resident: cache.resident(),
             });
         }
         for (tx, resp) in responses {
+            let _ = tx.send(resp);
+        }
+        for (tx, resp) in chain_responses {
             let _ = tx.send(resp);
         }
 
@@ -589,6 +789,92 @@ mod tests {
         let out = resp.result.unwrap();
         assert_eq!((out.rows, out.cols), (64, 64));
         c.shutdown();
+    }
+
+    #[test]
+    fn chain_lands_whole_on_one_device_with_fused_edges() {
+        // A transformer layer chain on a two-device fleet: chain affinity
+        // places every op on one leader; the L2-eligible edges fuse and
+        // the same-design ops ride one host submission.
+        let c = Coordinator::start(CoordinatorOptions::fleet(vec![
+            Generation::Xdna2,
+            Generation::Xdna2,
+        ]));
+        let chains = TransformerConfig { n_layers: 2, ..Default::default() }.chains();
+        let resp = c.call_chain(chains[0].clone()).unwrap();
+        assert_eq!(resp.reports.len(), 4);
+        assert_eq!(
+            resp.fused_edges, 1,
+            "XDNA2 int8 fuses attn_out→ffn_up; ffn_up's C won't coexist with its resident A"
+        );
+        assert_eq!(resp.elided_dispatches, 3);
+        // The fused op moved no A bytes; its producer wrote no C; the
+        // unfused ffn_down re-reads its A from DRAM.
+        assert_eq!(resp.reports[2].a_bytes, 0.0);
+        assert_eq!(resp.reports[1].c_bytes, 0.0);
+        assert!(resp.reports[3].a_bytes > 0.0);
+        let m = c.shutdown();
+        assert_eq!(m.count(), 4, "each chain op is one record");
+        assert_eq!(m.chains.len(), 1);
+        assert_eq!(m.chains[0].device, resp.device);
+        assert!((m.chains[0].device_s - resp.device_s).abs() < 1e-12);
+        assert!(m.chain_makespan_s() > 0.0);
+        let on_dev: usize = m.devices[resp.device].metrics.count();
+        assert_eq!(on_dev, 4, "whole chain on one device");
+        assert_eq!(m.router_misses, 1, "one routing decision per chain");
+        assert!(m.devices[resp.device]
+            .metrics
+            .records
+            .iter()
+            .all(|r| r.chain == Some(resp.id)));
+    }
+
+    #[test]
+    fn chains_beat_isolated_ops_end_to_end() {
+        // Same 2-layer workload through the coordinator both ways: as
+        // chains vs as independent requests — chained device time must
+        // be strictly smaller (elided dispatches + fused round-trips).
+        let cfgs = TransformerConfig { n_layers: 2, ..Default::default() };
+        let chained = {
+            let c = Coordinator::start(CoordinatorOptions::default());
+            let rxs: Vec<_> = cfgs
+                .chains()
+                .into_iter()
+                .map(|ch| c.submit_chain(ch).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap();
+            }
+            c.shutdown()
+        };
+        let isolated = {
+            let c = Coordinator::start(CoordinatorOptions::default());
+            let rxs: Vec<_> =
+                cfgs.trace().into_iter().map(|g| c.submit(GemmRequest::sim(g))).collect();
+            for rx in rxs {
+                rx.recv().unwrap();
+            }
+            c.shutdown()
+        };
+        assert_eq!(chained.count(), isolated.count());
+        let ops = isolated.total_ops();
+        assert!((chained.total_ops() - ops).abs() < 1e-9 * ops, "ops conservation");
+        assert!(
+            chained.total_device_s() < isolated.total_device_s(),
+            "chained {:.3} ms !< isolated {:.3} ms",
+            chained.total_device_s() * 1e3,
+            isolated.total_device_s() * 1e3
+        );
+        assert!(chained.chain_fused_edges() > 0);
+        assert!(isolated.chains.is_empty());
+    }
+
+    #[test]
+    fn empty_chain_is_rejected() {
+        let c = Coordinator::start(CoordinatorOptions::default());
+        assert!(c.submit_chain(crate::plan::GemmChain::new("empty")).is_err());
+        let m = c.shutdown();
+        assert_eq!(m.count(), 0);
     }
 
     #[test]

@@ -202,6 +202,29 @@ impl Executor {
         crop_matrix(&pc, m, n, p.ty_out())
     }
 
+    /// Execute a GEMM chain: `C_0 = narrow(A @ B_0)`, then each staged
+    /// C feeds the next op as its A — the functional mirror of the
+    /// planner's fused edges (`crate::plan`), where the intermediate
+    /// image never leaves the device. Multi-op chains require a
+    /// precision whose output dtype equals its input dtype (int8→int8,
+    /// bf16); every weight must match the design's B layout. Numerics
+    /// are identical to re-dispatching each op, because the drained C
+    /// image is exactly the next dispatch's A image.
+    pub fn execute_chain(&self, a: &Matrix, weights: &[Matrix]) -> Result<Matrix> {
+        ensure!(!weights.is_empty(), "empty chain");
+        let p = self.cfg.precision;
+        ensure!(
+            weights.len() == 1 || matches!(p, Precision::I8I8 | Precision::Bf16),
+            "{p} output cannot feed the next op's input (chain of {} ops)",
+            weights.len()
+        );
+        let mut c = self.execute(a, &weights[0])?;
+        for b in &weights[1..] {
+            c = self.execute(&c, b)?;
+        }
+        Ok(c)
+    }
+
     /// One core's whole reduction over pre-decoded dense tiles: MAC into
     /// the stationary accumulator, narrow, re-tile for the output path.
     fn core_compute(&self, a_tiles: &[DenseTile], b_tiles: &[DenseTile], k_tiles: usize) -> Result<Vec<u32>> {
@@ -588,6 +611,45 @@ mod tests {
             16,
             99,
         );
+    }
+
+    #[test]
+    fn chain_matches_folded_reference() {
+        // 3-op int8 chain: the staged C of each op is the next op's A —
+        // bit-exact against folding the reference GEMM the same way.
+        let cfg = tiny_cfg(Generation::Xdna2, Precision::I8I8, Layout::ColMajor);
+        let (m, dims) = (16, [32usize, 16, 24, 8]);
+        let mut a = Matrix::zeroed(m, dims[0], 1, Layout::RowMajor).unwrap();
+        refimpl::fill_random(&mut a, Precision::I8I8, 21);
+        let weights: Vec<Matrix> = (0..3)
+            .map(|i| {
+                let mut b = Matrix::zeroed(dims[i], dims[i + 1], 1, Layout::ColMajor).unwrap();
+                refimpl::fill_random(&mut b, Precision::I8I8, 100 + i as u64);
+                b
+            })
+            .collect();
+        let got = Executor::new(cfg, Fidelity::Direct).execute_chain(&a, &weights).unwrap();
+        let mut want = a.clone();
+        for b in &weights {
+            want = refimpl::ref_gemm(&want, b, Precision::I8I8).unwrap();
+        }
+        assert_eq!((got.rows, got.cols), (m, dims[3]));
+        assert!(refimpl::matrices_equal(&got, &want, Precision::I8I8));
+    }
+
+    #[test]
+    fn chain_rejects_widening_precisions_beyond_one_op() {
+        let cfg = tiny_cfg(Generation::Xdna, Precision::I8I16, Layout::ColMajor);
+        let mut a = Matrix::zeroed(8, 16, 1, Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(16, 16, 1, Layout::ColMajor).unwrap();
+        refimpl::fill_random(&mut a, Precision::I8I16, 1);
+        refimpl::fill_random(&mut b, Precision::I8I16, 2);
+        let exec = Executor::new(cfg, Fidelity::Direct);
+        // One op is fine (no chained consumption)...
+        assert!(exec.execute_chain(&a, std::slice::from_ref(&b)).is_ok());
+        // ...but an int16 C cannot feed an int8-input op.
+        assert!(exec.execute_chain(&a, &[b.clone(), b.clone()]).is_err());
+        assert!(exec.execute_chain(&a, &[]).is_err());
     }
 
     #[test]

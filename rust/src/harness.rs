@@ -328,6 +328,27 @@ pub fn serve_trace(
     Ok(coord.shutdown())
 }
 
+/// Drive a coordinator fleet over whole chains (chain affinity: each
+/// chain lands on one leader, fused edges elide DRAM round-trips) and
+/// return the final fleet metrics after a drained shutdown. Shared by
+/// `xdna-gemm plan --serve`, the `chain` example, and the fleet tests.
+pub fn serve_chains(
+    opts: crate::coordinator::CoordinatorOptions,
+    chains: &[crate::plan::GemmChain],
+) -> crate::Result<crate::coordinator::FleetMetrics> {
+    use crate::coordinator::Coordinator;
+    anyhow::ensure!(chains.iter().any(|c| !c.is_empty()), "no non-empty chains");
+    let coord = Coordinator::start(opts);
+    let mut rxs = Vec::with_capacity(chains.len());
+    for chain in chains.iter().filter(|c| !c.is_empty()) {
+        rxs.push(coord.submit_chain(chain.clone())?);
+    }
+    for rx in rxs {
+        rx.recv()?;
+    }
+    Ok(coord.shutdown())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -24,6 +24,8 @@
 //!   system-level balanced-point search (Sec. 4.5.2).
 //! * [`gemm`] — bit-accurate reference GEMM and the functional tiled
 //!   executor that moves real bytes through the simulated hierarchy.
+//! * [`plan`] — chain planner: fuse producer→consumer GEMM chains with
+//!   L2-resident reuse, amortized dispatch and design grouping.
 //! * [`runtime`] — PJRT client; loads the AOT Pallas/JAX artifacts
 //!   (`artifacts/*.hlo.txt`) and executes them from the request path.
 //! * [`coordinator`] — sharded GEMM-as-a-service: admission queue,
@@ -43,6 +45,7 @@ pub mod gemm;
 pub mod mem;
 pub mod model;
 pub mod optimizer;
+pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -16,6 +16,9 @@
 //! xdna-gemm serve --requests N [--devices D] [--mix xdna:xdna2] [--gen G]
 //!                 [--window W] [--in-flight F] [--skew | --trace FILE]
 //!                                             sharded coordinator load demo
+//! xdna-gemm plan [--gen G] [--precision P] [--seq S] [--layers L]
+//!                [--mixed] [--serve] [--devices D]
+//!                                             chain planner: fused vs isolated
 //! xdna-gemm artifacts [--dir artifacts]       list + smoke the AOT bundle
 //! ```
 
@@ -30,7 +33,7 @@ use xdna_gemm::sim::{simulate_gemm, BdMode};
 use xdna_gemm::util::cli::Args;
 use xdna_gemm::workload::TransformerConfig;
 
-const USAGE: &str = "usage: xdna-gemm <table1|table2|table3|fig6|fig7|fig8|ablations|optimize|simulate|serve|artifacts> [options]";
+const USAGE: &str = "usage: xdna-gemm <table1|table2|table3|fig6|fig7|fig8|ablations|optimize|simulate|serve|plan|artifacts> [options]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -178,6 +181,59 @@ fn main() -> Result<()> {
             };
             let m = harness::serve_trace(opts, &trace, n)?;
             println!("{}", m.summary());
+        }
+        "plan" => {
+            let gen = parse_gen(args.get("gen").unwrap_or("xdna2"))?;
+            let p = parse_precision(args.get("precision").unwrap_or("i8i8"))?;
+            let cfg = TransformerConfig {
+                precision: p,
+                seq: args.usize_opt("seq", 512)?,
+                n_layers: args.usize_opt("layers", 12)?,
+                d_model: args.usize_opt("d-model", 768)?,
+                d_ffn: args.usize_opt("d-ffn", 3072)?,
+                vocab: args.usize_opt("vocab", 50257)?,
+            };
+            // --mixed interleaves a bf16 copy of every layer chain so
+            // the isolated baseline reconfigures on each precision flip
+            // and the planner's design grouping becomes visible.
+            let chains = if args.flag("mixed") && p != Precision::Bf16 {
+                xdna_gemm::plan::mixed_transformer_chains(&cfg, Precision::Bf16)
+            } else {
+                xdna_gemm::plan::transformer_chains(&cfg)
+            };
+            let planner = xdna_gemm::plan::Planner::new(gen);
+            let fused =
+                xdna_gemm::plan::evaluate(&planner.plan(&chains), BdMode::Overlapped);
+            let isolated = xdna_gemm::plan::evaluate(
+                &planner.plan_isolated(&chains),
+                BdMode::Overlapped,
+            );
+            println!(
+                "chain plan for {gen}/{}: {} chains over seq={} d={} ffn={} x{} layers",
+                p.paper_name(),
+                chains.len(),
+                cfg.seq,
+                cfg.d_model,
+                cfg.d_ffn,
+                cfg.n_layers
+            );
+            println!("isolated: {}", isolated.summary());
+            println!("chained:  {}", fused.summary());
+            println!(
+                "savings: dispatch {:.3} ms | reconfig {:.3} ms | DRAM {:.1} MB \
+                 ({:.3} ms steady) → {:.2}x speedup",
+                (isolated.t_dispatch - fused.t_dispatch) * 1e3,
+                (isolated.t_reconfig - fused.t_reconfig) * 1e3,
+                (isolated.dram_bytes - fused.dram_bytes) / 1e6,
+                (isolated.t_steady - fused.t_steady) * 1e3,
+                fused.speedup_over(&isolated)
+            );
+            if args.flag("serve") {
+                let n_devices = args.usize_opt("devices", 2)?;
+                let opts = CoordinatorOptions::fleet(vec![gen; n_devices.max(1)]);
+                let m = harness::serve_chains(opts, &chains)?;
+                println!("\nserved through the coordinator fleet:\n{}", m.summary());
+            }
         }
         "artifacts" => {
             let dir = args.get("dir").unwrap_or("artifacts");

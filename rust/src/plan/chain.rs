@@ -1,0 +1,252 @@
+//! GEMM chains: producer→consumer edges over a workload trace.
+//!
+//! A chain is an ordered run of GEMMs where op *i+1* may consume op
+//! *i*'s C as its A (`C_{i+1} = narrow(C_i @ B_{i+1})` — the QKV →
+//! attention → MLP shape of transformer inference). The *structural*
+//! eligibility of an edge is decided here ([`feeds`]); whether the edge
+//! is actually *fused* (C kept L2-resident, DRAM round-trip elided) is
+//! the planner's call in [`super::schedule`], because it depends on the
+//! design's L2 headroom.
+
+use crate::dtype::Precision;
+use crate::workload::{GemmShape, TransformerConfig};
+
+/// Can `prev`'s output dtype be consumed as `next`'s input dtype without
+/// a host-side cast? int8 outputs feed any int8-input precision; bf16
+/// feeds bf16. int8→int16/int32 outputs are wider than any input dtype.
+pub fn out_feeds_in(prev: Precision, next: Precision) -> bool {
+    match prev {
+        Precision::I8I8 => next != Precision::Bf16,
+        Precision::Bf16 => next == Precision::Bf16,
+        Precision::I8I16 | Precision::I8I32 => false,
+    }
+}
+
+/// Structural producer→consumer eligibility: `next`'s A is exactly
+/// `prev`'s C — same M, `next.K == prev.N`, and the dtypes line up.
+/// (Elementwise ops between them — activation, layernorm — do not move
+/// the operand and are transparent to the residency model.)
+pub fn feeds(prev: &GemmShape, next: &GemmShape) -> bool {
+    prev.m == next.m && prev.n == next.k && out_feeds_in(prev.precision, next.precision)
+}
+
+/// One GEMM inside a chain.
+#[derive(Clone, Debug)]
+pub struct ChainOp {
+    pub shape: GemmShape,
+    /// This op's A is the previous op's C (a [`feeds`]-eligible edge).
+    /// Always `false` for the first op of a chain.
+    pub consumes_prev: bool,
+}
+
+/// An ordered run of GEMMs with producer→consumer edges.
+#[derive(Clone, Debug, Default)]
+pub struct GemmChain {
+    pub name: String,
+    pub ops: Vec<ChainOp>,
+}
+
+impl GemmChain {
+    pub fn new(name: &str) -> GemmChain {
+        GemmChain { name: name.to_string(), ops: Vec::new() }
+    }
+
+    /// Append an op with no edge from its predecessor (fresh A from DRAM).
+    pub fn push(&mut self, shape: GemmShape) {
+        self.ops.push(ChainOp { shape, consumes_prev: false });
+    }
+
+    /// Append an op consuming the previous op's C as its A. Returns an
+    /// error if the edge is not [`feeds`]-eligible (or there is no
+    /// previous op).
+    pub fn push_chained(&mut self, shape: GemmShape) -> anyhow::Result<()> {
+        match self.ops.last() {
+            Some(prev) if feeds(&prev.shape, &shape) => {
+                self.ops.push(ChainOp { shape, consumes_prev: true });
+                Ok(())
+            }
+            Some(prev) => anyhow::bail!(
+                "'{}' ({}x{}x{} {}) cannot consume '{}' ({}x{}x{} {})",
+                shape.name,
+                shape.m,
+                shape.k,
+                shape.n,
+                shape.precision,
+                prev.shape.name,
+                prev.shape.m,
+                prev.shape.k,
+                prev.shape.n,
+                prev.shape.precision
+            ),
+            None => anyhow::bail!("'{}' has no predecessor to consume", shape.name),
+        }
+    }
+
+    /// Build a chain from a shape sequence, auto-detecting every
+    /// [`feeds`]-eligible edge (the `Vec<GemmShape>`-with-edges entry
+    /// point: GGML-style traces come in as flat shape lists).
+    pub fn detect(name: &str, shapes: &[GemmShape]) -> GemmChain {
+        let mut chain = GemmChain::new(name);
+        for shape in shapes {
+            let edge = chain.ops.last().is_some_and(|prev| feeds(&prev.shape, shape));
+            chain.ops.push(ChainOp { shape: shape.clone(), consumes_prev: edge });
+        }
+        chain
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Total multiply-accumulate operations across the chain.
+    pub fn total_ops(&self) -> f64 {
+        self.ops.iter().map(|o| o.shape.ops()).sum()
+    }
+
+    /// Structurally eligible edges (an upper bound on what the planner
+    /// can fuse).
+    pub fn edges(&self) -> usize {
+        self.ops.iter().filter(|o| o.consumes_prev).count()
+    }
+}
+
+/// The transformer prefill trace as chains: one chain per decoder layer
+/// (`qkv → attn_out → ffn_up → ffn_down`) plus the lm_head. Within a
+/// layer, `attn_out → ffn_up` and `ffn_up → ffn_down` are
+/// producer→consumer edges; `qkv → attn_out` is not (the attention
+/// block computes between them), but the ops still share one design, so
+/// the chain amortizes their dispatches.
+pub fn transformer_chains(cfg: &TransformerConfig) -> Vec<GemmChain> {
+    let trace = cfg.trace();
+    let mut out = Vec::with_capacity(cfg.n_layers + 1);
+    for layer in 0..cfg.n_layers {
+        let chain = GemmChain::detect(&format!("layer{layer}"), &trace[4 * layer..4 * layer + 4]);
+        out.push(chain);
+    }
+    out.push(GemmChain::detect("lm_head", &trace[4 * cfg.n_layers..]));
+    out
+}
+
+/// The mixed-design chain workload used by `plan --mixed`, the `chain`
+/// example and the `chain_vs_isolated` bench: `cfg`'s chains interleaved
+/// layer by layer with a copy of the transformer at `other` precision,
+/// so an isolated in-order schedule reconfigures on every flip while the
+/// planner's design grouping pays each design once. One definition so
+/// CLI, example and bench measure the same workload.
+pub fn mixed_transformer_chains(
+    cfg: &TransformerConfig,
+    other: Precision,
+) -> Vec<GemmChain> {
+    let alt = TransformerConfig { precision: other, ..*cfg };
+    let mut out = Vec::new();
+    for (mut a, mut b) in transformer_chains(cfg).into_iter().zip(transformer_chains(&alt)) {
+        a.name = format!("{}.{}", a.name, cfg.precision);
+        b.name = format!("{}.{other}", b.name);
+        out.push(a);
+        out.push(b);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::Layout;
+
+    #[test]
+    fn feeds_requires_matching_geometry_and_dtype() {
+        let a = GemmShape::new("a", 64, 128, 256, Precision::I8I8);
+        let good = GemmShape::new("b", 64, 256, 128, Precision::I8I8);
+        assert!(feeds(&a, &good));
+        // M mismatch.
+        assert!(!feeds(&a, &GemmShape::new("b", 32, 256, 128, Precision::I8I8)));
+        // K != prev N.
+        assert!(!feeds(&a, &GemmShape::new("b", 64, 128, 128, Precision::I8I8)));
+        // int8 C feeds wider-accumulating int8-input ops too.
+        assert!(feeds(&a, &GemmShape::new("b", 64, 256, 128, Precision::I8I16)));
+        // ...but a bf16 consumer cannot eat int8 bytes.
+        assert!(!feeds(&a, &GemmShape::new("b", 64, 256, 128, Precision::Bf16)));
+        // Wide int outputs feed nothing.
+        let wide = GemmShape::new("w", 64, 128, 256, Precision::I8I16);
+        assert!(!feeds(&wide, &good));
+        // bf16 chains to bf16.
+        let bf = GemmShape::new("f", 64, 128, 256, Precision::Bf16);
+        assert!(feeds(&bf, &GemmShape::new("g", 64, 256, 64, Precision::Bf16)));
+    }
+
+    #[test]
+    fn push_chained_validates_edges() {
+        let mut c = GemmChain::new("t");
+        assert!(c
+            .push_chained(GemmShape::new("first", 8, 8, 8, Precision::I8I8))
+            .is_err());
+        c.push(GemmShape::new("first", 8, 8, 8, Precision::I8I8));
+        assert!(c.push_chained(GemmShape::new("ok", 8, 8, 8, Precision::I8I8)).is_ok());
+        assert!(c
+            .push_chained(GemmShape::new("bad", 16, 8, 8, Precision::I8I8))
+            .is_err());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.edges(), 1);
+    }
+
+    #[test]
+    fn transformer_layer_edges_match_the_dataflow() {
+        let cfg = TransformerConfig { n_layers: 2, ..Default::default() };
+        let chains = transformer_chains(&cfg);
+        assert_eq!(chains.len(), 3, "2 layer chains + lm_head");
+        for chain in &chains[..2] {
+            assert_eq!(chain.len(), 4);
+            let edges: Vec<bool> = chain.ops.iter().map(|o| o.consumes_prev).collect();
+            // qkv (no pred) | attn_out (attention in between: 3d != d) |
+            // ffn_up ← attn_out | ffn_down ← ffn_up.
+            assert_eq!(edges, vec![false, false, true, true]);
+        }
+        assert_eq!(chains[2].len(), 1);
+        assert_eq!(chains[2].edges(), 0);
+        let total: f64 = chains.iter().map(|c| c.total_ops()).sum();
+        let trace_total: f64 = cfg.trace().iter().map(|g| g.ops()).sum();
+        assert!((total - trace_total).abs() < 1e-6 * trace_total);
+    }
+
+    #[test]
+    fn mixed_workload_interleaves_designs() {
+        let cfg = TransformerConfig { n_layers: 2, ..Default::default() };
+        let mixed = mixed_transformer_chains(&cfg, Precision::Bf16);
+        assert_eq!(mixed.len(), 6, "(2 layers + lm_head) × 2 designs");
+        let precs: Vec<Precision> =
+            mixed.iter().map(|c| c.ops[0].shape.precision).collect();
+        assert_eq!(
+            precs,
+            vec![
+                Precision::I8I8,
+                Precision::Bf16,
+                Precision::I8I8,
+                Precision::Bf16,
+                Precision::I8I8,
+                Precision::Bf16,
+            ]
+        );
+        // Names disambiguate the two copies.
+        assert_ne!(mixed[0].name, mixed[1].name);
+    }
+
+    #[test]
+    fn detect_respects_layout_and_precision_runs() {
+        // A mixed trace: edges only where geometry + dtype line up.
+        let mut shapes = vec![
+            GemmShape::new("a", 64, 128, 128, Precision::I8I8),
+            GemmShape::new("b", 64, 128, 128, Precision::I8I8),
+            GemmShape::new("c", 64, 128, 128, Precision::Bf16),
+        ];
+        shapes[1].b_layout = Layout::RowMajor; // layout doesn't break the edge
+        let c = GemmChain::detect("mix", &shapes);
+        assert_eq!(
+            c.ops.iter().map(|o| o.consumes_prev).collect::<Vec<_>>(),
+            vec![false, true, false]
+        );
+    }
+}

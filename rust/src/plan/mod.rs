@@ -1,0 +1,35 @@
+//! Chain planner: schedule whole GEMM *chains* instead of independent
+//! dispatches (DESIGN.md §8, docs/workloads.md).
+//!
+//! The paper's end-to-end numbers are isolated GEMM dispatches, but the
+//! DL workloads that motivate them are chains — QKV → attention → MLP —
+//! where op *i+1* consumes op *i*'s C and reconfiguration/dispatch
+//! overhead dominates small-M inference shapes. This module compiles a
+//! [`crate::workload::TransformerConfig`] (or any shape list with
+//! producer→consumer edges) into chains, plans a dispatch schedule, and
+//! accounts the three chain-level savings: fused edges (C kept
+//! L2-resident, the DRAM round-trip elided), dispatch amortization
+//! (same-design ops ride one host submission), and design grouping
+//! (each array reconfiguration paid once per design, not per
+//! interleaving).
+//!
+//! * [`chain`]    — chains, producer→consumer edge eligibility, and the
+//!   transformer-layer chain builder.
+//! * [`schedule`] — the planner, the L2-headroom fusion rule, and the
+//!   phase-accounted fused-vs-isolated evaluation.
+//!
+//! The coordinator consumes the same fusion rule for whole-chain
+//! routing (`Coordinator::submit_chain`): a chain lands on one device's
+//! leader, its design stays cache-hot, and the leader applies
+//! [`schedule::overrides_for`] against its own design cache.
+
+pub mod chain;
+pub mod schedule;
+
+pub use chain::{
+    feeds, mixed_transformer_chains, out_feeds_in, transformer_chains, ChainOp, GemmChain,
+};
+pub use schedule::{
+    evaluate, l2_headroom, overrides_for, resident_c_bytes, ChainPlan, PlanReport,
+    PlannedDispatch, Planner,
+};

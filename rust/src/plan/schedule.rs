@@ -1,0 +1,414 @@
+//! The chain planner: compile chains into a dispatch schedule and
+//! account it phase by phase.
+//!
+//! Three chain-level savings over isolated dispatches (docs/workloads.md):
+//!
+//! 1. **Fused edges** — when op *i+1* consumes op *i*'s C and the padded
+//!    C fits in the design's L2 headroom, the C never round-trips DRAM:
+//!    the producer's Eq. 8 write and the consumer's Eq. 6 read (plus A's
+//!    prologue share) are elided.
+//! 2. **Dispatch amortization** — consecutive same-design ops of a chain
+//!    ride one host submission; only the first pays the 0.5 / 0.1 ms
+//!    dispatch overhead.
+//! 3. **Design grouping** — whole chains are scheduled grouped by design
+//!    key (the leader-batch sort applied at plan level), so a workload of
+//!    mixed precisions pays each 3.4 / 4.9 ms array reconfiguration once
+//!    instead of on every interleaving.
+
+use crate::arch::{balanced_config, Generation};
+use crate::coordinator::router::{DesignKey, DeviceState};
+use crate::dtype::Layout;
+use crate::sim::{simulate_gemm_with, BdMode, DispatchOverrides};
+use crate::tiling::TilingConfig;
+use crate::workload::GemmShape;
+
+use super::chain::GemmChain;
+
+/// One scheduled GEMM dispatch.
+#[derive(Clone, Debug)]
+pub struct PlannedDispatch {
+    pub shape: GemmShape,
+    pub cfg: TilingConfig,
+    /// Index into [`ChainPlan::chain_names`].
+    pub chain: usize,
+    pub overrides: DispatchOverrides,
+}
+
+/// A compiled dispatch schedule over one device generation.
+#[derive(Clone, Debug)]
+pub struct ChainPlan {
+    pub gen: Generation,
+    pub dispatches: Vec<PlannedDispatch>,
+    /// Chain names in *schedule* order (grouped plans reorder chains).
+    pub chain_names: Vec<String>,
+}
+
+impl ChainPlan {
+    pub fn fused_edges(&self) -> usize {
+        self.dispatches.iter().filter(|d| d.overrides.a_in_l2).count()
+    }
+
+    pub fn elided_dispatches(&self) -> usize {
+        self.dispatches.iter().filter(|d| d.overrides.elide_dispatch).count()
+    }
+}
+
+/// Bytes of the producer's padded C under `cfg`, and whether that fits
+/// the design's free L2 (capacity minus the staged A/B/C working set) —
+/// the fusion-eligibility rule.
+pub fn resident_c_bytes(cfg: &TilingConfig, producer: &GemmShape) -> usize {
+    let (pm, _, pn) = cfg.padded(producer.m, producer.k, producer.n);
+    pm * pn * cfg.precision.ty_out()
+}
+
+/// L2 bytes left once the design's double-buffered A/B tiles and C
+/// aggregation are staged.
+pub fn l2_headroom(cfg: &TilingConfig) -> usize {
+    let (used, cap) = cfg.l2_usage();
+    cap.saturating_sub(used)
+}
+
+/// Per-op execution overrides for one chain, given each op's resolved
+/// design. Shared by [`Planner::plan`] and the coordinator's leaders
+/// (which resolve designs from their own caches): an edge fuses when it
+/// is structurally eligible, both ops run the *same* design (a
+/// reconfiguration would tear down the resident L2 image), and the
+/// resident images fit the design's L2 headroom in *every* execution
+/// window they span. Concretely, while op *i−1* runs, its kept-resident
+/// C (this edge) coexists with its own resident A (the previous edge,
+/// if that fused — the A is re-read for every N-column block, so it
+/// cannot be freed early); the greedy in-order decision therefore
+/// charges the previous fused edge's bytes against the headroom.
+pub fn overrides_for(cfgs: &[TilingConfig], chain: &GemmChain) -> Vec<DispatchOverrides> {
+    assert_eq!(cfgs.len(), chain.ops.len());
+    let mut ovs = vec![DispatchOverrides::default(); chain.ops.len()];
+    // Bytes op i-1 already holds resident as its own A (0 when its
+    // inbound edge didn't fuse).
+    let mut held_a_bytes = 0usize;
+    for i in 0..chain.ops.len() {
+        let same_design = i > 0
+            && DesignKey::for_shape(&chain.ops[i].shape)
+                == DesignKey::for_shape(&chain.ops[i - 1].shape);
+        if same_design {
+            ovs[i].elide_dispatch = true;
+        }
+        let mut fused_in = 0usize;
+        if same_design && chain.ops[i].consumes_prev {
+            let producer = &chain.ops[i - 1].shape;
+            let c_bytes = resident_c_bytes(&cfgs[i], producer);
+            if c_bytes + held_a_bytes <= l2_headroom(&cfgs[i]) {
+                ovs[i].a_in_l2 = true;
+                ovs[i - 1].c_stays_in_l2 = true;
+                fused_in = c_bytes;
+            }
+        }
+        held_a_bytes = fused_in;
+    }
+    ovs
+}
+
+/// Compiles chains into dispatch schedules for one device generation,
+/// resolving each op's design from the paper's balanced configurations.
+#[derive(Clone, Copy, Debug)]
+pub struct Planner {
+    pub gen: Generation,
+}
+
+impl Planner {
+    pub fn new(gen: Generation) -> Planner {
+        Planner { gen }
+    }
+
+    fn cfg_for(&self, shape: &GemmShape) -> TilingConfig {
+        balanced_config(self.gen, shape.precision).with_b_layout(shape.b_layout)
+    }
+
+    /// The chain-aware schedule: chains grouped by their leading design
+    /// key (stable — submission order kept within a group), edges fused
+    /// where the L2 headroom allows, same-design dispatches amortized.
+    pub fn plan(&self, chains: &[GemmChain]) -> ChainPlan {
+        let mut order: Vec<usize> = (0..chains.len()).filter(|&i| !chains[i].is_empty()).collect();
+        order.sort_by_key(|&i| {
+            let s = &chains[i].ops[0].shape;
+            (s.precision, s.b_layout == Layout::ColMajor)
+        });
+        self.emit(chains, &order, true)
+    }
+
+    /// The baseline every savings claim is measured against: chains in
+    /// submission order, every op an isolated dispatch (full DRAM
+    /// round-trips, a host dispatch each, reconfiguration on every
+    /// design switch the interleaving produces).
+    pub fn plan_isolated(&self, chains: &[GemmChain]) -> ChainPlan {
+        let order: Vec<usize> = (0..chains.len()).filter(|&i| !chains[i].is_empty()).collect();
+        self.emit(chains, &order, false)
+    }
+
+    fn emit(&self, chains: &[GemmChain], order: &[usize], fuse: bool) -> ChainPlan {
+        let mut plan = ChainPlan { gen: self.gen, dispatches: Vec::new(), chain_names: Vec::new() };
+        for &ci in order {
+            let chain = &chains[ci];
+            let cfgs: Vec<TilingConfig> =
+                chain.ops.iter().map(|o| self.cfg_for(&o.shape)).collect();
+            let ovs = if fuse {
+                overrides_for(&cfgs, chain)
+            } else {
+                vec![DispatchOverrides::default(); chain.ops.len()]
+            };
+            let slot = plan.chain_names.len();
+            plan.chain_names.push(chain.name.clone());
+            for ((op, cfg), overrides) in chain.ops.iter().zip(cfgs).zip(ovs) {
+                plan.dispatches.push(PlannedDispatch {
+                    shape: op.shape.clone(),
+                    cfg,
+                    chain: slot,
+                    overrides,
+                });
+            }
+        }
+        plan
+    }
+}
+
+/// Phase-accounted evaluation of a schedule on one device.
+#[derive(Clone, Debug, Default)]
+pub struct PlanReport {
+    pub dispatches: usize,
+    pub chains: usize,
+    pub fused_edges: usize,
+    pub elided_dispatches: usize,
+    pub reconfigurations: usize,
+    /// Requested (unpadded) multiply-accumulate operations.
+    pub ops: f64,
+    /// DRAM bytes actually moved (fused edges move none for A/C).
+    pub dram_bytes: f64,
+    /// Σ per-dispatch `max(T_comp, T_mem)` — the double-buffered steady
+    /// states.
+    pub t_steady: f64,
+    pub t_prologue: f64,
+    pub t_stall: f64,
+    pub t_dispatch: f64,
+    pub t_reconfig: f64,
+    /// Per-chain makespan (schedule order, incl. the reconfigurations
+    /// its dispatches triggered) — mirrors `FleetMetrics` chain records.
+    pub per_chain_s: Vec<f64>,
+}
+
+impl PlanReport {
+    pub fn t_total(&self) -> f64 {
+        self.t_steady + self.t_prologue + self.t_stall + self.t_dispatch + self.t_reconfig
+    }
+
+    pub fn tops(&self) -> f64 {
+        let t = self.t_total();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.ops / t / 1e12
+        }
+    }
+
+    pub fn speedup_over(&self, baseline: &PlanReport) -> f64 {
+        baseline.t_total() / self.t_total()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} dispatches in {} chains | {:.3} ms total = steady {:.3} + prologue {:.3} + \
+             stall {:.3} + dispatch {:.3} + reconfig {:.3} | {:.1} MB DRAM | {:.2} TOPS | \
+             {} fused edges, {} elided dispatches, {} reconfigurations",
+            self.dispatches,
+            self.chains,
+            self.t_total() * 1e3,
+            self.t_steady * 1e3,
+            self.t_prologue * 1e3,
+            self.t_stall * 1e3,
+            self.t_dispatch * 1e3,
+            self.t_reconfig * 1e3,
+            self.dram_bytes / 1e6,
+            self.tops(),
+            self.fused_edges,
+            self.elided_dispatches,
+            self.reconfigurations
+        )
+    }
+}
+
+/// Execute a schedule on the simulator: dispatches in order on one
+/// device, reconfiguration charged on every design switch the order
+/// produces (the chain-aware accounting of DESIGN.md §8).
+pub fn evaluate(plan: &ChainPlan, mode: BdMode) -> PlanReport {
+    let mut rep = PlanReport {
+        dispatches: plan.dispatches.len(),
+        chains: plan.chain_names.len(),
+        fused_edges: plan.fused_edges(),
+        elided_dispatches: plan.elided_dispatches(),
+        per_chain_s: vec![0.0; plan.chain_names.len()],
+        ..Default::default()
+    };
+    let mut device = DeviceState::default();
+    for d in &plan.dispatches {
+        let key = DesignKey::for_shape(&d.shape);
+        let reconfig_s = device.switch_to(plan.gen, key);
+        let r =
+            simulate_gemm_with(&d.cfg, d.shape.m, d.shape.k, d.shape.n, mode, d.overrides);
+        rep.ops += 2.0 * (d.shape.m * d.shape.k * d.shape.n) as f64;
+        rep.dram_bytes += r.a_bytes + r.b_bytes + r.c_bytes;
+        rep.t_steady += r.t_comp.max(r.t_mem);
+        rep.t_prologue += r.t_prologue;
+        rep.t_stall += r.t_stall;
+        rep.t_dispatch += r.t_dispatch;
+        rep.t_reconfig += reconfig_s;
+        rep.per_chain_s[d.chain] += r.t_total + reconfig_s;
+    }
+    rep.reconfigurations = device.reconfigurations;
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::Precision;
+    use crate::plan::chain::transformer_chains;
+    use crate::workload::TransformerConfig;
+
+    fn layer_chain(p: Precision) -> GemmChain {
+        let cfg = TransformerConfig { n_layers: 1, precision: p, ..Default::default() };
+        transformer_chains(&cfg).into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn fusion_eligibility_tracks_l2_headroom_per_generation() {
+        // Default transformer (seq 512, d 768, ffn 3072). Padded-C bytes
+        // vs the balanced designs' L2 headroom give per-generation fused
+        // counts (hand-checked against tiling::l2_usage):
+        //   XDNA  int8: attn_out→ffn_up fits (802 816 B ≤ ~1.09 MB free),
+        //               ffn_up→ffn_down does not (2 809 856 B) → 1 edge;
+        //   XDNA2 int8: attn_out→ffn_up fits (663 552 ≤ ~2.04 MB);
+        //               ffn_up→ffn_down does NOT — ffn_up's C
+        //               (1 990 656 B) would have to coexist with its
+        //               resident A (663 552 B) and 2 654 208 B exceeds
+        //               the headroom → 1 edge;
+        //   XDNA  bf16: nothing fits (1 179 648 B > ~1.11 MB) → 0;
+        //   XDNA2 bf16: attn_out→ffn_up only → 1.
+        for (gen, p, want) in [
+            (Generation::Xdna, Precision::I8I8, 1),
+            (Generation::Xdna2, Precision::I8I8, 1),
+            (Generation::Xdna, Precision::Bf16, 0),
+            (Generation::Xdna2, Precision::Bf16, 1),
+        ] {
+            let chain = layer_chain(p);
+            let plan = Planner::new(gen).plan(std::slice::from_ref(&chain));
+            assert_eq!(plan.fused_edges(), want, "{gen}/{p}");
+            // All four layer ops share one design: three dispatches ride
+            // the first op's host submission.
+            assert_eq!(plan.elided_dispatches(), 3, "{gen}/{p}");
+        }
+    }
+
+    #[test]
+    fn back_to_back_edges_fuse_only_when_residents_coexist_in_l2() {
+        // Three chained 512x768x768 ops on XDNA2 int8: every padded C is
+        // 663 552 B, so edge 2's window (op 1's resident A + its resident
+        // C = 1 327 104 B) fits the ~2.04 MB headroom — both edges fuse.
+        let mut small = GemmChain::new("small");
+        small.push(GemmShape::new("a", 512, 768, 768, Precision::I8I8));
+        for name in ["b", "c"] {
+            small.push_chained(GemmShape::new(name, 512, 768, 768, Precision::I8I8)).unwrap();
+        }
+        let planner = Planner::new(Generation::Xdna2);
+        assert_eq!(planner.plan(std::slice::from_ref(&small)).fused_edges(), 2);
+
+        // The transformer layer's ffn_up edge is the counter-case: its C
+        // alone fits, but not next to its resident A (see the headroom
+        // test above) — so only the first MLP edge fuses, and the fused
+        // op is ffn_up (dispatch index 2), not ffn_down.
+        let chain = layer_chain(Precision::I8I8);
+        let plan = planner.plan(std::slice::from_ref(&chain));
+        let flags: Vec<(bool, bool)> = plan
+            .dispatches
+            .iter()
+            .map(|d| (d.overrides.a_in_l2, d.overrides.c_stays_in_l2))
+            .collect();
+        assert_eq!(
+            flags,
+            vec![(false, false), (false, true), (true, false), (false, false)],
+            "attn_out keeps C resident; ffn_up consumes it; ffn_down re-reads DRAM"
+        );
+    }
+
+    #[test]
+    fn chained_beats_isolated_on_both_generations() {
+        let cfg = TransformerConfig { n_layers: 4, ..Default::default() };
+        let chains = transformer_chains(&cfg);
+        for gen in Generation::ALL {
+            let planner = Planner::new(gen);
+            let fused = evaluate(&planner.plan(&chains), BdMode::Overlapped);
+            let isolated = evaluate(&planner.plan_isolated(&chains), BdMode::Overlapped);
+            assert_eq!(fused.ops, isolated.ops);
+            assert!(
+                fused.t_total() < isolated.t_total(),
+                "{gen}: fused {:.3} ms !< isolated {:.3} ms",
+                fused.t_total() * 1e3,
+                isolated.t_total() * 1e3
+            );
+            // The elisions show up phase by phase: fewer dispatch
+            // seconds, no more DRAM bytes than the baseline, identical
+            // compute-side steady work or less (fused reads shrink T_mem).
+            assert!(fused.t_dispatch < isolated.t_dispatch);
+            assert!(fused.dram_bytes <= isolated.dram_bytes);
+            assert!(fused.t_steady <= isolated.t_steady + 1e-12);
+            assert_eq!(fused.elided_dispatches, 4 * 3);
+        }
+    }
+
+    #[test]
+    fn grouping_pays_each_design_once() {
+        // Interleaved int8 / bf16 layers: the isolated in-order schedule
+        // reconfigures on every precision flip; the grouped plan pays
+        // each design exactly once.
+        let mut chains = Vec::new();
+        for i in 0..3 {
+            let mut c8 = layer_chain(Precision::I8I8);
+            c8.name = format!("i8.{i}");
+            let mut cb = layer_chain(Precision::Bf16);
+            cb.name = format!("bf.{i}");
+            chains.push(c8);
+            chains.push(cb);
+        }
+        let planner = Planner::new(Generation::Xdna2);
+        let grouped = evaluate(&planner.plan(&chains), BdMode::Overlapped);
+        let isolated = evaluate(&planner.plan_isolated(&chains), BdMode::Overlapped);
+        assert_eq!(grouped.reconfigurations, 2);
+        assert_eq!(isolated.reconfigurations, 6);
+        assert!(grouped.t_reconfig < isolated.t_reconfig);
+        // Chain identity survives the reorder: same chains, new order.
+        let grouped_plan = planner.plan(&chains);
+        let mut names = grouped_plan.chain_names.clone();
+        names.sort();
+        assert_eq!(names, {
+            let mut v: Vec<String> = chains.iter().map(|c| c.name.clone()).collect();
+            v.sort();
+            v
+        });
+        // Per-chain makespans cover the whole schedule.
+        let sum: f64 = grouped.per_chain_s.iter().sum();
+        assert!((sum - grouped.t_total()).abs() < 1e-9 * grouped.t_total().max(1.0));
+    }
+
+    #[test]
+    fn mid_chain_design_switch_breaks_fusion_and_amortization() {
+        // int8 op feeding an int8→int16 op: structurally a valid edge,
+        // but the designs differ, so nothing is elided.
+        let mut chain = GemmChain::new("switch");
+        chain.push(GemmShape::new("a", 512, 768, 768, Precision::I8I8));
+        chain
+            .push_chained(GemmShape::new("b", 512, 768, 768, Precision::I8I16))
+            .unwrap();
+        let plan = Planner::new(Generation::Xdna2).plan(std::slice::from_ref(&chain));
+        assert_eq!(plan.fused_edges(), 0);
+        assert_eq!(plan.elided_dispatches(), 0);
+        let rep = evaluate(&plan, BdMode::Overlapped);
+        assert_eq!(rep.reconfigurations, 2);
+    }
+}

@@ -19,4 +19,4 @@ pub mod dram;
 pub mod engine;
 pub mod trace;
 
-pub use engine::{simulate_gemm, BdMode, GemmReport};
+pub use engine::{simulate_gemm, simulate_gemm_with, BdMode, DispatchOverrides, GemmReport};

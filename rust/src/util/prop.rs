@@ -6,14 +6,32 @@
 
 use super::rng::Rng;
 
+/// Serializes the panic-hook swap across concurrently running property
+/// tests: the hook is process-global, so without this two interleaved
+/// `prop_check`s could each save the other's silent hook as "previous"
+/// and leave it permanently installed.
+static HOOK_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// Run `f` with `cases` independently-seeded RNGs; panic with the
 /// offending seed on the first failure.
+///
+/// The default panic hook is suppressed while the probes run (and
+/// restored before this function returns or re-panics), so a failing
+/// property reports only the seed line instead of one full backtrace
+/// per probed failure. Property tests serialize on [`HOOK_LOCK`] for
+/// the duration of the probes; a concurrently panicking *non*-property
+/// test still loses its backtrace during that window — the price of a
+/// process-global hook.
 pub fn prop_check(name: &str, cases: u64, mut f: impl FnMut(&mut Rng)) {
     // Base seed overridable for reproduction: PROP_SEED=1234.
     let base = std::env::var("PROP_SEED")
         .ok()
         .and_then(|v| v.parse::<u64>().ok())
         .unwrap_or(0xC0FFEE);
+    let guard = HOOK_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut failure: Option<(u64, u64, String)> = None;
     for case in 0..cases {
         let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
         let mut rng = Rng::seeded(seed);
@@ -24,11 +42,20 @@ pub fn prop_check(name: &str, cases: u64, mut f: impl FnMut(&mut Rng)) {
                 .cloned()
                 .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
-            panic!(
-                "property '{name}' failed on case {case} (reproduce with \
-                 PROP_SEED={base} — failing seed {seed}): {msg}"
-            );
+            failure = Some((case, seed, msg));
+            break;
         }
+    }
+    // Restore the previous hook (and only then release the lock) before
+    // re-panicking, so the property's own failure — and any later
+    // unrelated panic — reports normally.
+    std::panic::set_hook(prev_hook);
+    drop(guard);
+    if let Some((case, seed, msg)) = failure {
+        panic!(
+            "property '{name}' failed on case {case} (reproduce with \
+             PROP_SEED={base} — failing seed {seed}): {msg}"
+        );
     }
 }
 
@@ -49,5 +76,19 @@ mod tests {
     #[should_panic(expected = "property 'always fails'")]
     fn reports_failures() {
         prop_check("always fails", 5, |_| panic!("nope"));
+    }
+
+    #[test]
+    fn failure_message_carries_the_reproduction_seed() {
+        // The suppressed-hook path must still surface the seed line —
+        // the only output a failing property is supposed to produce.
+        let err = std::panic::catch_unwind(|| {
+            prop_check("seeded", 2, |_| panic!("boom"));
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("property 'seeded' failed on case 0"), "{msg}");
+        assert!(msg.contains("PROP_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
     }
 }

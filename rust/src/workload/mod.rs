@@ -83,6 +83,13 @@ impl TransformerConfig {
         out
     }
 
+    /// The prefill trace as producer→consumer chains (one per decoder
+    /// layer plus the lm_head) — the chain planner's input
+    /// (`crate::plan`).
+    pub fn chains(&self) -> Vec<crate::plan::GemmChain> {
+        crate::plan::transformer_chains(self)
+    }
+
     /// Distinct (m, k, n) shapes in the trace — what the design cache
     /// actually has to handle (Sec. 5.3.1).
     pub fn distinct_shapes(&self) -> Vec<(usize, usize, usize)> {

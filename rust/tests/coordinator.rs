@@ -151,6 +151,98 @@ fn shutdown_drains_queued_requests() {
 }
 
 #[test]
+fn fleet_conserves_ops_and_tops_identities() {
+    // Conservation (ISSUE 2): after a fleet run, the per-device op
+    // counts and MACs must sum exactly to the submitted trace's totals
+    // (nothing lost in spill/drain paths), and the reported fleet TOPS
+    // must be consistent with the per-device sustained TOPS.
+    let trace = skewed_trace(96, 42);
+    let n = 192;
+    let m = harness::serve_trace(
+        CoordinatorOptions::fleet(vec![
+            Generation::Xdna2,
+            Generation::Xdna,
+            Generation::Xdna2,
+        ]),
+        &trace,
+        n,
+    )
+    .unwrap();
+
+    // Request-count conservation, totals and per-device.
+    assert_eq!(m.count(), n);
+    let per_dev_count: usize = m.devices.iter().map(|d| d.metrics.count()).sum();
+    assert_eq!(per_dev_count, n);
+
+    // MAC conservation: Σ per-device ops == Σ trace ops (the trace is
+    // cycled to n requests). Compare with a relative epsilon only for
+    // f64 summation order.
+    let submitted: f64 = (0..n).map(|i| trace[i % trace.len()].ops()).sum();
+    let per_dev_ops: f64 = m.devices.iter().map(|d| d.metrics.total_ops()).sum();
+    assert!(
+        (per_dev_ops - submitted).abs() <= 1e-9 * submitted,
+        "ops lost: served {per_dev_ops} vs submitted {submitted}"
+    );
+    assert!((m.total_ops() - per_dev_ops).abs() <= 1e-9 * submitted);
+
+    // TOPS consistency identities: sustained TOPS recovers the summed
+    // busy time; fleet TOPS recovers the makespan; and the fleet can
+    // neither beat the sum of its devices' sustained rates nor the
+    // busiest device define a throughput above it.
+    let busy: f64 = m.devices.iter().map(|d| d.metrics.total_device_s()).sum();
+    assert!((m.device_tops() * busy * 1e12 - per_dev_ops).abs() <= 1e-6 * per_dev_ops);
+    let makespan = m
+        .devices
+        .iter()
+        .map(|d| d.metrics.total_device_s())
+        .fold(0.0, f64::max);
+    assert!((m.makespan_s() - makespan).abs() <= 1e-15);
+    assert!((m.fleet_tops() * makespan * 1e12 - per_dev_ops).abs() <= 1e-6 * per_dev_ops);
+    assert!(m.fleet_tops() >= m.device_tops() - 1e-12, "makespan ≤ busy time");
+    let sum_of_rates: f64 = m.devices.iter().map(|d| d.metrics.device_tops()).sum();
+    assert!(m.fleet_tops() <= sum_of_rates + 1e-9, "fleet cannot beat its devices");
+
+    // Every record belongs to a real device and carries positive time.
+    for d in &m.devices {
+        for r in &d.metrics.records {
+            assert!(r.device < m.n_devices());
+            assert!(r.device_s > 0.0 && r.ops > 0.0);
+        }
+    }
+}
+
+#[test]
+fn chained_fleet_conserves_ops_too() {
+    // The same conservation holds when work arrives as whole chains:
+    // every chain op is recorded once, on the chain's device.
+    use xdna_gemm::workload::TransformerConfig;
+    let cfg = TransformerConfig { n_layers: 3, ..Default::default() };
+    let chains = cfg.chains();
+    let m = harness::serve_chains(
+        CoordinatorOptions::fleet(vec![Generation::Xdna2, Generation::Xdna2]),
+        &chains,
+    )
+    .unwrap();
+    let submitted: f64 = cfg.trace().iter().map(|g| g.ops()).sum();
+    assert_eq!(m.count(), cfg.trace().len());
+    assert!((m.total_ops() - submitted).abs() <= 1e-9 * submitted);
+    assert_eq!(m.chains.len(), chains.len());
+    let chain_ops: usize = m.chains.iter().map(|c| c.ops_count).sum();
+    assert_eq!(chain_ops, cfg.trace().len());
+    // Chain makespans are consistent with their device records.
+    for c in &m.chains {
+        let dev_chain_s: f64 = m.devices[c.device]
+            .metrics
+            .records
+            .iter()
+            .filter(|r| r.chain == Some(c.id))
+            .map(|r| r.device_s)
+            .sum();
+        assert!((dev_chain_s - c.device_s).abs() <= 1e-12 + 1e-9 * c.device_s);
+    }
+}
+
+#[test]
 fn metrics_snapshot_while_serving() {
     let c = Coordinator::start(CoordinatorOptions::default());
     for i in 0..8 {

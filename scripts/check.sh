@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Pre-PR gate (documented in README.md): release build, tests, and a
-# rustdoc pass with warnings denied so the doc layer cannot rot.
+# Pre-PR gate (documented in README.md, run by .github/workflows/ci.yml):
+# release build, tests, a rustdoc pass with warnings denied so the doc
+# layer cannot rot, and the python suite when pytest is available.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,5 +13,12 @@ cargo test -q
 
 echo "==> cargo doc --no-deps (rustdoc warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+if python3 -c 'import pytest' >/dev/null 2>&1; then
+  echo "==> python -m pytest python/tests -q"
+  python3 -m pytest python/tests -q
+else
+  echo "==> skipping python tests (pytest not installed)"
+fi
 
 echo "==> all checks passed"
