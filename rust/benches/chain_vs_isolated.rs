@@ -97,4 +97,6 @@ fn main() {
     b.case("evaluate_49_dispatch_plan", || {
         black_box(evaluate(&plan, BdMode::Overlapped))
     });
+
+    b.finish();
 }

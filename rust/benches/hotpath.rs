@@ -1,11 +1,20 @@
 //! Hot-path microbenchmarks for the §Perf optimization pass: the pieces
 //! that dominate sweep-scale workloads (simulate_gemm), functional-mode
-//! serving (BD transforms + micro-kernel) and the coordinator loop.
+//! serving (packed executor + BD transforms) and the coordinator loop.
+//!
+//! The executor section is the PR3 acceptance surface: the packed
+//! backend vs the packing-off ablation (`pack_reuse: false`, which
+//! re-streams + re-decodes every panel per output tile but keeps the
+//! flat scratch and slice kernels — so these speedups *understate* the
+//! delta vs the true pre-PR3 executor, which also allocated per-tile
+//! Vecs), then the scoped-thread fan-out at 2 and 8 workers.
+//! `BENCH_JSON=path` makes it emit the machine-readable record
+//! `scripts/bench.sh` folds into `BENCH_PR3.json`.
 
 use xdna_gemm::arch::{balanced_config, Generation};
 use xdna_gemm::coordinator::{Coordinator, CoordinatorOptions, GemmRequest};
 use xdna_gemm::dtype::{Layout, Precision};
-use xdna_gemm::gemm::exec::{Executor, Fidelity};
+use xdna_gemm::gemm::exec::{ExecOptions, Executor, Fidelity};
 use xdna_gemm::gemm::refimpl;
 use xdna_gemm::mem::Matrix;
 use xdna_gemm::sim::{simulate_gemm, BdMode};
@@ -24,7 +33,9 @@ fn main() {
     });
     b.throughput("simulate_gemm_4k", 1.0 / s.mean_s, "sims/s");
 
-    // Functional executor at one tiny native tile (serving-path numerics).
+    // Functional executor over an 8x2x8 native-tile grid: panel reuse +
+    // thread fan-out vs the packing-off serial ablation (a conservative
+    // stand-in for the pre-PR3 per-tile re-streaming executor).
     let tiny = TilingConfig::new(
         Generation::Xdna,
         Precision::I8I16,
@@ -38,16 +49,55 @@ fn main() {
     )
     .unwrap();
     let (nm, nk, nn) = tiny.native();
-    let mut a = Matrix::zeroed(nm, 2 * nk, 1, Layout::RowMajor).unwrap();
-    let mut bb_ = Matrix::zeroed(2 * nk, nn, 1, Layout::ColMajor).unwrap();
+    let (m, k, n) = (8 * nm, 2 * nk, 8 * nn);
+    let mut a = Matrix::zeroed(m, k, 1, Layout::RowMajor).unwrap();
+    let mut bb_ = Matrix::zeroed(k, n, 1, Layout::ColMajor).unwrap();
     refimpl::fill_random(&mut a, Precision::I8I16, 1);
     refimpl::fill_random(&mut bb_, Precision::I8I16, 2);
-    for fidelity in [Fidelity::Direct, Fidelity::BdChain] {
-        let exec = Executor::new(tiny, fidelity);
-        b.case(&format!("executor_{fidelity:?}_{nm}x{}x{nn}", 2 * nk), || {
+
+    let unpacked =
+        Executor::with_options(tiny, ExecOptions { pack_reuse: false, ..Default::default() });
+    let s_unpacked = b.case(&format!("executor_unpacked_serial_{m}x{k}x{n}"), || {
+        black_box(unpacked.execute(&a, &bb_).unwrap())
+    });
+    let packed = Executor::new(tiny, Fidelity::Direct);
+    let s_packed = b.case(&format!("executor_packed_serial_{m}x{k}x{n}"), || {
+        black_box(packed.execute(&a, &bb_).unwrap())
+    });
+    let mut s_t8 = s_packed.clone();
+    for threads in [2usize, 8] {
+        let exec = Executor::with_options(tiny, ExecOptions { threads, ..Default::default() });
+        let s_t = b.case(&format!("executor_packed_threads{threads}_{m}x{k}x{n}"), || {
             black_box(exec.execute(&a, &bb_).unwrap())
         });
+        if threads == 8 {
+            s_t8 = s_t;
+        }
     }
+    b.throughput(
+        "executor_packing_speedup",
+        s_unpacked.mean_s / s_packed.mean_s,
+        "x (packed serial vs re-streaming serial)",
+    );
+    b.throughput(
+        "executor_threads8_speedup",
+        s_unpacked.mean_s / s_t8.mean_s,
+        "x (packed 8 threads vs re-streaming serial)",
+    );
+    b.throughput("executor_gemms_per_s", 1.0 / s_t8.mean_s, "GEMM/s");
+    let p = Precision::I8I16;
+    let bytes = ((m * k + k * n) * p.ty_in() + m * n * p.ty_out()) as f64;
+    b.throughput("executor_functional_gb_s", bytes / s_t8.mean_s / 1e9, "GB/s");
+
+    // BD-chain fidelity at one native tile (streaming-path numerics).
+    let bd = Executor::new(tiny, Fidelity::BdChain);
+    let mut a1 = Matrix::zeroed(nm, 2 * nk, 1, Layout::RowMajor).unwrap();
+    let mut b1 = Matrix::zeroed(2 * nk, nn, 1, Layout::ColMajor).unwrap();
+    refimpl::fill_random(&mut a1, p, 3);
+    refimpl::fill_random(&mut b1, p, 4);
+    b.case(&format!("executor_bdchain_{nm}x{}x{nn}", 2 * nk), || {
+        black_box(bd.execute(&a1, &b1).unwrap())
+    });
 
     // BD transform chain in isolation (bytes/s through the Fig.-4 path).
     let chain = InputChain { rows: 96, micro_r: 4, micro_s: 8, k_ct: 56, k_mt: 224, elem_bytes: 2 };
@@ -69,4 +119,6 @@ fn main() {
     });
     b.throughput("coordinator", 1.0 / s.mean_s, "req/s");
     coord.shutdown();
+
+    b.finish();
 }

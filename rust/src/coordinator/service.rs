@@ -22,7 +22,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::arch::Generation;
 use crate::dtype::{Layout, Precision};
-use crate::gemm::exec::{Executor, Fidelity};
+use crate::gemm::exec::{ExecOptions, Executor};
 use crate::gemm::refimpl;
 use crate::mem::Matrix;
 use crate::plan::{overrides_for, GemmChain};
@@ -74,6 +74,14 @@ pub struct ChainResponse {
     pub elided_dispatches: usize,
     /// Per-op simulation reports, in chain order.
     pub reports: Vec<GemmReport>,
+    /// Final op's functional C (`Backend::Functional` only): each
+    /// producer→consumer edge fed the staged C straight into the packed
+    /// executor as the next op's A. `None` if any op's functional
+    /// execution failed (the failing op's record carries
+    /// `verified: Some(false)`).
+    pub result: Option<Matrix>,
+    /// Edges where the staged functional C actually fed the next op.
+    pub staged_edges: usize,
 }
 
 #[derive(Debug)]
@@ -118,6 +126,10 @@ pub struct CoordinatorOptions {
     /// (completions share the channel), so its per-device queues grow
     /// without bound if producers outpace the fleet indefinitely.
     pub admission_capacity: usize,
+    /// Worker threads for the functional executor's output-tile fan-out
+    /// (`serve --functional --threads T`). Results are bit-identical for
+    /// every value (`gemm::exec::ExecOptions::threads`).
+    pub exec_threads: usize,
 }
 
 impl Default for CoordinatorOptions {
@@ -130,6 +142,7 @@ impl Default for CoordinatorOptions {
             max_in_flight: 64,
             design_capacity: 0,
             admission_capacity: 4096,
+            exec_threads: 1,
         }
     }
 }
@@ -502,11 +515,15 @@ fn absorb(
 /// Execute one chain on the leader's device: designs resolved from the
 /// leader's cache, fused edges and dispatch amortization from the same
 /// rule the offline planner uses, reconfiguration charged through the
-/// shared device state.
+/// shared device state. Under `Backend::Functional` every op also runs
+/// through the packed executor, and each producer→consumer edge feeds
+/// the staged C straight into the next op as its A — the functional
+/// mirror of the planner's fused dataflow.
 fn run_chain(
     dev: usize,
     gen: Generation,
     pc: PendingChain,
+    opts: &CoordinatorOptions,
     cache: &mut DesignCache,
     device: &mut DeviceState,
     records: &mut Vec<RequestRecord>,
@@ -519,6 +536,10 @@ fn run_chain(
     let mut fused = 0;
     let mut elided = 0;
     let mut reports = Vec::with_capacity(chain.len());
+    let mut staged: Option<Matrix> = None;
+    let mut staged_edges = 0usize;
+    let mut result: Option<Matrix> = None;
+    let mut func_failed = false;
     for (i, op) in chain.ops.iter().enumerate() {
         let key = DesignKey::for_shape(&op.shape);
         let reconfig_s = device.switch_to(gen, key);
@@ -528,6 +549,39 @@ fn run_chain(
         chain_s += device_s;
         fused += ovs[i].a_in_l2 as usize;
         elided += ovs[i].elide_dispatch as usize;
+        // A failed op poisons the rest of the functional run: no random-A
+        // substitution for downstream consumers, no final result — the
+        // caller sees `result: None` instead of a silently wrong C.
+        let mut op_verified = None;
+        if opts.backend == Backend::Functional && !func_failed {
+            let exec = Executor::with_options(
+                cfgs[i],
+                ExecOptions { threads: opts.exec_threads, ..Default::default() },
+            );
+            let a = match staged.take() {
+                Some(c) if op.consumes_prev => {
+                    staged_edges += 1;
+                    c
+                }
+                _ => functional_a(&op.shape, cfgs[i].precision),
+            };
+            let b = functional_b(&op.shape, cfgs[i].precision);
+            match exec.execute(&a, &b) {
+                Ok(c) => {
+                    // Move (never clone) the C image: it becomes the final
+                    // result, or the staged A of a consuming next op.
+                    if i + 1 == chain.ops.len() {
+                        result = Some(c);
+                    } else if chain.ops[i + 1].consumes_prev {
+                        staged = Some(c);
+                    }
+                }
+                Err(_) => {
+                    func_failed = true;
+                    op_verified = Some(false);
+                }
+            }
+        }
         records.push(RequestRecord {
             id,
             name: op.shape.name.clone(),
@@ -536,7 +590,7 @@ fn run_chain(
             host_latency_s: t0.elapsed().as_secs_f64(),
             ops: op.shape.ops(),
             reconfigured: reconfig_s > 0.0,
-            verified: None,
+            verified: op_verified,
             chain: Some(id),
         });
         reports.push(sim);
@@ -558,6 +612,8 @@ fn run_chain(
         fused_edges: fused,
         elided_dispatches: elided,
         reports,
+        result,
+        staged_edges,
     };
     (record, tx, response)
 }
@@ -601,7 +657,7 @@ fn leader_loop(
             match unit {
                 Unit::Chain(pc) => {
                     let (rec, tx, resp) =
-                        run_chain(dev, gen, *pc, &mut cache, &mut device, &mut records);
+                        run_chain(dev, gen, *pc, &opts, &mut cache, &mut device, &mut records);
                     chain_records.push(rec);
                     chain_responses.push((tx, resp));
                 }
@@ -615,7 +671,7 @@ fn leader_loop(
 
                     let (result, verified) = match opts.backend {
                         Backend::SimOnly => (None, None),
-                        Backend::Functional => run_functional(&cfg, &req),
+                        Backend::Functional => run_functional(&cfg, &req, opts.exec_threads),
                     };
 
                     let device_s = sim.t_total + reconfig_s;
@@ -672,25 +728,47 @@ fn leader_loop(
     cache.stats()
 }
 
-fn run_functional(cfg: &crate::tiling::TilingConfig, req: &GemmRequest) -> (Option<Matrix>, Option<bool>) {
+/// Deterministic functional A for `shape` (seeded from its geometry) —
+/// shared by the single-request and chain functional paths, and public
+/// so tests can reproduce the coordinator's generated inputs.
+pub fn functional_a(shape: &GemmShape, p: Precision) -> Matrix {
+    let mut a = Matrix::zeroed(shape.m, shape.k, p.ty_in(), Layout::RowMajor).expect("aligned");
+    refimpl::fill_random(&mut a, p, shape.m as u64 ^ 0xA5A5);
+    a
+}
+
+/// Deterministic functional B for `shape` (layout per the shape).
+pub fn functional_b(shape: &GemmShape, p: Precision) -> Matrix {
+    let mut b = Matrix::zeroed(shape.k, shape.n, p.ty_in(), shape.b_layout).expect("aligned");
+    refimpl::fill_random(&mut b, p, shape.n as u64 ^ 0x5A5A);
+    b
+}
+
+/// Both generated operands for `shape`.
+pub fn functional_inputs(shape: &GemmShape, p: Precision) -> (Matrix, Matrix) {
+    (functional_a(shape, p), functional_b(shape, p))
+}
+
+fn run_functional(
+    cfg: &crate::tiling::TilingConfig,
+    req: &GemmRequest,
+    threads: usize,
+) -> (Option<Matrix>, Option<bool>) {
     let p = cfg.precision;
+    // Borrow caller-supplied operands; only generated inputs are owned.
+    let generated;
     let (a, b) = match &req.data {
-        Some((a, b)) => (a.clone(), b.clone()),
+        Some((a, b)) => (a, b),
         None => {
-            let mut a = Matrix::zeroed(req.shape.m, req.shape.k, p.ty_in(), Layout::RowMajor)
-                .expect("aligned");
-            let mut b = Matrix::zeroed(req.shape.k, req.shape.n, p.ty_in(), req.shape.b_layout)
-                .expect("aligned");
-            refimpl::fill_random(&mut a, p, req.shape.m as u64 ^ 0xA5A5);
-            refimpl::fill_random(&mut b, p, req.shape.n as u64 ^ 0x5A5A);
-            (a, b)
+            generated = functional_inputs(&req.shape, p);
+            (&generated.0, &generated.1)
         }
     };
-    let exec = Executor::new(*cfg, Fidelity::Direct);
-    match exec.execute(&a, &b) {
+    let exec = Executor::with_options(*cfg, ExecOptions { threads, ..Default::default() });
+    match exec.execute(a, b) {
         Ok(c) => {
             let verified = if req.verify {
-                let want = refimpl::ref_gemm(&a, &b, p).expect("ref");
+                let want = refimpl::ref_gemm(a, b, p).expect("ref");
                 Some(refimpl::matrices_equal(&c, &want, p))
             } else {
                 None
@@ -788,6 +866,35 @@ mod tests {
         assert_eq!(resp.verified, Some(true));
         let out = resp.result.unwrap();
         assert_eq!((out.rows, out.cols), (64, 64));
+        c.shutdown();
+    }
+
+    #[test]
+    fn functional_chain_stages_intermediate_c() {
+        // A producer→consumer chain under the functional backend: op 1's
+        // A is op 0's drained C (the packed executor's staged path), and
+        // the final result matches folding the reference GEMM over the
+        // same deterministic inputs. exec_threads=2 doubles as an
+        // in-service determinism check (threaded ≡ serial bits).
+        let c = Coordinator::start(CoordinatorOptions {
+            gen: Generation::Xdna,
+            backend: Backend::Functional,
+            exec_threads: 2,
+            ..Default::default()
+        });
+        let s0 = GemmShape::new("op0", 64, 64, 64, Precision::I8I8);
+        let s1 = GemmShape::new("op1", 64, 64, 64, Precision::I8I8);
+        let mut chain = crate::plan::GemmChain::new("func");
+        chain.push(s0.clone());
+        chain.push_chained(s1.clone()).unwrap();
+        let resp = c.call_chain(chain).unwrap();
+        assert_eq!(resp.staged_edges, 1, "the edge must consume the staged C");
+        let got = resp.result.expect("functional backend returns the final C");
+        let (a0, b0) = functional_inputs(&s0, Precision::I8I8);
+        let b1 = functional_b(&s1, Precision::I8I8);
+        let mid = refimpl::ref_gemm(&a0, &b0, Precision::I8I8).unwrap();
+        let want = refimpl::ref_gemm(&mid, &b1, Precision::I8I8).unwrap();
+        assert!(refimpl::matrices_equal(&got, &want, Precision::I8I8));
         c.shutdown();
     }
 

@@ -11,19 +11,35 @@
 //!    drained through the MemTile aggregation + 4D de-tiling path back to
 //!    row-major DRAM (Sec. 4.2.2).
 //!
+//! **The packed hot path (DESIGN.md §9).** A panel is streamed and
+//! decoded *once* per consumer, not once per output tile: every B panel
+//! is packed up front into a grid-wide cache of dense tiles (each B
+//! panel feeds all `M/nm` tile rows), and each tile row's A panels are
+//! packed once and reused across every `tcol` — the GotoBLAS-style
+//! packing discipline of Lei & Quintana-Ortí's Versal port. All scratch
+//! (streamed words, packed panels, accumulators, the column's C tiles,
+//! the drain's L2 image) is sized once from the [`TilingConfig`] and
+//! reused, so the per-tile loop allocates nothing.
+//!
+//! **Parallelism.** Output tile rows fan out across
+//! `std::thread::scope` workers ([`ExecOptions::threads`]); each worker
+//! owns a disjoint `nm`-row band of the C image, so there is no shared
+//! mutable state. Results are *bit-identical for every thread count*
+//! (int8 and bf16 alike): each output tile's reduction runs in fixed
+//! `k_ct`-tile order on one worker, and thread count only changes which
+//! worker runs a tile, never the order within it.
+//!
 //! Two fidelity levels produce *identical* bytes (property-tested):
 //! `BdChain` drives every hop through real BD gathers/scatters;
 //! `Direct` uses the algebraic pre-tiling oracle (faster; the default for
 //! examples and the coordinator's functional mode).
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::dtype::{Bf16, Layout, Precision};
 use crate::mem::Matrix;
 use crate::tiling::TilingConfig;
-use crate::xform::{pretile_oracle, BRowMajorChain, InputChain, OutputChain};
-
-
+use crate::xform::{pretile_oracle_into, BRowMajorChain, InputChain, OutputChain};
 
 /// How faithfully to move the bytes.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -34,14 +50,41 @@ pub enum Fidelity {
     Direct,
 }
 
+/// Knobs of the packed, parallel execution backend (DESIGN.md §9).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecOptions {
+    pub fidelity: Fidelity,
+    /// Worker threads for the output-tile fan-out (1 = inline serial).
+    /// Results are bit-identical for every value: the per-tile reduction
+    /// order is fixed, threads only partition the tile-row grid.
+    pub threads: usize,
+    /// Reuse packed panels across the native-tile grid (B grid-wide, A
+    /// per tile row). `false` re-streams and re-decodes every panel per
+    /// output tile — the packing-off ablation the `hotpath` bench
+    /// measures against. (It still uses the flat scratch and slice
+    /// kernels, so measured reuse speedups *understate* the delta vs
+    /// the true pre-PR3 executor, which also churned per-tile Vecs.)
+    pub pack_reuse: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { fidelity: Fidelity::Direct, threads: 1, pack_reuse: true }
+    }
+}
+
 pub struct Executor {
     pub cfg: TilingConfig,
-    pub fidelity: Fidelity,
+    pub opts: ExecOptions,
 }
 
 impl Executor {
     pub fn new(cfg: TilingConfig, fidelity: Fidelity) -> Executor {
-        Executor { cfg, fidelity }
+        Executor::with_options(cfg, ExecOptions { fidelity, ..Default::default() })
+    }
+
+    pub fn with_options(cfg: TilingConfig, opts: ExecOptions) -> Executor {
+        Executor { cfg, opts }
     }
 
     fn a_chain(&self) -> InputChain {
@@ -90,26 +133,197 @@ impl Executor {
         }
     }
 
-    /// Stream one input panel into per-`k_ct`-tile pre-tiled L1 images.
-    fn stream_input(&self, chain: &InputChain, img: &Matrix, row0: usize, pk: usize) -> Result<Vec<Vec<u32>>> {
-        match self.fidelity {
-            Fidelity::BdChain => chain.stream_panel(&img.data, row0, img.row_words(), pk),
+    /// Words per pre-tiled B tile (both layouts pre-tile to the same size).
+    fn b_tile_words(&self) -> usize {
+        match self.cfg.b_layout {
+            Layout::ColMajor => self.bt_chain().tile_words(),
+            Layout::RowMajor => self.brm_chain().tile_words(),
+        }
+    }
+
+    /// Stream one A/Bᵀ panel as `pk/k_ct` consecutive pre-tiled tiles
+    /// into the flat `words` scratch (no per-tile allocation).
+    fn stream_input_into(
+        &self,
+        chain: &InputChain,
+        img: &Matrix,
+        row0: usize,
+        pk: usize,
+        words: &mut [u32],
+    ) -> Result<()> {
+        match self.opts.fidelity {
+            Fidelity::BdChain => {
+                chain.stream_panel_into(&img.data, row0, img.row_words(), pk, words)
+            }
             Fidelity::Direct => {
                 let k_ct_w = chain.k_ct * chain.elem_bytes / 4;
-                Ok((0..pk / chain.k_ct)
-                    .map(|ti| pretile_oracle(&img.data, img.row_words(), row0, ti * k_ct_w, chain))
-                    .collect())
+                for (ti, tile) in words.chunks_mut(chain.tile_words()).enumerate() {
+                    pretile_oracle_into(&img.data, img.row_words(), row0, ti * k_ct_w, chain, tile);
+                }
+                Ok(())
             }
         }
     }
 
-    fn stream_b_rowmajor(&self, img: &Matrix, col0_w: usize, pk: usize) -> Result<Vec<Vec<u32>>> {
+    fn stream_b_rowmajor_into(
+        &self,
+        img: &Matrix,
+        col0_w: usize,
+        pk: usize,
+        words: &mut [u32],
+    ) -> Result<()> {
         let c = self.brm_chain();
-        match self.fidelity {
-            Fidelity::BdChain => c.stream_panel(&img.data, col0_w, img.row_words(), pk),
-            Fidelity::Direct => Ok((0..pk / c.k_ct)
-                .map(|ti| c.pretile_oracle(&img.data, img.row_words(), ti * c.k_ct, col0_w))
-                .collect()),
+        match self.opts.fidelity {
+            Fidelity::BdChain => c.stream_panel_into(&img.data, col0_w, img.row_words(), pk, words),
+            Fidelity::Direct => {
+                for (ti, tile) in words.chunks_mut(c.tile_words()).enumerate() {
+                    c.pretile_oracle_into(&img.data, img.row_words(), ti * c.k_ct, col0_w, tile);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Pack one array row's A panel: stream all `pk/k_ct` tiles into the
+    /// `stream` scratch, then decode each into `dst`'s dense buffer.
+    fn pack_a_panel(
+        &self,
+        pa: &Matrix,
+        row0: usize,
+        pk: usize,
+        stream: &mut [u32],
+        dst: &mut PackedPanel,
+    ) -> Result<()> {
+        let chain = self.a_chain();
+        let tw = chain.tile_words();
+        let k_tiles = pk / chain.k_ct;
+        let words = &mut stream[..k_tiles * tw];
+        self.stream_input_into(&chain, pa, row0, pk, words)?;
+        for ti in 0..k_tiles {
+            self.decode_a_tile(&words[ti * tw..(ti + 1) * tw], dst.tile_mut(ti));
+        }
+        Ok(())
+    }
+
+    /// Pack one array column's B panel for output-tile column `tcol`.
+    fn pack_b_panel(
+        &self,
+        pb: &Matrix,
+        tcol: usize,
+        ac: usize,
+        pk: usize,
+        stream: &mut [u32],
+        dst: &mut PackedPanel,
+    ) -> Result<()> {
+        let kt = self.cfg.kernel;
+        let (_, _, nn) = self.cfg.native();
+        let tw = self.b_tile_words();
+        let k_tiles = pk / kt.k_ct;
+        let words = &mut stream[..k_tiles * tw];
+        match self.cfg.b_layout {
+            Layout::ColMajor => {
+                // Column-major B == row panel of the Bᵀ image.
+                let row0 = tcol * nn + ac * kt.n_ct;
+                self.stream_input_into(&self.bt_chain(), pb, row0, pk, words)?;
+            }
+            Layout::RowMajor => {
+                let col0_w = (tcol * nn + ac * kt.n_ct) * self.cfg.precision.ty_in() / 4;
+                self.stream_b_rowmajor_into(pb, col0_w, pk, words)?;
+            }
+        }
+        for ti in 0..k_tiles {
+            self.decode_b_tile(&words[ti * tw..(ti + 1) * tw], dst.tile_mut(ti));
+        }
+        Ok(())
+    }
+
+    /// Pack the grid-wide B cache (`cache[tcol][ac]`), fanning the
+    /// prepack across up to `workers` scoped threads (one `tcol` bucket
+    /// each, disjoint slots — no synchronization).
+    fn pack_b_cache(
+        &self,
+        pb: &Matrix,
+        pk: usize,
+        k_tiles: usize,
+        t_cols: usize,
+        workers: usize,
+    ) -> Result<Vec<Vec<PackedPanel>>> {
+        let p = self.cfg.precision;
+        let kt = self.cfg.kernel;
+        let mut cache: Vec<Vec<PackedPanel>> = (0..t_cols)
+            .map(|_| {
+                (0..self.cfg.n_cols)
+                    .map(|_| PackedPanel::new(p, kt.k_ct * kt.n_ct, k_tiles))
+                    .collect()
+            })
+            .collect();
+        let stream_len = k_tiles * self.b_tile_words();
+        let w = workers.max(1).min(t_cols.max(1));
+        if w <= 1 {
+            let mut stream = vec![0u32; stream_len];
+            for (tcol, panels) in cache.iter_mut().enumerate() {
+                for (ac, panel) in panels.iter_mut().enumerate() {
+                    self.pack_b_panel(pb, tcol, ac, pk, &mut stream, panel)?;
+                }
+            }
+        } else {
+            let mut buckets: Vec<Vec<(usize, &mut Vec<PackedPanel>)>> =
+                (0..w).map(|_| Vec::new()).collect();
+            for (tcol, panels) in cache.iter_mut().enumerate() {
+                buckets[tcol % w].push((tcol, panels));
+            }
+            std::thread::scope(|s| -> Result<()> {
+                let handles: Vec<_> = buckets
+                    .into_iter()
+                    .map(|bucket| {
+                        s.spawn(move || -> Result<()> {
+                            let mut stream = vec![0u32; stream_len];
+                            for (tcol, panels) in bucket {
+                                for (ac, panel) in panels.iter_mut().enumerate() {
+                                    self.pack_b_panel(pb, tcol, ac, pk, &mut stream, panel)?;
+                                }
+                            }
+                            Ok(())
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().map_err(|_| anyhow!("B-prepack worker panicked"))??;
+                }
+                Ok(())
+            })?;
+        }
+        Ok(cache)
+    }
+
+    /// Decode one pre-tiled A tile to dense `m_ct × k_ct`.
+    fn decode_a_tile(&self, words: &[u32], dst: TileMut<'_>) {
+        let kt = self.cfg.kernel;
+        let (r, s, _) = self.cfg.precision.micro_tile();
+        match dst {
+            TileMut::I8(out) => decode_pretiled_i8(words, kt.m_ct, kt.k_ct, r, s, out),
+            TileMut::F32(out) => decode_pretiled_bf16(words, kt.m_ct, kt.k_ct, r, s, out),
+        }
+    }
+
+    /// Decode one pre-tiled B tile to dense `k_ct × n_ct` (applying the
+    /// in-core shuffle — the AIE-API transpose — for column-major B).
+    fn decode_b_tile(&self, words: &[u32], dst: TileMut<'_>) {
+        let kt = self.cfg.kernel;
+        let (_, s, t) = self.cfg.precision.micro_tile();
+        let walk: fn(usize, usize, usize, usize, &mut dyn FnMut(usize, usize)) =
+            match self.cfg.b_layout {
+                Layout::ColMajor => decode_bt_blocks,
+                Layout::RowMajor => decode_b_blocks,
+            };
+        match dst {
+            TileMut::I8(out) => walk(kt.k_ct, kt.n_ct, s, t, &mut |di, si| {
+                out[di] = (words[si >> 2] >> ((si & 3) * 8)) as u8 as i8;
+            }),
+            TileMut::F32(out) => walk(kt.k_ct, kt.n_ct, s, t, &mut |di, si| {
+                let bits = (words[si >> 1] >> ((si & 1) * 16)) as u16;
+                out[di] = Bf16::from_bits(bits).to_f32();
+            }),
         }
     }
 
@@ -129,87 +343,154 @@ impl Executor {
         // the NPU can zero-pad on the fly in MemTile channels; host-side
         // padding exercises the same aligned code path).
         let pa = pad_matrix(a, pm, pk)?;
-        let pb = match self.cfg.b_layout {
-            Layout::RowMajor => pad_matrix(b, pk, pn)?,
-            Layout::ColMajor => pad_matrix(b, pk, pn)?,
-        };
+        let pb = pad_matrix(b, pk, pn)?;
         let mut pc = Matrix::zeroed(pm, pn, p.ty_out(), Layout::RowMajor)?;
 
         let kt = self.cfg.kernel;
         let (nm, _, nn) = self.cfg.native();
-        let (r, s, t) = p.micro_tile();
-        let _ = s;
-        let a_chain = self.a_chain();
-        let bt_chain = self.bt_chain();
-        let out_chain = self.out_chain();
+        let t_rows = pm / nm;
+        let t_cols = pn / nn;
         let k_tiles = pk / kt.k_ct;
+        let ld_w = pc.row_words();
 
-        for trow in 0..pm / nm {
-            for tcol in 0..pn / nn {
-                // Per array row: pre-tiled A tiles for the whole reduction.
-                let mut a_tiles: Vec<Vec<Vec<u32>>> = Vec::with_capacity(self.cfg.m_rows);
-                for ar in 0..self.cfg.m_rows {
-                    let row0 = trow * nm + ar * kt.m_ct;
-                    a_tiles.push(self.stream_input(&a_chain, &pa, row0, pk)?);
-                }
-                // Per array column: pre-tiled B tiles.
-                let mut b_tiles: Vec<Vec<Vec<u32>>> = Vec::with_capacity(self.cfg.n_cols);
-                for ac in 0..self.cfg.n_cols {
-                    let tiles = match self.cfg.b_layout {
-                        Layout::ColMajor => {
-                            // Column-major B == row panel of the Bᵀ image.
-                            let row0 = tcol * nn + ac * kt.n_ct;
-                            self.stream_input(&bt_chain, &pb, row0, pk)?
-                        }
-                        Layout::RowMajor => {
-                            let col0_w = (tcol * nn + ac * kt.n_ct) * p.ty_in() / 4;
-                            self.stream_b_rowmajor(&pb, col0_w, pk)?
-                        }
-                    };
-                    b_tiles.push(tiles);
-                }
+        // Pack every B panel once, up front: panel (tcol, ac) feeds every
+        // tile row, so the grid re-reads the decoded cache instead of
+        // re-streaming it per trow. The prepack itself fans out across
+        // the same worker budget so it doesn't become the serial
+        // fraction on B-dominated (small-M, wide-N) shapes.
+        let b_cache: Vec<Vec<PackedPanel>> = if self.opts.pack_reuse {
+            self.pack_b_cache(&pb, pk, k_tiles, t_cols, self.opts.threads.max(1))?
+        } else {
+            Vec::new()
+        };
 
-                // Decode each pre-tiled tile to dense form ONCE (the
-                // broadcast means every A tile feeds n_cols cores and
-                // every B tile m_rows cores — §Perf optimization 2).
-                let a_dense: Vec<Vec<DenseTile>> = a_tiles
-                    .iter()
-                    .map(|tiles| tiles.iter().map(|w| self.decode_a(w)).collect())
-                    .collect();
-                let b_dense: Vec<Vec<DenseTile>> = b_tiles
-                    .iter()
-                    .map(|tiles| tiles.iter().map(|w| self.decode_b(w)).collect())
-                    .collect();
-
-                // Every core computes its output-stationary tile, then each
-                // column drains through its MemTile to DRAM.
-                for ac in 0..self.cfg.n_cols {
-                    let mut column_c: Vec<Vec<u32>> = Vec::with_capacity(self.cfg.m_rows);
-                    for ar in 0..self.cfg.m_rows {
-                        let pretiled_c =
-                            self.core_compute(&a_dense[ar], &b_dense[ac], k_tiles)?;
-                        column_c.push(pretiled_c);
-                    }
-                    let col0_w = (tcol * nn + ac * kt.n_ct) * p.ty_out() / 4;
-                    let ld_w = pc.row_words();
-                    out_chain.drain_column(&column_c, &mut pc.data, trow * nm, col0_w, ld_w)?;
-                }
-                let _ = r;
-                let _ = t;
+        // Fan tile rows out across scoped workers: each worker owns a
+        // disjoint nm-row band of the C image, so the bands write in
+        // parallel without synchronization.
+        let band_words = nm * ld_w;
+        let n_workers = self.opts.threads.max(1).min(t_rows.max(1));
+        if n_workers <= 1 {
+            let mut st = WorkerState::new(self, k_tiles);
+            for (trow, band) in pc.data.chunks_mut(band_words).enumerate() {
+                self.run_band(&mut st, trow, band, &pa, &pb, &b_cache, pk, t_cols, ld_w)?;
             }
+        } else {
+            let mut buckets: Vec<Vec<(usize, &mut [u32])>> =
+                (0..n_workers).map(|_| Vec::new()).collect();
+            for (trow, band) in pc.data.chunks_mut(band_words).enumerate() {
+                buckets[trow % n_workers].push((trow, band));
+            }
+            let (pa_ref, pb_ref, cache_ref) = (&pa, &pb, &b_cache);
+            std::thread::scope(|s| -> Result<()> {
+                let handles: Vec<_> = buckets
+                    .into_iter()
+                    .map(|bucket| {
+                        s.spawn(move || -> Result<()> {
+                            let mut st = WorkerState::new(self, k_tiles);
+                            for (trow, band) in bucket {
+                                self.run_band(
+                                    &mut st, trow, band, pa_ref, pb_ref, cache_ref, pk, t_cols,
+                                    ld_w,
+                                )?;
+                            }
+                            Ok(())
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().map_err(|_| anyhow!("executor worker panicked"))??;
+                }
+                Ok(())
+            })?;
         }
 
         crop_matrix(&pc, m, n, p.ty_out())
     }
 
+    /// One worker's tile row: pack the row's A panels once, then walk
+    /// every output-tile column, computing each core's stationary tile
+    /// and draining the column through the MemTile aggregation path.
+    #[allow(clippy::too_many_arguments)]
+    fn run_band(
+        &self,
+        st: &mut WorkerState,
+        trow: usize,
+        band: &mut [u32],
+        pa: &Matrix,
+        pb: &Matrix,
+        b_cache: &[Vec<PackedPanel>],
+        pk: usize,
+        t_cols: usize,
+        ld_w: usize,
+    ) -> Result<()> {
+        let p = self.cfg.precision;
+        let kt = self.cfg.kernel;
+        let (nm, _, nn) = self.cfg.native();
+        let k_tiles = pk / kt.k_ct;
+        let out_chain = self.out_chain();
+        let ctw = out_chain.tile_words();
+
+        // A panels for this tile row, packed once and reused across every
+        // tcol (previously re-streamed and re-decoded per output tile).
+        if self.opts.pack_reuse {
+            for ar in 0..self.cfg.m_rows {
+                let row0 = trow * nm + ar * kt.m_ct;
+                self.pack_a_panel(pa, row0, pk, &mut st.stream, &mut st.a_panels[ar])?;
+            }
+        }
+        for tcol in 0..t_cols {
+            if !self.opts.pack_reuse {
+                // Ablation baseline: re-stream + re-decode both operands
+                // per output tile (the pre-packing executor).
+                for ar in 0..self.cfg.m_rows {
+                    let row0 = trow * nm + ar * kt.m_ct;
+                    self.pack_a_panel(pa, row0, pk, &mut st.stream, &mut st.a_panels[ar])?;
+                }
+                for ac in 0..self.cfg.n_cols {
+                    self.pack_b_panel(pb, tcol, ac, pk, &mut st.stream, &mut st.b_panels[ac])?;
+                }
+            }
+            let b_panels: &[PackedPanel] =
+                if self.opts.pack_reuse { &b_cache[tcol] } else { &st.b_panels };
+
+            // Every core computes its output-stationary tile, then each
+            // column drains through its MemTile to the band's DRAM rows.
+            for ac in 0..self.cfg.n_cols {
+                for ar in 0..self.cfg.m_rows {
+                    self.core_compute_into(
+                        &st.a_panels[ar],
+                        &b_panels[ac],
+                        k_tiles,
+                        &mut st.acc_i,
+                        &mut st.acc_f,
+                        &mut st.column_c[ar * ctw..(ar + 1) * ctw],
+                    )?;
+                }
+                let col0_w = (tcol * nn + ac * kt.n_ct) * p.ty_out() / 4;
+                out_chain.drain_column_flat(
+                    &st.column_c,
+                    self.cfg.m_rows,
+                    band,
+                    0,
+                    col0_w,
+                    ld_w,
+                    &mut st.drain_l2,
+                )?;
+            }
+        }
+        Ok(())
+    }
+
     /// Execute a GEMM chain: `C_0 = narrow(A @ B_0)`, then each staged
     /// C feeds the next op as its A — the functional mirror of the
     /// planner's fused edges (`crate::plan`), where the intermediate
-    /// image never leaves the device. Multi-op chains require a
-    /// precision whose output dtype equals its input dtype (int8→int8,
-    /// bf16); every weight must match the design's B layout. Numerics
-    /// are identical to re-dispatching each op, because the drained C
-    /// image is exactly the next dispatch's A image.
+    /// image never leaves the device. The staged C re-enters `execute`
+    /// as a row-major A image, so it rides the packed-A path like any
+    /// fresh operand. Multi-op chains require a precision whose output
+    /// dtype equals its input dtype (int8→int8, bf16); every weight must
+    /// match the design's B layout. Numerics are identical to
+    /// re-dispatching each op, because the drained C image is exactly
+    /// the next dispatch's A image.
     pub fn execute_chain(&self, a: &Matrix, weights: &[Matrix]) -> Result<Matrix> {
         ensure!(!weights.is_empty(), "empty chain");
         let p = self.cfg.precision;
@@ -225,111 +506,169 @@ impl Executor {
         Ok(c)
     }
 
-    /// One core's whole reduction over pre-decoded dense tiles: MAC into
-    /// the stationary accumulator, narrow, re-tile for the output path.
-    fn core_compute(&self, a_tiles: &[DenseTile], b_tiles: &[DenseTile], k_tiles: usize) -> Result<Vec<u32>> {
+    /// One core's whole reduction over a packed panel pair: MAC into the
+    /// stationary accumulator in fixed `k_ct`-tile order (the determinism
+    /// contract), narrow, and emit the pre-tiled `r × t` stream straight
+    /// into `out` words (no intermediate byte buffer).
+    fn core_compute_into(
+        &self,
+        a: &PackedPanel,
+        b: &PackedPanel,
+        k_tiles: usize,
+        acc_i: &mut [i32],
+        acc_f: &mut [f32],
+        out: &mut [u32],
+    ) -> Result<()> {
         let p = self.cfg.precision;
         let kt = self.cfg.kernel;
         let (r, _, t) = p.micro_tile();
-        match p {
-            Precision::Bf16 => {
-                let mut acc = vec![0f32; kt.m_ct * kt.n_ct]; // zeroing kernel
+        out.fill(0);
+        match (&a.data, &b.data) {
+            (PanelData::F32(_), PanelData::F32(_)) => {
+                acc_f.fill(0.0); // zeroing kernel
                 for ti in 0..k_tiles {
-                    let (DenseTile::F32(a), DenseTile::F32(b)) = (&a_tiles[ti], &b_tiles[ti])
-                    else {
-                        unreachable!("precision fixed per executor")
-                    };
-                    dense_mac_f32(a, b, &mut acc, kt.m_ct, kt.k_ct, kt.n_ct);
+                    dense_mac_f32(a.tile_f32(ti), b.tile_f32(ti), acc_f, kt.m_ct, kt.k_ct, kt.n_ct);
                 }
-                // Narrow to bf16 and lay out pre-tiled r × t.
-                let mut bytes = Vec::with_capacity(kt.m_ct * kt.n_ct * 2);
+                let mut lane = 0usize; // 16-bit lanes of `out`
                 for_each_pretiled(kt.m_ct, kt.n_ct, r, t, |i, j| {
-                    let v = Bf16::from_f32(acc[i * kt.n_ct + j]);
-                    bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+                    let bits = Bf16::from_f32(acc_f[i * kt.n_ct + j]).to_bits() as u32;
+                    out[lane >> 1] |= bits << ((lane & 1) * 16);
+                    lane += 1;
                 });
-                Ok(pack_words(&bytes))
             }
-            _ => {
-                let mut acc = vec![0i32; kt.m_ct * kt.n_ct]; // zeroing kernel
+            (PanelData::I8(_), PanelData::I8(_)) => {
+                acc_i.fill(0); // zeroing kernel
                 for ti in 0..k_tiles {
-                    let (DenseTile::I8(a), DenseTile::I8(b)) = (&a_tiles[ti], &b_tiles[ti])
-                    else {
-                        unreachable!("precision fixed per executor")
-                    };
-                    dense_mac_i32(a, b, &mut acc, kt.m_ct, kt.k_ct, kt.n_ct);
+                    dense_mac_i32(a.tile_i8(ti), b.tile_i8(ti), acc_i, kt.m_ct, kt.k_ct, kt.n_ct);
                 }
-                let mut bytes = Vec::with_capacity(kt.m_ct * kt.n_ct * p.ty_out());
-                for_each_pretiled(kt.m_ct, kt.n_ct, r, t, |i, j| {
-                    let v = acc[i * kt.n_ct + j];
-                    match p {
-                        Precision::I8I8 => bytes.push(crate::dtype::sat_i8(v) as u8),
-                        Precision::I8I16 => {
-                            bytes.extend_from_slice(&crate::dtype::sat_i16(v).to_le_bytes())
-                        }
-                        Precision::I8I32 => bytes.extend_from_slice(&v.to_le_bytes()),
-                        Precision::Bf16 => unreachable!(),
-                    }
-                });
-                Ok(pack_words(&bytes))
+                let mut lane = 0usize; // ty_out-sized lanes of `out`
+                match p {
+                    Precision::I8I8 => for_each_pretiled(kt.m_ct, kt.n_ct, r, t, |i, j| {
+                        let v = crate::dtype::sat_i8(acc_i[i * kt.n_ct + j]) as u8 as u32;
+                        out[lane >> 2] |= v << ((lane & 3) * 8);
+                        lane += 1;
+                    }),
+                    Precision::I8I16 => for_each_pretiled(kt.m_ct, kt.n_ct, r, t, |i, j| {
+                        let v = crate::dtype::sat_i16(acc_i[i * kt.n_ct + j]) as u16 as u32;
+                        out[lane >> 1] |= v << ((lane & 1) * 16);
+                        lane += 1;
+                    }),
+                    Precision::I8I32 => for_each_pretiled(kt.m_ct, kt.n_ct, r, t, |i, j| {
+                        out[lane] = acc_i[i * kt.n_ct + j] as u32;
+                        lane += 1;
+                    }),
+                    Precision::Bf16 => unreachable!("bf16 uses the f32 panels"),
+                }
             }
+            _ => return Err(anyhow!("operand panels decoded at different precisions")),
+        }
+        Ok(())
+    }
+}
+
+/// Packed cache of decoded tiles for one operand panel: `k_tiles` dense
+/// row-major tiles (`m_ct × k_ct` for A, `k_ct × n_ct` for B) stored
+/// back to back in one flat buffer.
+struct PackedPanel {
+    tile_len: usize,
+    data: PanelData,
+}
+
+enum PanelData {
+    I8(Vec<i8>),
+    F32(Vec<f32>),
+}
+
+/// A mutable view of one dense tile inside a [`PackedPanel`].
+enum TileMut<'a> {
+    I8(&'a mut [i8]),
+    F32(&'a mut [f32]),
+}
+
+impl PackedPanel {
+    fn new(p: Precision, tile_len: usize, k_tiles: usize) -> PackedPanel {
+        let data = match p {
+            Precision::Bf16 => PanelData::F32(vec![0.0; tile_len * k_tiles]),
+            _ => PanelData::I8(vec![0; tile_len * k_tiles]),
+        };
+        PackedPanel { tile_len, data }
+    }
+
+    fn tile_mut(&mut self, ti: usize) -> TileMut<'_> {
+        let r = ti * self.tile_len..(ti + 1) * self.tile_len;
+        match &mut self.data {
+            PanelData::I8(v) => TileMut::I8(&mut v[r]),
+            PanelData::F32(v) => TileMut::F32(&mut v[r]),
         }
     }
 
-    /// Decode one pre-tiled A tile to dense `m_ct × k_ct`.
-    fn decode_a(&self, words: &[u32]) -> DenseTile {
-        let kt = self.cfg.kernel;
-        let (r, s, _) = self.cfg.precision.micro_tile();
-        match self.cfg.precision {
-            Precision::Bf16 => {
-                DenseTile::F32(decode_pretiled_bf16(words, kt.m_ct, kt.k_ct, r, s))
-            }
-            _ => DenseTile::I8(decode_pretiled_i8(words, kt.m_ct, kt.k_ct, r, s)),
+    fn tile_i8(&self, ti: usize) -> &[i8] {
+        match &self.data {
+            PanelData::I8(v) => &v[ti * self.tile_len..(ti + 1) * self.tile_len],
+            PanelData::F32(_) => unreachable!("precision fixed per executor"),
         }
     }
 
-    /// Decode one pre-tiled B tile to dense `k_ct × n_ct` (applying the
-    /// in-core shuffle — the AIE-API transpose — for column-major B).
-    fn decode_b(&self, words: &[u32]) -> DenseTile {
-        let kt = self.cfg.kernel;
-        let (_, s, t) = self.cfg.precision.micro_tile();
-        match self.cfg.precision {
-            Precision::Bf16 => {
-                let mut out = vec![0f32; kt.k_ct * kt.n_ct];
-                let mut write = |dst: usize, src_idx: usize| {
-                    let bits = (words[src_idx >> 1] >> ((src_idx & 1) * 16)) as u16;
-                    out[dst] = Bf16::from_bits(bits).to_f32();
-                };
-                match self.cfg.b_layout {
-                    Layout::ColMajor => decode_bt_blocks(kt.k_ct, kt.n_ct, s, t, &mut write),
-                    Layout::RowMajor => decode_b_blocks(kt.k_ct, kt.n_ct, s, t, &mut write),
-                }
-                DenseTile::F32(out)
-            }
-            _ => {
-                let mut out = vec![0i8; kt.k_ct * kt.n_ct];
-                let mut write = |dst: usize, src_idx: usize| {
-                    out[dst] = (words[src_idx >> 2] >> ((src_idx & 3) * 8)) as u8 as i8;
-                };
-                match self.cfg.b_layout {
-                    Layout::ColMajor => decode_bt_blocks(kt.k_ct, kt.n_ct, s, t, &mut write),
-                    Layout::RowMajor => decode_b_blocks(kt.k_ct, kt.n_ct, s, t, &mut write),
-                }
-                DenseTile::I8(out)
-            }
+    fn tile_f32(&self, ti: usize) -> &[f32] {
+        match &self.data {
+            PanelData::F32(v) => &v[ti * self.tile_len..(ti + 1) * self.tile_len],
+            PanelData::I8(_) => unreachable!("precision fixed per executor"),
         }
     }
 }
 
-/// A decoded (dense, row-major) operand tile.
-enum DenseTile {
-    I8(Vec<i8>),
-    F32(Vec<f32>),
+/// Per-worker scratch, sized once from the design and the padded K — the
+/// per-tile loop allocates nothing.
+struct WorkerState {
+    /// Flat streamed-panel words (large enough for an A or a B panel).
+    stream: Vec<u32>,
+    /// Packed A panels for the current tile row (one per array row).
+    a_panels: Vec<PackedPanel>,
+    /// Packed B panels for the current output tile (no-reuse mode only).
+    b_panels: Vec<PackedPanel>,
+    /// The column's narrowed, pre-tiled C tiles (`m_rows × tile_words`).
+    column_c: Vec<u32>,
+    /// L2 aggregation scratch for the output drain.
+    drain_l2: Vec<u32>,
+    acc_i: Vec<i32>,
+    acc_f: Vec<f32>,
+}
+
+impl WorkerState {
+    fn new(exec: &Executor, k_tiles: usize) -> WorkerState {
+        let p = exec.cfg.precision;
+        let kt = exec.cfg.kernel;
+        let a_tw = exec.a_chain().tile_words();
+        let b_tw = exec.b_tile_words();
+        let ctw = exec.out_chain().tile_words();
+        let (acc_i, acc_f) = match p {
+            Precision::Bf16 => (Vec::new(), vec![0.0; kt.m_ct * kt.n_ct]),
+            _ => (vec![0; kt.m_ct * kt.n_ct], Vec::new()),
+        };
+        WorkerState {
+            stream: vec![0; k_tiles * a_tw.max(b_tw)],
+            a_panels: (0..exec.cfg.m_rows)
+                .map(|_| PackedPanel::new(p, kt.m_ct * kt.k_ct, k_tiles))
+                .collect(),
+            b_panels: if exec.opts.pack_reuse {
+                Vec::new()
+            } else {
+                (0..exec.cfg.n_cols)
+                    .map(|_| PackedPanel::new(p, kt.k_ct * kt.n_ct, k_tiles))
+                    .collect()
+            },
+            column_c: vec![0; exec.cfg.m_rows * ctw],
+            drain_l2: Vec::new(),
+            acc_i,
+            acc_f,
+        }
+    }
 }
 
 /// Walk a pre-tiled row-major-B image (`s × t` micro-tiles) in source
 /// order, emitting (dense `k·n_ct + j` index, source index) pairs —
 /// division-free (§Perf optimization 3).
-fn decode_b_blocks(k_ct: usize, n_ct: usize, s: usize, t: usize, f: &mut impl FnMut(usize, usize)) {
+fn decode_b_blocks(k_ct: usize, n_ct: usize, s: usize, t: usize, f: &mut dyn FnMut(usize, usize)) {
     let mut src = 0;
     for ko in 0..k_ct / s {
         for jo in 0..n_ct / t {
@@ -347,7 +686,7 @@ fn decode_b_blocks(k_ct: usize, n_ct: usize, s: usize, t: usize, f: &mut impl Fn
 /// Walk a pre-tiled Bᵀ image (`t × s` micro-tiles of the transposed
 /// panel) in source order; destination indices are transposed — this IS
 /// the in-core shuffle.
-fn decode_bt_blocks(k_ct: usize, n_ct: usize, s: usize, t: usize, f: &mut impl FnMut(usize, usize)) {
+fn decode_bt_blocks(k_ct: usize, n_ct: usize, s: usize, t: usize, f: &mut dyn FnMut(usize, usize)) {
     let mut src = 0;
     for jo in 0..n_ct / t {
         for ko in 0..k_ct / s {
@@ -376,13 +715,12 @@ fn for_each_pretiled(m: usize, n: usize, r: usize, t: usize, mut f: impl FnMut(u
     }
 }
 
-/// Decode one pre-tiled A tile to dense `m_ct × k_ct` i8 (division-free:
+/// Decode one pre-tiled A tile into dense `m_ct × k_ct` i8 (division-free:
 /// walk micro-tiles in source order — §Perf optimization 3).
-fn decode_pretiled_i8(words: &[u32], m_ct: usize, k_ct: usize, r: usize, s: usize) -> Vec<i8> {
+fn decode_pretiled_i8(words: &[u32], m_ct: usize, k_ct: usize, r: usize, s: usize, out: &mut [i8]) {
     // Read bytes straight out of the word image (no intermediate Vec —
     // §Perf optimization 4).
     let byte = |i: usize| (words[i >> 2] >> ((i & 3) * 8)) as u8;
-    let mut out = vec![0i8; m_ct * k_ct];
     let mut src = 0;
     for mo in 0..m_ct / r {
         for ko in 0..k_ct / s {
@@ -395,12 +733,17 @@ fn decode_pretiled_i8(words: &[u32], m_ct: usize, k_ct: usize, r: usize, s: usiz
             }
         }
     }
-    out
 }
 
-fn decode_pretiled_bf16(words: &[u32], m_ct: usize, k_ct: usize, r: usize, s: usize) -> Vec<f32> {
+fn decode_pretiled_bf16(
+    words: &[u32],
+    m_ct: usize,
+    k_ct: usize,
+    r: usize,
+    s: usize,
+    out: &mut [f32],
+) {
     let half = |i: usize| (words[i >> 1] >> ((i & 1) * 16)) as u16;
-    let mut out = vec![0f32; m_ct * k_ct];
     let mut src = 0;
     for mo in 0..m_ct / r {
         for ko in 0..k_ct / s {
@@ -413,21 +756,21 @@ fn decode_pretiled_bf16(words: &[u32], m_ct: usize, k_ct: usize, r: usize, s: us
             }
         }
     }
-    out
 }
 
 /// Dense micro-kernel: `acc += a @ b` (int32 accumulate — the MAC array).
 fn dense_mac_i32(a: &[i8], b: &[i8], acc: &mut [i32], m: usize, k: usize, n: usize) {
     for i in 0..m {
-        for kk in 0..k {
-            let av = a[i * k + kk] as i32;
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut acc[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let av = av as i32;
             if av == 0 {
                 continue;
             }
             let brow = &b[kk * n..(kk + 1) * n];
-            let crow = &mut acc[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j] as i32;
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += av * bv as i32;
             }
         }
     }
@@ -436,23 +779,15 @@ fn dense_mac_i32(a: &[i8], b: &[i8], acc: &mut [i32], m: usize, k: usize, n: usi
 /// Dense micro-kernel, f32 accumulators (the bf16 datapath).
 fn dense_mac_f32(a: &[f32], b: &[f32], acc: &mut [f32], m: usize, k: usize, n: usize) {
     for i in 0..m {
-        for kk in 0..k {
-            let av = a[i * k + kk];
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut acc[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
             let brow = &b[kk * n..(kk + 1) * n];
-            let crow = &mut acc[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += av * bv;
             }
         }
     }
-}
-
-fn pack_words(bytes: &[u8]) -> Vec<u32> {
-    assert!(bytes.len() % 4 == 0);
-    bytes
-        .chunks_exact(4)
-        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect()
 }
 
 /// Zero-pad a matrix image to `rows × cols` (same layout/elem size).
@@ -474,19 +809,19 @@ pub fn pad_matrix(src: &Matrix, rows: usize, cols: usize) -> Result<Matrix> {
     Ok(out)
 }
 
-/// Crop a row-major matrix image to `rows × cols`.
+/// Crop a row-major matrix image to `rows × cols` (word copies per row —
+/// both images' rows start word-aligned at column 0).
 fn crop_matrix(src: &Matrix, rows: usize, cols: usize, elem_bytes: usize) -> Result<Matrix> {
     if src.rows == rows && src.cols == cols {
         return Ok(src.clone());
     }
     let mut out = Matrix::zeroed(rows, cols, elem_bytes, Layout::RowMajor)?;
+    let src_row_w = src.row_words();
+    let dst_row_w = out.row_words();
     for i in 0..rows {
-        for j in 0..cols {
-            for b in 0..elem_bytes {
-                let v = src.get_byte((i * src.cols + j) * elem_bytes + b);
-                out.set_byte((i * cols + j) * elem_bytes + b, v);
-            }
-        }
+        let s0 = i * src_row_w;
+        let d0 = i * dst_row_w;
+        out.data[d0..d0 + dst_row_w].copy_from_slice(&src.data[s0..s0 + dst_row_w]);
     }
     Ok(out)
 }
@@ -509,17 +844,50 @@ mod tests {
             .unwrap()
     }
 
-    fn run_case(gen: Generation, p: Precision, layout: Layout, fidelity: Fidelity, m: usize, k: usize, n: usize, seed: u64) {
+    #[allow(clippy::too_many_arguments)]
+    fn run_case_opts(
+        gen: Generation,
+        p: Precision,
+        layout: Layout,
+        opts: ExecOptions,
+        m: usize,
+        k: usize,
+        n: usize,
+        seed: u64,
+    ) {
         let cfg = tiny_cfg(gen, p, layout);
         let mut a = Matrix::zeroed(m, k, p.ty_in(), Layout::RowMajor).unwrap();
         let mut b = Matrix::zeroed(k, n, p.ty_in(), layout).unwrap();
         refimpl::fill_random(&mut a, p, seed);
         refimpl::fill_random(&mut b, p, seed + 1);
-        let got = Executor::new(cfg, fidelity).execute(&a, &b).unwrap();
+        let got = Executor::with_options(cfg, opts).execute(&a, &b).unwrap();
         let want = refimpl::ref_gemm(&a, &b, p).unwrap();
         assert!(
             refimpl::matrices_equal(&got, &want, p),
-            "{gen}/{p}/{layout:?}/{fidelity:?} {m}x{k}x{n} mismatch"
+            "{gen}/{p}/{layout:?}/{opts:?} {m}x{k}x{n} mismatch"
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_case(
+        gen: Generation,
+        p: Precision,
+        layout: Layout,
+        fidelity: Fidelity,
+        m: usize,
+        k: usize,
+        n: usize,
+        seed: u64,
+    ) {
+        run_case_opts(
+            gen,
+            p,
+            layout,
+            ExecOptions { fidelity, ..Default::default() },
+            m,
+            k,
+            n,
+            seed,
         );
     }
 
@@ -550,6 +918,46 @@ mod tests {
             3 * nk,
             2 * nn,
             11,
+        );
+    }
+
+    #[test]
+    fn threaded_fan_out_matches_reference() {
+        // The scoped-thread fan-out on a grid taller than the worker
+        // count, both layouts.
+        for layout in [Layout::ColMajor, Layout::RowMajor] {
+            let cfg = tiny_cfg(Generation::Xdna, Precision::I8I8, layout);
+            let (nm, nk, nn) = cfg.native();
+            for threads in [2, 3, 8] {
+                run_case_opts(
+                    Generation::Xdna,
+                    Precision::I8I8,
+                    layout,
+                    ExecOptions { threads, ..Default::default() },
+                    3 * nm - 2,
+                    2 * nk,
+                    2 * nn,
+                    17,
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn no_reuse_ablation_matches_reference() {
+        // pack_reuse=false (the re-streaming baseline) stays correct —
+        // it is the hotpath bench's comparison point.
+        let cfg = tiny_cfg(Generation::Xdna, Precision::I8I16, Layout::ColMajor);
+        let (nm, nk, nn) = cfg.native();
+        run_case_opts(
+            Generation::Xdna,
+            Precision::I8I16,
+            Layout::ColMajor,
+            ExecOptions { pack_reuse: false, ..Default::default() },
+            2 * nm,
+            2 * nk,
+            2 * nn,
+            23,
         );
     }
 

@@ -20,7 +20,15 @@ pub fn out_matrix(m: usize, n: usize, p: Precision) -> Result<Matrix> {
 }
 
 /// Reference GEMM: `C = narrow(A @ B)`. `a` must be row-major; `b` may be
-/// row- or column-major (accessors hide the layout).
+/// row- or column-major (the packing hides the layout).
+///
+/// Blocked + packed: both operands are unpacked once into dense
+/// row-major panels ([`Matrix::packed_i8`] / [`Matrix::packed_f32`]) and
+/// the kernel runs row-slice inner loops — no per-element accessor calls
+/// on the O(m·k·n) path (this function dominates differential-test wall
+/// time). The reduction order per output element is ascending `k`,
+/// identical to the textbook per-element definition, so results are
+/// bit-identical to it for every precision (bf16 included).
 pub fn ref_gemm(a: &Matrix, b: &Matrix, p: Precision) -> Result<Matrix> {
     ensure!(a.layout == Layout::RowMajor, "A must be row-major");
     ensure!(a.cols == b.rows, "shape mismatch: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
@@ -28,24 +36,42 @@ pub fn ref_gemm(a: &Matrix, b: &Matrix, p: Precision) -> Result<Matrix> {
     let mut c = out_matrix(m, n, p)?;
     match p {
         Precision::Bf16 => {
+            let ap = a.packed_f32();
+            let bp = b.packed_f32();
+            let mut acc = vec![0f32; n];
             for i in 0..m {
-                for j in 0..n {
-                    let mut acc = 0f32;
-                    for kk in 0..k {
-                        acc += a.get_bf16(i, kk).to_f32() * b.get_bf16(kk, j).to_f32();
+                acc.fill(0.0);
+                let arow = &ap[i * k..(i + 1) * k];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let brow = &bp[kk * n..(kk + 1) * n];
+                    for (c, &bv) in acc.iter_mut().zip(brow) {
+                        *c += av * bv;
                     }
-                    c.set_bf16(i, j, Bf16::from_f32(acc));
+                }
+                for (j, &v) in acc.iter().enumerate() {
+                    c.set_bf16(i, j, Bf16::from_f32(v));
                 }
             }
         }
         _ => {
+            let ap = a.packed_i8();
+            let bp = b.packed_i8();
+            let mut acc = vec![0i32; n];
             for i in 0..m {
-                for j in 0..n {
-                    let mut acc = 0i32;
-                    for kk in 0..k {
-                        acc += a.get_i8(i, kk) as i32 * b.get_i8(kk, j) as i32;
+                acc.fill(0);
+                let arow = &ap[i * k..(i + 1) * k];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let av = av as i32;
+                    if av == 0 {
+                        continue; // exact: integer accumulation
                     }
-                    store_narrowed(&mut c, i, j, acc, p);
+                    let brow = &bp[kk * n..(kk + 1) * n];
+                    for (c, &bv) in acc.iter_mut().zip(brow) {
+                        *c += av * bv as i32;
+                    }
+                }
+                for (j, &v) in acc.iter().enumerate() {
+                    store_narrowed(&mut c, i, j, v, p);
                 }
             }
         }
@@ -165,6 +191,31 @@ mod tests {
         assert_eq!(c16.get_i16(0, 0), 32767);
         let c32 = ref_gemm(&a, &b, Precision::I8I32).unwrap();
         assert_eq!(c32.get_i32(0, 0), 64516);
+    }
+
+    #[test]
+    fn blocked_bf16_matches_per_element_definition_bitwise() {
+        // The packed row-slice kernel keeps ascending-k reduction order,
+        // so it is bit-identical to the textbook triple loop.
+        let (m, k, n) = (4usize, 8usize, 4usize);
+        let mut a = Matrix::zeroed(m, k, 2, Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(k, n, 2, Layout::ColMajor).unwrap();
+        fill_random(&mut a, Precision::Bf16, 5);
+        fill_random(&mut b, Precision::Bf16, 6);
+        let c = ref_gemm(&a, &b, Precision::Bf16).unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += a.get_bf16(i, kk).to_f32() * b.get_bf16(kk, j).to_f32();
+                }
+                assert_eq!(
+                    c.get_bf16(i, j).to_bits(),
+                    Bf16::from_f32(acc).to_bits(),
+                    "({i},{j})"
+                );
+            }
+        }
     }
 
     #[test]

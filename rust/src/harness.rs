@@ -7,6 +7,9 @@
 
 use crate::arch::{balanced_config, Generation};
 use crate::dtype::{Layout, Precision};
+use crate::gemm::exec::{ExecOptions, Executor};
+use crate::gemm::refimpl;
+use crate::mem::Matrix;
 use crate::optimizer::{optimize_balanced, solve_single_core, BalancedOptions, IpOptions};
 use crate::report::{Series, Table};
 use crate::sim::{simulate_gemm, trace, BdMode};
@@ -302,6 +305,50 @@ pub fn ablation_reconfig(gen: Generation) -> Table {
     t
 }
 
+/// One `functional_perf` measurement: the packed executor's wall-clock
+/// rates at a design point (DESIGN.md §9).
+#[derive(Clone, Copy, Debug)]
+pub struct FunctionalPerf {
+    pub secs_per_gemm: f64,
+    pub gemms_per_s: f64,
+    /// Effective DRAM-image traffic rate: (A + B + C) bytes per GEMM
+    /// over the measured wall clock.
+    pub gb_per_s: f64,
+    pub threads: usize,
+}
+
+/// Time the functional executor end to end (packed panels + scoped-thread
+/// fan-out) over `iters` GEMMs with deterministic random operands.
+/// Shared by `xdna-gemm exec` and the `hotpath` bench artifact.
+pub fn functional_perf(
+    cfg: &TilingConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    opts: ExecOptions,
+    iters: usize,
+) -> crate::Result<FunctionalPerf> {
+    let p = cfg.precision;
+    let mut a = Matrix::zeroed(m, k, p.ty_in(), Layout::RowMajor)?;
+    let mut b = Matrix::zeroed(k, n, p.ty_in(), cfg.b_layout)?;
+    refimpl::fill_random(&mut a, p, 1);
+    refimpl::fill_random(&mut b, p, 2);
+    let exec = Executor::with_options(*cfg, opts);
+    let iters = iters.max(1);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(exec.execute(&a, &b)?);
+    }
+    let secs = t0.elapsed().as_secs_f64() / iters as f64;
+    let bytes = ((m * k + k * n) * p.ty_in() + m * n * p.ty_out()) as f64;
+    Ok(FunctionalPerf {
+        secs_per_gemm: secs,
+        gemms_per_s: 1.0 / secs,
+        gb_per_s: bytes / secs / 1e9,
+        threads: opts.threads,
+    })
+}
+
 /// Drive a coordinator fleet over `trace` (cycled to `n` requests,
 /// request names suffixed with their index) and return the final fleet
 /// metrics after a drained shutdown. Shared by `xdna-gemm serve`, the
@@ -388,6 +435,31 @@ mod tests {
         assert_eq!(ablation_bd_overlap().rows.len(), 2);
         let t = ablation_reconfig(Generation::Xdna2);
         assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn functional_perf_reports_sane_rates() {
+        // A tiny design point (mirrors the executor unit-test config) so
+        // the measurement itself stays fast in debug builds.
+        let cfg = TilingConfig::new(
+            Generation::Xdna,
+            Precision::I8I8,
+            8,
+            16,
+            16,
+            32,
+            4,
+            4,
+            Layout::ColMajor,
+        )
+        .unwrap();
+        let (nm, nk, nn) = cfg.native();
+        let perf =
+            functional_perf(&cfg, nm, nk, nn, crate::gemm::exec::ExecOptions::default(), 1)
+                .unwrap();
+        assert!(perf.secs_per_gemm > 0.0);
+        assert!(perf.gemms_per_s > 0.0 && perf.gb_per_s > 0.0);
+        assert_eq!(perf.threads, 1);
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //! xdna-gemm simulate --gen G --precision P --m M --k K --n N [--rowmajor-b]
 //! xdna-gemm serve --requests N [--devices D] [--mix xdna:xdna2] [--gen G]
 //!                 [--window W] [--in-flight F] [--skew | --trace FILE]
+//!                 [--threads T --functional]
 //!                                             sharded coordinator load demo
+//! xdna-gemm exec [--gen G] [--precision P] [--m M] [--k K] [--n N]
+//!                [--threads T] [--iters I] [--rowmajor-b] [--bdchain]
+//!                [--no-pack]                  packed functional executor timing
 //! xdna-gemm plan [--gen G] [--precision P] [--seq S] [--layers L]
 //!                [--mixed] [--serve] [--devices D]
 //!                                             chain planner: fused vs isolated
@@ -25,15 +29,16 @@
 use anyhow::{bail, Result};
 
 use xdna_gemm::arch::Generation;
-use xdna_gemm::coordinator::{expand_mix, parse_mix, CoordinatorOptions};
+use xdna_gemm::coordinator::{expand_mix, parse_mix, Backend, CoordinatorOptions};
 use xdna_gemm::dtype::{Layout, Precision};
+use xdna_gemm::gemm::exec::{ExecOptions, Fidelity};
 use xdna_gemm::harness;
 use xdna_gemm::optimizer::{optimize_balanced, BalancedOptions};
 use xdna_gemm::sim::{simulate_gemm, BdMode};
 use xdna_gemm::util::cli::Args;
 use xdna_gemm::workload::TransformerConfig;
 
-const USAGE: &str = "usage: xdna-gemm <table1|table2|table3|fig6|fig7|fig8|ablations|optimize|simulate|serve|plan|artifacts> [options]";
+const USAGE: &str = "usage: xdna-gemm <table1|table2|table3|fig6|fig7|fig8|ablations|optimize|simulate|exec|serve|plan|artifacts> [options]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -148,6 +153,50 @@ fn main() -> Result<()> {
                 100.0 * r.trace.mac_utilization()
             );
         }
+        "exec" => {
+            // Drive the packed, parallel functional executor at a design
+            // point and report wall-clock rates (DESIGN.md §9).
+            let gen = parse_gen(args.get("gen").unwrap_or("xdna"))?;
+            let p = parse_precision(args.get("precision").unwrap_or("i8i8"))?;
+            let threads = args.usize_opt("threads", 1)?;
+            let iters = args.usize_opt("iters", 3)?;
+            let mut cfg = xdna_gemm::arch::balanced_config(gen, p);
+            if args.flag("rowmajor-b") {
+                cfg = cfg.with_b_layout(Layout::RowMajor);
+            }
+            let (nm, nk, nn) = cfg.native();
+            let m = args.usize_opt("m", nm)?;
+            let k = args.usize_opt("k", nk)?;
+            let n = args.usize_opt("n", nn)?;
+            let opts = ExecOptions {
+                fidelity: if args.flag("bdchain") { Fidelity::BdChain } else { Fidelity::Direct },
+                threads,
+                pack_reuse: !args.flag("no-pack"),
+            };
+            let perf = harness::functional_perf(&cfg, m, k, n, opts, iters)?;
+            println!(
+                "functional {m}x{k}x{n} on {} ({} threads, pack_reuse={}, {:?}):",
+                cfg.label(),
+                threads,
+                opts.pack_reuse,
+                opts.fidelity
+            );
+            println!(
+                "  {:.3} ms/GEMM | {:.2} GEMM/s | {:.3} GB/s",
+                perf.secs_per_gemm * 1e3,
+                perf.gemms_per_s,
+                perf.gb_per_s
+            );
+            if threads > 1 {
+                let serial_opts = ExecOptions { threads: 1, ..opts };
+                let serial = harness::functional_perf(&cfg, m, k, n, serial_opts, iters)?;
+                println!(
+                    "  speedup vs threads=1: {:.2}x ({:.3} ms serial)",
+                    serial.secs_per_gemm / perf.secs_per_gemm,
+                    serial.secs_per_gemm * 1e3
+                );
+            }
+        }
         "serve" => {
             let gen = parse_gen(args.get("gen").unwrap_or("xdna2"))?;
             let n = args.usize_opt("requests", 64)?;
@@ -166,6 +215,14 @@ fn main() -> Result<()> {
                 devices: expand_mix(&pattern, n_devices),
                 batch_window: args.usize_opt("window", 16)?,
                 max_in_flight: args.usize_opt("in-flight", 64)?,
+                // `--functional` runs real numerics through the packed
+                // executor; `--threads` fans its output tiles out.
+                backend: if args.flag("functional") {
+                    Backend::Functional
+                } else {
+                    Backend::SimOnly
+                },
+                exec_threads: args.usize_opt("threads", 1)?,
                 ..Default::default()
             };
             // Workload: a GGML-style trace file (`--trace shapes.txt`,

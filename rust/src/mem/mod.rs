@@ -120,6 +120,107 @@ impl Matrix {
     pub fn set_bf16(&mut self, i: usize, j: usize, v: Bf16) {
         self.set_i16(i, j, v.to_bits() as i16);
     }
+
+    /// Unpack storage row `sr` into i8 elements — word-at-a-time (LE
+    /// within words, exactly [`Self::get_byte`]'s order), not per-element.
+    fn unpack_storage_row_i8(&self, sr: usize, out: &mut [i8]) {
+        let w0 = sr * self.row_words();
+        for (wi, chunk) in out.chunks_mut(4).enumerate() {
+            let w = self.data[w0 + wi];
+            for (bi, o) in chunk.iter_mut().enumerate() {
+                *o = (w >> (8 * bi)) as u8 as i8;
+            }
+        }
+    }
+
+    /// Unpack storage row `sr` of a bf16 image into widened f32 elements.
+    fn unpack_storage_row_f32(&self, sr: usize, out: &mut [f32]) {
+        let w0 = sr * self.row_words();
+        for (wi, pair) in out.chunks_mut(2).enumerate() {
+            let w = self.data[w0 + wi];
+            pair[0] = Bf16::from_bits(w as u16).to_f32();
+            pair[1] = Bf16::from_bits((w >> 16) as u16).to_f32();
+        }
+    }
+
+    /// Row `i` of a row-major int8 image as a dense slice
+    /// (`out.len() == cols`) — the hot-loop replacement for per-element
+    /// `get_i8` walks.
+    pub fn row_i8(&self, i: usize, out: &mut [i8]) {
+        debug_assert!(self.layout == Layout::RowMajor && self.elem_bytes == 1);
+        debug_assert_eq!(out.len(), self.cols);
+        self.unpack_storage_row_i8(i, out);
+    }
+
+    /// Row `i` of a row-major bf16 image, widened to f32
+    /// (`out.len() == cols`).
+    pub fn row_bf16(&self, i: usize, out: &mut [f32]) {
+        debug_assert!(self.layout == Layout::RowMajor && self.elem_bytes == 2);
+        debug_assert_eq!(out.len(), self.cols);
+        self.unpack_storage_row_f32(i, out);
+    }
+
+    /// Column `j` of a column-major int8 image (its contiguous storage
+    /// row) — the packed panel view of a col-major B operand.
+    pub fn col_i8(&self, j: usize, out: &mut [i8]) {
+        debug_assert!(self.layout == Layout::ColMajor && self.elem_bytes == 1);
+        debug_assert_eq!(out.len(), self.rows);
+        self.unpack_storage_row_i8(j, out);
+    }
+
+    /// Column `j` of a column-major bf16 image, widened to f32.
+    pub fn col_bf16(&self, j: usize, out: &mut [f32]) {
+        debug_assert!(self.layout == Layout::ColMajor && self.elem_bytes == 2);
+        debug_assert_eq!(out.len(), self.rows);
+        self.unpack_storage_row_f32(j, out);
+    }
+
+    /// Dense logical-row-major i8 copy of the whole image (packs either
+    /// storage layout) — the packed-operand form of the reference GEMM.
+    pub fn packed_i8(&self) -> Vec<i8> {
+        debug_assert_eq!(self.elem_bytes, 1);
+        let mut out = vec![0i8; self.rows * self.cols];
+        match self.layout {
+            Layout::RowMajor => {
+                for i in 0..self.rows {
+                    self.row_i8(i, &mut out[i * self.cols..(i + 1) * self.cols]);
+                }
+            }
+            Layout::ColMajor => {
+                let mut col = vec![0i8; self.rows];
+                for j in 0..self.cols {
+                    self.col_i8(j, &mut col);
+                    for (i, &v) in col.iter().enumerate() {
+                        out[i * self.cols + j] = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Dense logical-row-major f32 copy of a bf16 image (either layout).
+    pub fn packed_f32(&self) -> Vec<f32> {
+        debug_assert_eq!(self.elem_bytes, 2);
+        let mut out = vec![0f32; self.rows * self.cols];
+        match self.layout {
+            Layout::RowMajor => {
+                for i in 0..self.rows {
+                    self.row_bf16(i, &mut out[i * self.cols..(i + 1) * self.cols]);
+                }
+            }
+            Layout::ColMajor => {
+                let mut col = vec![0f32; self.rows];
+                for j in 0..self.cols {
+                    self.col_bf16(j, &mut col);
+                    for (i, &v) in col.iter().enumerate() {
+                        out[i * self.cols + j] = v;
+                    }
+                }
+            }
+        }
+        out
+    }
 }
 
 /// On-chip buffer allocator for one tile's memory (L1 or L2): bump
@@ -232,6 +333,72 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn row_and_col_slices_match_element_accessors() {
+        prop_check("row/col slice views ≡ get_*", 20, |rng| {
+            let rows = 4 * (1 + rng.below(3));
+            let cols = 4 * (1 + rng.below(3));
+            for layout in [Layout::RowMajor, Layout::ColMajor] {
+                let mut m = Matrix::zeroed(rows, cols, 1, layout).unwrap();
+                for i in 0..rows {
+                    for j in 0..cols {
+                        m.set_i8(i, j, rng.i8());
+                    }
+                }
+                let packed = m.packed_i8();
+                for i in 0..rows {
+                    for j in 0..cols {
+                        assert_eq!(packed[i * cols + j], m.get_i8(i, j), "({i},{j})");
+                    }
+                }
+                match layout {
+                    Layout::RowMajor => {
+                        let mut row = vec![0i8; cols];
+                        m.row_i8(rows - 1, &mut row);
+                        assert_eq!(row, packed[(rows - 1) * cols..].to_vec());
+                    }
+                    Layout::ColMajor => {
+                        let mut col = vec![0i8; rows];
+                        m.col_i8(cols - 1, &mut col);
+                        for (i, &v) in col.iter().enumerate() {
+                            assert_eq!(v, m.get_i8(i, cols - 1));
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bf16_slices_widen_exactly() {
+        for layout in [Layout::RowMajor, Layout::ColMajor] {
+            let mut m = Matrix::zeroed(4, 4, 2, layout).unwrap();
+            for i in 0..4 {
+                for j in 0..4 {
+                    m.set_bf16(i, j, Bf16::from_f32((i * 4 + j) as f32 - 7.5));
+                }
+            }
+            let packed = m.packed_f32();
+            for i in 0..4 {
+                for j in 0..4 {
+                    assert_eq!(packed[i * 4 + j], m.get_bf16(i, j).to_f32());
+                }
+            }
+            let mut lane = vec![0f32; 4];
+            match layout {
+                Layout::RowMajor => m.row_bf16(2, &mut lane),
+                Layout::ColMajor => m.col_bf16(2, &mut lane),
+            }
+            for (idx, &v) in lane.iter().enumerate() {
+                let want = match layout {
+                    Layout::RowMajor => m.get_bf16(2, idx),
+                    Layout::ColMajor => m.get_bf16(idx, 2),
+                };
+                assert_eq!(v, want.to_f32());
+            }
+        }
     }
 
     #[test]

@@ -3,11 +3,16 @@
 //! Each bench target is a plain `main()` (harness = false) that builds a
 //! [`Bench`] and registers timed closures; output is a criterion-style
 //! `name  time: [min mean max]  (n samples)` line per case, plus optional
-//! paper-table rows emitted by the harness itself.
+//! paper-table rows emitted by the harness itself. When `$BENCH_JSON` is
+//! set, [`Bench::finish`] also writes every recorded case and throughput
+//! to that path — the machine-readable artifact `scripts/bench.sh` merges
+//! into `BENCH_PR3.json`.
 
+use std::cell::RefCell;
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};
 
+use super::json::{num, obj, s, Json};
 use super::stats;
 
 /// Re-export for bench bodies: prevent the optimizer from deleting work.
@@ -21,6 +26,9 @@ pub struct Bench {
     budget: Duration,
     /// Minimum sample count.
     min_samples: usize,
+    /// Everything measured so far, for the JSON artifact.
+    records: RefCell<Vec<Sample>>,
+    throughputs: RefCell<Vec<(String, f64, String)>>,
 }
 
 #[derive(Clone, Debug)]
@@ -42,6 +50,8 @@ impl Bench {
                 std::env::var("BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(500),
             ),
             min_samples: 10,
+            records: RefCell::new(Vec::new()),
+            throughputs: RefCell::new(Vec::new()),
         }
     }
 
@@ -83,12 +93,62 @@ impl Bench {
             fmt_time(s.max_s),
             s.samples
         );
+        self.records.borrow_mut().push(s.clone());
         s
     }
 
     /// Report a derived throughput metric alongside a case.
     pub fn throughput(&self, case: &str, value: f64, unit: &str) {
         println!("{:<48} thrpt: {value:.3} {unit}", format!("{}/{}", self.name, case));
+        self.throughputs.borrow_mut().push((case.to_string(), value, unit.to_string()));
+    }
+
+    /// Write every recorded case + throughput to `$BENCH_JSON` when the
+    /// env var is set (no-op otherwise). Call once at the end of a bench
+    /// `main()` — only targets that call it emit a record (currently
+    /// `hotpath` and `chain_vs_isolated`; `scripts/bench.sh` drives
+    /// those). When the path is an *existing* directory (or ends with
+    /// `/`), each group writes `<dir>/<group>.json` so multi-target
+    /// runs don't clobber a single file.
+    pub fn finish(&self) {
+        let Some(path) = std::env::var_os("BENCH_JSON") else { return };
+        let cases: Vec<Json> = self
+            .records
+            .borrow()
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", s(&r.name)),
+                    ("mean_s", num(r.mean_s)),
+                    ("min_s", num(r.min_s)),
+                    ("max_s", num(r.max_s)),
+                    ("stddev_s", num(r.stddev_s)),
+                    ("samples", num(r.samples as f64)),
+                ])
+            })
+            .collect();
+        let thrpt: Vec<Json> = self
+            .throughputs
+            .borrow()
+            .iter()
+            .map(|(name, value, unit)| {
+                obj(vec![("name", s(name)), ("value", num(*value)), ("unit", s(unit))])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("group", s(&self.name)),
+            ("cases", Json::Arr(cases)),
+            ("throughput", Json::Arr(thrpt)),
+        ]);
+        let mut path = std::path::PathBuf::from(path);
+        if path.is_dir() || path.as_os_str().to_string_lossy().ends_with('/') {
+            path.push(format!("{}.json", self.name));
+        }
+        if let Err(e) = std::fs::write(&path, doc.to_string_pretty()) {
+            eprintln!("bench: cannot write {}: {e}", path.display());
+        } else {
+            println!("bench: wrote {}", path.display());
+        }
     }
 }
 
@@ -121,6 +181,16 @@ mod tests {
         assert!(s.samples >= 10);
         assert!(s.mean_s > 0.0);
         assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s + 1e-12);
+    }
+
+    #[test]
+    fn records_accumulate_for_the_json_artifact() {
+        let b = Bench::new("selftest-json").with_budget_ms(5);
+        b.case("noop", || 1 + 1);
+        b.throughput("noop", 42.0, "x");
+        assert_eq!(b.records.borrow().len(), 1);
+        assert_eq!(b.throughputs.borrow().len(), 1);
+        assert_eq!(b.throughputs.borrow()[0].1, 42.0);
     }
 
     #[test]

@@ -147,26 +147,46 @@ impl InputChain {
     /// Returns `K/k_ct` pre-tiled tiles of `tile_words()` each — what the
     /// core consumes in reduction order.
     pub fn stream_panel(&self, dram: &[u32], row0: usize, ld_w: usize, k_total: usize) -> Result<Vec<Vec<u32>>> {
+        let tw = self.tile_words();
+        let mut flat = vec![0u32; k_total / self.k_ct * tw];
+        self.stream_panel_into(dram, row0, ld_w, k_total, &mut flat)?;
+        Ok(flat.chunks(tw).map(<[u32]>::to_vec).collect())
+    }
+
+    /// [`Self::stream_panel`] into a caller-owned flat buffer
+    /// (`(K/k_ct) · tile_words()` words, tiles back to back) with one
+    /// reused L2 scratch — the allocation-free form the packed executor
+    /// drives per panel.
+    pub fn stream_panel_into(
+        &self,
+        dram: &[u32],
+        row0: usize,
+        ld_w: usize,
+        k_total: usize,
+        out: &mut [u32],
+    ) -> Result<()> {
         self.validate(k_total)?;
+        let tw = self.tile_words();
+        ensure!(out.len() == k_total / self.k_ct * tw, "flat tile buffer mis-sized");
         let shim = self.shim_mm2s(row0, ld_w, k_total)?;
         let stream = shim.gather(dram)?;
 
-        let mut tiles = Vec::with_capacity(k_total / self.k_ct);
         let l2_words = self.l2_words();
-        for mt in stream.chunks(l2_words) {
-            // Hop 2: into L2.
-            let mut l2 = vec![0u32; l2_words];
+        let tiles_per_mt = self.k_mt / self.k_ct;
+        let mut l2 = vec![0u32; l2_words];
+        for (mi, mt) in stream.chunks(l2_words).enumerate() {
+            // Hop 2: into L2 (the scatter covers every word, so the
+            // scratch is safely reused across k_mt tiles).
             self.memtile_s2mm(0)?.scatter(&mut l2, mt)?;
             // Hop 3: L2 → stream of m_ct × s chunks.
-            let out = self.memtile_mm2s(0)?.gather(&l2)?;
-            // Hop 4: per k_ct tile into pre-tiled L1.
-            for ct in out.chunks(self.tile_words()) {
-                let mut l1 = vec![0u32; self.tile_words()];
-                self.comptile_s2mm(0)?.scatter(&mut l1, ct)?;
-                tiles.push(l1);
+            let chunks = self.memtile_mm2s(0)?.gather(&l2)?;
+            // Hop 4: per k_ct tile into its pre-tiled L1 slot.
+            for (ci, ct) in chunks.chunks(tw).enumerate() {
+                let ti = mi * tiles_per_mt + ci;
+                self.comptile_s2mm(0)?.scatter(&mut out[ti * tw..(ti + 1) * tw], ct)?;
             }
         }
-        Ok(tiles)
+        Ok(())
     }
 }
 
@@ -181,21 +201,34 @@ pub fn pretile_oracle(
     k0_w: usize,
     chain: &InputChain,
 ) -> Vec<u32> {
+    let mut out = vec![0u32; chain.tile_words()];
+    pretile_oracle_into(dram, ld_w, row0, k0_w, chain, &mut out);
+    out
+}
+
+/// [`pretile_oracle`] into a caller-owned `tile_words()` slice (word-run
+/// copies, no allocation — the packed executor's Direct-fidelity path).
+pub fn pretile_oracle_into(
+    dram: &[u32],
+    ld_w: usize,
+    row0: usize,
+    k0_w: usize,
+    chain: &InputChain,
+    out: &mut [u32],
+) {
     let s_w = chain.s_w();
     let k_ct_w = chain.k_ct_w();
-    let mut out = Vec::with_capacity(chain.tile_words());
+    let mut idx = 0;
     for mo in 0..chain.rows / chain.micro_r {
         for j in 0..k_ct_w / s_w {
             for mi in 0..chain.micro_r {
                 let row = row0 + mo * chain.micro_r + mi;
-                let col_w = k0_w + j * s_w;
-                for w in 0..s_w {
-                    out.push(dram[row * ld_w + col_w + w]);
-                }
+                let src = row * ld_w + k0_w + j * s_w;
+                out[idx..idx + s_w].copy_from_slice(&dram[src..src + s_w]);
+                idx += s_w;
             }
         }
     }
-    out
 }
 
 /// B row-major: single 4D MemTile transform (params s/t/k_ct/n_ct).
@@ -263,34 +296,64 @@ impl BRowMajorChain {
 
     /// Full chain for one `k_total × n_ct` panel → per-tile L1 images.
     pub fn stream_panel(&self, dram: &[u32], col0_w: usize, ld_w: usize, k_total: usize) -> Result<Vec<Vec<u32>>> {
+        let tw = self.tile_words();
+        let mut flat = vec![0u32; k_total / self.k_ct * tw];
+        self.stream_panel_into(dram, col0_w, ld_w, k_total, &mut flat)?;
+        Ok(flat.chunks(tw).map(<[u32]>::to_vec).collect())
+    }
+
+    /// [`Self::stream_panel`] into a caller-owned flat buffer with one
+    /// reused L2 scratch (the packed executor's per-panel form).
+    pub fn stream_panel_into(
+        &self,
+        dram: &[u32],
+        col0_w: usize,
+        ld_w: usize,
+        k_total: usize,
+        out: &mut [u32],
+    ) -> Result<()> {
         self.validate()?;
         ensure!(k_total % self.k_ct == 0);
+        let tw = self.tile_words();
+        ensure!(out.len() == k_total / self.k_ct * tw, "flat tile buffer mis-sized");
         let stream = self.shim_mm2s(col0_w, ld_w, k_total)?.gather(dram)?;
-        let mut tiles = Vec::new();
-        for ct in stream.chunks(self.tile_words()) {
-            let mut l2 = vec![0u32; self.tile_words()];
+        let mut l2 = vec![0u32; tw];
+        for (ti, ct) in stream.chunks(tw).enumerate() {
             self.memtile_s2mm(0)?.scatter(&mut l2, ct)?;
-            let out = self.memtile_mm2s(0)?.gather(&l2)?;
-            tiles.push(out); // CompTile S2MM is linear
+            let pre = self.memtile_mm2s(0)?.gather(&l2)?;
+            out[ti * tw..(ti + 1) * tw].copy_from_slice(&pre); // CompTile S2MM is linear
         }
-        Ok(tiles)
+        Ok(())
     }
 
     /// Direct oracle for one `k_ct × n_ct` tile at `(k0, col0_w)`.
     pub fn pretile_oracle(&self, dram: &[u32], ld_w: usize, k0: usize, col0_w: usize) -> Vec<u32> {
+        let mut out = vec![0u32; self.tile_words()];
+        self.pretile_oracle_into(dram, ld_w, k0, col0_w, &mut out);
+        out
+    }
+
+    /// [`Self::pretile_oracle`] into a caller-owned `tile_words()` slice.
+    pub fn pretile_oracle_into(
+        &self,
+        dram: &[u32],
+        ld_w: usize,
+        k0: usize,
+        col0_w: usize,
+        out: &mut [u32],
+    ) {
         let t_w = self.t_w();
-        let mut out = Vec::with_capacity(self.tile_words());
+        let mut idx = 0;
         for ko in 0..self.k_ct / self.micro_s {
             for jo in 0..self.n_ct / self.micro_t {
                 for ki in 0..self.micro_s {
                     let row = k0 + ko * self.micro_s + ki;
-                    for w in 0..t_w {
-                        out.push(dram[row * ld_w + col0_w + jo * t_w + w]);
-                    }
+                    let src = row * ld_w + col0_w + jo * t_w;
+                    out[idx..idx + t_w].copy_from_slice(&dram[src..src + t_w]);
+                    idx += t_w;
                 }
             }
         }
-        out
     }
 }
 
@@ -366,18 +429,42 @@ impl OutputChain {
         col0_w: usize,
         ld_w: usize,
     ) -> Result<()> {
+        for t in l1_tiles {
+            ensure!(t.len() == self.tile_words());
+        }
+        let flat = l1_tiles.concat();
+        self.drain_column_flat(&flat, l1_tiles.len(), dram, row0, col0_w, ld_w, &mut Vec::new())
+    }
+
+    /// [`Self::drain_column`] over a flat tile buffer
+    /// (`n_tiles · tile_words()` words, tiles back to back) with a
+    /// caller-owned L2 aggregation scratch — the packed executor's
+    /// per-column hot path (no allocation once the scratch is warm).
+    #[allow(clippy::too_many_arguments)]
+    pub fn drain_column_flat(
+        &self,
+        l1: &[u32],
+        n_tiles: usize,
+        dram: &mut [u32],
+        row0: usize,
+        col0_w: usize,
+        ld_w: usize,
+        l2: &mut Vec<u32>,
+    ) -> Result<()> {
         self.validate()?;
+        let tw = self.tile_words();
+        ensure!(l1.len() == n_tiles * tw, "flat C buffer mis-sized");
         // Aggregate the column's tiles into one L2 region (Sec. 4.2.2:
         // MemTile S2MM channels collect four C tiles before the Shim
-        // drains them).
-        let mut l2 = vec![0u32; l1_tiles.len() * self.tile_words()];
-        for (i, t) in l1_tiles.iter().enumerate() {
-            ensure!(t.len() == self.tile_words());
-            self.memtile_s2mm(i * self.tile_words())?.scatter(&mut l2, t)?;
+        // drains them). The scatters cover every word, so the scratch is
+        // safely reused across columns.
+        l2.resize(n_tiles * tw, 0);
+        for (i, t) in l1.chunks(tw).enumerate() {
+            self.memtile_s2mm(i * tw)?.scatter(l2, t)?;
         }
         // CompTile MM2S was linear (pre-tiled already); Shim writes rows.
-        let shim = self.shim_s2mm(l1_tiles.len(), row0, col0_w, ld_w)?;
-        shim.scatter(dram, &l2)
+        let shim = self.shim_s2mm(n_tiles, row0, col0_w, ld_w)?;
+        shim.scatter(dram, l2)
     }
 
     /// Oracle: element (i, j) of the row-major tile from a pre-tiled image.

@@ -6,10 +6,14 @@
 //! f32 in the same reduction order, so the observed distance is 0, but
 //! the contract we guarantee is ≤ 2 ULP). Reproduce failures with
 //! `PROP_SEED=<seed>`.
+//!
+//! Plus the PR3 determinism suite: the packed, parallel backend must be
+//! bit-identical across thread counts {1, 2, 8} and with panel reuse
+//! disabled (the hotpath ablation baseline).
 
 use xdna_gemm::arch::Generation;
 use xdna_gemm::dtype::{Layout, Precision};
-use xdna_gemm::gemm::exec::{Executor, Fidelity};
+use xdna_gemm::gemm::exec::{ExecOptions, Executor, Fidelity};
 use xdna_gemm::gemm::refimpl;
 use xdna_gemm::mem::Matrix;
 use xdna_gemm::tiling::TilingConfig;
@@ -50,6 +54,7 @@ fn max_ulp(x: &Matrix, y: &Matrix) -> u32 {
 }
 
 /// One differential case: executor vs reference at `m × k × n`.
+#[allow(clippy::too_many_arguments)]
 fn diff_case(
     gen: Generation,
     p: Precision,
@@ -132,6 +137,63 @@ fn bd_chain_fidelity_matches_reference_too() {
         let cfg = tiny_cfg(Generation::Xdna, p, layout);
         let (nm, nk, nn) = cfg.native();
         diff_case(Generation::Xdna, p, layout, Fidelity::BdChain, nm - 1, nk, nn, 0xBDC);
+    }
+}
+
+#[test]
+fn parallel_executor_is_deterministic_across_thread_counts() {
+    // The determinism contract of the packed backend: for threads
+    // {1, 2, 8} the result bits are identical — bit-exact for int8,
+    // identical bf16 bit patterns (each tile's reduction order is fixed;
+    // threads only partition the tile-row grid). Covers both layouts,
+    // an aligned multi-tile grid, and a ragged padding shape.
+    for p in [Precision::I8I8, Precision::Bf16] {
+        for layout in [Layout::ColMajor, Layout::RowMajor] {
+            let cfg = tiny_cfg(Generation::Xdna2, p, layout);
+            let (nm, nk, nn) = cfg.native();
+            for (m, k, n) in [(2 * nm, 2 * nk, 2 * nn), (2 * nm - 3, nk + 4, 2 * nn - 4)] {
+                let mut a = Matrix::zeroed(m, k, p.ty_in(), Layout::RowMajor).unwrap();
+                let mut b = Matrix::zeroed(k, n, p.ty_in(), layout).unwrap();
+                refimpl::fill_random(&mut a, p, 0xDE7 + m as u64);
+                refimpl::fill_random(&mut b, p, 0x0DD + n as u64);
+                let serial = Executor::new(cfg, Fidelity::Direct).execute(&a, &b).unwrap();
+                for threads in [2usize, 8] {
+                    let par = Executor::with_options(
+                        cfg,
+                        ExecOptions { threads, ..Default::default() },
+                    )
+                    .execute(&a, &b)
+                    .unwrap();
+                    // matrices_equal compares raw bf16 bit patterns.
+                    assert!(
+                        refimpl::matrices_equal(&par, &serial, p),
+                        "{p}/{layout:?} {m}x{k}x{n} differs at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_reuse_is_bit_identical_to_restreaming() {
+    // The hotpath ablation baseline (pack_reuse=false) and the packed
+    // hot path must produce the same bytes — reuse is a pure perf
+    // optimization.
+    for p in [Precision::I8I16, Precision::Bf16] {
+        let cfg = tiny_cfg(Generation::Xdna, p, Layout::ColMajor);
+        let (nm, nk, nn) = cfg.native();
+        let (m, k, n) = (2 * nm - 1, 2 * nk, 2 * nn);
+        let mut a = Matrix::zeroed(m, k, p.ty_in(), Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(k, n, p.ty_in(), Layout::ColMajor).unwrap();
+        refimpl::fill_random(&mut a, p, 0xACE);
+        refimpl::fill_random(&mut b, p, 0xBEE);
+        let packed = Executor::new(cfg, Fidelity::Direct).execute(&a, &b).unwrap();
+        let restreamed =
+            Executor::with_options(cfg, ExecOptions { pack_reuse: false, ..Default::default() })
+                .execute(&a, &b)
+                .unwrap();
+        assert!(refimpl::matrices_equal(&packed, &restreamed, p), "{p}");
     }
 }
 

@@ -1,0 +1,53 @@
+#!/usr/bin/env bash
+# Perf-trajectory artifact (ISSUE 3): run the hotpath and
+# chain_vs_isolated benches with JSON recording enabled and merge them
+# into BENCH_PR3.json — GEMM/s, functional GB/s, and the packing /
+# threading speedups over the re-streaming serial executor — so future
+# PRs can diff against a machine-readable baseline.
+#
+# usage: scripts/bench.sh [out.json]     (default: BENCH_PR3.json)
+#        BENCH_MS=500 scripts/bench.sh   (longer per-case budget)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+out="${1:-BENCH_PR3.json}"
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+export BENCH_MS="${BENCH_MS:-200}"
+
+echo "==> cargo bench --bench hotpath"
+BENCH_JSON="$tmp/hotpath.json" cargo bench --bench hotpath
+
+echo "==> cargo bench --bench chain_vs_isolated"
+BENCH_JSON="$tmp/chain.json" cargo bench --bench chain_vs_isolated
+
+echo "==> merging into $out"
+python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$out" <<'PY'
+import json
+import sys
+
+hot, chain, out = sys.argv[1], sys.argv[2], sys.argv[3]
+groups = [json.load(open(p)) for p in (hot, chain)]
+
+
+def thrpt(group, name):
+    for t in group.get("throughput", []):
+        if t["name"] == name:
+            return t["value"]
+    return None
+
+
+summary = {
+    "artifact": "BENCH_PR3",
+    "description": "packed+parallel functional executor vs re-streaming serial baseline",
+    "gemms_per_s": thrpt(groups[0], "executor_gemms_per_s"),
+    "functional_gb_per_s": thrpt(groups[0], "executor_functional_gb_s"),
+    "packing_speedup_serial": thrpt(groups[0], "executor_packing_speedup"),
+    "threads8_speedup": thrpt(groups[0], "executor_threads8_speedup"),
+    "groups": groups,
+}
+with open(out, "w") as f:
+    json.dump(summary, f, indent=2)
+print(f"wrote {out}")
+PY
