@@ -59,7 +59,10 @@ fn main() -> Result<()> {
                 format!("{}x{}x{}", r.sim.pm, r.sim.pk, r.sim.pn),
                 format!("{:.3}", r.device_s * 1e3),
                 format!("{:.2}", r.sim.tops),
-                format!("{:.0}%", 100.0 * g.ops() / (2.0 * r.sim.pm as f64 * r.sim.pk as f64 * r.sim.pn as f64)),
+                format!("{:.0}%", {
+                    let padded = 2.0 * r.sim.pm as f64 * r.sim.pk as f64 * r.sim.pn as f64;
+                    100.0 * g.ops() / padded
+                }),
             ]);
         }
         t.print();
@@ -67,7 +70,8 @@ fn main() -> Result<()> {
         let m = coord.shutdown();
         let pass_ms = m.total_device_s() * 1e3;
         println!(
-            "full prefill pass: {:.2} ms on device | sustained {:.2} TOPS | {} reconfiguration(s)\n",
+            "full prefill pass: {:.2} ms on device | sustained {:.2} TOPS | \
+             {} reconfiguration(s)\n",
             pass_ms,
             m.device_tops(),
             m.reconfigurations()

@@ -39,7 +39,10 @@ fn main() -> Result<()> {
         .collect();
     let t0 = std::time::Instant::now();
     let out = rt.execute_f32("quickstart_bf16", &[&af, &bf])?;
-    println!("PJRT execute: {:.1} ms (compile included on first call)", t0.elapsed().as_secs_f64() * 1e3);
+    println!(
+        "PJRT execute: {:.1} ms (compile included on first call)",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
 
     // --- 2. cross-check: reference + worst-case error --------------------
     let want = refimpl::ref_gemm(&a, &b, Precision::Bf16)?;

@@ -1,0 +1,232 @@
+"""Numerical cross-check of the Rust-side native-bfp16 layer (ISSUE 4).
+
+Self-contained transliteration of the pieces of `rust/src/{sim,tiling,
+dtype_bfp16}` that the bfp16 path depends on, validated against the
+paper's published rows and then used to pin the numbers the Rust tests
+assert: the ≥1.5x bfp16-vs-bf16 speedup on XDNA2 at the Table-3 bf16
+shape, the shipped balanced configs' validity, the planner fused-edge
+goldens (incl. the XDNA2 knife-edge), and the block codec's error
+bound. If a constant changes on the Rust side, change it here in the
+same commit — this file is the independent recomputation, not a copy.
+"""
+
+import math
+
+import numpy as np
+
+SPECS = {
+    "xdna": dict(rows=4, cols=4, l1=64 * 1024 - 1024, l2=512 * 1024, clock=1.0e9,
+                 dma=4.0, neighbor=False, dispatch=0.5e-3),
+    "xdna2": dict(rows=4, cols=8, l1=64 * 1024 - 1024, l2=512 * 1024, clock=1.8e9,
+                  dma=8.0, neighbor=True, dispatch=0.1e-3),
+}
+PEAK = {("xdna2", "bf16"): 192.0, ("xdna2", "bfp16"): 512.0,
+        ("xdna", "bf16"): 128.0, ("xdna", "bfp16"): 128.0,
+        ("xdna", "i8i8"): 256.0, ("xdna2", "i8i8"): 512.0}
+BETA = {("xdna2", "bf16"): 0.115, ("xdna2", "bfp16"): 0.085,
+        ("xdna", "bf16"): 0.117, ("xdna", "bfp16"): 0.13,
+        ("xdna", "i8i8"): 0.0895, ("xdna2", "i8i8"): 0.068}
+IN_B = {"i8i8": 1.0, "bf16": 2.0, "bfp16": 1.5}
+OUT_B = {"i8i8": 1.0, "bf16": 2.0, "bfp16": 1.5}
+DRAM = {"xdna": (32.4e9, 435.0, 16.0e9), "xdna2": (70.5e9, 178.0, 57.6e9)}
+
+# Mirrors rust/src/arch.rs::balanced_config (the rows this file pins).
+CFG = {
+    ("xdna", "i8i8"): (112, 112, 112, 448),
+    ("xdna2", "i8i8"): (144, 72, 144, 432),
+    ("xdna", "bf16"): (96, 56, 96, 224),
+    ("xdna2", "bf16"): (112, 48, 96, 384),
+    ("xdna", "bfp16"): (100, 104, 72, 312),
+    ("xdna2", "bfp16"): (140, 40, 144, 440),
+}
+
+
+def round_up(x, q):
+    return -(-x // q) * q
+
+
+def bw_eff(gen, run):
+    mx, x0, cap = DRAM[gen]
+    return min(mx * run / (run + x0), cap)
+
+
+def simulate(gen, p, cfg, m, k, n):
+    """Transliteration of sim::engine::simulate_gemm (Overlapped mode)."""
+    m_ct, k_ct, n_ct, k_mt = cfg
+    s = SPECS[gen]
+    nm, nn = m_ct * s["rows"], n_ct * s["cols"]
+    pm, pk, pn = round_up(m, nm), round_up(k, k_mt), round_up(n, nn)
+    kc = m_ct * k_ct * n_ct / PEAK[(gen, p)] + BETA[(gen, p)] * m_ct * n_ct
+    tiles = (pm // nm) * (pn // nn)
+    zero = m_ct * n_ct * OUT_B[p] / 128.0
+    drain = m_ct * n_ct * OUT_B[p] / s["dma"]
+    t_comp = tiles * ((pk // k_ct) * kc + zero + drain) / s["clock"]
+    mkn = pm * pk * pn
+    a_bytes = mkn * IN_B[p] / (n_ct * s["cols"])
+    b_bytes = mkn * IN_B[p] / (m_ct * s["rows"])
+    c_bytes = pm * pn * OUT_B[p]
+    run = k_mt * IN_B[p]
+    c_run = n_ct * OUT_B[p] * (2.8 if gen == "xdna" else 1.45)
+    t_mem = max((a_bytes + b_bytes) / bw_eff(gen, run), c_bytes / bw_eff(gen, c_run))
+    a_first = s["rows"] * m_ct * k_mt * IN_B[p]
+    b_first = s["cols"] * k_mt * n_ct * IN_B[p]
+    t_pro = (a_first + b_first) / bw_eff(gen, run)
+    t_total = max(t_comp, t_mem) + t_pro + s["dispatch"]
+    return 2.0 * m * k * n / t_total / 1e12
+
+
+def l1_bytes(p, m, k, n):
+    return (2 * m * k + 2 * k * n + m * n) * IN_B[p] if p != "i8i8" else 0
+
+
+def l2_usage(gen, p, cfg):
+    m_ct, k_ct, n_ct, k_mt = cfg
+    s = SPECS[gen]
+    a = m_ct * k_mt * IN_B[p]
+    b = k_mt * n_ct * IN_B[p]
+    c = s["rows"] * m_ct * n_ct * OUT_B[p]
+    used = s["cols"] * (2 * b + c) + s["rows"] * 2 * a
+    return used, s["cols"] * s["l2"], (2 * a + 2 * b + c, 2 * b + c)
+
+
+def test_transliteration_reproduces_published_rows():
+    # Anchor: the same formulas reproduce the paper's bold rows, so the
+    # bfp16 projections below rest on a validated model.
+    for gen, p, size, paper in [
+        ("xdna", "i8i8", (4032, 4032, 4032), 6.52),
+        ("xdna2", "i8i8", (4032, 4320, 4608), 37.35),
+        ("xdna2", "bf16", (4032, 4224, 4608), 14.52),
+    ]:
+        got = simulate(gen, p, CFG[(gen, p)], *size)
+        assert abs(got - paper) / paper < 0.055, f"{gen}/{p}: {got} vs {paper}"
+
+
+def test_bfp16_configs_fit_and_speedup_holds():
+    # The shipped bfp16 balanced configs respect L1/L2 (12 bits/value on
+    # every buffer — the padded wire format)...
+    for gen in ["xdna", "xdna2"]:
+        m, k, n, kmt = CFG[(gen, "bfp16")]
+        assert m % 4 == 0 and k % 8 == 0 and n % 8 == 0 and kmt % k == 0
+        assert l1_bytes("bfp16", m, k, n) <= SPECS[gen]["l1"]
+        used, cap, (even, odd) = l2_usage(gen, "bfp16", CFG[(gen, "bfp16")])
+        assert used <= cap
+        if SPECS[gen]["neighbor"]:
+            assert even + odd <= 2 * SPECS[gen]["l2"]
+        else:
+            assert even <= SPECS[gen]["l2"]
+    # ...and the acceptance bar: ≥1.5x over the bf16 balanced design on
+    # XDNA2 at the paper's Table-3 bf16 shape (rust: sim::engine tests).
+    bf = simulate("xdna2", "bf16", CFG[("xdna2", "bf16")], 4032, 4224, 4608)
+    bfp = simulate("xdna2", "bfp16", CFG[("xdna2", "bfp16")], 4032, 4224, 4608)
+    assert bfp / bf >= 1.5, f"speedup {bfp / bf:.3f}"
+    assert bfp / bf <= 2.3
+
+
+def test_fused_edge_goldens_including_the_knife_edge():
+    # Mirrors plan::schedule::overrides_for on the default transformer
+    # layer; the values are the goldens rust/tests/plan_golden.rs pins.
+    def fused(gen, p):
+        cfg = CFG[(gen, p)]
+        m_ct, k_ct, n_ct, k_mt = cfg
+        s = SPECS[gen]
+        nm, nn = m_ct * s["rows"], n_ct * s["cols"]
+        used, cap, _ = l2_usage(gen, p, cfg)
+        headroom = cap - used
+        ops = [(512, 768, 2304), (512, 768, 768), (512, 768, 3072), (512, 3072, 768)]
+        edges = [False, False, True, True]
+        held = 0
+        count = 0
+        for i in range(4):
+            fused_in = 0
+            if edges[i]:
+                pm = round_up(ops[i - 1][0], nm)
+                pn = round_up(ops[i - 1][2], nn)
+                cb = pm * pn * OUT_B[p]
+                if cb + held <= headroom:
+                    count += 1
+                    fused_in = cb
+            held = fused_in
+        return count, headroom
+
+    assert fused("xdna", "i8i8")[0] == 1
+    assert fused("xdna2", "i8i8")[0] == 1
+    assert fused("xdna", "bf16")[0] == 0
+    assert fused("xdna2", "bf16")[0] == 1
+    assert fused("xdna", "bfp16")[0] == 1
+    # The XDNA2 bfp16 knife-edge: attn_out's padded C (560·1152·1.5 =
+    # 967 680 B) misses the design's headroom by 896 bytes.
+    count, headroom = fused("xdna2", "bfp16")
+    assert count == 0
+    assert headroom == 966784
+    assert round_up(512, 560) * round_up(768, 1152) * 1.5 == 967680
+
+
+# --- block codec (mirrors dtype_bfp16.rs with the clamped-exponent fix) --
+
+
+def encode(vals):
+    v = np.asarray(vals, np.float32)
+    mx = float(np.max(np.abs(v)))
+    if mx == 0.0 or not math.isfinite(mx):
+        return 0, np.zeros(8, np.int8)
+    # top clamp 254: at 255 the block max would decode to 2^128 = inf
+    biased = int(np.clip(math.floor(math.log2(mx)) + 127, 0, 254))
+    scale = np.float32(2.0 ** (biased - 133))
+    m = np.clip(np.round(v / scale), -128, 127).astype(np.int8)
+    return biased, m
+
+
+def decode(e, m):
+    return (m.astype(np.float32) * np.float32(2.0 ** (e - 133))).astype(np.float32)
+
+
+def test_block_codec_roundtrip_bound_and_denormal_edge():
+    rng = np.random.default_rng(7)
+    worst = 0.0
+    for _ in range(500):
+        s = 2.0 ** rng.integers(-110, 110)
+        v = (rng.standard_normal(8) * s).astype(np.float32)
+        e, m = encode(v)
+        back = decode(e, m)
+        mx = np.max(np.abs(v))
+        if mx > 0:
+            worst = max(worst, float(np.max(np.abs(back - v)) / mx))
+    assert worst <= (0.5 / 64) * 1.001, worst
+    # Denormal-range blocks: the clamped exponent keeps decode in the
+    # right binade (quantize toward zero, never a 64x blow-up).
+    e, m = encode([1e-40, 2e-41, 0, 0, 0, 0, 0, 0])
+    assert e == 0
+    assert np.max(np.abs(decode(e, m))) <= 2e-40
+
+
+def test_tiled_f32_reduction_is_bit_identical_to_reference_order():
+    # The executor reduces per k_ct tile in ascending order; the
+    # reference runs one flat ascending-k loop. Same adds, same order,
+    # same f32 bits — the bit-exactness contract of exec_diff's bfp16
+    # rows, checked here in exact float32 emulation.
+    rng = np.random.default_rng(3)
+    m, k, n, kct = 4, 64, 8, 16
+    a = np.zeros((m, k), np.float32)
+    b = np.zeros((k, n), np.float32)
+    for i in range(m):
+        for b0 in range(0, k, 8):
+            e, mm = encode(rng.standard_normal(8).astype(np.float32))
+            a[i, b0:b0 + 8] = decode(e, mm)
+    for j in range(n):
+        for b0 in range(0, k, 8):
+            e, mm = encode(rng.standard_normal(8).astype(np.float32))
+            b[b0:b0 + 8, j] = decode(e, mm)
+
+    def scalar(order):
+        c = np.zeros((m, n), np.float32)
+        for i in range(m):
+            for j in range(n):
+                acc = np.float32(0)
+                for kk in order:
+                    acc = np.float32(acc + np.float32(a[i, kk] * b[kk, j]))
+                c[i, j] = acc
+        return c
+
+    flat = scalar(range(k))
+    tiled = scalar([t + kk for t in range(0, k, kct) for kk in range(kct)])
+    assert np.array_equal(flat.view(np.uint32), tiled.view(np.uint32))

@@ -38,7 +38,8 @@ fn main() {
     for gen in Generation::ALL {
         for p in [Precision::I8I8, Precision::Bf16] {
             for seq in [512usize, 64] {
-                let cfg = TransformerConfig { precision: p, seq, n_layers: 4, ..Default::default() };
+                let cfg =
+                    TransformerConfig { precision: p, seq, n_layers: 4, ..Default::default() };
                 let chains = transformer_chains(&cfg);
                 let (fused, isolated) = reports(gen, &chains);
                 assert!(

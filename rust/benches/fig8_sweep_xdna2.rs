@@ -26,7 +26,8 @@ fn main() {
         };
         let gap = 100.0 * (mean(&col) / mean(&row) - 1.0);
         println!(
-            "{}: peak {:.2} TOPS (paper {paper_peak}) | col-over-row {gap:.1}% (paper {paper_gap}%)\n",
+            "{}: peak {:.2} TOPS (paper {paper_peak}) | col-over-row {gap:.1}% \
+             (paper {paper_gap}%)\n",
             p.paper_name(),
             col.max_y()
         );

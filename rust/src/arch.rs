@@ -113,17 +113,24 @@ impl NpuSpec {
     /// on XDNA2 the bf16-on-bfp16 emulation reaches ~192 MACs/cycle
     /// effective (Sec. 5.1, Table 1 fits; see DESIGN.md §5.1). The
     /// int8→int32 mode pays a wider output shuffle (Table 1: 192/384
-    /// MACs/cycle ceilings → effective peak 224/448).
+    /// MACs/cycle ceilings → effective peak 224/448). *Native* bfp16 runs
+    /// XDNA2's block datapath at the full int8-class 512 (Sec. 5.3.4 —
+    /// the whole motivation for the DESIGN.md §10 path); XDNA has no
+    /// bfp16 datapath, so it executes bfp16 operands by decoding blocks
+    /// to bf16 in-core at the bf16 rate (keeps heterogeneous fleets
+    /// total: any request runs anywhere, natively fast only on XDNA2).
     pub fn peak_macs_per_cycle(&self, p: Precision) -> f64 {
         match (self.gen, p) {
             (Generation::Xdna, Precision::I8I8) => 256.0,
             (Generation::Xdna, Precision::I8I16) => 256.0,
             (Generation::Xdna, Precision::I8I32) => 224.0,
             (Generation::Xdna, Precision::Bf16) => 128.0,
+            (Generation::Xdna, Precision::Bfp16) => 128.0,
             (Generation::Xdna2, Precision::I8I8) => 512.0,
             (Generation::Xdna2, Precision::I8I16) => 512.0,
             (Generation::Xdna2, Precision::I8I32) => 448.0,
             (Generation::Xdna2, Precision::Bf16) => 192.0,
+            (Generation::Xdna2, Precision::Bfp16) => 512.0,
         }
     }
 
@@ -191,16 +198,23 @@ pub static XDNA2: NpuSpec = NpuSpec {
 /// the `k_mt` choices of Sec. 5.2.2). These are also what
 /// `optimizer::balanced` re-derives and what `python/compile/configs.py`
 /// ships as AOT artifacts (consistency checked in `rust/tests/manifest.rs`).
+///
+/// The bfp16 rows have no paper counterpart (native bfp16 is the
+/// Sec. 5.3.4 future work this crate implements): they are this repo's
+/// own balanced-search winners under the calibrated simulator, validated
+/// by `optimizer::balanced` tests and the `bfp16_vs_bf16` bench.
 pub fn balanced_config(gen: Generation, p: Precision) -> TilingConfig {
     let (m_ct, k_ct, n_ct, k_mt) = match (gen, p) {
         (Generation::Xdna, Precision::I8I8) => (112, 112, 112, 448),
         (Generation::Xdna, Precision::I8I16) => (96, 112, 96, 448),
         (Generation::Xdna, Precision::I8I32) => (80, 88, 96, 352),
         (Generation::Xdna, Precision::Bf16) => (96, 56, 96, 224),
+        (Generation::Xdna, Precision::Bfp16) => (100, 104, 72, 312),
         (Generation::Xdna2, Precision::I8I8) => (144, 72, 144, 432),
         (Generation::Xdna2, Precision::I8I16) => (128, 72, 112, 432),
         (Generation::Xdna2, Precision::I8I32) => (96, 64, 96, 384),
         (Generation::Xdna2, Precision::Bf16) => (112, 48, 96, 384),
+        (Generation::Xdna2, Precision::Bfp16) => (140, 40, 144, 440),
     };
     let spec = gen.spec();
     TilingConfig::new(
@@ -256,11 +270,30 @@ mod tests {
     #[test]
     fn balanced_configs_valid_for_all() {
         for gen in Generation::ALL {
-            for p in Precision::ALL {
+            for p in Precision::ALL_EXTENDED {
                 let cfg = balanced_config(gen, p);
                 assert_eq!(cfg.m_rows, 4);
                 assert_eq!(cfg.n_cols, gen.spec().shim_cols);
             }
         }
+    }
+
+    #[test]
+    fn native_bfp16_runs_at_the_int8_class_rate() {
+        // Table 1 / Sec. 5.3.4: XDNA2's datapath is bfp16-native — the
+        // bf16 mode (158-192 MACs/cycle) is an *emulation* on it; the
+        // native path hits the int8-class 512. XDNA has no bfp16
+        // datapath and decodes to bf16 (128).
+        assert_eq!(XDNA2.peak_macs_per_cycle(Precision::Bfp16), 512.0);
+        assert_eq!(
+            XDNA2.peak_macs_per_cycle(Precision::Bfp16),
+            XDNA2.peak_macs_per_cycle(Precision::I8I8)
+        );
+        let bf16 = XDNA2.peak_macs_per_cycle(Precision::Bf16);
+        assert!(XDNA2.peak_macs_per_cycle(Precision::Bfp16) > 2.0 * bf16);
+        assert_eq!(
+            XDNA.peak_macs_per_cycle(Precision::Bfp16),
+            XDNA.peak_macs_per_cycle(Precision::Bf16)
+        );
     }
 }

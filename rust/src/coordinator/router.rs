@@ -27,9 +27,25 @@ pub struct DesignKey {
 }
 
 impl DesignKey {
-    /// The design a request needs: its precision/layout bucket.
+    /// The design a request needs: its precision/layout bucket
+    /// (canonicalized — see [`Self::normalized`]).
     pub fn for_shape(shape: &GemmShape) -> DesignKey {
-        DesignKey { precision: shape.precision, b_layout: shape.b_layout }
+        DesignKey { precision: shape.precision, b_layout: shape.b_layout }.normalized()
+    }
+
+    /// The canonical key for design derivation: bfp16 has exactly one
+    /// valid layout (column-major — blocks run along K), so a row-major
+    /// bfp16 key — constructible programmatically, rejected by every
+    /// trace path — maps to the column-major design. A functional
+    /// request actually carrying row-major bfp16 operands then fails
+    /// the executor's layout check and is poisoned per request, instead
+    /// of panicking a leader inside `balanced_config(..).with_b_layout`.
+    pub fn normalized(self) -> DesignKey {
+        if self.precision == Precision::Bfp16 {
+            DesignKey { b_layout: Layout::ColMajor, ..self }
+        } else {
+            self
+        }
     }
 }
 
@@ -120,8 +136,11 @@ impl DesignCache {
     }
 
     /// Resident design for `key`, deriving the balanced default on a miss
-    /// (evicting the least-recently-used entry when bounded).
+    /// (evicting the least-recently-used entry when bounded). Keys are
+    /// canonicalized first ([`DesignKey::normalized`]), so no key can
+    /// force derivation of an invalid design.
     pub fn get(&mut self, key: DesignKey) -> &TilingConfig {
+        let key = key.normalized();
         if self.designs.contains_key(&key) {
             self.stats.hits += 1;
             self.touch(key);
@@ -135,6 +154,7 @@ impl DesignCache {
     /// Pre-load `key`'s design without touching the hit/miss counters
     /// (the warmup path: residency is being arranged, not requested).
     pub fn warm(&mut self, key: DesignKey) {
+        let key = key.normalized();
         if self.designs.contains_key(&key) {
             self.touch(key);
         } else {
@@ -438,6 +458,51 @@ mod tests {
         // Pre-warmed: every get above was a hit.
         assert_eq!(c.stats().misses, 0);
         assert_eq!(c.stats().hits, 9);
+    }
+
+    #[test]
+    fn hostile_bfp16_row_major_key_normalizes_to_the_valid_design() {
+        // A row-major bfp16 key is constructible programmatically (every
+        // trace path rejects it); the cache must canonicalize it to the
+        // column-major design instead of panicking the leader inside
+        // `with_b_layout`. The functional path then rejects the actual
+        // operand-layout mismatch per request.
+        let k = key(Precision::Bfp16, Layout::RowMajor);
+        assert_eq!(k.normalized().b_layout, Layout::ColMajor);
+        let mut c = DesignCache::new(Generation::Xdna2);
+        let cfg = *c.get(k);
+        assert_eq!(cfg.b_layout, Layout::ColMajor);
+        assert!(cfg.validate().is_ok());
+        c.warm(k); // ditto on the warmup path
+    }
+
+    #[test]
+    fn bfp16_designs_resolve_on_both_generations() {
+        // bfp16 keys are not pre-warmed (not a paper precision) but the
+        // cache derives a valid balanced default on first touch for both
+        // the native XDNA2 datapath and XDNA's decode-to-bf16 fallback —
+        // a mixed fleet never panics on a block-FP request.
+        for gen in Generation::ALL {
+            let mut c = DesignCache::new(gen);
+            let cfg = *c.get(key(Precision::Bfp16, Layout::ColMajor));
+            assert_eq!(cfg.precision, Precision::Bfp16);
+            assert!(cfg.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn bfp16_routes_to_the_native_generation() {
+        // Mixed fleet: bfp16's estimated seconds on XDNA (decode-to-bf16
+        // emulation, ~4 TOPS peak) dwarf XDNA2's native-rate estimate
+        // (~59 TOPS), so the load model keeps block-FP traffic on the
+        // XDNA2 device even as its backlog grows.
+        let mut r = FleetRouter::new(vec![Generation::Xdna, Generation::Xdna2]);
+        let k = key(Precision::Bfp16, Layout::ColMajor);
+        let ops = 2.0 * 4096f64 * 4096.0 * 4096.0;
+        for i in 0..8 {
+            let d = r.route(k, ops);
+            assert_eq!(r.device_gen(d.device), Generation::Xdna2, "request {i}");
+        }
     }
 
     #[test]

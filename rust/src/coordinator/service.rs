@@ -385,7 +385,11 @@ fn pump(
     }
 }
 
-fn router_loop(opts: CoordinatorOptions, rx: Receiver<Msg>, done_tx: SyncSender<Msg>) -> FleetMetrics {
+fn router_loop(
+    opts: CoordinatorOptions,
+    rx: Receiver<Msg>,
+    done_tx: SyncSender<Msg>,
+) -> FleetMetrics {
     let gens = opts.device_gens();
     let n_dev = gens.len();
     let max_in_flight = opts.max_in_flight.max(1);
@@ -558,15 +562,17 @@ fn run_chain(
                 cfgs[i],
                 ExecOptions { threads: opts.exec_threads, ..Default::default() },
             );
-            let a = match staged.take() {
-                Some(c) if op.consumes_prev => {
-                    staged_edges += 1;
-                    c
-                }
-                _ => functional_a(&op.shape, cfgs[i].precision),
-            };
-            let b = functional_b(&op.shape, cfgs[i].precision);
-            match exec.execute(&a, &b) {
+            let inputs: Result<(Matrix, Matrix)> = (|| {
+                let a = match staged.take() {
+                    Some(c) if op.consumes_prev => {
+                        staged_edges += 1;
+                        c
+                    }
+                    _ => functional_a(&op.shape, cfgs[i].precision)?,
+                };
+                Ok((a, functional_b(&op.shape, cfgs[i].precision)?))
+            })();
+            match inputs.and_then(|(a, b)| exec.execute(&a, &b)) {
                 Ok(c) => {
                     // Move (never clone) the C image: it becomes the final
                     // result, or the staged A of a consuming next op.
@@ -730,23 +736,28 @@ fn leader_loop(
 
 /// Deterministic functional A for `shape` (seeded from its geometry) —
 /// shared by the single-request and chain functional paths, and public
-/// so tests can reproduce the coordinator's generated inputs.
-pub fn functional_a(shape: &GemmShape, p: Precision) -> Matrix {
-    let mut a = Matrix::zeroed(shape.m, shape.k, p.ty_in(), Layout::RowMajor).expect("aligned");
+/// so tests can reproduce the coordinator's generated inputs. bfp16
+/// shapes produce padded-block images (`refimpl::input_matrix`); an
+/// unrepresentable shape (word-misaligned, or a bfp16 K not covering
+/// whole blocks) is an `Err`, which the serving paths surface as a
+/// failed functional op (`result: None`, `verified: Some(false)`)
+/// instead of panicking a device leader.
+pub fn functional_a(shape: &GemmShape, p: Precision) -> Result<Matrix> {
+    let mut a = refimpl::input_matrix(shape.m, shape.k, p, Layout::RowMajor)?;
     refimpl::fill_random(&mut a, p, shape.m as u64 ^ 0xA5A5);
-    a
+    Ok(a)
 }
 
 /// Deterministic functional B for `shape` (layout per the shape).
-pub fn functional_b(shape: &GemmShape, p: Precision) -> Matrix {
-    let mut b = Matrix::zeroed(shape.k, shape.n, p.ty_in(), shape.b_layout).expect("aligned");
+pub fn functional_b(shape: &GemmShape, p: Precision) -> Result<Matrix> {
+    let mut b = refimpl::input_matrix(shape.k, shape.n, p, shape.b_layout)?;
     refimpl::fill_random(&mut b, p, shape.n as u64 ^ 0x5A5A);
-    b
+    Ok(b)
 }
 
 /// Both generated operands for `shape`.
-pub fn functional_inputs(shape: &GemmShape, p: Precision) -> (Matrix, Matrix) {
-    (functional_a(shape, p), functional_b(shape, p))
+pub fn functional_inputs(shape: &GemmShape, p: Precision) -> Result<(Matrix, Matrix)> {
+    Ok((functional_a(shape, p)?, functional_b(shape, p)?))
 }
 
 fn run_functional(
@@ -760,7 +771,10 @@ fn run_functional(
     let (a, b) = match &req.data {
         Some((a, b)) => (a, b),
         None => {
-            generated = functional_inputs(&req.shape, p);
+            generated = match functional_inputs(&req.shape, p) {
+                Ok(g) => g,
+                Err(_) => return (None, Some(false)),
+            };
             (&generated.0, &generated.1)
         }
     };
@@ -890,11 +904,31 @@ mod tests {
         let resp = c.call_chain(chain).unwrap();
         assert_eq!(resp.staged_edges, 1, "the edge must consume the staged C");
         let got = resp.result.expect("functional backend returns the final C");
-        let (a0, b0) = functional_inputs(&s0, Precision::I8I8);
-        let b1 = functional_b(&s1, Precision::I8I8);
+        let (a0, b0) = functional_inputs(&s0, Precision::I8I8).unwrap();
+        let b1 = functional_b(&s1, Precision::I8I8).unwrap();
         let mid = refimpl::ref_gemm(&a0, &b0, Precision::I8I8).unwrap();
         let want = refimpl::ref_gemm(&mid, &b1, Precision::I8I8).unwrap();
         assert!(refimpl::matrices_equal(&got, &want, Precision::I8I8));
+        c.shutdown();
+    }
+
+    #[test]
+    fn ragged_bfp16_functional_request_fails_gracefully() {
+        // K=100 covers no whole number of 8-value blocks, so no block
+        // image can represent the operands. The functional path must
+        // poison the request (result: None, verified: Some(false)) —
+        // never panic the device leader (sim timing still reports, the
+        // simulator pads like any precision).
+        let c = Coordinator::start(CoordinatorOptions {
+            backend: Backend::Functional,
+            ..Default::default()
+        });
+        let resp = c
+            .call(GemmRequest::sim(GemmShape::new("ragged", 64, 100, 64, Precision::Bfp16)))
+            .unwrap();
+        assert!(resp.result.is_none());
+        assert_eq!(resp.verified, Some(false));
+        assert!(resp.sim.tops > 0.0, "simulation still accounts the padded dispatch");
         c.shutdown();
     }
 

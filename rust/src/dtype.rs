@@ -90,22 +90,46 @@ pub enum Precision {
     I8I32,
     /// bf16 inputs, f32 accumulate, bf16 stores.
     Bf16,
+    /// Native block floating point (`dtype_bfp16`): 8-value blocks with a
+    /// shared 8-bit exponent, int8-class MAC rate on XDNA2 (Sec. 5.3.4).
+    /// Blocks are padded to 12-byte words on every DMA leg (the
+    /// word-aligned repack of DESIGN.md §10), so the wire/buffer density
+    /// is 12 bits/value over the dense format's 9.
+    Bfp16,
 }
 
 impl Precision {
+    /// The paper's four evaluated precision pairs (Sec. 5). Loops that
+    /// mirror published tables/artifacts iterate this set.
     pub const ALL: [Precision; 4] =
         [Precision::I8I8, Precision::I8I16, Precision::I8I32, Precision::Bf16];
 
+    /// Every supported precision including the native-bfp16 extension
+    /// (the Sec. 5.3.4 future-work path this crate implements).
+    pub const ALL_EXTENDED: [Precision; 5] = [
+        Precision::I8I8,
+        Precision::I8I16,
+        Precision::I8I32,
+        Precision::Bf16,
+        Precision::Bfp16,
+    ];
+
     /// `ty(A)` / `ty(B)`: input element size in bytes (Eqs. 2, 3, 6, 7).
+    ///
+    /// Panics for [`Precision::Bfp16`], whose 12-bit amortized elements
+    /// have no per-element byte size — use [`Self::bytes_in`] /
+    /// [`Self::in_bits`] (all capacity and traffic math does).
     #[inline]
     pub fn ty_in(self) -> usize {
         match self {
             Precision::Bf16 => 2,
+            Precision::Bfp16 => panic!("bfp16 is a block format; use bytes_in/in_bits"),
             _ => 1,
         }
     }
 
-    /// `ty(C)`: output element size in bytes (Eqs. 5, 8).
+    /// `ty(C)`: output element size in bytes (Eqs. 5, 8). Panics for
+    /// [`Precision::Bfp16`] (see [`Self::ty_in`]).
     #[inline]
     pub fn ty_out(self) -> usize {
         match self {
@@ -113,7 +137,74 @@ impl Precision {
             Precision::I8I16 => 2,
             Precision::I8I32 => 4,
             Precision::Bf16 => 2,
+            Precision::Bfp16 => panic!("bfp16 is a block format; use bytes_out/out_bits"),
         }
+    }
+
+    /// Amortized input element size in bits: the DMA-leg density. bfp16
+    /// moves 12-byte padded blocks of 8 values (12 bits/value); every
+    /// other precision is byte-granular.
+    #[inline]
+    pub fn in_bits(self) -> usize {
+        match self {
+            Precision::Bf16 => 16,
+            Precision::Bfp16 => 12,
+            _ => 8,
+        }
+    }
+
+    /// Amortized output element size in bits (bfp16 C tiles are stored
+    /// as padded blocks too, so they can chain into the next op's A).
+    #[inline]
+    pub fn out_bits(self) -> usize {
+        match self {
+            Precision::I8I8 => 8,
+            Precision::I8I16 => 16,
+            Precision::I8I32 => 32,
+            Precision::Bf16 => 16,
+            Precision::Bfp16 => 12,
+        }
+    }
+
+    /// Exact storage bytes of `elems` input elements. For bfp16 the
+    /// count must cover whole 8-value blocks (guaranteed by the
+    /// micro-tile alignment every caller operates under, and asserted
+    /// here — half a shared-exponent block cannot physically exist).
+    #[inline]
+    pub fn bytes_in(self, elems: usize) -> usize {
+        debug_assert!(
+            self != Precision::Bfp16 || elems % crate::dtype_bfp16::BLOCK == 0,
+            "{elems} elements do not cover whole bfp16 blocks"
+        );
+        let bits = elems * self.in_bits();
+        debug_assert!(bits % 8 == 0, "{elems} elements not byte-aligned at {}", self.name());
+        bits / 8
+    }
+
+    /// Exact storage bytes of `elems` output elements (same whole-block
+    /// requirement as [`Self::bytes_in`]).
+    #[inline]
+    pub fn bytes_out(self, elems: usize) -> usize {
+        debug_assert!(
+            self != Precision::Bfp16 || elems % crate::dtype_bfp16::BLOCK == 0,
+            "{elems} elements do not cover whole bfp16 blocks"
+        );
+        let bits = elems * self.out_bits();
+        debug_assert!(bits % 8 == 0, "{elems} elements not byte-aligned at {}", self.name());
+        bits / 8
+    }
+
+    /// Input element size in bytes as a float (the simulator's traffic
+    /// equations work in f64 bytes).
+    #[inline]
+    pub fn in_bytes_f(self) -> f64 {
+        self.in_bits() as f64 / 8.0
+    }
+
+    /// Output element size in bytes as a float.
+    #[inline]
+    pub fn out_bytes_f(self) -> f64 {
+        self.out_bits() as f64 / 8.0
     }
 
     /// Accumulator element size in bytes (resident C tile in L1 during the
@@ -130,7 +221,11 @@ impl Precision {
     }
 
     /// AIE-API micro-tile `r x s x t` for this precision (AIE-ML modes;
-    /// mirrored in `python/compile/kernels/ref.py::MICRO_TILE`).
+    /// mirrored in `python/compile/kernels/ref.py::MICRO_TILE`). bfp16
+    /// runs the int8-class `4x8x8` mode — `s = t = 8` means one
+    /// micro-tile K/N extent is exactly one shared-exponent block, which
+    /// is what lets the Fig.-4 chains move whole 12-byte blocks as
+    /// opaque 3-word elements (DESIGN.md §10).
     #[inline]
     pub fn micro_tile(self) -> (usize, usize, usize) {
         match self {
@@ -139,13 +234,14 @@ impl Precision {
         }
     }
 
-    /// Manifest / CLI name (`i8i8`, `i8i16`, `i8i32`, `bf16`).
+    /// Manifest / CLI name (`i8i8`, `i8i16`, `i8i32`, `bf16`, `bfp16`).
     pub fn name(self) -> &'static str {
         match self {
             Precision::I8I8 => "i8i8",
             Precision::I8I16 => "i8i16",
             Precision::I8I32 => "i8i32",
             Precision::Bf16 => "bf16",
+            Precision::Bfp16 => "bfp16",
         }
     }
 
@@ -156,6 +252,7 @@ impl Precision {
             Precision::I8I16 => "int8-int16",
             Precision::I8I32 => "int8-int32",
             Precision::Bf16 => "bf16-bf16",
+            Precision::Bfp16 => "bfp16-bfp16",
         }
     }
 
@@ -165,6 +262,7 @@ impl Precision {
             "i8i16" | "int8-int16" => Some(Precision::I8I16),
             "i8i32" | "int8-int32" => Some(Precision::I8I32),
             "bf16" | "bf16-bf16" => Some(Precision::Bf16),
+            "bfp16" | "bfp16-bfp16" => Some(Precision::Bfp16),
             _ => None,
         }
     }
@@ -251,9 +349,29 @@ mod tests {
         assert_eq!(Precision::Bf16.ty_in(), 2);
         assert_eq!(Precision::I8I32.ty_out(), 4);
         assert_eq!(Precision::Bf16.micro_tile(), (4, 8, 4));
-        for p in Precision::ALL {
+        for p in Precision::ALL_EXTENDED {
             assert_eq!(Precision::parse(p.name()), Some(p));
             assert_eq!(Precision::parse(p.paper_name()), Some(p));
         }
+    }
+
+    #[test]
+    fn bit_granular_sizes_agree_with_byte_sizes() {
+        // The bit-granular API is the byte API for the byte-granular
+        // precisions...
+        for p in Precision::ALL {
+            assert_eq!(p.in_bits(), 8 * p.ty_in());
+            assert_eq!(p.out_bits(), 8 * p.ty_out());
+            assert_eq!(p.bytes_in(48), 48 * p.ty_in());
+            assert_eq!(p.bytes_out(48), 48 * p.ty_out());
+        }
+        // ...and the padded-block density for bfp16: 12 bytes per
+        // 8-value block on every DMA leg (9 data bytes + 3 pad).
+        let b = Precision::Bfp16;
+        assert_eq!(b.in_bits(), 12);
+        assert_eq!(b.bytes_in(8), 12);
+        assert_eq!(b.bytes_out(16), 24);
+        assert_eq!(b.micro_tile(), (4, 8, 8));
+        assert_eq!(b.in_bytes_f(), 1.5);
     }
 }

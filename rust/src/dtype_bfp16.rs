@@ -10,16 +10,27 @@
 //! The paper defers bfp16 GEMM because the shared-exponent blocks break
 //! the 32-bit-granularity DMA transformations of Sec. 4.3 (a block is 9
 //! bytes — not word-aligned, so the Fig.-4 chains cannot re-tile it
-//! without an in-core repack). This module provides the datatype itself —
-//! encode/decode, quantization error bounds, block dot products — as the
-//! substrate that future-work kernel would build on, and quantifies the
-//! layout problem (`dma_alignment_gap`).
+//! without an in-core repack). This module provides the datatype —
+//! encode/decode, quantization error bounds, block dot products — and the
+//! word-aligned wire format that resolves the obstruction (DESIGN.md §10):
+//! every DMA leg moves blocks padded to 12 bytes (3 words, [`BLOCK_WORDS`];
+//! [`BfpBlock::to_words`]/[`BfpBlock::from_words`]), so the chains re-tile
+//! them as opaque 3-word elements, and the core-side pack strips the pad
+//! bytes when it decodes a tile (`gemm::exec`). `dma_alignment_gap`
+//! quantifies the 3-byte-per-block wire cost of that choice.
 
 #[cfg(test)]
 use crate::dtype::Bf16;
 
 /// Values per block (fixed by the hardware format).
 pub const BLOCK: usize = 8;
+
+/// 32-bit words per block in the padded DMA-leg layout: 9 data bytes
+/// rounded up to the next word boundary (12 bytes).
+pub const BLOCK_WORDS: usize = 3;
+
+/// Bytes per block on the wire (`BLOCK_WORDS` words).
+pub const PADDED_BYTES: usize = 4 * BLOCK_WORDS;
 
 /// One bfp16 block: shared power-of-two scale + 8 signed mantissas.
 ///
@@ -38,16 +49,27 @@ impl BfpBlock {
 
     /// Quantize 8 f32 values to one block (round-to-nearest, shared max
     /// exponent — the standard MSFP/bfp encoding [29]).
+    ///
+    /// The mantissa scale is derived from the *clamped* (stored)
+    /// exponent, so encode/decode always agree at both range edges:
+    /// blocks whose max sits below the format's range (biased exponent
+    /// 0, max < ~2^-121) quantize gracefully toward zero instead of
+    /// decoding at the wrong binade, and the top clamp is 254 — at 255
+    /// the max's mantissa (≥64) would decode to `64·2^122 = 2^128`,
+    /// which overflows f32 to infinity.
     pub fn encode(values: &[f32; BLOCK]) -> BfpBlock {
         let max = values.iter().fold(0f32, |m, v| m.max(v.abs()));
-        if max == 0.0 || !max.is_finite() {
+        // `f32::max` ignores NaN operands, so probe for them explicitly —
+        // any non-finite member means there is no shared exponent to
+        // encode under, and the whole block collapses to zero.
+        if max == 0.0 || !max.is_finite() || values.iter().any(|v| !v.is_finite()) {
             return BfpBlock { exponent: 0, mantissas: [0; BLOCK] };
         }
         // Exponent of the block max; mantissas scaled so max lands in
         // [64, 127].
         let e = max.log2().floor() as i32;
-        let biased = (e + 127).clamp(0, 255) as u8;
-        let scale = 2f32.powi(e - 6);
+        let biased = (e + 127).clamp(0, 254) as u8;
+        let scale = 2f32.powi(biased as i32 - 127 - 6);
         let mut mantissas = [0i8; BLOCK];
         for (i, v) in values.iter().enumerate() {
             mantissas[i] = (v / scale).round().clamp(-128.0, 127.0) as i8;
@@ -74,6 +96,30 @@ impl BfpBlock {
         }
         let scale = 2f32.powi(self.exponent as i32 + other.exponent as i32 - 2 * (127 + 6));
         acc as f32 * scale
+    }
+
+    /// The padded DMA-leg layout (DESIGN.md §10): byte 0 the exponent,
+    /// bytes 1–8 the mantissas, bytes 9–11 zero pad — little-endian
+    /// within words, matching `mem::Matrix` byte order.
+    pub fn to_words(&self) -> [u32; BLOCK_WORDS] {
+        let m = |i: usize| self.mantissas[i] as u8 as u32;
+        [
+            self.exponent as u32 | m(0) << 8 | m(1) << 16 | m(2) << 24,
+            m(3) | m(4) << 8 | m(5) << 16 | m(6) << 24,
+            m(7),
+        ]
+    }
+
+    /// Inverse of [`Self::to_words`]: strip the pad bytes (the core-side
+    /// unpack). Ignores the pad bytes' contents.
+    pub fn from_words(words: &[u32]) -> BfpBlock {
+        debug_assert!(words.len() >= BLOCK_WORDS);
+        let byte = |b: usize| (words[b >> 2] >> ((b & 3) * 8)) as u8;
+        let mut mantissas = [0i8; BLOCK];
+        for (i, m) in mantissas.iter_mut().enumerate() {
+            *m = byte(1 + i) as i8;
+        }
+        BfpBlock { exponent: byte(0), mantissas }
     }
 }
 

@@ -37,6 +37,7 @@
 use anyhow::{anyhow, ensure, Result};
 
 use crate::dtype::{Bf16, Layout, Precision};
+use crate::dtype_bfp16::{BfpBlock, BLOCK, BLOCK_WORDS, PADDED_BYTES};
 use crate::mem::Matrix;
 use crate::tiling::TilingConfig;
 use crate::xform::{pretile_oracle_into, BRowMajorChain, InputChain, OutputChain};
@@ -87,27 +88,46 @@ impl Executor {
         Executor { cfg, opts }
     }
 
+    /// Whether this design runs the native block-FP path: the DMA chains
+    /// then move whole 12-byte padded blocks as opaque 3-word elements
+    /// (the word-aligned repack of DESIGN.md §10), so every chain below
+    /// is parameterized in *block units* along K (and along N for C).
+    fn is_bfp(&self) -> bool {
+        self.cfg.precision == Precision::Bfp16
+    }
+
+    /// Elements per K-axis storage unit (8 for bfp16 blocks, else 1).
+    fn k_unit(&self) -> usize {
+        if self.is_bfp() {
+            BLOCK
+        } else {
+            1
+        }
+    }
+
     fn a_chain(&self) -> InputChain {
         let (r, s, _) = self.cfg.precision.micro_tile();
+        let u = self.k_unit();
         InputChain {
             rows: self.cfg.kernel.m_ct,
             micro_r: r,
-            micro_s: s,
-            k_ct: self.cfg.kernel.k_ct,
-            k_mt: self.cfg.k_mt,
-            elem_bytes: self.cfg.precision.ty_in(),
+            micro_s: s / u,
+            k_ct: self.cfg.kernel.k_ct / u,
+            k_mt: self.cfg.k_mt / u,
+            elem_bytes: if self.is_bfp() { PADDED_BYTES } else { self.cfg.precision.ty_in() },
         }
     }
 
     fn bt_chain(&self) -> InputChain {
         let (_, s, t) = self.cfg.precision.micro_tile();
+        let u = self.k_unit();
         InputChain {
             rows: self.cfg.kernel.n_ct,
             micro_r: t,
-            micro_s: s,
-            k_ct: self.cfg.kernel.k_ct,
-            k_mt: self.cfg.k_mt,
-            elem_bytes: self.cfg.precision.ty_in(),
+            micro_s: s / u,
+            k_ct: self.cfg.kernel.k_ct / u,
+            k_mt: self.cfg.k_mt / u,
+            elem_bytes: if self.is_bfp() { PADDED_BYTES } else { self.cfg.precision.ty_in() },
         }
     }
 
@@ -124,12 +144,25 @@ impl Executor {
 
     fn out_chain(&self) -> OutputChain {
         let (r, _, t) = self.cfg.precision.micro_tile();
-        OutputChain {
-            m_ct: self.cfg.kernel.m_ct,
-            n_ct: self.cfg.kernel.n_ct,
-            micro_r: r,
-            micro_t: t,
-            elem_bytes: self.cfg.precision.ty_out(),
+        if self.is_bfp() {
+            // C blocks run along N (t == BLOCK): one micro-tile column is
+            // one block, stored padded like the inputs so the C image can
+            // chain straight into the next op's A.
+            OutputChain {
+                m_ct: self.cfg.kernel.m_ct,
+                n_ct: self.cfg.kernel.n_ct / BLOCK,
+                micro_r: r,
+                micro_t: 1,
+                elem_bytes: PADDED_BYTES,
+            }
+        } else {
+            OutputChain {
+                m_ct: self.cfg.kernel.m_ct,
+                n_ct: self.cfg.kernel.n_ct,
+                micro_r: r,
+                micro_t: t,
+                elem_bytes: self.cfg.precision.ty_out(),
+            }
         }
     }
 
@@ -184,21 +217,20 @@ impl Executor {
         }
     }
 
-    /// Pack one array row's A panel: stream all `pk/k_ct` tiles into the
+    /// Pack one array row's A panel: stream all `k_tiles` tiles into the
     /// `stream` scratch, then decode each into `dst`'s dense buffer.
     fn pack_a_panel(
         &self,
         pa: &Matrix,
         row0: usize,
-        pk: usize,
+        k_tiles: usize,
         stream: &mut [u32],
         dst: &mut PackedPanel,
     ) -> Result<()> {
         let chain = self.a_chain();
         let tw = chain.tile_words();
-        let k_tiles = pk / chain.k_ct;
         let words = &mut stream[..k_tiles * tw];
-        self.stream_input_into(&chain, pa, row0, pk, words)?;
+        self.stream_input_into(&chain, pa, row0, k_tiles * chain.k_ct, words)?;
         for ti in 0..k_tiles {
             self.decode_a_tile(&words[ti * tw..(ti + 1) * tw], dst.tile_mut(ti));
         }
@@ -211,24 +243,24 @@ impl Executor {
         pb: &Matrix,
         tcol: usize,
         ac: usize,
-        pk: usize,
+        k_tiles: usize,
         stream: &mut [u32],
         dst: &mut PackedPanel,
     ) -> Result<()> {
         let kt = self.cfg.kernel;
         let (_, _, nn) = self.cfg.native();
         let tw = self.b_tile_words();
-        let k_tiles = pk / kt.k_ct;
         let words = &mut stream[..k_tiles * tw];
         match self.cfg.b_layout {
             Layout::ColMajor => {
                 // Column-major B == row panel of the Bᵀ image.
                 let row0 = tcol * nn + ac * kt.n_ct;
-                self.stream_input_into(&self.bt_chain(), pb, row0, pk, words)?;
+                let chain = self.bt_chain();
+                self.stream_input_into(&chain, pb, row0, k_tiles * chain.k_ct, words)?;
             }
             Layout::RowMajor => {
-                let col0_w = (tcol * nn + ac * kt.n_ct) * self.cfg.precision.ty_in() / 4;
-                self.stream_b_rowmajor_into(pb, col0_w, pk, words)?;
+                let col0_w = self.cfg.precision.bytes_in(tcol * nn + ac * kt.n_ct) / 4;
+                self.stream_b_rowmajor_into(pb, col0_w, k_tiles * kt.k_ct, words)?;
             }
         }
         for ti in 0..k_tiles {
@@ -243,7 +275,6 @@ impl Executor {
     fn pack_b_cache(
         &self,
         pb: &Matrix,
-        pk: usize,
         k_tiles: usize,
         t_cols: usize,
         workers: usize,
@@ -263,7 +294,7 @@ impl Executor {
             let mut stream = vec![0u32; stream_len];
             for (tcol, panels) in cache.iter_mut().enumerate() {
                 for (ac, panel) in panels.iter_mut().enumerate() {
-                    self.pack_b_panel(pb, tcol, ac, pk, &mut stream, panel)?;
+                    self.pack_b_panel(pb, tcol, ac, k_tiles, &mut stream, panel)?;
                 }
             }
         } else {
@@ -280,7 +311,7 @@ impl Executor {
                             let mut stream = vec![0u32; stream_len];
                             for (tcol, panels) in bucket {
                                 for (ac, panel) in panels.iter_mut().enumerate() {
-                                    self.pack_b_panel(pb, tcol, ac, pk, &mut stream, panel)?;
+                                    self.pack_b_panel(pb, tcol, ac, k_tiles, &mut stream, panel)?;
                                 }
                             }
                             Ok(())
@@ -296,10 +327,16 @@ impl Executor {
         Ok(cache)
     }
 
-    /// Decode one pre-tiled A tile to dense `m_ct × k_ct`.
+    /// Decode one pre-tiled A tile to dense `m_ct × k_ct` (for bfp16 the
+    /// core-side pack: strip each 3-word block's pad and widen to f32).
     fn decode_a_tile(&self, words: &[u32], dst: TileMut<'_>) {
         let kt = self.cfg.kernel;
         let (r, s, _) = self.cfg.precision.micro_tile();
+        if self.is_bfp() {
+            let TileMut::F32(out) = dst else { unreachable!("bfp16 decodes to f32 panels") };
+            decode_pretiled_bfp_a(words, kt.m_ct, kt.k_ct, r, out);
+            return;
+        }
         match dst {
             TileMut::I8(out) => decode_pretiled_i8(words, kt.m_ct, kt.k_ct, r, s, out),
             TileMut::F32(out) => decode_pretiled_bf16(words, kt.m_ct, kt.k_ct, r, s, out),
@@ -307,10 +344,16 @@ impl Executor {
     }
 
     /// Decode one pre-tiled B tile to dense `k_ct × n_ct` (applying the
-    /// in-core shuffle — the AIE-API transpose — for column-major B).
+    /// in-core shuffle — the AIE-API transpose — for column-major B; the
+    /// bfp16 path transposes block-wise while stripping pad).
     fn decode_b_tile(&self, words: &[u32], dst: TileMut<'_>) {
         let kt = self.cfg.kernel;
         let (_, s, t) = self.cfg.precision.micro_tile();
+        if self.is_bfp() {
+            let TileMut::F32(out) = dst else { unreachable!("bfp16 decodes to f32 panels") };
+            decode_pretiled_bfp_bt(words, kt.k_ct, kt.n_ct, t, out);
+            return;
+        }
         let walk: fn(usize, usize, usize, usize, &mut dyn FnMut(usize, usize)) =
             match self.cfg.b_layout {
                 Layout::ColMajor => decode_bt_blocks,
@@ -330,21 +373,39 @@ impl Executor {
     /// Execute `C = narrow(A @ B)` through the full mapping.
     ///
     /// `a`: `m × k` row-major; `b`: `k × n`, layout per `cfg.b_layout`.
-    /// Returns the `m × n` row-major result (padding stripped).
+    /// Returns the `m × n` row-major result (padding stripped). bfp16
+    /// operands are padded-block images (`Matrix::zeroed_bfp16`, block
+    /// units along K) and the result is one too — blocks along N, which
+    /// is exactly the next op's K, so chains stage it unchanged.
     pub fn execute(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
         let p = self.cfg.precision;
+        let bfp = self.is_bfp();
         ensure!(a.layout == Layout::RowMajor, "A must be row-major");
         ensure!(b.layout == self.cfg.b_layout, "B layout must match the design");
+        if bfp {
+            ensure!(self.cfg.b_layout == Layout::ColMajor, "bfp16 requires column-major B");
+            ensure!(a.is_bfp16() && b.is_bfp16(), "bfp16 operands must be block images");
+        }
         ensure!(a.cols == b.rows, "shape mismatch");
-        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let u = self.k_unit();
+        let (m, k, n) = (a.rows, a.cols * u, b.cols);
+        if bfp {
+            ensure!(n % BLOCK == 0, "bfp16 N must cover whole 8-value blocks");
+        }
         let (pm, pk, pn) = self.cfg.padded(m, k, n);
 
         // Zero-pad into fresh DRAM images (the paper's Sec. 5.3.1 notes
         // the NPU can zero-pad on the fly in MemTile channels; host-side
-        // padding exercises the same aligned code path).
-        let pa = pad_matrix(a, pm, pk)?;
-        let pb = pad_matrix(b, pk, pn)?;
-        let mut pc = Matrix::zeroed(pm, pn, p.ty_out(), Layout::RowMajor)?;
+        // padding exercises the same aligned code path). Block images
+        // pad in block units; a zero word block decodes to an all-zero
+        // block, so padded K terms are exact no-ops in the reduction.
+        let pa = pad_matrix(a, pm, pk / u)?;
+        let pb = pad_matrix(b, pk / u, pn)?;
+        let mut pc = if bfp {
+            Matrix::zeroed_bfp16(pm, pn, Layout::RowMajor)?
+        } else {
+            Matrix::zeroed(pm, pn, p.ty_out(), Layout::RowMajor)?
+        };
 
         let kt = self.cfg.kernel;
         let (nm, _, nn) = self.cfg.native();
@@ -359,7 +420,7 @@ impl Executor {
         // the same worker budget so it doesn't become the serial
         // fraction on B-dominated (small-M, wide-N) shapes.
         let b_cache: Vec<Vec<PackedPanel>> = if self.opts.pack_reuse {
-            self.pack_b_cache(&pb, pk, k_tiles, t_cols, self.opts.threads.max(1))?
+            self.pack_b_cache(&pb, k_tiles, t_cols, self.opts.threads.max(1))?
         } else {
             Vec::new()
         };
@@ -372,7 +433,7 @@ impl Executor {
         if n_workers <= 1 {
             let mut st = WorkerState::new(self, k_tiles);
             for (trow, band) in pc.data.chunks_mut(band_words).enumerate() {
-                self.run_band(&mut st, trow, band, &pa, &pb, &b_cache, pk, t_cols, ld_w)?;
+                self.run_band(&mut st, trow, band, &pa, &pb, &b_cache, k_tiles, t_cols, ld_w)?;
             }
         } else {
             let mut buckets: Vec<Vec<(usize, &mut [u32])>> =
@@ -389,8 +450,8 @@ impl Executor {
                             let mut st = WorkerState::new(self, k_tiles);
                             for (trow, band) in bucket {
                                 self.run_band(
-                                    &mut st, trow, band, pa_ref, pb_ref, cache_ref, pk, t_cols,
-                                    ld_w,
+                                    &mut st, trow, band, pa_ref, pb_ref, cache_ref, k_tiles,
+                                    t_cols, ld_w,
                                 )?;
                             }
                             Ok(())
@@ -404,7 +465,11 @@ impl Executor {
             })?;
         }
 
-        crop_matrix(&pc, m, n, p.ty_out())
+        if bfp {
+            crop_matrix(&pc, m, n / BLOCK, PADDED_BYTES)
+        } else {
+            crop_matrix(&pc, m, n, p.ty_out())
+        }
     }
 
     /// One worker's tile row: pack the row's A panels once, then walk
@@ -419,14 +484,13 @@ impl Executor {
         pa: &Matrix,
         pb: &Matrix,
         b_cache: &[Vec<PackedPanel>],
-        pk: usize,
+        k_tiles: usize,
         t_cols: usize,
         ld_w: usize,
     ) -> Result<()> {
         let p = self.cfg.precision;
         let kt = self.cfg.kernel;
         let (nm, _, nn) = self.cfg.native();
-        let k_tiles = pk / kt.k_ct;
         let out_chain = self.out_chain();
         let ctw = out_chain.tile_words();
 
@@ -435,7 +499,7 @@ impl Executor {
         if self.opts.pack_reuse {
             for ar in 0..self.cfg.m_rows {
                 let row0 = trow * nm + ar * kt.m_ct;
-                self.pack_a_panel(pa, row0, pk, &mut st.stream, &mut st.a_panels[ar])?;
+                self.pack_a_panel(pa, row0, k_tiles, &mut st.stream, &mut st.a_panels[ar])?;
             }
         }
         for tcol in 0..t_cols {
@@ -444,10 +508,11 @@ impl Executor {
                 // per output tile (the pre-packing executor).
                 for ar in 0..self.cfg.m_rows {
                     let row0 = trow * nm + ar * kt.m_ct;
-                    self.pack_a_panel(pa, row0, pk, &mut st.stream, &mut st.a_panels[ar])?;
+                    self.pack_a_panel(pa, row0, k_tiles, &mut st.stream, &mut st.a_panels[ar])?;
                 }
                 for ac in 0..self.cfg.n_cols {
-                    self.pack_b_panel(pb, tcol, ac, pk, &mut st.stream, &mut st.b_panels[ac])?;
+                    let panel = &mut st.b_panels[ac];
+                    self.pack_b_panel(pb, tcol, ac, k_tiles, &mut st.stream, panel)?;
                 }
             }
             let b_panels: &[PackedPanel] =
@@ -466,7 +531,7 @@ impl Executor {
                         &mut st.column_c[ar * ctw..(ar + 1) * ctw],
                     )?;
                 }
-                let col0_w = (tcol * nn + ac * kt.n_ct) * p.ty_out() / 4;
+                let col0_w = p.bytes_out(tcol * nn + ac * kt.n_ct) / 4;
                 out_chain.drain_column_flat(
                     &st.column_c,
                     self.cfg.m_rows,
@@ -487,15 +552,17 @@ impl Executor {
     /// image never leaves the device. The staged C re-enters `execute`
     /// as a row-major A image, so it rides the packed-A path like any
     /// fresh operand. Multi-op chains require a precision whose output
-    /// dtype equals its input dtype (int8→int8, bf16); every weight must
-    /// match the design's B layout. Numerics are identical to
+    /// dtype equals its input dtype (int8→int8, bf16, bfp16 — whose C
+    /// blocks along N are exactly the next op's K blocks); every weight
+    /// must match the design's B layout. Numerics are identical to
     /// re-dispatching each op, because the drained C image is exactly
     /// the next dispatch's A image.
     pub fn execute_chain(&self, a: &Matrix, weights: &[Matrix]) -> Result<Matrix> {
         ensure!(!weights.is_empty(), "empty chain");
         let p = self.cfg.precision;
         ensure!(
-            weights.len() == 1 || matches!(p, Precision::I8I8 | Precision::Bf16),
+            weights.len() == 1
+                || matches!(p, Precision::I8I8 | Precision::Bf16 | Precision::Bfp16),
             "{p} output cannot feed the next op's input (chain of {} ops)",
             weights.len()
         );
@@ -529,12 +596,32 @@ impl Executor {
                 for ti in 0..k_tiles {
                     dense_mac_f32(a.tile_f32(ti), b.tile_f32(ti), acc_f, kt.m_ct, kt.k_ct, kt.n_ct);
                 }
-                let mut lane = 0usize; // 16-bit lanes of `out`
-                for_each_pretiled(kt.m_ct, kt.n_ct, r, t, |i, j| {
-                    let bits = Bf16::from_f32(acc_f[i * kt.n_ct + j]).to_bits() as u32;
-                    out[lane >> 1] |= bits << ((lane & 1) * 16);
-                    lane += 1;
-                });
+                match p {
+                    Precision::Bf16 => {
+                        let mut lane = 0usize; // 16-bit lanes of `out`
+                        for_each_pretiled(kt.m_ct, kt.n_ct, r, t, |i, j| {
+                            let bits = Bf16::from_f32(acc_f[i * kt.n_ct + j]).to_bits() as u32;
+                            out[lane >> 1] |= bits << ((lane & 1) * 16);
+                            lane += 1;
+                        });
+                    }
+                    Precision::Bfp16 => {
+                        // Narrow each accumulator row's 8-value groups to
+                        // shared-exponent blocks and emit them padded, in
+                        // pre-tiled (r × 1-block) stream order — the same
+                        // encode the reference applies, so bits match.
+                        let mut idx = 0usize; // block index into `out`
+                        for_each_pretiled(kt.m_ct, kt.n_ct / BLOCK, r, 1, |i, jo| {
+                            let at = i * kt.n_ct + jo * BLOCK;
+                            let group: &[f32; BLOCK] =
+                                acc_f[at..at + BLOCK].try_into().unwrap();
+                            out[idx * BLOCK_WORDS..(idx + 1) * BLOCK_WORDS]
+                                .copy_from_slice(&BfpBlock::encode(group).to_words());
+                            idx += 1;
+                        });
+                    }
+                    _ => unreachable!("f32 panels belong to the float precisions"),
+                }
             }
             (PanelData::I8(_), PanelData::I8(_)) => {
                 acc_i.fill(0); // zeroing kernel
@@ -557,7 +644,9 @@ impl Executor {
                         out[lane] = acc_i[i * kt.n_ct + j] as u32;
                         lane += 1;
                     }),
-                    Precision::Bf16 => unreachable!("bf16 uses the f32 panels"),
+                    Precision::Bf16 | Precision::Bfp16 => {
+                        unreachable!("float precisions use the f32 panels")
+                    }
                 }
             }
             _ => return Err(anyhow!("operand panels decoded at different precisions")),
@@ -588,7 +677,7 @@ enum TileMut<'a> {
 impl PackedPanel {
     fn new(p: Precision, tile_len: usize, k_tiles: usize) -> PackedPanel {
         let data = match p {
-            Precision::Bf16 => PanelData::F32(vec![0.0; tile_len * k_tiles]),
+            Precision::Bf16 | Precision::Bfp16 => PanelData::F32(vec![0.0; tile_len * k_tiles]),
             _ => PanelData::I8(vec![0; tile_len * k_tiles]),
         };
         PackedPanel { tile_len, data }
@@ -642,7 +731,7 @@ impl WorkerState {
         let b_tw = exec.b_tile_words();
         let ctw = exec.out_chain().tile_words();
         let (acc_i, acc_f) = match p {
-            Precision::Bf16 => (Vec::new(), vec![0.0; kt.m_ct * kt.n_ct]),
+            Precision::Bf16 | Precision::Bfp16 => (Vec::new(), vec![0.0; kt.m_ct * kt.n_ct]),
             _ => (vec![0; kt.m_ct * kt.n_ct], Vec::new()),
         };
         WorkerState {
@@ -758,6 +847,44 @@ fn decode_pretiled_bf16(
     }
 }
 
+/// Decode one pre-tiled bfp16 A tile (micro-tiles of `r` rows × 1 padded
+/// block, source order `(mo, kb, mi)`) into dense `m_ct × k_ct` f32 —
+/// the core-side pack: pad bytes are stripped here, where the kernel's
+/// byte-granular vector shuffles live, which is what the word-granular
+/// DMA chain cannot do (DESIGN.md §10).
+fn decode_pretiled_bfp_a(words: &[u32], m_ct: usize, k_ct: usize, r: usize, out: &mut [f32]) {
+    let mut src = 0;
+    for mo in 0..m_ct / r {
+        for kb in 0..k_ct / BLOCK {
+            for mi in 0..r {
+                let vals = BfpBlock::from_words(&words[src..src + BLOCK_WORDS]).decode();
+                let base = (mo * r + mi) * k_ct + kb * BLOCK;
+                out[base..base + BLOCK].copy_from_slice(&vals);
+                src += BLOCK_WORDS;
+            }
+        }
+    }
+}
+
+/// Decode one pre-tiled bfp16 Bᵀ tile (micro-tiles of `t` Bᵀ rows × 1
+/// block, source order `(jo, kb, ji)`) into dense `k_ct × n_ct` f32 —
+/// the block-wise in-core shuffle for column-major B.
+fn decode_pretiled_bfp_bt(words: &[u32], k_ct: usize, n_ct: usize, t: usize, out: &mut [f32]) {
+    let mut src = 0;
+    for jo in 0..n_ct / t {
+        for kb in 0..k_ct / BLOCK {
+            for ji in 0..t {
+                let vals = BfpBlock::from_words(&words[src..src + BLOCK_WORDS]).decode();
+                let col = jo * t + ji;
+                for (kk, &v) in vals.iter().enumerate() {
+                    out[(kb * BLOCK + kk) * n_ct + col] = v;
+                }
+                src += BLOCK_WORDS;
+            }
+        }
+    }
+}
+
 /// Dense micro-kernel: `acc += a @ b` (int32 accumulate — the MAC array).
 fn dense_mac_i32(a: &[i8], b: &[i8], acc: &mut [i32], m: usize, k: usize, n: usize) {
     for i in 0..m {
@@ -856,8 +983,8 @@ mod tests {
         seed: u64,
     ) {
         let cfg = tiny_cfg(gen, p, layout);
-        let mut a = Matrix::zeroed(m, k, p.ty_in(), Layout::RowMajor).unwrap();
-        let mut b = Matrix::zeroed(k, n, p.ty_in(), layout).unwrap();
+        let mut a = refimpl::input_matrix(m, k, p, Layout::RowMajor).unwrap();
+        let mut b = refimpl::input_matrix(k, n, p, layout).unwrap();
         refimpl::fill_random(&mut a, p, seed);
         refimpl::fill_random(&mut b, p, seed + 1);
         let got = Executor::with_options(cfg, opts).execute(&a, &b).unwrap();
@@ -902,6 +1029,43 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn bfp16_native_size_both_fidelities() {
+        // The native block-FP path: padded 3-word blocks ride the same
+        // Fig.-4 chains (BdChain) and the algebraic oracle (Direct),
+        // bit-exact against the reference on the native grid and on a
+        // ragged-m multi-tile grid.
+        let p = Precision::Bfp16;
+        for gen in Generation::ALL {
+            let cfg = tiny_cfg(gen, p, Layout::ColMajor);
+            let (nm, nk, nn) = cfg.native();
+            run_case(gen, p, Layout::ColMajor, Fidelity::BdChain, nm, nk, nn, 31);
+            run_case(gen, p, Layout::ColMajor, Fidelity::Direct, 2 * nm - 3, 2 * nk, 2 * nn, 37);
+        }
+    }
+
+    #[test]
+    fn bfp16_rejects_row_major_and_ragged_blocks() {
+        // Row-major B scatters shared-exponent blocks across storage
+        // rows — the design layer refuses to build such a config at all.
+        let spec = Generation::Xdna2.spec();
+        assert!(TilingConfig::new(
+            Generation::Xdna2,
+            Precision::Bfp16,
+            8,
+            16,
+            16,
+            32,
+            spec.array_rows,
+            spec.shim_cols,
+            Layout::RowMajor,
+        )
+        .is_err());
+        // And block images refuse non-block-aligned K/N.
+        assert!(Matrix::zeroed_bfp16(8, 20, Layout::RowMajor).is_err());
+        assert!(Matrix::zeroed_bfp16(20, 8, Layout::ColMajor).is_err());
     }
 
     #[test]
@@ -995,8 +1159,8 @@ mod tests {
             let m = nm - rng.below(4);
             let k = nk + 4 * rng.below(2);
             let n = nn - 4 * rng.below(2);
-            let mut a = Matrix::zeroed(m, k, p.ty_in(), Layout::RowMajor).unwrap();
-            let mut b = Matrix::zeroed(k, n, p.ty_in(), layout).unwrap();
+            let mut a = refimpl::input_matrix(m, k, p, Layout::RowMajor).unwrap();
+            let mut b = refimpl::input_matrix(k, n, p, layout).unwrap();
             refimpl::fill_random(&mut a, p, rng.next_u64());
             refimpl::fill_random(&mut b, p, rng.next_u64());
             let via_bd = Executor::new(cfg, Fidelity::BdChain).execute(&a, &b).unwrap();

@@ -12,11 +12,40 @@
 use anyhow::{ensure, Result};
 
 use crate::dtype::{sat_i16, sat_i8, Bf16, Layout, Precision};
+use crate::dtype_bfp16::{BfpBlock, BLOCK};
 use crate::mem::Matrix;
 
-/// Allocate the output image for an `m × n` result.
+/// Allocate the output image for an `m × n` result (`n` in elements;
+/// bfp16 results are block images, so `n` must cover whole blocks).
 pub fn out_matrix(m: usize, n: usize, p: Precision) -> Result<Matrix> {
-    Matrix::zeroed(m, n, p.ty_out(), Layout::RowMajor)
+    match p {
+        Precision::Bfp16 => Matrix::zeroed_bfp16(m, n, Layout::RowMajor),
+        _ => Matrix::zeroed(m, n, p.ty_out(), Layout::RowMajor),
+    }
+}
+
+/// Allocate an input operand image of `rows × cols` logical elements at
+/// the precision's storage format — the one constructor every caller
+/// (tests, harness, coordinator) should use, since bfp16 operands are
+/// padded-block images rather than `ty_in`-byte element grids.
+pub fn input_matrix(rows: usize, cols: usize, p: Precision, layout: Layout) -> Result<Matrix> {
+    match p {
+        Precision::Bfp16 => Matrix::zeroed_bfp16(rows, cols, layout),
+        _ => Matrix::zeroed(rows, cols, p.ty_in(), layout),
+    }
+}
+
+/// Logical `(rows, cols)` of an operand image (block images scale their
+/// blocked axis back up by 8).
+pub fn logical_dims(m: &Matrix) -> (usize, usize) {
+    if m.is_bfp16() {
+        match m.layout {
+            Layout::RowMajor => (m.rows, m.cols * BLOCK),
+            Layout::ColMajor => (m.rows * BLOCK, m.cols),
+        }
+    } else {
+        (m.rows, m.cols)
+    }
 }
 
 /// Reference GEMM: `C = narrow(A @ B)`. `a` must be row-major; `b` may be
@@ -31,10 +60,37 @@ pub fn out_matrix(m: usize, n: usize, p: Precision) -> Result<Matrix> {
 /// bit-identical to it for every precision (bf16 included).
 pub fn ref_gemm(a: &Matrix, b: &Matrix, p: Precision) -> Result<Matrix> {
     ensure!(a.layout == Layout::RowMajor, "A must be row-major");
-    ensure!(a.cols == b.rows, "shape mismatch: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let (m, k) = logical_dims(a);
+    let (bk, n) = logical_dims(b);
+    ensure!(k == bk, "shape mismatch: {m}x{k} @ {bk}x{n}");
     let mut c = out_matrix(m, n, p)?;
     match p {
+        Precision::Bfp16 => {
+            ensure!(b.layout == Layout::ColMajor, "bfp16 B must be column-major");
+            ensure!(a.is_bfp16() && b.is_bfp16(), "bfp16 operands must be block images");
+            // Decode both operands to dense f32 (exact — mantissa · 2^e),
+            // accumulate ascending k in f32, then encode each output
+            // row's 8-value groups back to blocks. This is the same
+            // arithmetic, in the same order, as the tiled executor's
+            // core-side pack + MAC + narrow, so results are bit-exact
+            // against it for every thread count.
+            let ap = packed_f32_bfp(a);
+            let bp = packed_f32_bfp(b);
+            let mut acc = vec![0f32; n];
+            for i in 0..m {
+                acc.fill(0.0);
+                let arow = &ap[i * k..(i + 1) * k];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let brow = &bp[kk * n..(kk + 1) * n];
+                    for (c, &bv) in acc.iter_mut().zip(brow) {
+                        *c += av * bv;
+                    }
+                }
+                for (g, group) in acc.chunks_exact(BLOCK).enumerate() {
+                    c.set_bfp_block(i, g, BfpBlock::encode(group.try_into().unwrap()));
+                }
+            }
+        }
         Precision::Bf16 => {
             let ap = a.packed_f32();
             let bp = b.packed_f32();
@@ -85,14 +141,59 @@ pub fn store_narrowed(c: &mut Matrix, i: usize, j: usize, acc: i32, p: Precision
         Precision::I8I8 => c.set_i8(i, j, sat_i8(acc)),
         Precision::I8I16 => c.set_i16(i, j, sat_i16(acc)),
         Precision::I8I32 => c.set_i32(i, j, acc),
-        Precision::Bf16 => unreachable!("bf16 uses the f32 path"),
+        Precision::Bf16 | Precision::Bfp16 => unreachable!("float precisions use the f32 path"),
     }
 }
 
+/// Dense logical-row-major f32 decode of a bfp16 block image (either
+/// layout) — the reference GEMM's core-side pack.
+pub fn packed_f32_bfp(m: &Matrix) -> Vec<f32> {
+    debug_assert!(m.is_bfp16());
+    let (rows, cols) = logical_dims(m);
+    let mut out = vec![0f32; rows * cols];
+    match m.layout {
+        Layout::RowMajor => {
+            for i in 0..rows {
+                for bj in 0..cols / BLOCK {
+                    let vals = m.get_bfp_block(i, bj).decode();
+                    out[i * cols + bj * BLOCK..i * cols + (bj + 1) * BLOCK]
+                        .copy_from_slice(&vals);
+                }
+            }
+        }
+        Layout::ColMajor => {
+            for j in 0..cols {
+                for bi in 0..rows / BLOCK {
+                    let vals = m.get_bfp_block(bi, j).decode();
+                    for (kk, &v) in vals.iter().enumerate() {
+                        out[(bi * BLOCK + kk) * cols + j] = v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Fill a matrix with deterministic pseudo-random inputs appropriate for
-/// the precision (full int8 range / unit normals for bf16).
+/// the precision (full int8 range / unit normals for bf16 / encoded
+/// unit-normal blocks for bfp16).
 pub fn fill_random(mat: &mut Matrix, p: Precision, seed: u64) {
     let mut rng = crate::util::rng::Rng::seeded(seed);
+    if p == Precision::Bfp16 {
+        // The image is a block-unit grid; fill every cell with an
+        // encoded block of normals (realistic shared-exponent content).
+        for i in 0..mat.rows {
+            for j in 0..mat.cols {
+                let mut vals = [0f32; BLOCK];
+                for v in vals.iter_mut() {
+                    *v = rng.normal() as f32;
+                }
+                mat.set_bfp_block(i, j, BfpBlock::encode(&vals));
+            }
+        }
+        return;
+    }
     for i in 0..mat.rows {
         for j in 0..mat.cols {
             match p {
@@ -103,7 +204,8 @@ pub fn fill_random(mat: &mut Matrix, p: Precision, seed: u64) {
     }
 }
 
-/// Exact equality of two matrices of the same precision/shape.
+/// Exact equality of two matrices of the same precision/shape (bfp16
+/// compares block contents: exponent + mantissas, pad bytes ignored).
 pub fn matrices_equal(x: &Matrix, y: &Matrix, p: Precision) -> bool {
     if x.rows != y.rows || x.cols != y.cols {
         return false;
@@ -115,6 +217,7 @@ pub fn matrices_equal(x: &Matrix, y: &Matrix, p: Precision) -> bool {
                 Precision::I8I16 => x.get_i16(i, j) == y.get_i16(i, j),
                 Precision::I8I32 => x.get_i32(i, j) == y.get_i32(i, j),
                 Precision::Bf16 => x.get_bf16(i, j).to_bits() == y.get_bf16(i, j).to_bits(),
+                Precision::Bfp16 => x.get_bfp_block(i, j) == y.get_bfp_block(i, j),
             };
             if !same {
                 return false;

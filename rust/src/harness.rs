@@ -9,7 +9,6 @@ use crate::arch::{balanced_config, Generation};
 use crate::dtype::{Layout, Precision};
 use crate::gemm::exec::{ExecOptions, Executor};
 use crate::gemm::refimpl;
-use crate::mem::Matrix;
 use crate::optimizer::{optimize_balanced, solve_single_core, BalancedOptions, IpOptions};
 use crate::report::{Series, Table};
 use crate::sim::{simulate_gemm, trace, BdMode};
@@ -329,8 +328,8 @@ pub fn functional_perf(
     iters: usize,
 ) -> crate::Result<FunctionalPerf> {
     let p = cfg.precision;
-    let mut a = Matrix::zeroed(m, k, p.ty_in(), Layout::RowMajor)?;
-    let mut b = Matrix::zeroed(k, n, p.ty_in(), cfg.b_layout)?;
+    let mut a = refimpl::input_matrix(m, k, p, Layout::RowMajor)?;
+    let mut b = refimpl::input_matrix(k, n, p, cfg.b_layout)?;
     refimpl::fill_random(&mut a, p, 1);
     refimpl::fill_random(&mut b, p, 2);
     let exec = Executor::with_options(*cfg, opts);
@@ -340,7 +339,7 @@ pub fn functional_perf(
         std::hint::black_box(exec.execute(&a, &b)?);
     }
     let secs = t0.elapsed().as_secs_f64() / iters as f64;
-    let bytes = ((m * k + k * n) * p.ty_in() + m * n * p.ty_out()) as f64;
+    let bytes = (p.bytes_in(m * k) + p.bytes_in(k * n) + p.bytes_out(m * n)) as f64;
     Ok(FunctionalPerf {
         secs_per_gemm: secs,
         gemms_per_s: 1.0 / secs,

@@ -25,6 +25,10 @@
 //!                                             chain planner: fused vs isolated
 //! xdna-gemm artifacts [--dir artifacts]       list + smoke the AOT bundle
 //! ```
+//!
+//! `--precision` accepts `i8i8|i8i16|i8i32|bf16|bfp16` everywhere; `bfp16`
+//! is the native block-FP path (XDNA2 datapath rate, DESIGN.md §10) and
+//! requires column-major B.
 
 use anyhow::{bail, Result};
 
@@ -38,7 +42,8 @@ use xdna_gemm::sim::{simulate_gemm, BdMode};
 use xdna_gemm::util::cli::Args;
 use xdna_gemm::workload::TransformerConfig;
 
-const USAGE: &str = "usage: xdna-gemm <table1|table2|table3|fig6|fig7|fig8|ablations|optimize|simulate|exec|serve|plan|artifacts> [options]";
+const USAGE: &str = "usage: xdna-gemm <table1|table2|table3|fig6|fig7|fig8|ablations|optimize|\
+                     simulate|exec|serve|plan|artifacts> [options]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -117,6 +122,9 @@ fn main() -> Result<()> {
             let n = args.usize_opt("n", 4096)?;
             let mut cfg = xdna_gemm::arch::balanced_config(gen, p);
             if args.flag("rowmajor-b") {
+                if p == Precision::Bfp16 {
+                    bail!("--rowmajor-b is invalid for bfp16 (blocks run along K)");
+                }
                 cfg = cfg.with_b_layout(Layout::RowMajor);
             }
             let mode =
@@ -162,6 +170,9 @@ fn main() -> Result<()> {
             let iters = args.usize_opt("iters", 3)?;
             let mut cfg = xdna_gemm::arch::balanced_config(gen, p);
             if args.flag("rowmajor-b") {
+                if p == Precision::Bfp16 {
+                    bail!("--rowmajor-b is invalid for bfp16 (blocks run along K)");
+                }
                 cfg = cfg.with_b_layout(Layout::RowMajor);
             }
             let (nm, nk, nn) = cfg.native();

@@ -8,6 +8,7 @@
 use anyhow::{bail, Result};
 
 use crate::dtype::{Bf16, Layout};
+use crate::dtype_bfp16::{BfpBlock, BLOCK, BLOCK_WORDS, PADDED_BYTES};
 
 /// A DRAM-resident matrix as a word-addressable image.
 ///
@@ -42,6 +43,56 @@ impl Matrix {
             bail!("matrix storage rows of {run} B not word-aligned");
         }
         Ok(Matrix { rows, cols, elem_bytes, layout, data: vec![0; bytes / 4] })
+    }
+
+    /// A native-bfp16 matrix image of `rows × cols` *logical* elements.
+    ///
+    /// Shared-exponent blocks run along the reduction-facing axis — the
+    /// columns of a row-major image (A, C) or the rows of a column-major
+    /// one (B) — and each block is stored in the padded 12-byte wire
+    /// layout ([`BfpBlock::to_words`]), so the image is word-addressable
+    /// and the Fig.-4 DMA chains re-tile it as 3-word elements.
+    ///
+    /// The returned `Matrix` is in *block units* on the blocked axis
+    /// (`elem_bytes == 12`): a row-major `m × k` operand is stored as
+    /// `m × k/8` block cells. Access it with
+    /// [`Self::get_bfp_block`]/[`Self::set_bfp_block`]; the byte-granular
+    /// accessors do not apply.
+    pub fn zeroed_bfp16(rows: usize, cols: usize, layout: Layout) -> Result<Matrix> {
+        let blocked = match layout {
+            Layout::RowMajor => cols,
+            Layout::ColMajor => rows,
+        };
+        if blocked % BLOCK != 0 {
+            bail!("bfp16 image {rows}x{cols}: blocked axis {blocked} not a multiple of {BLOCK}");
+        }
+        match layout {
+            Layout::RowMajor => Matrix::zeroed(rows, cols / BLOCK, PADDED_BYTES, layout),
+            Layout::ColMajor => Matrix::zeroed(rows / BLOCK, cols, PADDED_BYTES, layout),
+        }
+    }
+
+    /// Whether this image stores padded bfp16 blocks.
+    pub fn is_bfp16(&self) -> bool {
+        self.elem_bytes == PADDED_BYTES
+    }
+
+    /// Read the block cell at `(i, j)` of the block-unit grid (for a
+    /// row-major image `j` indexes blocks along the row; for column-major
+    /// `i` indexes blocks down the column).
+    pub fn get_bfp_block(&self, i: usize, j: usize) -> BfpBlock {
+        debug_assert!(self.is_bfp16());
+        let b = self.byte_index(i, j);
+        debug_assert_eq!(b % 4, 0);
+        BfpBlock::from_words(&self.data[b / 4..b / 4 + BLOCK_WORDS])
+    }
+
+    /// Write the block cell at `(i, j)` in the padded wire layout.
+    pub fn set_bfp_block(&mut self, i: usize, j: usize, blk: BfpBlock) {
+        debug_assert!(self.is_bfp16());
+        let b = self.byte_index(i, j);
+        debug_assert_eq!(b % 4, 0);
+        self.data[b / 4..b / 4 + BLOCK_WORDS].copy_from_slice(&blk.to_words());
     }
 
     /// Words per storage row (the DMA row stride).

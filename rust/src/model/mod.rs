@@ -18,13 +18,13 @@ pub fn c_comp(t: &KernelTile, eff: f64, peak_macs: f64) -> f64 {
 /// Eq. 2 — DMA cycles for the A tile:
 /// `CA_comm = m_ct·k_ct·ty(A) / DMA_BW`.
 pub fn ca_comm(t: &KernelTile, p: Precision, dma_bw: f64) -> f64 {
-    (t.m_ct * t.k_ct * p.ty_in()) as f64 / dma_bw
+    (t.m_ct * t.k_ct) as f64 * p.in_bytes_f() / dma_bw
 }
 
 /// Eq. 3 — DMA cycles for the B tile:
 /// `CB_comm = k_ct·n_ct·ty(B) / DMA_BW`.
 pub fn cb_comm(t: &KernelTile, p: Precision, dma_bw: f64) -> f64 {
-    (t.k_ct * t.n_ct * p.ty_in()) as f64 / dma_bw
+    (t.k_ct * t.n_ct) as f64 * p.in_bytes_f() / dma_bw
 }
 
 /// Eq. 4 — compute-bound constraint:
@@ -44,7 +44,7 @@ pub fn l1_fits(t: &KernelTile, p: Precision, spec: &NpuSpec, c_double_buffered: 
 /// Eq. 6 — DRAM reads for A (bytes):
 /// `A_mem = M·K·N·ty(A) / (n_ct·n_cols)`.
 pub fn a_mem(cfg: &TilingConfig, m: usize, k: usize, n: usize) -> f64 {
-    (m as f64 * k as f64 * n as f64) * cfg.precision.ty_in() as f64
+    (m as f64 * k as f64 * n as f64) * cfg.precision.in_bytes_f()
         / (cfg.kernel.n_ct * cfg.n_cols) as f64
 }
 
@@ -54,7 +54,7 @@ pub fn a_mem_unsimplified(cfg: &TilingConfig, m: usize, k: usize, n: usize) -> f
     let t = &cfg.kernel;
     (t.m_ct * cfg.m_rows) as f64
         * k as f64
-        * cfg.precision.ty_in() as f64
+        * cfg.precision.in_bytes_f()
         * (n as f64 / (t.n_ct * cfg.n_cols) as f64)
         * (m as f64 / (t.m_ct * cfg.m_rows) as f64)
 }
@@ -62,13 +62,13 @@ pub fn a_mem_unsimplified(cfg: &TilingConfig, m: usize, k: usize, n: usize) -> f
 /// Eq. 7 — DRAM reads for B (bytes):
 /// `B_mem = M·K·N·ty(B) / (m_ct·m_rows)`.
 pub fn b_mem(cfg: &TilingConfig, m: usize, k: usize, n: usize) -> f64 {
-    (m as f64 * k as f64 * n as f64) * cfg.precision.ty_in() as f64
+    (m as f64 * k as f64 * n as f64) * cfg.precision.in_bytes_f()
         / (cfg.kernel.m_ct * cfg.m_rows) as f64
 }
 
 /// Eq. 8 — DRAM writes for C (bytes): `C_mem = M·N·ty(C)`.
 pub fn c_mem(cfg: &TilingConfig, m: usize, n: usize) -> f64 {
-    m as f64 * n as f64 * cfg.precision.ty_out() as f64
+    m as f64 * n as f64 * cfg.precision.out_bytes_f()
 }
 
 /// Eq. 9 — GEMM compute time on the array:

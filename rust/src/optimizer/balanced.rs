@@ -244,6 +244,35 @@ mod tests {
     }
 
     #[test]
+    fn bfp16_search_confirms_the_shipped_configs() {
+        // The bfp16 rows of `arch::balanced_config` are this repo's own
+        // balanced-search winners (native bfp16 has no paper row). Keep
+        // them honest against the live search on both generations: the
+        // search may drift a little (flat optimum), never a lot.
+        for gen in Generation::ALL {
+            let res =
+                optimize_balanced(gen, Precision::Bfp16, &BalancedOptions::default()).unwrap();
+            let shipped = balanced_config(gen, Precision::Bfp16);
+            let eval = eval_size_for(&shipped, 4000);
+            let shipped_tops =
+                simulate_gemm(&shipped, eval.0, eval.1, eval.2, BdMode::Overlapped).tops;
+            assert!(
+                res.winner_report.tops >= shipped_tops * 0.97,
+                "{gen}: search {:.2} below shipped {shipped_tops:.2}",
+                res.winner_report.tops
+            );
+            assert!(
+                shipped_tops >= res.winner_report.tops * 0.80,
+                "{gen}: shipped {shipped_tops:.2} far below search {:.2} — update arch.rs",
+                res.winner_report.tops
+            );
+            // And the search trajectory starts memory-bound, exactly
+            // like the byte precisions (Sec. 4.5.2).
+            assert!(res.history.first().unwrap().memory_bound, "{gen}");
+        }
+    }
+
+    #[test]
     fn winner_is_near_balance() {
         // At the winner, T_comp and T_mem are within ~35% of each other
         // (the k_ct grid is coarse, exact equality is not attainable).

@@ -96,8 +96,8 @@ impl IpSolution {
 fn eq4_ok(gen: Generation, p: Precision, t: &KernelTile) -> bool {
     let spec = gen.spec();
     let cycles = core::kernel_cycles(gen, p, t);
-    let ca = (t.m_ct * t.k_ct * p.ty_in()) as f64 / spec.dma_bytes_per_cycle;
-    let cb = (t.k_ct * t.n_ct * p.ty_in()) as f64 / spec.dma_bytes_per_cycle;
+    let ca = (t.m_ct * t.k_ct) as f64 * p.in_bytes_f() / spec.dma_bytes_per_cycle;
+    let cb = (t.k_ct * t.n_ct) as f64 * p.in_bytes_f() / spec.dma_bytes_per_cycle;
     cycles >= ca && cycles >= cb
 }
 
@@ -119,8 +119,10 @@ pub fn solve_single_core(
     };
 
     let c_bufs = if opts.c_double_buffered { 2 } else { 1 };
-    let ty_in = p.ty_in();
-    let ty_out = p.ty_out();
+    // Work in *bits* so the bound is exact for bfp16's 12-bit amortized
+    // elements too (byte-granular precisions reduce to the old formula).
+    let in_bits = p.in_bits();
+    let out_bits = p.out_bits();
 
     let mut m = STEP_M;
     while m <= opts.max_m {
@@ -128,9 +130,9 @@ pub fn solve_single_core(
         while n <= opts.max_n {
             // For fixed (m, n) the L1 bound gives the max k directly:
             // 2·m·k·ty + 2·k·n·ty + c_bufs·m·n·ty_out <= budget.
-            let c_term = c_bufs * m * n * ty_out;
-            if c_term < budget {
-                let k_cap = (budget - c_term) / (2 * ty_in * (m + n));
+            let c_term = c_bufs * m * n * out_bits;
+            if c_term < budget * 8 {
+                let k_cap = (budget * 8 - c_term) / (2 * in_bits * (m + n));
                 let k_max = (k_cap / STEP_K) * STEP_K;
                 let hi = k_max.min(k_hi);
                 let mut k = k_lo;

@@ -12,5 +12,5 @@
 pub mod balanced;
 pub mod ip;
 
-pub use balanced::{optimize_balanced, BalancedOptions, BalancedResult};
+pub use balanced::{eval_size_for, optimize_balanced, BalancedOptions, BalancedResult};
 pub use ip::{solve_single_core, IpObjective, IpOptions, IpSolution};

@@ -13,11 +13,14 @@ use crate::workload::{GemmShape, TransformerConfig};
 
 /// Can `prev`'s output dtype be consumed as `next`'s input dtype without
 /// a host-side cast? int8 outputs feed any int8-input precision; bf16
-/// feeds bf16. int8→int16/int32 outputs are wider than any input dtype.
+/// feeds bf16; bfp16 blocks feed bfp16 (a C image's blocks run along N,
+/// which is exactly the consumer's K). int8→int16/int32 outputs are
+/// wider than any input dtype, and block/byte formats never mix.
 pub fn out_feeds_in(prev: Precision, next: Precision) -> bool {
     match prev {
-        Precision::I8I8 => next != Precision::Bf16,
+        Precision::I8I8 => !matches!(next, Precision::Bf16 | Precision::Bfp16),
         Precision::Bf16 => next == Precision::Bf16,
+        Precision::Bfp16 => next == Precision::Bfp16,
         Precision::I8I16 | Precision::I8I32 => false,
     }
 }
@@ -176,6 +179,12 @@ mod tests {
         // bf16 chains to bf16.
         let bf = GemmShape::new("f", 64, 128, 256, Precision::Bf16);
         assert!(feeds(&bf, &GemmShape::new("g", 64, 256, 64, Precision::Bf16)));
+        // bfp16 blocks chain to bfp16 — and never mix with byte formats
+        // (an int8 C image is not a block image and vice versa).
+        let bfp = GemmShape::new("p", 64, 128, 256, Precision::Bfp16);
+        assert!(feeds(&bfp, &GemmShape::new("q", 64, 256, 64, Precision::Bfp16)));
+        assert!(!feeds(&bfp, &GemmShape::new("q", 64, 256, 64, Precision::Bf16)));
+        assert!(!feeds(&a, &GemmShape::new("q", 64, 256, 64, Precision::Bfp16)));
     }
 
     #[test]

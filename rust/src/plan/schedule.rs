@@ -58,7 +58,7 @@ impl ChainPlan {
 /// the fusion-eligibility rule.
 pub fn resident_c_bytes(cfg: &TilingConfig, producer: &GemmShape) -> usize {
     let (pm, _, pn) = cfg.padded(producer.m, producer.k, producer.n);
-    pm * pn * cfg.precision.ty_out()
+    cfg.precision.bytes_out(pm * pn)
 }
 
 /// L2 bytes left once the design's double-buffered A/B tiles and C
@@ -120,7 +120,11 @@ impl Planner {
     }
 
     fn cfg_for(&self, shape: &GemmShape) -> TilingConfig {
-        balanced_config(self.gen, shape.precision).with_b_layout(shape.b_layout)
+        // Resolve through the canonical design key (bfp16 normalizes to
+        // its single valid layout), exactly like the coordinator's
+        // leaders do via their design caches.
+        let key = DesignKey::for_shape(shape);
+        balanced_config(self.gen, key.precision).with_b_layout(key.b_layout)
     }
 
     /// The chain-aware schedule: chains grouped by their leading design

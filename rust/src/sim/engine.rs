@@ -156,21 +156,21 @@ pub fn simulate_gemm_with(
     let a_bytes = if ov.a_in_l2 {
         0.0
     } else {
-        mkn * p.ty_in() as f64 / (kt.n_ct * cfg.n_cols) as f64
+        mkn * p.in_bytes_f() / (kt.n_ct * cfg.n_cols) as f64
     };
-    let b_bytes = mkn * p.ty_in() as f64 / (kt.m_ct * cfg.m_rows) as f64;
+    let b_bytes = mkn * p.in_bytes_f() / (kt.m_ct * cfg.m_rows) as f64;
     let c_bytes = if ov.c_stays_in_l2 {
         0.0
     } else {
-        pm as f64 * pn as f64 * p.ty_out() as f64
+        pm as f64 * pn as f64 * p.out_bytes_f()
     };
 
-    let a_run = (cfg.k_mt * p.ty_in()) as f64;
+    let a_run = cfg.k_mt as f64 * p.in_bytes_f();
     let b_run = match cfg.b_layout {
-        Layout::ColMajor => (cfg.k_mt * p.ty_in()) as f64,
-        Layout::RowMajor => (kt.n_ct * p.ty_in()) as f64 * dram.row_coalesce,
+        Layout::ColMajor => cfg.k_mt as f64 * p.in_bytes_f(),
+        Layout::RowMajor => kt.n_ct as f64 * p.in_bytes_f() * dram.row_coalesce,
     };
-    let c_run = (kt.n_ct * p.ty_out()) as f64 * dram.row_coalesce;
+    let c_run = kt.n_ct as f64 * p.out_bytes_f() * dram.row_coalesce;
 
     let t_read = dram.xfer_time(a_bytes, a_run) + dram.xfer_time(b_bytes, b_run);
     let t_write = dram.xfer_time(c_bytes, c_run);
@@ -190,13 +190,13 @@ pub fn simulate_gemm_with(
     let a_first = if ov.a_in_l2 {
         0.0
     } else {
-        (cfg.m_rows * kt.m_ct * cfg.k_mt * p.ty_in()) as f64
+        (cfg.m_rows * kt.m_ct * cfg.k_mt) as f64 * p.in_bytes_f()
     };
     let b_first_elems = match cfg.b_layout {
         Layout::ColMajor => cfg.n_cols * cfg.k_mt * kt.n_ct,
         Layout::RowMajor => cfg.n_cols * kt.k_ct * kt.n_ct,
     };
-    let b_first = (b_first_elems * p.ty_in()) as f64;
+    let b_first = b_first_elems as f64 * p.in_bytes_f();
     let t_prologue = dram.xfer_time(a_first, a_run) + dram.xfer_time(b_first, b_run);
     let t_dispatch = if ov.elide_dispatch { 0.0 } else { dispatch_seconds(cfg.gen) };
 
@@ -424,6 +424,30 @@ mod tests {
         let dflt = simulate_gemm_with(&cfg, m, k, n, BdMode::Overlapped, Default::default());
         assert_eq!(dflt.t_total, base.t_total);
         assert_eq!(dflt.a_bytes, base.a_bytes);
+    }
+
+    #[test]
+    fn native_bfp16_beats_bf16_emulation_on_xdna2() {
+        // The DESIGN.md §10 acceptance bar: ≥1.5x simulated throughput
+        // over the bf16 balanced design at the paper's Table-3 bf16
+        // shape (cross-checked numerically in
+        // python/tests/test_bfp16_model.py). Sources of the gap: 512 vs
+        // 192 MACs/cycle (Table 1) minus the 12-bit wire's still-real
+        // DRAM traffic and the bfp16 grid's padding at this shape.
+        let bf16 = balanced_config(Generation::Xdna2, Precision::Bf16);
+        let bfp16 = balanced_config(Generation::Xdna2, Precision::Bfp16);
+        let (m, k, n) = (4032, 4224, 4608);
+        let r_bf = simulate_gemm(&bf16, m, k, n, BdMode::Overlapped);
+        let r_bfp = simulate_gemm(&bfp16, m, k, n, BdMode::Overlapped);
+        let speedup = r_bfp.tops / r_bf.tops;
+        assert!(speedup >= 1.5, "bfp16 {:.2} vs bf16 {:.2}: {speedup:.3}x", r_bfp.tops, r_bf.tops);
+        // Not a free lunch: 12-bit elements still move 3/4 of bf16's
+        // bytes, so the datapath's 2.67x cannot survive intact.
+        assert!(speedup <= 2.3, "{speedup:.3}x suspiciously high — calibration drift");
+        // bfp16 DRAM bytes per element are 3/4 of bf16's; same padded
+        // problem would make a_bytes compare 0.75x exactly, but the
+        // designs pad differently, so just check the direction.
+        assert!(r_bfp.a_bytes + r_bfp.b_bytes < r_bf.a_bytes + r_bf.b_bytes);
     }
 
     #[test]

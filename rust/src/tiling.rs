@@ -43,12 +43,15 @@ impl KernelTile {
     }
 
     /// L1 bytes used under the paper's buffering scheme: A and B
-    /// double-buffered, C single-buffered (Eq. 5).
+    /// double-buffered, C single-buffered (Eq. 5). bfp16 buffers hold
+    /// the padded 12-byte blocks the L1-ingest DMA delivers (12
+    /// bits/value — the kernel's register-level unpack strips the pad on
+    /// load, like the in-core shuffle for column-major B).
     pub fn l1_bytes(&self, p: Precision, c_double_buffered: bool) -> usize {
         let c_bufs = if c_double_buffered { 2 } else { 1 };
-        2 * self.m_ct * self.k_ct * p.ty_in()
-            + 2 * self.k_ct * self.n_ct * p.ty_in()
-            + c_bufs * self.m_ct * self.n_ct * p.ty_out()
+        p.bytes_in(2 * self.m_ct * self.k_ct)
+            + p.bytes_in(2 * self.k_ct * self.n_ct)
+            + c_bufs * p.bytes_out(self.m_ct * self.n_ct)
     }
 
     pub fn label(&self) -> String {
@@ -102,7 +105,18 @@ impl TilingConfig {
         Ok(cfg)
     }
 
+    /// Builder for the B storage order. Every layout flip on a valid
+    /// config stays valid (row-major B only *shrinks* the staged L2
+    /// tile) — except bfp16, whose blocks run along K and admit no
+    /// row-major B at all; that combination is a programming error and
+    /// panics here rather than yielding an unschedulable design
+    /// (request paths never reach this: `parse_trace` rejects it and
+    /// `DesignKey::normalized` canonicalizes hostile keys).
     pub fn with_b_layout(mut self, layout: Layout) -> Self {
+        assert!(
+            !(self.precision == Precision::Bfp16 && layout == Layout::RowMajor),
+            "bfp16 requires column-major B (blocks run along K)"
+        );
         self.b_layout = layout;
         self
     }
@@ -126,6 +140,13 @@ impl TilingConfig {
         }
         if self.k_mt % k.k_ct != 0 {
             bail!("k_mt={} must be a multiple of k_ct={}", self.k_mt, k.k_ct);
+        }
+        // Shared-exponent blocks run along K. A row-major B scatters each
+        // block across 8 storage rows, which no word-granularity DMA
+        // chain can gather back — the Sec. 4.3 obstruction with no
+        // padding fix — so native bfp16 requires column-major B.
+        if self.precision == Precision::Bfp16 && self.b_layout == Layout::RowMajor {
+            bail!("bfp16 requires column-major B (blocks run along K)");
         }
         if self.m_rows > spec.array_rows || self.n_cols > spec.shim_cols {
             bail!(
@@ -187,7 +208,7 @@ impl TilingConfig {
 
     /// L2 bytes of the A tile staged per (even) MemTile: `m_ct × k_mt`.
     pub fn a_l2_bytes(&self) -> usize {
-        self.kernel.m_ct * self.k_mt * self.precision.ty_in()
+        self.precision.bytes_in(self.kernel.m_ct * self.k_mt)
     }
 
     /// L2 bytes of the B tile staged per MemTile. Column-major B stages a
@@ -195,15 +216,15 @@ impl TilingConfig {
     /// stage the CompTile-sized `k_ct × n_ct` (Sec. 4.2.2).
     pub fn b_l2_bytes(&self) -> usize {
         match self.b_layout {
-            Layout::ColMajor => self.k_mt * self.kernel.n_ct * self.precision.ty_in(),
-            Layout::RowMajor => self.kernel.k_ct * self.kernel.n_ct * self.precision.ty_in(),
+            Layout::ColMajor => self.precision.bytes_in(self.k_mt * self.kernel.n_ct),
+            Layout::RowMajor => self.precision.bytes_in(self.kernel.k_ct * self.kernel.n_ct),
         }
     }
 
     /// L2 bytes of the aggregated output per MemTile: `m_rows` C tiles are
     /// gathered per column before the ShimTile drains them (Sec. 4.2.2).
     pub fn c_l2_bytes(&self) -> usize {
-        self.m_rows * self.kernel.m_ct * self.kernel.n_ct * self.precision.ty_out()
+        self.precision.bytes_out(self.m_rows * self.kernel.m_ct * self.kernel.n_ct)
     }
 
     /// (used, capacity) of L2 across the mapped MemTiles, following the
@@ -373,6 +394,16 @@ mod tests {
             Layout::ColMajor
         )
         .is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "bfp16 requires column-major B")]
+    fn with_b_layout_refuses_row_major_bfp16() {
+        // The builder is the one place a validated config could silently
+        // go unschedulable; the impossible combination must fail loudly
+        // at construction.
+        let cfg = balanced_config(Generation::Xdna2, Precision::Bfp16);
+        let _ = cfg.with_b_layout(Layout::RowMajor);
     }
 
     #[test]

@@ -104,9 +104,11 @@ impl TransformerConfig {
 /// Skewed serving mix for fleet load tests (the Sec. 5.3 deployment
 /// case): `count` requests drawn from the default transformer's prefill
 /// shapes with a hot head — ~60% int8 column-major (the tuned library
-/// path), ~20% int8→int16, ~10% bf16, ~10% int8 row-major — so a
-/// multi-device coordinator sees both design reuse and design-switch
-/// pressure. Deterministic in `seed`.
+/// path), ~10% int8→int16, ~10% native bfp16 (block-aligned shapes
+/// only; the quantized-inference slice that routes hot to XDNA2),
+/// ~10% bf16, ~10% int8 row-major — so a multi-device coordinator sees
+/// both design reuse and design-switch pressure. Deterministic in
+/// `seed`.
 pub fn skewed_trace(count: usize, seed: u64) -> Vec<GemmShape> {
     let hot = TransformerConfig::default().trace();
     let mut rng = Rng::seeded(seed);
@@ -117,6 +119,10 @@ pub fn skewed_trace(count: usize, seed: u64) -> Vec<GemmShape> {
         let roll = rng.below(10);
         if roll >= 8 {
             g.precision = Precision::Bf16;
+        } else if roll == 7 && g.k % 8 == 0 && g.n % 8 == 0 {
+            // Block format: only shapes whose K/N cover whole 8-value
+            // blocks (everything but the ragged-vocab lm_head).
+            g.precision = Precision::Bfp16;
         } else if roll >= 6 {
             g.precision = Precision::I8I16;
         }
@@ -130,7 +136,13 @@ pub fn skewed_trace(count: usize, seed: u64) -> Vec<GemmShape> {
 }
 
 /// Two-layer MLP trace (the quickstart-scale workload).
-pub fn mlp_trace(batch: usize, d_in: usize, d_hidden: usize, d_out: usize, p: Precision) -> Vec<GemmShape> {
+pub fn mlp_trace(
+    batch: usize,
+    d_in: usize,
+    d_hidden: usize,
+    d_out: usize,
+    p: Precision,
+) -> Vec<GemmShape> {
     vec![
         GemmShape::new("mlp.fc1", batch, d_in, d_hidden, p),
         GemmShape::new("mlp.fc2", batch, d_hidden, d_out, p),
@@ -141,7 +153,12 @@ pub fn mlp_trace(batch: usize, d_in: usize, d_hidden: usize, d_out: usize, p: Pr
 /// independent multiple of the native size, up to `max_dim` ("we select
 /// more than 400 points ... up to 8K-sized matrices, without favoring any
 /// particular M, K, N dimension").
-pub fn roofline_sweep(cfg: &TilingConfig, count: usize, max_dim: usize, seed: u64) -> Vec<(usize, usize, usize)> {
+pub fn roofline_sweep(
+    cfg: &TilingConfig,
+    count: usize,
+    max_dim: usize,
+    seed: u64,
+) -> Vec<(usize, usize, usize)> {
     let (nm, nk, nn) = cfg.native();
     let (mi, ki, ni) = (max_dim / nm, max_dim / nk, max_dim / nn);
     let mut rng = Rng::seeded(seed);
@@ -250,13 +267,20 @@ pub fn parse_trace(text: &str) -> anyhow::Result<Vec<GemmShape>> {
             s.parse()
                 .map_err(|_| anyhow::anyhow!("line {}: bad {what} '{s}'", lineno + 1))
         };
-        let precision = Precision::parse(toks[4])
-            .ok_or_else(|| anyhow::anyhow!("line {}: unknown precision '{}'", lineno + 1, toks[4]))?;
+        let precision = Precision::parse(toks[4]).ok_or_else(|| {
+            anyhow::anyhow!("line {}: unknown precision '{}'", lineno + 1, toks[4])
+        })?;
         let b_layout = match toks.get(5) {
             None => Layout::ColMajor,
             Some(s) => Layout::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("line {}: unknown layout '{s}'", lineno + 1))?,
         };
+        if precision == Precision::Bfp16 && b_layout == Layout::RowMajor {
+            anyhow::bail!(
+                "line {}: bfp16 requires column-major B (blocks run along K)",
+                lineno + 1
+            );
+        }
         out.push(GemmShape {
             name: toks[0].to_string(),
             m: parse_dim(toks[1], "M")?,
@@ -320,5 +344,42 @@ blk0.ffn_down 512 11008 4096 bf16  # trailing comment
         assert!(parse_trace("x 1 2 3 i8i8 diagonal").is_err());
         // Comments and blanks alone are fine.
         assert!(parse_trace("# nothing\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn unknown_precision_is_an_error_not_a_default() {
+        // The failure mode this guards: a typo'd precision silently
+        // becoming i8i8 and the trace "working". The error must name the
+        // line and the bad token.
+        let err = parse_trace("blk0.q 512 768 768 fp8").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("fp8"), "{err}");
+        let err2 = parse_trace("a 8 8 8 i8i8\nb 8 8 8 bf17").unwrap_err().to_string();
+        assert!(err2.contains("line 2") && err2.contains("bf17"), "{err2}");
+    }
+
+    #[test]
+    fn accepts_bfp16_traces() {
+        let t = parse_trace("blk0.ffn_up 512 4096 11008 bfp16\n").unwrap();
+        assert_eq!(t[0].precision, Precision::Bfp16);
+        assert_eq!(t[0].b_layout, Layout::ColMajor);
+        // Paper-style alias too.
+        let t2 = parse_trace("x 8 8 8 bfp16-bfp16").unwrap();
+        assert_eq!(t2[0].precision, Precision::Bfp16);
+        // A row-major bfp16 B is physically unschedulable (blocks run
+        // along K) — rejected at parse time, not deep in a leader.
+        assert!(parse_trace("x 8 8 8 bfp16 rowmajor").is_err());
+    }
+
+    #[test]
+    fn skewed_trace_bfp16_slice_is_block_aligned() {
+        let t = skewed_trace(400, 7);
+        let bfp: Vec<_> =
+            t.iter().filter(|g| g.precision == Precision::Bfp16).collect();
+        assert!(!bfp.is_empty(), "mix must include the bfp16 slice");
+        for g in bfp {
+            assert!(g.k % 8 == 0 && g.n % 8 == 0, "{}: {}x{}x{}", g.name, g.m, g.k, g.n);
+            assert_eq!(g.b_layout, Layout::ColMajor);
+        }
     }
 }

@@ -146,7 +146,13 @@ impl InputChain {
     ///
     /// Returns `K/k_ct` pre-tiled tiles of `tile_words()` each — what the
     /// core consumes in reduction order.
-    pub fn stream_panel(&self, dram: &[u32], row0: usize, ld_w: usize, k_total: usize) -> Result<Vec<Vec<u32>>> {
+    pub fn stream_panel(
+        &self,
+        dram: &[u32],
+        row0: usize,
+        ld_w: usize,
+        k_total: usize,
+    ) -> Result<Vec<Vec<u32>>> {
         let tw = self.tile_words();
         let mut flat = vec![0u32; k_total / self.k_ct * tw];
         self.stream_panel_into(dram, row0, ld_w, k_total, &mut flat)?;
@@ -295,7 +301,13 @@ impl BRowMajorChain {
     }
 
     /// Full chain for one `k_total × n_ct` panel → per-tile L1 images.
-    pub fn stream_panel(&self, dram: &[u32], col0_w: usize, ld_w: usize, k_total: usize) -> Result<Vec<Vec<u32>>> {
+    pub fn stream_panel(
+        &self,
+        dram: &[u32],
+        col0_w: usize,
+        ld_w: usize,
+        k_total: usize,
+    ) -> Result<Vec<Vec<u32>>> {
         let tw = self.tile_words();
         let mut flat = vec![0u32; k_total / self.k_ct * tw];
         self.stream_panel_into(dram, col0_w, ld_w, k_total, &mut flat)?;
@@ -537,7 +549,8 @@ mod tests {
 
     #[test]
     fn a_chain_bd_dims_respect_hardware() {
-        let chain = InputChain { rows: 96, micro_r: 4, micro_s: 8, k_ct: 56, k_mt: 224, elem_bytes: 2 };
+        let chain =
+            InputChain { rows: 96, micro_r: 4, micro_s: 8, k_ct: 56, k_mt: 224, elem_bytes: 2 };
         chain.validate(448).unwrap();
         assert!(chain.shim_mm2s(0, 224, 448).unwrap().dims.len() <= 3);
         assert!(chain.memtile_s2mm(0).unwrap().dims.len() <= 3);
@@ -654,7 +667,8 @@ mod tests {
     fn shim_contiguity_matches_kmt() {
         // The A-chain Shim BD's average contiguous run is k_mt elements —
         // the quantity Fig. 6 sweeps.
-        let chain = InputChain { rows: 8, micro_r: 4, micro_s: 8, k_ct: 16, k_mt: 64, elem_bytes: 1 };
+        let chain =
+            InputChain { rows: 8, micro_r: 4, micro_s: 8, k_ct: 16, k_mt: 64, elem_bytes: 1 };
         let bd = chain.shim_mm2s(0, 64, 256).unwrap();
         assert_eq!(bd.avg_contig_run_bytes(), 64.0);
         // ...except when k_mt spans the whole row: then rows merge.

@@ -1,0 +1,228 @@
+//! Property tests for the bfp16 substrate (ISSUE 4).
+//!
+//! Three contracts, all load-bearing for the native block-FP execution
+//! path (`gemm::exec` + DESIGN.md §10):
+//!
+//! 1. encode/decode round-trips within the module's stated error bound
+//!    (`max_rel_error_bound` = half a mantissa step relative to the
+//!    block max) across random blocks, including denormal-range and
+//!    overflow/non-finite edges;
+//! 2. block dot products track an f64 reference over the decoded
+//!    values;
+//! 3. repack(unpack(x)) == x for the word-aligned wire layout — through
+//!    the raw 3-word codec, through `Matrix` block images, and through
+//!    a full Fig.-4 BD chain over a block image (the padded DMA leg +
+//!    core-side strip that makes native bfp16 schedulable at all).
+
+use xdna_gemm::dtype::Layout;
+use xdna_gemm::dtype_bfp16::{max_rel_error_bound, BfpBlock, BLOCK, BLOCK_WORDS, PADDED_BYTES};
+use xdna_gemm::mem::Matrix;
+use xdna_gemm::util::prop::prop_check;
+use xdna_gemm::util::rng::Rng;
+use xdna_gemm::xform::InputChain;
+
+fn random_values(rng: &mut Rng, scale: f32) -> [f32; BLOCK] {
+    let mut vals = [0f32; BLOCK];
+    for v in vals.iter_mut() {
+        *v = rng.normal() as f32 * scale;
+    }
+    vals
+}
+
+fn random_block(rng: &mut Rng) -> BfpBlock {
+    let scale = 2f32.powi(rng.range_i64(-20, 20) as i32);
+    BfpBlock::encode(&random_values(rng, scale))
+}
+
+#[test]
+fn roundtrip_within_bound_across_wide_exponent_range() {
+    // The format's contract over its whole normal range, not just the
+    // unit-scale blocks the module's own tests sample.
+    prop_check("bfp16 roundtrip bound, wide range", 200, |rng| {
+        let scale = 2f32.powi(rng.range_i64(-110, 110) as i32);
+        let vals = random_values(rng, scale);
+        let back = BfpBlock::encode(&vals).decode();
+        let max = vals.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for i in 0..BLOCK {
+            let err = (back[i] - vals[i]).abs();
+            assert!(
+                err <= max_rel_error_bound() * max * 1.001,
+                "scale {scale}: {} -> {} (err {err}, max {max})",
+                vals[i],
+                back[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn denormal_range_blocks_underflow_gracefully() {
+    // Below the format's range (block max < ~2^-121) the stored
+    // exponent clamps at 0. The encode must scale mantissas by the
+    // *clamped* exponent so decode never lands in the wrong binade: the
+    // result quantizes toward zero, it does not blow up. (Regression
+    // test: the pre-ISSUE-4 encode used the unclamped exponent and
+    // decoded 1e-40 as ~6.4e-39 — 64x too large.)
+    let vals = [1e-40f32, 2e-41, -3e-40, 0.0, 5e-41, -1e-41, 8e-41, 0.0];
+    let blk = BfpBlock::encode(&vals);
+    assert_eq!(blk.exponent, 0, "deep-denormal block clamps to the minimum exponent");
+    let back = blk.decode();
+    let max = vals.iter().fold(0f32, |m, v| m.max(v.abs()));
+    for (i, &b) in back.iter().enumerate() {
+        assert!(
+            b.abs() <= 2.0 * max,
+            "denormal decode blew up: {} -> {b}",
+            vals[i]
+        );
+    }
+}
+
+#[test]
+fn overflow_and_nonfinite_edges() {
+    // Non-finite maxima collapse to the zero block (nothing sane to
+    // share an exponent with)...
+    for bad in [f32::INFINITY, f32::NEG_INFINITY, f32::NAN] {
+        let mut vals = [1.0f32; BLOCK];
+        vals[3] = bad;
+        let blk = BfpBlock::encode(&vals);
+        assert_eq!(blk.decode(), [0.0; BLOCK]);
+    }
+    // ...while the largest finite binade still round-trips within the
+    // bound: a 3.3e38 max sits in f32's top binade (2^127 ≤ max <
+    // 2^128), biased exponent 254 — the encode's *maximum* stored
+    // exponent, because at 255 the block max's mantissa (≥ 64) would
+    // decode to 64·2^122 = 2^128 = f32 infinity.
+    let vals = [3.0e38f32, -1.5e38, 2.0e38, 1.0e38, -3.3e38, 0.5e38, 1.1e38, -0.7e38];
+    let blk = BfpBlock::encode(&vals);
+    assert_eq!(blk.exponent, 254);
+    let back = blk.decode();
+    let max = vals.iter().fold(0f32, |m, v| m.max(v.abs()));
+    for i in 0..BLOCK {
+        assert!((back[i] - vals[i]).abs() <= max_rel_error_bound() * max * 1.001);
+    }
+    // Even f32::MAX (whose log2 rounds up to exactly 128.0) clamps to
+    // 254 and decodes finite, within the bound.
+    let top = BfpBlock::encode(&[f32::MAX; BLOCK]);
+    assert_eq!(top.exponent, 254);
+    for v in top.decode() {
+        assert!(v.is_finite());
+        assert!((v - f32::MAX).abs() <= max_rel_error_bound() * f32::MAX * 1.001);
+    }
+}
+
+#[test]
+fn block_dot_tracks_f64_reference() {
+    // BfpBlock::dot (integer mantissa MAC + power-of-two scale) against
+    // an f64 dot over the *decoded* values: per-block products are
+    // exact (|Σ m·m'| ≤ 8·2^14 < 2^24), so the only slack is the f32
+    // cross-block accumulation.
+    prop_check("bfp16 dot vs f64", 100, |rng| {
+        let n_blocks = 1 + rng.below(8);
+        let a: Vec<BfpBlock> = (0..n_blocks).map(|_| random_block(rng)).collect();
+        let b: Vec<BfpBlock> = (0..n_blocks).map(|_| random_block(rng)).collect();
+        let got: f32 = a.iter().zip(&b).map(|(x, y)| x.dot(y)).sum();
+        let mut want = 0f64;
+        let mut mass = 0f64;
+        for (x, y) in a.iter().zip(&b) {
+            let xv = x.decode();
+            let yv = y.decode();
+            for i in 0..BLOCK {
+                want += xv[i] as f64 * yv[i] as f64;
+                mass += (xv[i] as f64 * yv[i] as f64).abs();
+            }
+        }
+        let tol = mass * (n_blocks as f64) * 2.0f64.powi(-23) * 4.0 + 1e-30;
+        assert!(
+            ((got as f64) - want).abs() <= tol,
+            "{n_blocks} blocks: {got} vs {want} (tol {tol})"
+        );
+    });
+}
+
+#[test]
+fn word_codec_roundtrips_and_pads_with_zeros() {
+    prop_check("bfp16 3-word codec", 100, |rng| {
+        let blk = random_block(rng);
+        let words = blk.to_words();
+        assert_eq!(BfpBlock::from_words(&words), blk);
+        // Pad bytes (9..12) must be zero so DMA images stay canonical.
+        assert_eq!(words[2] >> 8, 0, "pad bytes not zero");
+    });
+    assert_eq!(BLOCK_WORDS * 4, PADDED_BYTES);
+}
+
+#[test]
+fn matrix_block_cells_never_alias() {
+    prop_check("bfp16 matrix set/get isolation", 30, |rng| {
+        let rows = 4 * (1 + rng.below(3));
+        let cols_elems = BLOCK * (1 + rng.below(4));
+        for layout in [Layout::RowMajor, Layout::ColMajor] {
+            let (m_rows, m_cols) = match layout {
+                Layout::RowMajor => (rows, cols_elems),
+                Layout::ColMajor => (cols_elems, rows),
+            };
+            let mut m = Matrix::zeroed_bfp16(m_rows, m_cols, layout).unwrap();
+            let zero = BfpBlock { exponent: 0, mantissas: [0; BLOCK] };
+            let mut shadow = vec![zero; m.rows * m.cols];
+            for _ in 0..32 {
+                let i = rng.below(m.rows);
+                let j = rng.below(m.cols);
+                let blk = random_block(rng);
+                m.set_bfp_block(i, j, blk);
+                shadow[i * m.cols + j] = blk;
+            }
+            for i in 0..m.rows {
+                for j in 0..m.cols {
+                    assert_eq!(m.get_bfp_block(i, j), shadow[i * m.cols + j], "({i},{j})");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn bd_chain_repack_roundtrips_block_images() {
+    // The whole point of the word-aligned layout: a padded block image
+    // rides the unmodified Fig.-4 chain (Shim → MemTile → CompTile BDs,
+    // block = one 3-word element), and stripping the pad on the far
+    // side recovers every source block exactly — repack(unpack(x)) == x
+    // through the real DMA hops.
+    prop_check("bfp16 blocks through the A chain", 20, |rng| {
+        let micro_r = 4;
+        let rows = micro_r * (1 + rng.below(2));
+        let k_ct_blocks = 1 + rng.below(3);
+        let k_mt_blocks = k_ct_blocks * (1 + rng.below(2));
+        let k_blocks = k_mt_blocks * (1 + rng.below(2));
+        let chain = InputChain {
+            rows,
+            micro_r,
+            micro_s: 1,
+            k_ct: k_ct_blocks,
+            k_mt: k_mt_blocks,
+            elem_bytes: PADDED_BYTES,
+        };
+        let mut img = Matrix::zeroed_bfp16(rows, k_blocks * BLOCK, Layout::RowMajor).unwrap();
+        for i in 0..rows {
+            for bj in 0..k_blocks {
+                img.set_bfp_block(i, bj, random_block(rng));
+            }
+        }
+        let tiles = chain.stream_panel(&img.data, 0, img.row_words(), k_blocks).unwrap();
+        assert_eq!(tiles.len(), k_blocks / k_ct_blocks);
+        for (ti, tile) in tiles.iter().enumerate() {
+            // Pre-tiled order: (mo, kb, mi), one 3-word block per step.
+            let mut src = 0usize;
+            for mo in 0..rows / micro_r {
+                for kb in 0..k_ct_blocks {
+                    for mi in 0..micro_r {
+                        let got = BfpBlock::from_words(&tile[src..src + BLOCK_WORDS]);
+                        let want =
+                            img.get_bfp_block(mo * micro_r + mi, ti * k_ct_blocks + kb);
+                        assert_eq!(got, want, "tile {ti} block ({mo},{kb},{mi})");
+                        src += BLOCK_WORDS;
+                    }
+                }
+            }
+        }
+    });
+}

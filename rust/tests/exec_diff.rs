@@ -197,6 +197,149 @@ fn packed_reuse_is_bit_identical_to_restreaming() {
     }
 }
 
+// --- native bfp16 rows (ISSUE 4) ---------------------------------------
+//
+// The block-FP path gets its own differential battery because its
+// numerics contract is different in kind: results are *bit-exact*
+// against the reference (same decoded-f32 arithmetic in the same
+// ascending-k order, same block encode on the way out), while accuracy
+// against real-number arithmetic is bounded by the format itself.
+
+/// Scaled-down bfp16 design (column-major B only — the format's blocks
+/// run along K).
+fn bfp_cfg(gen: Generation) -> TilingConfig {
+    tiny_cfg(gen, Precision::Bfp16, Layout::ColMajor)
+}
+
+fn bfp_inputs(m: usize, k: usize, n: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut a = refimpl::input_matrix(m, k, Precision::Bfp16, Layout::RowMajor).unwrap();
+    let mut b = refimpl::input_matrix(k, n, Precision::Bfp16, Layout::ColMajor).unwrap();
+    refimpl::fill_random(&mut a, Precision::Bfp16, seed);
+    refimpl::fill_random(&mut b, Precision::Bfp16, seed ^ 0x9E37);
+    (a, b)
+}
+
+#[test]
+fn bfp16_exec_is_bit_exact_vs_reference() {
+    // Both fidelities, aligned and ragged/padding shapes (m free; k and
+    // n move in whole 8-value blocks — the format's storage unit).
+    for gen in Generation::ALL {
+        let cfg = bfp_cfg(gen);
+        let (nm, nk, nn) = cfg.native();
+        for (fidelity, m, k, n, seed) in [
+            (Fidelity::BdChain, nm, nk, nn, 0xB1u64),
+            (Fidelity::Direct, 2 * nm - 5, nk + 8, 2 * nn - 8, 0xB2),
+            (Fidelity::BdChain, nm - 1, 2 * nk, nn + 8, 0xB3),
+        ] {
+            let (a, b) = bfp_inputs(m, k, n, seed);
+            let got = Executor::new(cfg, fidelity).execute(&a, &b).unwrap();
+            let want = refimpl::ref_gemm(&a, &b, Precision::Bfp16).unwrap();
+            assert!(
+                refimpl::matrices_equal(&got, &want, Precision::Bfp16),
+                "{gen}/{fidelity:?} {m}x{k}x{n} not bit-exact"
+            );
+        }
+    }
+}
+
+#[test]
+fn bfp16_exec_is_error_bounded_vs_f64() {
+    // Against f64 arithmetic over the decoded inputs, per output row:
+    // |C - C64| ≤ quantization of the output encode (half a mantissa
+    // step relative to the row max, `max_rel_error_bound`) plus the f32
+    // accumulation slack (k · 2^-23 · the row's |a|·|b| mass, with a 4x
+    // safety factor). Derivation + numerical validation:
+    // python/tests/test_bfp16_model.py.
+    use xdna_gemm::dtype_bfp16::max_rel_error_bound;
+    let cfg = bfp_cfg(Generation::Xdna2);
+    let (nm, nk, nn) = cfg.native();
+    let (m, k, n) = (nm + 3, 2 * nk, nn);
+    let (a, b) = bfp_inputs(m, k, n, 0xF64);
+    let got = Executor::new(cfg, Fidelity::Direct).execute(&a, &b).unwrap();
+    let ap = refimpl::packed_f32_bfp(&a);
+    let bp = refimpl::packed_f32_bfp(&b);
+    for i in 0..m {
+        // f64 row of C and the row's accumulation mass.
+        let mut c64 = vec![0f64; n];
+        let mut mass = vec![0f64; n];
+        for kk in 0..k {
+            let av = ap[i * k + kk] as f64;
+            for j in 0..n {
+                let t = av * bp[kk * n + j] as f64;
+                c64[j] += t;
+                mass[j] += t.abs();
+            }
+        }
+        let row_max = c64.iter().fold(0f64, |mx, v| mx.max(v.abs()));
+        for j in 0..n {
+            let gotv = got.get_bfp_block(i, j / 8).decode()[j % 8] as f64;
+            let tol = max_rel_error_bound() as f64 * row_max * 1.01
+                + 4.0 * k as f64 * 2.0f64.powi(-23) * mass[j]
+                + 1e-20;
+            assert!(
+                (gotv - c64[j]).abs() <= tol,
+                "({i},{j}): {gotv} vs f64 {} (tol {tol})",
+                c64[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn bfp16_threads_and_reuse_ablation_are_bit_identical() {
+    // Determinism contract: every thread count {1, 2, 8} and the
+    // pack_reuse=false re-streaming baseline produce identical block
+    // bits, on an aligned multi-tile grid and a ragged padding shape.
+    let cfg = bfp_cfg(Generation::Xdna2);
+    let (nm, nk, nn) = cfg.native();
+    for (m, k, n) in [(2 * nm, 2 * nk, 2 * nn), (2 * nm - 3, nk + 8, 2 * nn - 8)] {
+        let (a, b) = bfp_inputs(m, k, n, 0xDE7 + m as u64);
+        let serial = Executor::new(cfg, Fidelity::Direct).execute(&a, &b).unwrap();
+        for threads in [2usize, 8] {
+            let par = Executor::with_options(cfg, ExecOptions { threads, ..Default::default() })
+                .execute(&a, &b)
+                .unwrap();
+            assert!(
+                refimpl::matrices_equal(&par, &serial, Precision::Bfp16),
+                "{m}x{k}x{n} differs at {threads} threads"
+            );
+        }
+        let restreamed =
+            Executor::with_options(cfg, ExecOptions { pack_reuse: false, ..Default::default() })
+                .execute(&a, &b)
+                .unwrap();
+        assert!(
+            refimpl::matrices_equal(&restreamed, &serial, Precision::Bfp16),
+            "{m}x{k}x{n} differs with pack_reuse=false"
+        );
+    }
+}
+
+#[test]
+fn bfp16_chain_matches_folded_reference() {
+    // Blocks along C's N axis are exactly the next op's K blocks: a
+    // staged chain must fold bit-exactly like the reference does.
+    let cfg = bfp_cfg(Generation::Xdna2);
+    let p = Precision::Bfp16;
+    let (m, dims) = (12usize, [32usize, 24, 16]);
+    let mut a = refimpl::input_matrix(m, dims[0], p, Layout::RowMajor).unwrap();
+    refimpl::fill_random(&mut a, p, 0xCAB);
+    let weights: Vec<Matrix> = (0..2)
+        .map(|i| {
+            let mut b =
+                refimpl::input_matrix(dims[i], dims[i + 1], p, Layout::ColMajor).unwrap();
+            refimpl::fill_random(&mut b, p, 0x100 + i as u64);
+            b
+        })
+        .collect();
+    let got = Executor::new(cfg, Fidelity::Direct).execute_chain(&a, &weights).unwrap();
+    let mut want = a.clone();
+    for b in &weights {
+        want = refimpl::ref_gemm(&want, b, p).unwrap();
+    }
+    assert!(refimpl::matrices_equal(&got, &want, p));
+}
+
 #[test]
 fn chain_execution_matches_folded_reference_differentially() {
     // Multi-op staged-C runs (the planner's fused-edge dataflow) against

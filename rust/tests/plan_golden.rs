@@ -1,0 +1,82 @@
+//! Golden regression layer (ISSUE 4): pin the planner's fused-edge
+//! decisions per (generation, precision) on the canonical transformer
+//! layer chain, so optimizer/capacity changes — L1/L2 accounting, the
+//! balanced configs, `resident_c_bytes`, `l2_headroom` — cannot
+//! silently shift fusion behavior. If one of these assertions moves,
+//! that is a *reviewed decision* about the serving dataflow, not noise:
+//! update the golden value together with the change that moved it.
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::dtype::Precision;
+use xdna_gemm::plan::{transformer_chains, Planner};
+use xdna_gemm::workload::TransformerConfig;
+
+fn layer_plan(gen: Generation, p: Precision) -> xdna_gemm::plan::ChainPlan {
+    let cfg = TransformerConfig { n_layers: 1, precision: p, ..Default::default() };
+    let chain = transformer_chains(&cfg).into_iter().next().unwrap();
+    Planner::new(gen).plan(std::slice::from_ref(&chain))
+}
+
+#[test]
+fn transformer_layer_fused_edges_are_pinned() {
+    // Default transformer layer (seq 512, d 768, ffn 3072): four ops,
+    // two structural edges (attn_out→ffn_up, ffn_up→ffn_down). Whether
+    // each edge *fuses* is the L2-headroom rule against the balanced
+    // design — hand-derived and Python-validated per row
+    // (python/tests/test_bfp16_model.py):
+    //   i8:    attn_out→ffn_up fits on both generations → 1/1;
+    //   i8i16/i8i32: wide outputs feed nothing → 0 everywhere;
+    //   bf16:  XDNA has no room (1 179 648 B > ~1.11 MB) → 0;
+    //          XDNA2 fuses attn_out→ffn_up → 1;
+    //   bfp16: XDNA's emulated design leaves 1 280 384 B of headroom
+    //          for the 1 036 800 B padded C → 1; XDNA2's native design
+    //          (140x40x144, k_mt 440) misses by under a kilobyte
+    //          (967 680 B vs 966 784 B of headroom) → 0. That
+    //          knife-edge is exactly what this golden exists to watch.
+    let golden = [
+        (Generation::Xdna, Precision::I8I8, 1),
+        (Generation::Xdna2, Precision::I8I8, 1),
+        (Generation::Xdna, Precision::I8I16, 0),
+        (Generation::Xdna2, Precision::I8I16, 0),
+        (Generation::Xdna, Precision::I8I32, 0),
+        (Generation::Xdna2, Precision::I8I32, 0),
+        (Generation::Xdna, Precision::Bf16, 0),
+        (Generation::Xdna2, Precision::Bf16, 1),
+        (Generation::Xdna, Precision::Bfp16, 1),
+        (Generation::Xdna2, Precision::Bfp16, 0),
+    ];
+    for (gen, p, want) in golden {
+        let plan = layer_plan(gen, p);
+        assert_eq!(
+            plan.fused_edges(),
+            want,
+            "{gen}/{p}: fused-edge golden shifted — capacity or config change?"
+        );
+        // All four layer ops share one design: the last three always
+        // ride the first op's host submission.
+        assert_eq!(plan.elided_dispatches(), 3, "{gen}/{p}");
+    }
+}
+
+#[test]
+fn fused_edge_positions_are_pinned_for_the_fusing_rows() {
+    // Not just the count: *which* dispatch consumes a resident A. For
+    // every 1-edge row above it is ffn_up (index 2) consuming
+    // attn_out's C — never ffn_down, whose producer C is ~3x larger.
+    for (gen, p) in [
+        (Generation::Xdna, Precision::I8I8),
+        (Generation::Xdna2, Precision::I8I8),
+        (Generation::Xdna2, Precision::Bf16),
+        (Generation::Xdna, Precision::Bfp16),
+    ] {
+        let plan = layer_plan(gen, p);
+        let fused_at: Vec<usize> = plan
+            .dispatches
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.overrides.a_in_l2)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(fused_at, vec![2], "{gen}/{p}: fused edge moved");
+    }
+}

@@ -1,16 +1,17 @@
 #!/usr/bin/env bash
-# Perf-trajectory artifact (ISSUE 3): run the hotpath and
-# chain_vs_isolated benches with JSON recording enabled and merge them
-# into BENCH_PR3.json — GEMM/s, functional GB/s, and the packing /
-# threading speedups over the re-streaming serial executor — so future
-# PRs can diff against a machine-readable baseline.
+# Perf-trajectory artifact (ISSUE 3, extended by ISSUE 4): run the
+# hotpath, chain_vs_isolated and bfp16_vs_bf16 benches with JSON
+# recording enabled and merge them into BENCH_PR4.json — GEMM/s,
+# functional GB/s, the packing / threading speedups over the
+# re-streaming serial executor, and the native-bfp16 vs bf16-emulation
+# speedup — so future PRs can diff against a machine-readable baseline.
 #
-# usage: scripts/bench.sh [out.json]     (default: BENCH_PR3.json)
+# usage: scripts/bench.sh [out.json]     (default: BENCH_PR4.json)
 #        BENCH_MS=500 scripts/bench.sh   (longer per-case budget)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-out="${1:-BENCH_PR3.json}"
+out="${1:-BENCH_PR4.json}"
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
 
@@ -22,13 +23,16 @@ BENCH_JSON="$tmp/hotpath.json" cargo bench --bench hotpath
 echo "==> cargo bench --bench chain_vs_isolated"
 BENCH_JSON="$tmp/chain.json" cargo bench --bench chain_vs_isolated
 
+echo "==> cargo bench --bench bfp16_vs_bf16"
+BENCH_JSON="$tmp/bfp16.json" cargo bench --bench bfp16_vs_bf16
+
 echo "==> merging into $out"
-python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$out" <<'PY'
+python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$tmp/bfp16.json" "$out" <<'PY'
 import json
 import sys
 
-hot, chain, out = sys.argv[1], sys.argv[2], sys.argv[3]
-groups = [json.load(open(p)) for p in (hot, chain)]
+hot, chain, bfp, out = sys.argv[1], sys.argv[2], sys.argv[3], sys.argv[4]
+groups = [json.load(open(p)) for p in (hot, chain, bfp)]
 
 
 def thrpt(group, name):
@@ -39,12 +43,16 @@ def thrpt(group, name):
 
 
 summary = {
-    "artifact": "BENCH_PR3",
-    "description": "packed+parallel functional executor vs re-streaming serial baseline",
+    "artifact": "BENCH_PR4",
+    "description": "packed+parallel functional executor vs re-streaming serial "
+    "baseline, plus native bfp16 vs bf16 emulation on XDNA2",
     "gemms_per_s": thrpt(groups[0], "executor_gemms_per_s"),
     "functional_gb_per_s": thrpt(groups[0], "executor_functional_gb_s"),
     "packing_speedup_serial": thrpt(groups[0], "executor_packing_speedup"),
     "threads8_speedup": thrpt(groups[0], "executor_threads8_speedup"),
+    "bfp16_vs_bf16_speedup": thrpt(groups[2], "bfp16_vs_bf16_speedup"),
+    "bfp16_vs_bf16_aligned_speedup": thrpt(groups[2], "bfp16_vs_bf16_aligned_speedup"),
+    "bfp16_table3_tops": thrpt(groups[2], "bfp16_table3_tops"),
     "groups": groups,
 }
 with open(out, "w") as f:
