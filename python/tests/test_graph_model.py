@@ -1,0 +1,241 @@
+"""Numerical cross-check of the Rust graph compiler (ISSUE 5).
+
+Self-contained transliteration of the pieces the fleet partitioner
+depends on — the simplified GEMM cost model (shared with
+test_bfp16_model.py), the chain-lowering cut rule, the fused-edge
+overrides, and the critical-path list scheduler — replayed on the
+one-layer attention graph (default dims, int8) over a warm 2×XDNA2
+fleet. It pins the same *structural* goldens `rust/tests/graph_props.rs`
+asserts (chain shapes, staged edges, chain-level DAG, device
+assignment, makespan == critical path < serial), plus its own makespan
+value so cost-model drift is caught on this side too.
+
+The Rust simulator additionally models BD-queue stalls, so absolute
+seconds differ slightly; every cross-language assertion here is chosen
+to be insensitive to that (decisions are driven by structure and by
+margins orders of magnitude above the stall term). If a constant
+changes on the Rust side, change it here in the same commit.
+"""
+
+import math
+
+# ---- cost model (transliterates sim::engine, Overlapped, no stalls) ----
+
+SPECS = {
+    "xdna": dict(rows=4, cols=4, clock=1.0e9, dma=4.0, dispatch=0.5e-3,
+                 reconfig=3.4e-3, l2=512 * 1024),
+    "xdna2": dict(rows=4, cols=8, clock=1.8e9, dma=8.0, dispatch=0.1e-3,
+                  reconfig=4.9e-3, l2=512 * 1024),
+}
+PEAK = {("xdna", "i8i8"): 256.0, ("xdna2", "i8i8"): 512.0}
+BETA = {("xdna", "i8i8"): 0.0895, ("xdna2", "i8i8"): 0.068}
+DRAM = {"xdna": (32.4e9, 435.0, 16.0e9), "xdna2": (70.5e9, 178.0, 57.6e9)}
+CFG = {("xdna", "i8i8"): (112, 112, 112, 448), ("xdna2", "i8i8"): (144, 72, 144, 432)}
+IN_B = OUT_B = 1.0  # int8-int8
+
+
+def round_up(x, q):
+    return -(-x // q) * q
+
+
+def bw_eff(gen, run):
+    mx, x0, cap = DRAM[gen]
+    return min(mx * run / (run + x0), cap)
+
+
+def simulate(gen, m, k, n, a_in_l2=False, c_stays=False, elide_dispatch=False):
+    """One dispatch's seconds under chain overrides (sans BD stalls)."""
+    m_ct, k_ct, n_ct, k_mt = CFG[(gen, "i8i8")]
+    s = SPECS[gen]
+    nm, nn = m_ct * s["rows"], n_ct * s["cols"]
+    pm, pk, pn = round_up(m, nm), round_up(k, k_mt), round_up(n, nn)
+    kc = m_ct * k_ct * n_ct / PEAK[(gen, "i8i8")] + BETA[(gen, "i8i8")] * m_ct * n_ct
+    tiles = (pm // nm) * (pn // nn)
+    zero = m_ct * n_ct * OUT_B / 128.0
+    drain = m_ct * n_ct * OUT_B / s["dma"]
+    t_comp = tiles * ((pk // k_ct) * kc + zero + drain) / s["clock"]
+    mkn = pm * pk * pn
+    a_bytes = 0.0 if a_in_l2 else mkn * IN_B / (n_ct * s["cols"])
+    b_bytes = mkn * IN_B / (m_ct * s["rows"])
+    c_bytes = 0.0 if c_stays else pm * pn * OUT_B
+    run = k_mt * IN_B
+    c_run = n_ct * OUT_B * (2.8 if gen == "xdna" else 1.45)
+    t_mem = max((a_bytes + b_bytes) / bw_eff(gen, run), c_bytes / bw_eff(gen, c_run))
+    a_first = 0.0 if a_in_l2 else s["rows"] * m_ct * k_mt * IN_B
+    b_first = s["cols"] * k_mt * n_ct * IN_B
+    t_pro = (a_first + b_first) / bw_eff(gen, run)
+    t_disp = 0.0 if elide_dispatch else s["dispatch"]
+    return max(t_comp, t_mem) + t_pro + t_disp
+
+
+def l2_headroom(gen):
+    m_ct, k_ct, n_ct, k_mt = CFG[(gen, "i8i8")]
+    s = SPECS[gen]
+    a = m_ct * k_mt * IN_B
+    b = k_mt * n_ct * IN_B
+    c = s["rows"] * m_ct * n_ct * OUT_B
+    used = s["cols"] * (2 * b + c) + s["rows"] * 2 * a
+    return s["cols"] * s["l2"] - used
+
+
+def chain_exec(gen, ops, edges):
+    """plan::overrides_for + per-op simulate: one chain's seconds on a
+    warm same-design device (mirrors graph::partition::chain_exec_s)."""
+    m_ct, _, n_ct, _ = CFG[(gen, "i8i8")]
+    s = SPECS[gen]
+    nm, nn = m_ct * s["rows"], n_ct * s["cols"]
+    headroom = l2_headroom(gen)
+    held = 0.0
+    t = 0.0
+    for i, (m, k, n) in enumerate(ops):
+        a_in, c_stays = False, False
+        fused_in = 0.0
+        if i > 0 and edges[i]:
+            pm, pn = round_up(ops[i - 1][0], nm), round_up(ops[i - 1][2], nn)
+            cb = pm * pn * OUT_B
+            if cb + held <= headroom:
+                a_in = True
+                fused_in = cb
+        held = fused_in
+        # c_stays for op i: does op i+1 fuse its inbound edge?
+        if i + 1 < len(ops) and edges[i + 1]:
+            pm, pn = round_up(m, nm), round_up(n, nn)
+            if pm * pn * OUT_B + fused_in <= headroom:
+                c_stays = True
+        t += simulate(gen, m, k, n, a_in_l2=a_in, c_stays=c_stays,
+                      elide_dispatch=i > 0)
+    return t
+
+
+# ---- the one-layer attention graph, lowered (graph::ir + graph::lower) --
+
+S, D, F, V = 512, 768, 3072, 50257
+# Nodes: 0 embed, 1 q, 2 k, 3 v, 4 attn_out, 5 ffn_up, 6 ffn_down, 7 lm_head
+NODES = [(S, D, D)] * 5 + [(S, D, F), (S, F, D), (S, D, V)]
+INPUTS = [[], [0], [0], [0], [3], [0, 4], [5], [6]]
+# Lowering cut rule: extend iff in-edges ⊆ {prev} and prev feeds only me.
+CHAINS = [[0], [1], [2], [3, 4], [5, 6, 7]]
+CHAIN_EDGES = [[False], [False], [False], [False, True], [False, True, True]]
+STAGED = [(0, 1), (0, 2), (0, 3), (0, 5), (4, 5)]
+CHAIN_DEPS = [[], [0], [0], [0], [0, 3]]
+
+
+def chain_of(node):
+    return next(ci for ci, c in enumerate(CHAINS) if node in c)
+
+
+def test_lowering_structure_matches_rust_goldens():
+    # Derive the cut rule independently and confirm the hand table.
+    consumers = [[c for c, ins in enumerate(INPUTS) if p in ins] for p in range(8)]
+    chains, staged, pos = [], [], {}
+    for i in range(8):
+        extendable = (i > 0 and all(p == i - 1 for p in INPUTS[i])
+                      and all(c == i for c in consumers[i - 1]))
+        if extendable:
+            chains[-1].append(i)
+        else:
+            chains.append([i])
+            staged.extend((p, i) for p in INPUTS[i])
+        pos[i] = len(chains) - 1
+    assert chains == CHAINS
+    assert staged == STAGED
+    deps = [sorted({pos[p] for p, c in staged if pos[c] == ci and pos[p] != ci})
+            for ci in range(len(chains))]
+    assert deps == CHAIN_DEPS
+
+
+def xfer_s(gen, producer):
+    m, _, n = NODES[producer]
+    bytes_ = m * n * OUT_B
+    return bytes_ / bw_eff(gen, n * OUT_B)
+
+
+def partition_2dev(gen="xdna2"):
+    """graph::partition's list scheduler on a warm 2-device fleet."""
+    n_chain = len(CHAINS)
+    cost = [chain_exec(gen, [NODES[i] for i in c], CHAIN_EDGES[ci])
+            for ci, c in enumerate(CHAINS)]
+    # Priority: critical path to sink; succs have higher chain index.
+    succs = [[c for c in range(n_chain) if d in CHAIN_DEPS[c]] for d in range(n_chain)]
+    prio = list(cost)
+    for c in reversed(range(n_chain)):
+        prio[c] = cost[c] + max((prio[sc] for sc in succs[c]), default=0.0)
+    cp_end = [0.0] * n_chain
+    for c in range(n_chain):
+        cp_end[c] = max((cp_end[d] for d in CHAIN_DEPS[c]), default=0.0) + cost[c]
+    avail = [0.0, 0.0]
+    finish = [0.0] * n_chain
+    device_of = [None] * n_chain
+    placed = [False] * n_chain
+    for _ in range(n_chain):
+        ready = [c for c in range(n_chain)
+                 if not placed[c] and all(placed[d] for d in CHAIN_DEPS[c])]
+        pick = max(ready, key=lambda c: (prio[c], -c))
+        head = CHAINS[pick][0]
+        best = None
+        for d in (0, 1):
+            start = avail[d]
+            xfer = 0.0
+            for p in INPUTS[head]:
+                pc = chain_of(p)
+                start = max(start, finish[pc])
+                if device_of[pc] != d:
+                    xfer += xfer_s(gen, p)
+            fin = start + xfer + cost[pick]  # warm fleet, one design: no reconfig
+            if best is None or fin < best[0]:
+                best = (fin, d)
+        fin, d = best
+        placed[pick] = True
+        device_of[pick] = d
+        finish[pick] = fin
+        avail[d] = fin
+    return device_of, max(finish), max(cp_end), sum(cost)
+
+
+# Pinned by this file (the Rust side pins the same structure; absolute
+# seconds differ by the stall term it models and this file does not).
+PINNED_MAKESPAN_S = 0.002015148556595745
+
+
+def test_partitioner_critical_path_makespan_on_the_attention_graph():
+    device_of, makespan, critical_path, serial = partition_2dev()
+    # The Rust goldens (rust/tests/graph_props.rs): critical path
+    # embed → v/attn_out → ffn/lm_head on device 0, q/k on device 1.
+    assert device_of == [0, 1, 1, 0, 0]
+    # Device 0 never idles: the makespan IS the critical path, and the
+    # fleet strictly beats the serial single-device schedule.
+    assert abs(makespan - critical_path) < 1e-12
+    assert makespan < serial
+    # Drift pin for this cost model.
+    assert abs(makespan - PINNED_MAKESPAN_S) / PINNED_MAKESPAN_S < 1e-6, makespan
+
+
+def test_fused_edges_inside_the_lowered_chains():
+    # graph lowering frees ffn_up of a resident A (its inbound edge is a
+    # staged join, not an L2-resident chain edge), so on XDNA2 the
+    # ffn_up→ffn_down edge fits headroom and fuses — an edge the PR-2
+    # transformer *chain* planner provably cannot fuse (its ffn_up holds
+    # attn_out's C resident). v→attn_out fuses on both generations.
+    m_ct, _, n_ct, _ = CFG[("xdna2", "i8i8")]
+    s = SPECS["xdna2"]
+    nm, nn = m_ct * s["rows"], n_ct * s["cols"]
+    head = l2_headroom("xdna2")
+    # v→attn_out: v's padded C.
+    assert round_up(S, nm) * round_up(D, nn) * OUT_B <= head
+    # ffn_up→ffn_down with no held A.
+    assert round_up(S, nm) * round_up(F, nn) * OUT_B <= head
+    # ...but lm_head's inbound edge cannot coexist with ffn_up's C.
+    held = round_up(S, nm) * round_up(F, nn) * OUT_B
+    assert round_up(S, nm) * round_up(D, nn) * OUT_B + held > head
+
+
+def test_transliterated_costs_are_sane():
+    # Anchors keeping this file honest against gross drift: the ffn
+    # chain dominates (lm_head is ~20 GMACs), the small chains cost
+    # about one dispatch plus compute.
+    cost = [chain_exec("xdna2", [NODES[i] for i in c], CHAIN_EDGES[ci])
+            for ci, c in enumerate(CHAINS)]
+    assert cost[4] > 3 * cost[3] > 0
+    assert all(c > SPECS["xdna2"]["dispatch"] for c in cost)
+    # q and k are symmetric.
+    assert math.isclose(cost[1], cost[2], rel_tol=1e-12)

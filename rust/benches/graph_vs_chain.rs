@@ -1,0 +1,95 @@
+//! Graph compiler vs chain-planner and isolated-dispatch baselines
+//! (ISSUE 5 acceptance artifact; docs/graphs.md).
+//!
+//! Three schedules of the same DAG on the same warm fleet:
+//!
+//! * **DAG-aware** — lowered chains (fused edges, amortized dispatches)
+//!   placed by the critical-path list scheduler across 2 devices;
+//! * **isolated** — every node its own dispatch, same scheduler, same
+//!   fleet: no fusion, no amortization (the DAG-unaware dispatcher);
+//! * **single-chain** — the lowered chains on *one* device: the PR-2
+//!   chain planner's world, no fleet parallelism.
+//!
+//! Asserted: the DAG-aware schedule beats both on both generations.
+//! `BENCH_JSON` records the speedups for `scripts/bench.sh` →
+//! `BENCH_PR5.json`.
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::dtype::Precision;
+use xdna_gemm::graph::{isolate, lower, moe_graph, partition, PartitionOptions};
+use xdna_gemm::report::Table;
+use xdna_gemm::util::bench::{black_box, Bench};
+use xdna_gemm::workload::TransformerConfig;
+
+fn main() {
+    let b = Bench::new("graph_vs_chain");
+
+    let mut t = Table::new(
+        "DAG-aware fleet schedule vs isolated dispatches and single-device chains (2 devices)",
+        &[
+            "dev", "graph", "nodes", "chains", "makespan ms", "critical path ms",
+            "isolated ms", "vs isolated", "1-dev ms", "vs single-chain",
+        ],
+    );
+
+    for gen in Generation::ALL {
+        let attention = TransformerConfig { n_layers: 1, ..Default::default() }
+            .attention_graph()
+            .expect("attention graph builds");
+        let moe = moe_graph(512, 768, 3072, 4, Precision::I8I8).expect("moe graph builds");
+        for (label, g) in [("attention", attention), ("moe-4", moe)] {
+            let low = lower(&g);
+            let dag = partition(&g, &low, &PartitionOptions::fleet(vec![gen; 2]));
+            let iso = partition(&g, &isolate(&g), &PartitionOptions::fleet(vec![gen; 2]));
+            let one = partition(&g, &low, &PartitionOptions::fleet(vec![gen]));
+            let vs_isolated = iso.makespan_s / dag.makespan_s;
+            let vs_single = one.makespan_s / dag.makespan_s;
+            assert!(
+                vs_isolated > 1.0,
+                "{gen}/{label}: dag {:.3} ms !< isolated {:.3} ms",
+                dag.makespan_s * 1e3,
+                iso.makespan_s * 1e3
+            );
+            assert!(
+                vs_single > 1.0,
+                "{gen}/{label}: dag {:.3} ms !< single-device {:.3} ms",
+                dag.makespan_s * 1e3,
+                one.makespan_s * 1e3
+            );
+            t.row(vec![
+                gen.to_string(),
+                label.to_string(),
+                g.len().to_string(),
+                low.chains.len().to_string(),
+                format!("{:.3}", dag.makespan_s * 1e3),
+                format!("{:.3}", dag.critical_path_s * 1e3),
+                format!("{:.3}", iso.makespan_s * 1e3),
+                format!("{vs_isolated:.2}x"),
+                format!("{:.3}", one.makespan_s * 1e3),
+                format!("{vs_single:.2}x"),
+            ]);
+            if label == "attention" {
+                b.throughput(&format!("graph_vs_isolated_speedup_{gen}"), vs_isolated, "x");
+                b.throughput(&format!("graph_vs_chain_speedup_{gen}"), vs_single, "x");
+            } else {
+                b.throughput(&format!("moe_vs_isolated_speedup_{gen}"), vs_isolated, "x");
+                b.throughput(&format!("moe_vs_chain_speedup_{gen}"), vs_single, "x");
+            }
+        }
+    }
+    t.print();
+
+    // Compiler cost itself (the serving hot path: a graph is recompiled
+    // when a new model shows up).
+    let g = TransformerConfig { n_layers: 4, ..Default::default() }
+        .attention_graph()
+        .expect("attention graph builds");
+    b.case("lower_4_layer_attention", || black_box(lower(&g)));
+    let low = lower(&g);
+    let opts = PartitionOptions::fleet(vec![Generation::Xdna2; 2]);
+    b.case("partition_4_layer_attention_2dev", || {
+        black_box(partition(&g, &low, &opts))
+    });
+
+    b.finish();
+}

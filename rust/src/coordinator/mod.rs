@@ -35,6 +35,6 @@ pub mod service;
 pub use metrics::{ChainRecord, DeviceMetrics, FleetMetrics, Metrics, RequestRecord};
 pub use router::{CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter, RouteKind};
 pub use service::{
-    expand_mix, functional_inputs, parse_mix, Backend, ChainResponse, Coordinator,
-    CoordinatorOptions, GemmRequest, GemmResponse,
+    expand_mix, functional_a, functional_b, functional_inputs, parse_mix, Backend,
+    ChainResponse, ChainStaging, Coordinator, CoordinatorOptions, GemmRequest, GemmResponse,
 };

@@ -414,6 +414,34 @@ impl FleetRouter {
         self.route(key, total_ops)
     }
 
+    /// Pinned placement (the graph partitioner's schedule): the device
+    /// is the caller's choice, but load and residency accounting stay
+    /// identical to [`Self::route`] — the pinned work charges the
+    /// device's virtual load, counts a hit when the design is already
+    /// modeled resident, and installs it (spill-aware) when not, so
+    /// later *unpinned* traffic routes around the pinned backlog.
+    pub fn route_to(&mut self, device: usize, key: DesignKey, ops: f64) -> RouteDecision {
+        assert!(device < self.gens.len(), "device {device} out of range");
+        let had_holders = (0..self.gens.len()).any(|d| self.holds(d, key));
+        let kind = if self.holds(device, key) {
+            self.hits += 1;
+            self.touch_held(device, key);
+            RouteKind::Affinity
+        } else {
+            self.misses += 1;
+            self.assign(device, key);
+            if had_holders {
+                self.spills += 1;
+                RouteKind::Spill
+            } else {
+                RouteKind::LeastLoaded
+            }
+        };
+        let est = self.est_s(device, key.precision, ops);
+        self.load_s[device] += est;
+        RouteDecision { device, est_s: est, kind }
+    }
+
     /// Cache-warmup: assign `key` to the least-loaded device to preload
     /// and return it (a no-op returning an existing holder if the design
     /// is already resident). Warmup happens off the request path, so no
@@ -651,6 +679,25 @@ mod tests {
         // Back-to-back same key still hits within the capacity.
         assert_eq!(r.route(k1, 1e9).kind, RouteKind::LeastLoaded);
         assert_eq!(r.route(k1, 1e9).kind, RouteKind::Affinity);
+    }
+
+    #[test]
+    fn pinned_routing_keeps_load_and_residency_accounting() {
+        let mut r = FleetRouter::new(vec![Generation::Xdna2, Generation::Xdna2]);
+        let k = key(Precision::I8I8, Layout::ColMajor);
+        let ops = 2.0 * 1024.0f64.powi(3);
+        // Pin to the device the free router would NOT pick next.
+        let d = r.route_to(1, k, ops);
+        assert_eq!((d.device, d.kind), (1, RouteKind::LeastLoaded));
+        assert!(r.holds(1, k) && !r.holds(0, k));
+        assert!(r.loads()[1] > 0.0 && r.loads()[0] == 0.0);
+        // A second pin to the same device is an affinity hit; pinning
+        // the other device replicates the design (spill accounting).
+        assert_eq!(r.route_to(1, k, ops).kind, RouteKind::Affinity);
+        assert_eq!(r.route_to(0, k, ops).kind, RouteKind::Spill);
+        // Free routing then sees the pinned backlog: the next unpinned
+        // request lands on the less-loaded holder.
+        assert_eq!(r.route(k, ops).device, 0);
     }
 
     #[test]

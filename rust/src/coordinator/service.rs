@@ -80,7 +80,9 @@ pub struct ChainResponse {
     /// execution failed (the failing op's record carries
     /// `verified: Some(false)`).
     pub result: Option<Matrix>,
-    /// Edges where the staged functional C actually fed the next op.
+    /// Edges where a staged functional C actually fed an op's A: the
+    /// chain's internal `consumes_prev` edges, plus the submission's
+    /// entry A when one was staged (`ChainStaging::a0`).
     pub staged_edges: usize,
 }
 
@@ -201,11 +203,29 @@ struct Pending {
     t0: Instant,
 }
 
+/// DAG-aware chain submission context (`Coordinator::submit_chain_staged`,
+/// used by the graph compiler's `graph::exec::serve_graph`): pin the
+/// chain to a partitioner-chosen device, and/or stage a producer's C as
+/// the chain's entry A — the cross-chain edges of `graph::lower`, where
+/// one C may fan out into several consumers' A or arrive pre-joined.
+#[derive(Debug, Default)]
+pub struct ChainStaging {
+    /// Fleet device index to place the chain on (bypasses the router's
+    /// affinity choice; load accounting still applies). `None` routes by
+    /// leading design key as before.
+    pub device: Option<usize>,
+    /// Entry A for the chain's first op under `Backend::Functional`: a
+    /// staged producer C (or an elementwise join of several). `None`
+    /// falls back to the deterministic generated A.
+    pub a0: Option<Matrix>,
+}
+
 /// A submitted chain travelling router → leader as one unit.
 struct PendingChain {
     id: u64,
     chain: GemmChain,
     bd_mode: BdMode,
+    staging: ChainStaging,
     tx: Sender<ChainResponse>,
     t0: Instant,
 }
@@ -269,14 +289,21 @@ pub struct Coordinator {
     tx: SyncSender<Msg>,
     handle: Option<JoinHandle<FleetMetrics>>,
     next_id: std::sync::atomic::AtomicU64,
+    n_devices: usize,
 }
 
 impl Coordinator {
     pub fn start(opts: CoordinatorOptions) -> Coordinator {
+        let n_devices = opts.device_gens().len();
         let (tx, rx) = sync_channel::<Msg>(opts.admission_capacity.max(1));
         let done_tx = tx.clone();
         let handle = std::thread::spawn(move || router_loop(opts, rx, done_tx));
-        Coordinator { tx, handle: Some(handle), next_id: 0.into() }
+        Coordinator { tx, handle: Some(handle), next_id: 0.into(), n_devices }
+    }
+
+    /// Devices in the running fleet.
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
     }
 
     /// Submit a request; the response arrives on the returned channel.
@@ -305,8 +332,63 @@ impl Coordinator {
     /// semantics); the functional staged-C path is
     /// `gemm::exec::Executor::execute_chain`.
     pub fn submit_chain(&self, chain: GemmChain) -> Result<Receiver<ChainResponse>> {
+        self.submit_chain_staged(chain, ChainStaging::default())
+    }
+
+    /// The DAG-aware chain entry point (`graph::lower` cross-chain
+    /// edges): like [`Self::submit_chain`], but the chain may be pinned
+    /// to a specific device (the graph partitioner's placement) and may
+    /// carry a staged entry A — a producer chain's functional C, cloned
+    /// per consumer on fan-out or elementwise-joined on fan-in, instead
+    /// of `consumes_prev`-only staging. The staged A must match the
+    /// first op's logical `m × k` as a row-major image.
+    pub fn submit_chain_staged(
+        &self,
+        chain: GemmChain,
+        staging: ChainStaging,
+    ) -> Result<Receiver<ChainResponse>> {
         if chain.is_empty() {
             bail!("empty chain '{}'", chain.name);
+        }
+        if let Some(d) = staging.device {
+            if d >= self.n_devices {
+                bail!("device {d} out of range (fleet has {})", self.n_devices);
+            }
+        }
+        if let Some(a0) = &staging.a0 {
+            let first = &chain.ops[0].shape;
+            let (rows, cols) = refimpl::logical_dims(a0);
+            if a0.layout != Layout::RowMajor || (rows, cols) != (first.m, first.k) {
+                bail!(
+                    "staged A is {rows}x{cols} {:?}, first op '{}' needs row-major {}x{}",
+                    a0.layout,
+                    first.name,
+                    first.m,
+                    first.k
+                );
+            }
+            // Element format must match the design's input dtype too — a
+            // mis-typed image would otherwise be reinterpreted as raw
+            // bytes and silently produce a wrong C.
+            let p = DesignKey::for_shape(first).precision;
+            let type_ok = if p == Precision::Bfp16 {
+                a0.is_bfp16()
+            } else {
+                !a0.is_bfp16() && a0.elem_bytes == p.ty_in()
+            };
+            if !type_ok {
+                bail!(
+                    "staged A has {}-byte elements, first op '{}' is {p} \
+                     (expects {})",
+                    a0.elem_bytes,
+                    first.name,
+                    if p == Precision::Bfp16 {
+                        "12-byte block cells".to_string()
+                    } else {
+                        format!("{}-byte elements", p.ty_in())
+                    }
+                );
+            }
         }
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (rtx, rrx) = channel();
@@ -315,6 +397,7 @@ impl Coordinator {
                 id,
                 chain,
                 bd_mode: BdMode::Overlapped,
+                staging,
                 tx: rtx,
                 t0: Instant::now(),
             })))
@@ -451,9 +534,14 @@ fn router_loop(
             }
             Msg::SubmitChain(c) => {
                 // Chain affinity: one routing decision for the whole
-                // chain, charged with its total ops.
+                // chain, charged with its total ops. A pinned chain (the
+                // graph partitioner's placement) bypasses the device
+                // choice but still updates the load/residency model.
                 let key = DesignKey::for_shape(&c.chain.ops[0].shape);
-                let d = fleet.route_chain(key, c.chain.total_ops()).device;
+                let d = match c.staging.device {
+                    Some(d) => fleet.route_to(d, key, c.chain.total_ops()).device,
+                    None => fleet.route_chain(key, c.chain.total_ops()).device,
+                };
                 queues[d].push_back(Unit::Chain(c));
                 pump(d, max_in_flight, &mut queues, &mut in_flight, &leader_txs);
             }
@@ -532,7 +620,7 @@ fn run_chain(
     device: &mut DeviceState,
     records: &mut Vec<RequestRecord>,
 ) -> (ChainRecord, Sender<ChainResponse>, ChainResponse) {
-    let PendingChain { id, chain, bd_mode, tx, t0 } = pc;
+    let PendingChain { id, chain, bd_mode, staging, tx, t0 } = pc;
     let cfgs: Vec<TilingConfig> =
         chain.ops.iter().map(|o| *cache.get(DesignKey::for_shape(&o.shape))).collect();
     let ovs = overrides_for(&cfgs, &chain);
@@ -540,7 +628,9 @@ fn run_chain(
     let mut fused = 0;
     let mut elided = 0;
     let mut reports = Vec::with_capacity(chain.len());
-    let mut staged: Option<Matrix> = None;
+    // A staged entry A (DAG cross-chain edge) pre-loads the slot the
+    // first op consumes; intra-chain edges refill it op by op.
+    let mut staged: Option<Matrix> = staging.a0;
     let mut staged_edges = 0usize;
     let mut result: Option<Matrix> = None;
     let mut func_failed = false;
@@ -564,7 +654,9 @@ fn run_chain(
             );
             let inputs: Result<(Matrix, Matrix)> = (|| {
                 let a = match staged.take() {
-                    Some(c) if op.consumes_prev => {
+                    // The first op consumes the submission's staged A;
+                    // later ops consume the previous op's resident C.
+                    Some(c) if op.consumes_prev || i == 0 => {
                         staged_edges += 1;
                         c
                     }
@@ -1008,6 +1100,66 @@ mod tests {
         );
         assert!(chained.chain_fused_edges() > 0);
         assert!(isolated.chains.is_empty());
+    }
+
+    #[test]
+    fn staged_chain_pins_device_and_consumes_the_entry_a() {
+        // The DAG-aware entry point: a chain pinned to device 1 whose
+        // entry A is a caller-staged C (the cross-chain edge of the
+        // graph compiler's lowering) — the functional result must fold
+        // from that staged image, not a generated one.
+        let c = Coordinator::start(CoordinatorOptions {
+            backend: Backend::Functional,
+            devices: vec![Generation::Xdna, Generation::Xdna],
+            ..Default::default()
+        });
+        let s0 = GemmShape::new("prod", 64, 64, 64, Precision::I8I8);
+        let s1 = GemmShape::new("cons", 64, 64, 64, Precision::I8I8);
+        let (a0, b0) = functional_inputs(&s0, Precision::I8I8).unwrap();
+        let staged_c = crate::gemm::refimpl::ref_gemm(&a0, &b0, Precision::I8I8).unwrap();
+        let mut chain = crate::plan::GemmChain::new("staged");
+        chain.push(s1.clone());
+        let rx = c
+            .submit_chain_staged(
+                chain,
+                ChainStaging { device: Some(1), a0: Some(staged_c.clone()) },
+            )
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.device, 1, "pin respected");
+        assert_eq!(resp.staged_edges, 1, "entry A consumed");
+        let got = resp.result.expect("functional result");
+        let b1 = functional_b(&s1, Precision::I8I8).unwrap();
+        let want = crate::gemm::refimpl::ref_gemm(&staged_c, &b1, Precision::I8I8).unwrap();
+        assert!(crate::gemm::refimpl::matrices_equal(&got, &want, Precision::I8I8));
+
+        // Out-of-range pins and mis-shaped staged images fail at submit.
+        let mut chain2 = crate::plan::GemmChain::new("bad-pin");
+        chain2.push(s1.clone());
+        assert!(c
+            .submit_chain_staged(chain2, ChainStaging { device: Some(7), a0: None })
+            .is_err());
+        let mut chain3 = crate::plan::GemmChain::new("bad-a0");
+        chain3.push(s1.clone());
+        let wrong = Matrix::zeroed(32, 64, 1, Layout::RowMajor).unwrap();
+        assert!(c
+            .submit_chain_staged(chain3, ChainStaging { device: None, a0: Some(wrong) })
+            .is_err());
+        // Right dims, wrong element dtype (bf16 bytes into an int8 op):
+        // rejected at submit, never reinterpreted as raw bytes.
+        let mut chain4 = crate::plan::GemmChain::new("bad-dtype");
+        chain4.push(s1.clone());
+        let wrong_ty = Matrix::zeroed(64, 64, 2, Layout::RowMajor).unwrap();
+        assert!(c
+            .submit_chain_staged(chain4, ChainStaging { device: None, a0: Some(wrong_ty) })
+            .is_err());
+        let m = c.shutdown();
+        assert_eq!(m.count(), 1);
+        assert_eq!(c2_count(&m, 1), 1, "record landed on the pinned device");
+    }
+
+    fn c2_count(m: &crate::coordinator::FleetMetrics, dev: usize) -> usize {
+        m.devices[dev].metrics.count()
     }
 
     #[test]

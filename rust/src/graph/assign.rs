@@ -1,0 +1,445 @@
+//! Mixed-precision assignment: pick int8 / bf16 / bfp16 per node from an
+//! accuracy-budget policy plus the simulator's cost model (DESIGN.md §11).
+//!
+//! Edge legality pins precision *classes* to weakly-connected components:
+//! a producer's C must be consumable as every consumer's A
+//! ([`crate::plan::out_feeds_in`]), so nodes joined by edges share an
+//! input dtype class, with one refinement — a *sink* (no consumers) fed
+//! by int8 producers may widen its accumulator output to int8→int16,
+//! trading time for accuracy without touching any edge.
+//!
+//! The budget is an abstract error allowance: each node charges
+//! [`err_cost`] units for its assigned precision (int8 the lossiest,
+//! bf16 the most faithful). Components are processed largest-ops first;
+//! each takes the *fastest* legal candidate whose error still leaves the
+//! most-accurate option affordable for every remaining component (a
+//! budget below even that floor is overdrawn at minimum error and
+//! reported: `err_spent > err_budget`). Time
+//! estimates come from the calibrated simulator at the balanced design
+//! of the generation the fleet router would pick — the PR-4 load model:
+//! a precision routes to the fleet generation with the highest
+//! theoretical peak for it, which keeps bfp16 on XDNA2 routes (on an
+//! XDNA-only fleet the native-block candidate is not offered at all;
+//! the decode-to-bf16 emulation never wins the cost race anyway).
+//!
+//! bfp16 candidates additionally require block-aligned shapes
+//! (K, N multiples of 8), column-major B, and a join-free component
+//! (blocks have no elementwise rejoin — [`super::ir::joinable`]).
+
+use anyhow::Result;
+
+use crate::arch::{balanced_config, Generation};
+use crate::dtype::{Layout, Precision};
+use crate::sim::{simulate_gemm, BdMode};
+use crate::util::json::{num, obj, s, Json};
+
+use super::ir::ModelGraph;
+
+/// Relative per-node quantization-error units charged against the
+/// accuracy budget.
+pub fn err_cost(p: Precision) -> f64 {
+    match p {
+        Precision::I8I8 => 1.0,
+        Precision::I8I16 => 0.5,
+        Precision::I8I32 => 0.25,
+        Precision::Bfp16 => 0.25,
+        Precision::Bf16 => 0.05,
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AssignOptions {
+    /// Error units allowed per node (budget = `budget_per_node · nodes`).
+    pub budget_per_node: f64,
+    /// Device fleet the compiled graph will run on; precisions are
+    /// costed at the generation that fleet routes them to.
+    pub fleet: Vec<Generation>,
+}
+
+impl Default for AssignOptions {
+    fn default() -> Self {
+        AssignOptions { budget_per_node: 1.0, fleet: vec![Generation::Xdna2] }
+    }
+}
+
+/// One node's resolved assignment.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeChoice {
+    pub precision: Precision,
+    /// Generation the fleet's load model routes this precision to.
+    pub gen: Generation,
+    /// Simulated isolated-dispatch seconds at the balanced design.
+    pub est_s: f64,
+}
+
+/// The assignment pass's output.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    /// The re-precisioned graph (edge legality revalidated).
+    pub graph: ModelGraph,
+    pub choices: Vec<NodeChoice>,
+    /// Component id per node (reporting / tests).
+    pub component: Vec<usize>,
+    pub err_budget: f64,
+    pub err_spent: f64,
+    /// Σ per-node estimated seconds under the chosen precisions.
+    pub est_s: f64,
+}
+
+impl Assignment {
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .graph
+            .nodes()
+            .iter()
+            .zip(&self.choices)
+            .zip(&self.component)
+            .map(|((n, c), &comp)| {
+                obj(vec![
+                    ("name", s(&n.shape.name)),
+                    ("precision", s(n.shape.precision.name())),
+                    ("gen", s(c.gen.name())),
+                    ("component", num(comp as f64)),
+                    ("est_s", num(c.est_s)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("err_budget", num(self.err_budget)),
+            ("err_spent", num(self.err_spent)),
+            ("est_s", num(self.est_s)),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+}
+
+/// The generation `fleet` routes precision `p` to: highest theoretical
+/// peak wins, first device breaks ties — the steady-state limit of
+/// `FleetRouter::route`'s `load + ops/peak` argmin on an idle fleet.
+pub fn route_gen(fleet: &[Generation], p: Precision) -> Generation {
+    let mut best = fleet[0];
+    for &g in &fleet[1..] {
+        if g.spec().peak_tops(p) > best.spec().peak_tops(p) {
+            best = g;
+        }
+    }
+    best
+}
+
+fn est_node(gen: Generation, p: Precision, m: usize, k: usize, n: usize, layout: Layout) -> f64 {
+    let layout = if p == Precision::Bfp16 { Layout::ColMajor } else { layout };
+    let cfg = balanced_config(gen, p).with_b_layout(layout);
+    simulate_gemm(&cfg, m, k, n, BdMode::Overlapped).t_total
+}
+
+/// Weakly-connected components over tensor edges, in first-node order.
+fn components(g: &ModelGraph) -> Vec<usize> {
+    let mut comp = vec![usize::MAX; g.len()];
+    let mut next = 0;
+    for start in 0..g.len() {
+        if comp[start] != usize::MAX {
+            continue;
+        }
+        let id = next;
+        next += 1;
+        let mut stack = vec![start];
+        while let Some(v) = stack.pop() {
+            if comp[v] != usize::MAX {
+                continue;
+            }
+            comp[v] = id;
+            stack.extend(g.node(v).inputs.iter().copied());
+            stack.extend(g.consumers(v).iter().copied());
+        }
+    }
+    comp
+}
+
+/// One candidate assignment for a component: per-node precisions with
+/// their summed error and estimated time.
+struct Candidate {
+    precisions: Vec<Precision>, // parallel to the component's node list
+    err: f64,
+    est_s: f64,
+}
+
+fn candidates(g: &ModelGraph, nodes: &[usize], fleet: &[Generation]) -> Vec<Candidate> {
+    let bfp_legal = fleet.iter().any(|&d| d == Generation::Xdna2)
+        && nodes.iter().all(|&id| {
+            let sh = &g.node(id).shape;
+            sh.k % 8 == 0
+                && sh.n % 8 == 0
+                && sh.b_layout == Layout::ColMajor
+                && g.node(id).inputs.len() <= 1
+        });
+    let mut out = Vec::new();
+    for class in [Precision::I8I8, Precision::Bfp16, Precision::Bf16] {
+        if class == Precision::Bfp16 && !bfp_legal {
+            continue;
+        }
+        let uniform = Candidate {
+            precisions: vec![class; nodes.len()],
+            err: err_cost(class) * nodes.len() as f64,
+            est_s: nodes
+                .iter()
+                .map(|&id| {
+                    let sh = &g.node(id).shape;
+                    est_node(route_gen(fleet, class), class, sh.m, sh.k, sh.n, sh.b_layout)
+                })
+                .sum(),
+        };
+        if class == Precision::I8I8 {
+            // The sink-widened refinement: int8 class with int8→int16
+            // accumulation on every sink (legal — int8 Cs feed
+            // wider-accumulating consumers, and sinks feed nothing).
+            let mut wide = Candidate {
+                precisions: uniform.precisions.clone(),
+                err: uniform.err,
+                est_s: uniform.est_s,
+            };
+            let mut widened = false;
+            for (slot, &id) in nodes.iter().enumerate() {
+                if g.consumers(id).is_empty() {
+                    let sh = &g.node(id).shape;
+                    let gen8 = route_gen(fleet, Precision::I8I8);
+                    let gen16 = route_gen(fleet, Precision::I8I16);
+                    wide.precisions[slot] = Precision::I8I16;
+                    wide.err += err_cost(Precision::I8I16) - err_cost(Precision::I8I8);
+                    wide.est_s += est_node(gen16, Precision::I8I16, sh.m, sh.k, sh.n, sh.b_layout)
+                        - est_node(gen8, Precision::I8I8, sh.m, sh.k, sh.n, sh.b_layout);
+                    widened = true;
+                }
+            }
+            out.push(uniform);
+            if widened {
+                out.push(wide);
+            }
+        } else {
+            out.push(uniform);
+        }
+    }
+    // Fastest first; stable on ties (candidate construction order).
+    out.sort_by(|a, b| a.est_s.total_cmp(&b.est_s));
+    out
+}
+
+/// Run the assignment pass (see the module docs for the policy).
+pub fn assign(g: &ModelGraph, opts: &AssignOptions) -> Result<Assignment> {
+    anyhow::ensure!(!g.is_empty(), "empty graph");
+    anyhow::ensure!(!opts.fleet.is_empty(), "empty fleet");
+    let comp_of = components(g);
+    let n_comp = comp_of.iter().copied().max().map_or(0, |m| m + 1);
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); n_comp];
+    for (id, &c) in comp_of.iter().enumerate() {
+        members[c].push(id);
+    }
+
+    let cands: Vec<Vec<Candidate>> =
+        members.iter().map(|m| candidates(g, m, &opts.fleet)).collect();
+    // Most-accurate candidate's error per component — the reserve the
+    // greedy must keep affordable for everyone not yet assigned.
+    let min_err: Vec<f64> = cands
+        .iter()
+        .map(|cs| cs.iter().map(|c| c.err).fold(f64::INFINITY, f64::min))
+        .collect();
+
+    // Largest components (by ops) choose first; ties by component id.
+    let mut order: Vec<usize> = (0..n_comp).collect();
+    let comp_ops: Vec<f64> = members
+        .iter()
+        .map(|m| m.iter().map(|&id| g.node(id).shape.ops()).sum())
+        .collect();
+    order.sort_by(|&a, &b| comp_ops[b].total_cmp(&comp_ops[a]).then(a.cmp(&b)));
+
+    let budget = opts.budget_per_node * g.len() as f64;
+    let mut reserve: f64 = min_err.iter().sum();
+    let mut remaining = budget;
+    let mut precisions = vec![Precision::I8I8; g.len()];
+    let mut err_spent = 0.0;
+    for &ci in &order {
+        reserve -= min_err[ci];
+        // Fastest candidate whose error the budget can still absorb; if
+        // even the most accurate class cannot (budget below the bf16
+        // floor), take minimum-error anyway — the overdraw is visible
+        // as `err_spent > err_budget` in the returned report.
+        let pick = cands[ci]
+            .iter()
+            .find(|c| c.err <= remaining - reserve + 1e-12)
+            .unwrap_or_else(|| {
+                cands[ci]
+                    .iter()
+                    .min_by(|a, b| a.err.total_cmp(&b.err))
+                    .expect("every component has candidates")
+            });
+        for (slot, &id) in members[ci].iter().enumerate() {
+            precisions[id] = pick.precisions[slot];
+        }
+        err_spent += pick.err;
+        remaining -= pick.err;
+    }
+
+    let graph = g.with_precisions(&precisions)?;
+    let choices: Vec<NodeChoice> = graph
+        .nodes()
+        .iter()
+        .map(|n| {
+            let p = n.shape.precision;
+            let gen = route_gen(&opts.fleet, p);
+            NodeChoice {
+                precision: p,
+                gen,
+                est_s: est_node(gen, p, n.shape.m, n.shape.k, n.shape.n, n.shape.b_layout),
+            }
+        })
+        .collect();
+    let est_s = choices.iter().map(|c| c.est_s).sum();
+    Ok(Assignment {
+        graph,
+        choices,
+        component: comp_of,
+        err_budget: budget,
+        err_spent,
+        est_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ir::{attention_graph, moe_graph, transformer_graph};
+    use crate::plan::out_feeds_in;
+    use crate::workload::TransformerConfig;
+
+    fn xdna2() -> AssignOptions {
+        AssignOptions { budget_per_node: 1.0, fleet: vec![Generation::Xdna2] }
+    }
+
+    fn legal_edges(a: &Assignment) {
+        let g = &a.graph;
+        for id in 0..g.len() {
+            for &p in &g.node(id).inputs {
+                assert!(
+                    out_feeds_in(g.node(p).shape.precision, g.node(id).shape.precision),
+                    "edge {p}→{id} illegal after assignment"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generous_budget_takes_the_fast_int8_path() {
+        let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
+        let g = attention_graph(&cfg).unwrap();
+        let a = assign(&g, &xdna2()).unwrap();
+        legal_edges(&a);
+        assert!(a.err_spent <= a.err_budget + 1e-9);
+        // One connected component (QKV fan-out + residual joins touch
+        // everything), all int8.
+        assert!(a.component.iter().all(|&c| c == 0));
+        assert!(a
+            .graph
+            .nodes()
+            .iter()
+            .all(|n| matches!(n.shape.precision, Precision::I8I8 | Precision::I8I16)));
+    }
+
+    #[test]
+    fn tight_budget_buys_accuracy_with_time() {
+        let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
+        let g = attention_graph(&cfg).unwrap();
+        let loose = assign(&g, &xdna2()).unwrap();
+        let tight = assign(&g, &AssignOptions { budget_per_node: 0.1, ..xdna2() }).unwrap();
+        legal_edges(&tight);
+        assert!(tight.err_spent <= tight.err_budget + 1e-9);
+        // The attention component joins + a ragged lm_head forbid bfp16,
+        // so the accurate fallback is bf16 — strictly slower than int8.
+        assert!(tight.graph.nodes().iter().all(|n| n.shape.precision == Precision::Bf16));
+        assert!(tight.est_s > loose.est_s);
+    }
+
+    #[test]
+    fn bfp16_only_on_xdna2_routes_and_aligned_join_free_components() {
+        // transformer_graph components are join-free and (except the
+        // ragged-vocab lm_head) block-aligned: a mid budget forces the
+        // cheap-error native-block candidate — but only when the fleet
+        // has an XDNA2 device to route it to.
+        let cfg = TransformerConfig { n_layers: 2, ..Default::default() };
+        let g = transformer_graph(&cfg);
+        let mid = AssignOptions { budget_per_node: 0.26, fleet: vec![Generation::Xdna2] };
+        let a = assign(&g, &mid).unwrap();
+        legal_edges(&a);
+        let n_bfp =
+            a.graph.nodes().iter().filter(|n| n.shape.precision == Precision::Bfp16).count();
+        assert!(n_bfp > 0, "mid budget on XDNA2 should use native blocks");
+        for n in a.graph.nodes() {
+            if n.shape.precision == Precision::Bfp16 {
+                assert!(n.shape.k % 8 == 0 && n.shape.n % 8 == 0, "{}", n.shape.name);
+            }
+        }
+        // Same budget, XDNA-only fleet: the native-block candidate is
+        // not offered (the router load model would keep bfp16 off XDNA).
+        let xdna_only = AssignOptions { budget_per_node: 0.26, fleet: vec![Generation::Xdna] };
+        let b = assign(&g, &xdna_only).unwrap();
+        assert!(b.graph.nodes().iter().all(|n| n.shape.precision != Precision::Bfp16));
+        // Joins forbid bfp16 even when aligned: the MoE combine rejoin.
+        let moe = moe_graph(512, 768, 3072, 4, Precision::I8I8).unwrap();
+        let m = assign(&moe, &AssignOptions { budget_per_node: 0.26, ..xdna2() }).unwrap();
+        assert!(m.graph.nodes().iter().all(|n| n.shape.precision != Precision::Bfp16));
+    }
+
+    #[test]
+    fn budget_extremes_bracket_every_mid_assignment() {
+        // The loosest budget takes the fastest class everywhere, the
+        // tightest the most accurate (slowest); every mid budget lands
+        // between them. (Pairwise monotonicity is not a property of the
+        // greedy — an early fast pick can force a later slow one.)
+        let cfg = TransformerConfig { n_layers: 2, ..Default::default() };
+        let g = transformer_graph(&cfg);
+        let at = |budget: f64| {
+            assign(&g, &AssignOptions { budget_per_node: budget, ..xdna2() }).unwrap().est_s
+        };
+        let fastest = at(1.0);
+        let slowest = at(0.05);
+        assert!(fastest < slowest);
+        for budget in [0.26, 0.6] {
+            let mid = at(budget);
+            assert!(
+                fastest <= mid + 1e-12 && mid <= slowest + 1e-12,
+                "budget {budget}: {mid} outside [{fastest}, {slowest}]"
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_overdraws_visibly_at_minimum_error() {
+        // A budget below even the bf16 floor: the pass still returns the
+        // most accurate assignment, and the overdraw is observable —
+        // err_spent > err_budget — instead of silently "fitting".
+        let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
+        let g = attention_graph(&cfg).unwrap();
+        let a = assign(&g, &AssignOptions { budget_per_node: 0.01, ..xdna2() }).unwrap();
+        legal_edges(&a);
+        assert!(a.graph.nodes().iter().all(|n| n.shape.precision == Precision::Bf16));
+        assert!(a.err_spent > a.err_budget, "{} !> {}", a.err_spent, a.err_budget);
+    }
+
+    #[test]
+    fn sinks_widen_when_the_budget_is_between_classes() {
+        // A fan-out-only int8 graph whose sinks can widen: pick a budget
+        // under pure int8 (1.0/node) but above the widened mix.
+        let moe = moe_graph(256, 512, 1024, 2, Precision::I8I8).unwrap();
+        // 7 nodes, sinks = gate + combine. Pure i8 err 7.0; widened
+        // 6.0 (two sinks at 0.5). budget_per_node 0.9 → 6.3.
+        let a = assign(&moe, &AssignOptions { budget_per_node: 0.9, ..xdna2() }).unwrap();
+        legal_edges(&a);
+        let wide: Vec<&str> = a
+            .graph
+            .nodes()
+            .iter()
+            .filter(|n| n.shape.precision == Precision::I8I16)
+            .map(|n| n.shape.name.as_str())
+            .collect();
+        assert_eq!(wide, vec!["gate", "combine"], "exactly the sinks widen");
+        assert!(a.err_spent <= a.err_budget + 1e-9);
+    }
+}

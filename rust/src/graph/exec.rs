@@ -1,0 +1,259 @@
+//! Functional graph execution: real bytes through the DAG (DESIGN.md §11).
+//!
+//! Three entry points, all over the same dataflow semantics:
+//!
+//! * [`execute_functional`] — every node through the packed executor
+//!   ([`crate::gemm::exec::Executor`]), staging each producer's C into
+//!   its consumers' A (cloned on fan-out, elementwise-rejoined via
+//!   [`join_images`] on fan-in). Returns per-node C images.
+//! * [`reference_results`] — the same dataflow through
+//!   [`crate::gemm::refimpl::ref_gemm`]: the per-node differential
+//!   oracle (`rust/tests/graph_e2e.rs`).
+//! * [`serve_graph`] — the DAG through the PR-1 coordinator: lowered
+//!   chains submitted in dependency order, pinned to the partitioner's
+//!   devices (`Coordinator::submit_chain_staged`), staged tensors fed as
+//!   each consumer chain's entry A. Chain tails are exactly the staged
+//!   producers (a lowering invariant), so `ChainResponse::result` is the
+//!   tensor the consumers need.
+//!
+//! Join semantics: the elementwise residual add in the producer's output
+//! dtype — int8 with saturation (the `srs` step), bf16 with
+//! round-to-nearest-even after each f32 add, left-fold in input order.
+//! Deterministic, and shared verbatim by the executor and reference
+//! paths, so the per-node differential isolates the GEMMs.
+
+use std::sync::mpsc::Receiver;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::arch::{balanced_config, Generation};
+use crate::coordinator::{
+    functional_a, functional_b, ChainResponse, ChainStaging, Coordinator, DesignKey,
+};
+use crate::dtype::{sat_i8, Bf16, Layout, Precision};
+use crate::gemm::exec::{ExecOptions, Executor};
+use crate::gemm::refimpl;
+use crate::mem::Matrix;
+
+use super::ir::ModelGraph;
+use super::lower::Lowered;
+use super::partition::Partition;
+
+/// Elementwise rejoin of equal-shaped row-major C images in `p`'s output
+/// dtype: left-fold add with int8 saturation / bf16 rounding per step.
+pub fn join_images(parts: &[Matrix], p: Precision) -> Result<Matrix> {
+    ensure!(!parts.is_empty(), "empty join");
+    let (rows, cols) = (parts[0].rows, parts[0].cols);
+    for m in parts {
+        ensure!(m.layout == Layout::RowMajor, "join operands must be row-major C images");
+        ensure!((m.rows, m.cols) == (rows, cols), "join shape mismatch");
+    }
+    let mut acc = parts[0].clone();
+    match p {
+        Precision::I8I8 => {
+            for m in &parts[1..] {
+                for i in 0..rows {
+                    for j in 0..cols {
+                        acc.set_i8(i, j, sat_i8(acc.get_i8(i, j) as i32 + m.get_i8(i, j) as i32));
+                    }
+                }
+            }
+        }
+        Precision::Bf16 => {
+            for m in &parts[1..] {
+                for i in 0..rows {
+                    for j in 0..cols {
+                        let v = acc.get_bf16(i, j).to_f32() + m.get_bf16(i, j).to_f32();
+                        acc.set_bf16(i, j, Bf16::from_f32(v));
+                    }
+                }
+            }
+        }
+        _ => bail!("{p} images have no elementwise rejoin"),
+    }
+    Ok(acc)
+}
+
+/// Resolve node `id`'s A image from the already-computed producer Cs
+/// (`results[..id]` must be filled for its inputs).
+fn staged_a(g: &ModelGraph, results: &[Matrix], id: usize) -> Result<Option<Matrix>> {
+    let node = g.node(id);
+    Ok(match node.inputs.len() {
+        0 => None,
+        1 => Some(results[node.inputs[0]].clone()),
+        _ => {
+            let parts: Vec<Matrix> =
+                node.inputs.iter().map(|&p| results[p].clone()).collect();
+            let jp = g.node(node.inputs[0]).shape.precision;
+            Some(join_images(&parts, jp)?)
+        }
+    })
+}
+
+fn node_design(gen: Generation, shape: &crate::workload::GemmShape) -> crate::tiling::TilingConfig {
+    let key = DesignKey::for_shape(shape);
+    balanced_config(gen, key.precision).with_b_layout(key.b_layout)
+}
+
+/// Execute the whole DAG through the packed executor on one generation's
+/// balanced designs. Deterministic inputs per node
+/// ([`functional_a`]/[`functional_b`] — the coordinator's generators),
+/// bit-identical for every `threads` value.
+pub fn execute_functional(
+    g: &ModelGraph,
+    gen: Generation,
+    threads: usize,
+) -> Result<Vec<Matrix>> {
+    let mut results: Vec<Matrix> = Vec::with_capacity(g.len());
+    for id in 0..g.len() {
+        let node = g.node(id);
+        let cfg = node_design(gen, &node.shape);
+        let exec = Executor::with_options(cfg, ExecOptions { threads, ..Default::default() });
+        let a = match staged_a(g, &results, id)? {
+            Some(a) => a,
+            None => functional_a(&node.shape, cfg.precision)?,
+        };
+        let b = functional_b(&node.shape, cfg.precision)?;
+        let c = exec
+            .execute(&a, &b)
+            .with_context(|| format!("node '{}'", node.shape.name))?;
+        results.push(c);
+    }
+    Ok(results)
+}
+
+/// The per-node oracle: the same dataflow with every GEMM through
+/// [`refimpl::ref_gemm`].
+pub fn reference_results(g: &ModelGraph) -> Result<Vec<Matrix>> {
+    let mut results: Vec<Matrix> = Vec::with_capacity(g.len());
+    for id in 0..g.len() {
+        let node = g.node(id);
+        let p = node.shape.precision;
+        let a = match staged_a(g, &results, id)? {
+            Some(a) => a,
+            None => functional_a(&node.shape, p)?,
+        };
+        let b = functional_b(&node.shape, p)?;
+        let c = refimpl::ref_gemm(&a, &b, p)
+            .with_context(|| format!("node '{}'", node.shape.name))?;
+        results.push(c);
+    }
+    Ok(results)
+}
+
+/// Drive the lowered, partitioned DAG through a running [`Coordinator`]:
+/// chains submitted in the partitioner's (dependency-respecting)
+/// schedule order, each pinned to its assigned device. Submission is
+/// eager and receiving lazy — a chain waits only for the producers
+/// whose staged C it actually needs, so independent chains on different
+/// devices overlap on the fleet (q/k fill one leader while the
+/// critical-path chain runs on another). When `functional` is set,
+/// every staged edge feeds the producer chain's functional C into the
+/// consumer chain's entry A. Returns the chain responses in chain-index
+/// order.
+pub fn serve_graph(
+    coord: &Coordinator,
+    g: &ModelGraph,
+    lowered: &Lowered,
+    part: &Partition,
+    functional: bool,
+) -> Result<Vec<ChainResponse>> {
+    ensure!(part.device_of.len() == lowered.chains.len(), "partition/lowering mismatch");
+    let mut responses: Vec<Option<ChainResponse>> = Vec::new();
+    responses.resize_with(lowered.chains.len(), || None);
+    // In-flight receivers in submission order; schedule order respects
+    // dependencies, so a producer is always submitted (and therefore in
+    // this queue or already resolved) before its consumer needs it.
+    let mut pending: std::collections::VecDeque<(usize, Receiver<ChainResponse>)> =
+        std::collections::VecDeque::new();
+    for sc in &part.schedule {
+        let ci = sc.chain;
+        let head = lowered.chain_head(ci);
+        let producers = &g.node(head).inputs;
+        let a0 = if functional && !producers.is_empty() {
+            let mut parts = Vec::with_capacity(producers.len());
+            for &p in producers {
+                let pc = lowered.node_pos[p].0;
+                while responses[pc].is_none() {
+                    let (rc, rx) =
+                        pending.pop_front().expect("producer submitted before its consumer");
+                    let resp =
+                        rx.recv().map_err(|e| anyhow::anyhow!("coordinator dropped: {e}"))?;
+                    responses[rc] = Some(resp);
+                }
+                let c = responses[pc]
+                    .as_ref()
+                    .and_then(|r| r.result.as_ref())
+                    .with_context(|| {
+                        format!(
+                            "chain '{}' produced no functional result for node '{}'",
+                            lowered.chains[pc].name,
+                            g.node(p).shape.name
+                        )
+                    })?;
+                parts.push(c.clone());
+            }
+            if parts.len() == 1 {
+                Some(parts.pop().expect("one part"))
+            } else {
+                Some(join_images(&parts, g.node(producers[0]).shape.precision)?)
+            }
+        } else {
+            None
+        };
+        let rx = coord.submit_chain_staged(
+            lowered.chains[ci].clone(),
+            ChainStaging { device: Some(sc.device), a0 },
+        )?;
+        pending.push_back((ci, rx));
+    }
+    for (ci, rx) in pending {
+        let resp = rx.recv().map_err(|e| anyhow::anyhow!("coordinator dropped: {e}"))?;
+        responses[ci] = Some(resp);
+    }
+    Ok(responses.into_iter().map(|r| r.expect("every chain scheduled")).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int8_join_saturates_and_folds_left() {
+        let mut a = Matrix::zeroed(4, 4, 1, Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(4, 4, 1, Layout::RowMajor).unwrap();
+        a.set_i8(0, 0, 100);
+        b.set_i8(0, 0, 100);
+        a.set_i8(1, 1, -100);
+        b.set_i8(1, 1, -100);
+        a.set_i8(2, 2, 3);
+        b.set_i8(2, 2, -5);
+        let j = join_images(&[a.clone(), b.clone()], Precision::I8I8).unwrap();
+        assert_eq!(j.get_i8(0, 0), 127, "saturates up");
+        assert_eq!(j.get_i8(1, 1), -128, "saturates down");
+        assert_eq!(j.get_i8(2, 2), -2);
+        // Three-way fold saturates stepwise (left fold, not wide sum).
+        let j3 = join_images(&[a.clone(), b, a], Precision::I8I8).unwrap();
+        assert_eq!(j3.get_i8(0, 0), 127);
+    }
+
+    #[test]
+    fn bf16_join_rounds_each_step() {
+        let mut a = Matrix::zeroed(4, 4, 2, Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(4, 4, 2, Layout::RowMajor).unwrap();
+        a.set_bf16(0, 0, Bf16::from_f32(1.5));
+        b.set_bf16(0, 0, Bf16::from_f32(2.25));
+        let j = join_images(&[a, b], Precision::Bf16).unwrap();
+        assert_eq!(j.get_bf16(0, 0).to_f32(), Bf16::from_f32(3.75).to_f32());
+    }
+
+    #[test]
+    fn join_rejects_blocks_and_mismatches() {
+        let a = Matrix::zeroed(4, 4, 1, Layout::RowMajor).unwrap();
+        let b = Matrix::zeroed(4, 8, 1, Layout::RowMajor).unwrap();
+        assert!(join_images(&[a.clone(), b], Precision::I8I8).is_err());
+        assert!(join_images(&[], Precision::I8I8).is_err());
+        let blk = Matrix::zeroed_bfp16(4, 8, Layout::RowMajor).unwrap();
+        assert!(join_images(&[blk.clone(), blk], Precision::Bfp16).is_err());
+    }
+}

@@ -1,0 +1,563 @@
+//! The whole-model GEMM IR (DESIGN.md §11).
+//!
+//! Nodes are GEMM ops ([`crate::workload::GemmShape`]); edges are tensor
+//! dependencies — a consumer's A is a producer's C. Unlike
+//! [`crate::plan::GemmChain`], which models only linear `consumes_prev`
+//! runs, the graph carries *fan-out* (one C feeding several consumers:
+//! Q/K/V projections sharing their block input) and *fan-in* (several Cs
+//! rejoining elementwise into one consumer's A: residual connections,
+//! MoE expert combination). Elementwise ops between GEMMs — activations,
+//! layernorm, softmax mixing — do not move the operand and stay
+//! transparent, exactly as in the chain model; a *join* is the one
+//! elementwise op the IR names explicitly, because fan-in changes the
+//! dataflow the lowering pass must stage.
+//!
+//! Graphs are acyclic by construction: a node may only reference earlier
+//! nodes, so insertion order is a topological order and every pass walks
+//! it directly. Edge legality is the chain rule ([`crate::plan::feeds`]):
+//! matching M, consumer K = producer N, and
+//! [`crate::plan::out_feeds_in`]-compatible dtypes. Joins additionally
+//! require a dtype with a cheap elementwise rejoin (int8 saturating add
+//! or bf16 add); bfp16 blocks would need a decode→add→re-encode round
+//! trip, so block-FP graphs must stay join-free.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::dtype::{Layout, Precision};
+use crate::plan::feeds;
+use crate::util::json::{num, obj, s, Json};
+use crate::workload::{GemmShape, TransformerConfig};
+
+/// Index of a node in its [`ModelGraph`] (insertion = topological order).
+pub type NodeId = usize;
+
+/// One GEMM op in the model DAG.
+#[derive(Clone, Debug)]
+pub struct ModelNode {
+    pub shape: GemmShape,
+    /// Producer nodes whose C feeds this node's A. Empty → fresh A from
+    /// DRAM; one → the chain edge; several → an elementwise residual
+    /// rejoin of equal-shaped Cs (all [`feeds`]-eligible, so the shapes
+    /// agree automatically).
+    pub inputs: Vec<NodeId>,
+}
+
+/// A whole-model GEMM DAG.
+#[derive(Clone, Debug, Default)]
+pub struct ModelGraph {
+    pub name: String,
+    nodes: Vec<ModelNode>,
+    /// Derived reverse adjacency: `consumers[p]` lists the nodes whose A
+    /// depends on `p`'s C.
+    consumers: Vec<Vec<NodeId>>,
+}
+
+/// Dtypes with a defined elementwise rejoin (`graph::exec::join_images`).
+pub fn joinable(p: Precision) -> bool {
+    matches!(p, Precision::I8I8 | Precision::Bf16)
+}
+
+impl ModelGraph {
+    pub fn new(name: &str) -> ModelGraph {
+        ModelGraph { name: name.to_string(), nodes: Vec::new(), consumers: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &ModelNode {
+        &self.nodes[id]
+    }
+
+    pub fn nodes(&self) -> &[ModelNode] {
+        &self.nodes
+    }
+
+    pub fn consumers(&self, id: NodeId) -> &[NodeId] {
+        &self.consumers[id]
+    }
+
+    /// Total tensor-dependency edges.
+    pub fn edges(&self) -> usize {
+        self.nodes.iter().map(|n| n.inputs.len()).sum()
+    }
+
+    /// Nodes whose C fans out to more than one consumer.
+    pub fn fan_outs(&self) -> usize {
+        self.consumers.iter().filter(|c| c.len() > 1).count()
+    }
+
+    /// Nodes with more than one producer (residual rejoins).
+    pub fn joins(&self) -> usize {
+        self.nodes.iter().filter(|n| n.inputs.len() > 1).count()
+    }
+
+    /// Nodes with no consumers (model outputs / probe heads).
+    pub fn sinks(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&i| self.consumers[i].is_empty()).collect()
+    }
+
+    /// Total multiply-accumulate operations across the DAG.
+    pub fn total_ops(&self) -> f64 {
+        self.nodes.iter().map(|n| n.shape.ops()).sum()
+    }
+
+    /// Append a source node (fresh A from DRAM).
+    pub fn add(&mut self, shape: GemmShape) -> NodeId {
+        self.nodes.push(ModelNode { shape, inputs: Vec::new() });
+        self.consumers.push(Vec::new());
+        self.nodes.len() - 1
+    }
+
+    /// Append a node consuming `inputs`' Cs as its A. Every edge must be
+    /// [`feeds`]-eligible; more than one input is a join and needs a
+    /// [`joinable`] producer dtype. Referencing only existing nodes keeps
+    /// the graph acyclic by construction.
+    pub fn add_after(&mut self, inputs: &[NodeId], shape: GemmShape) -> Result<NodeId> {
+        let mut seen = Vec::new();
+        for &p in inputs {
+            ensure!(p < self.nodes.len(), "'{}': input #{p} does not exist", shape.name);
+            ensure!(!seen.contains(&p), "'{}': duplicate input #{p}", shape.name);
+            seen.push(p);
+            let prod = &self.nodes[p].shape;
+            if !feeds(prod, &shape) {
+                bail!(
+                    "'{}' ({}x{}x{} {}) cannot consume '{}' ({}x{}x{} {})",
+                    shape.name,
+                    shape.m,
+                    shape.k,
+                    shape.n,
+                    shape.precision,
+                    prod.name,
+                    prod.m,
+                    prod.k,
+                    prod.n,
+                    prod.precision
+                );
+            }
+            if inputs.len() > 1 && !joinable(prod.precision) {
+                bail!(
+                    "'{}': {} blocks have no elementwise rejoin (join of {} producers)",
+                    shape.name,
+                    prod.precision,
+                    inputs.len()
+                );
+            }
+        }
+        let id = self.add(shape);
+        self.nodes[id].inputs = inputs.to_vec();
+        for &p in inputs {
+            self.consumers[p].push(id);
+        }
+        Ok(id)
+    }
+
+    /// Rebuild the graph with per-node precisions (the assignment pass's
+    /// output path). Goes back through [`Self::add_after`], so an
+    /// assignment that breaks edge legality is an error here, not a
+    /// latent executor failure.
+    pub fn with_precisions(&self, precisions: &[Precision]) -> Result<ModelGraph> {
+        ensure!(precisions.len() == self.len(), "one precision per node");
+        let mut out = ModelGraph::new(&self.name);
+        for (node, &p) in self.nodes.iter().zip(precisions) {
+            let mut shape = node.shape.clone();
+            shape.precision = p;
+            if p == Precision::Bfp16 {
+                shape.b_layout = Layout::ColMajor;
+            }
+            if node.inputs.is_empty() {
+                out.add(shape);
+            } else {
+                out.add_after(&node.inputs, shape)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Build a purely linear graph from a trace: node *i* consumes node
+    /// *i−1* exactly when the chain rule allows — the graph mirror of
+    /// [`crate::plan::GemmChain::detect`], and the anchor of the
+    /// lowering-equivalence property (`rust/tests/graph_props.rs`).
+    pub fn linear(name: &str, shapes: &[GemmShape]) -> ModelGraph {
+        let mut g = ModelGraph::new(name);
+        for (i, shape) in shapes.iter().enumerate() {
+            if i > 0 && feeds(&shapes[i - 1], shape) {
+                g.add_after(&[i - 1], shape.clone()).expect("feeds-checked edge");
+            } else {
+                g.add(shape.clone());
+            }
+        }
+        g
+    }
+
+    // ---- JSON ("ONNX-lite") ------------------------------------------------
+
+    /// Parse the JSON graph format (docs/graphs.md):
+    ///
+    /// ```json
+    /// { "name": "attn",
+    ///   "nodes": [
+    ///     { "name": "embed", "m": 512, "k": 768, "n": 768,
+    ///       "precision": "i8i8" },
+    ///     { "name": "q", "m": 512, "k": 768, "n": 768,
+    ///       "precision": "i8i8", "inputs": ["embed"],
+    ///       "layout": "colmajor" } ] }
+    /// ```
+    ///
+    /// Node names must be unique; `inputs` reference earlier nodes by
+    /// name (file order is the topological order), so cycles cannot be
+    /// expressed. `layout` (B operand) defaults to column-major; bfp16
+    /// rejects row-major exactly like the trace parser.
+    pub fn from_json_str(text: &str) -> Result<ModelGraph> {
+        let doc = Json::parse(text)?;
+        let name = doc.req("name")?.as_str().unwrap_or("model");
+        let mut g = ModelGraph::new(name);
+        let mut ids: Vec<(String, NodeId)> = Vec::new();
+        let nodes = doc
+            .req("nodes")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'nodes' must be an array"))?;
+        for (i, n) in nodes.iter().enumerate() {
+            let nname = n
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("node {i}: 'name' must be a string"))?;
+            ensure!(
+                !ids.iter().any(|(existing, _)| existing.as_str() == nname),
+                "node {i}: duplicate name '{nname}'"
+            );
+            let dim = |key: &str| -> Result<usize> {
+                n.req(key)?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("node '{nname}': bad {key}"))
+            };
+            let ptok = n
+                .req("precision")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("node '{nname}': 'precision' must be a string"))?;
+            let precision = Precision::parse(ptok)
+                .ok_or_else(|| anyhow::anyhow!("node '{nname}': unknown precision '{ptok}'"))?;
+            let b_layout = match n.get("layout").and_then(Json::as_str) {
+                None => Layout::ColMajor,
+                Some(tok) => Layout::parse(tok)
+                    .ok_or_else(|| anyhow::anyhow!("node '{nname}': unknown layout '{tok}'"))?,
+            };
+            if precision == Precision::Bfp16 && b_layout == Layout::RowMajor {
+                bail!("node '{nname}': bfp16 requires column-major B (blocks run along K)");
+            }
+            let shape = GemmShape {
+                name: nname.to_string(),
+                m: dim("m")?,
+                k: dim("k")?,
+                n: dim("n")?,
+                precision,
+                b_layout,
+            };
+            let mut inputs = Vec::new();
+            if let Some(arr) = n.get("inputs").and_then(Json::as_arr) {
+                for inp in arr {
+                    let iname = inp
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("node '{nname}': inputs must be names"))?;
+                    match ids.iter().find(|(existing, _)| existing.as_str() == iname) {
+                        Some((_, id)) => inputs.push(*id),
+                        None => bail!(
+                            "node '{nname}': input '{iname}' is not an earlier node \
+                             (file order is topological order)"
+                        ),
+                    }
+                }
+            }
+            let id = if inputs.is_empty() { g.add(shape) } else { g.add_after(&inputs, shape)? };
+            ids.push((nname.to_string(), id));
+        }
+        Ok(g)
+    }
+
+    /// Serialize back to the docs/graphs.md JSON format (round-trips
+    /// through [`Self::from_json_str`]). The JSON format references
+    /// inputs by name, so serialized names must be unique: when the
+    /// builder produced duplicate op names (legal — GGML-style traces
+    /// don't guarantee uniqueness), every later duplicate is emitted as
+    /// `name#<node-id>`; structure and shapes round-trip unchanged.
+    pub fn to_json(&self) -> Json {
+        let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+        let mut jnames: Vec<String> = Vec::with_capacity(self.nodes.len());
+        for (id, n) in self.nodes.iter().enumerate() {
+            let base = n.shape.name.as_str();
+            jnames.push(if seen.insert(base) {
+                base.to_string()
+            } else {
+                format!("{base}#{id}")
+            });
+        }
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(id, n)| {
+                let mut fields = vec![
+                    ("name", s(&jnames[id])),
+                    ("m", num(n.shape.m as f64)),
+                    ("k", num(n.shape.k as f64)),
+                    ("n", num(n.shape.n as f64)),
+                    ("precision", s(n.shape.precision.name())),
+                    ("layout", s(n.shape.b_layout.name())),
+                ];
+                if !n.inputs.is_empty() {
+                    let inputs: Vec<Json> =
+                        n.inputs.iter().map(|&p| s(&jnames[p])).collect();
+                    fields.push(("inputs", Json::Arr(inputs)));
+                }
+                obj(fields)
+            })
+            .collect();
+        obj(vec![("name", s(&self.name)), ("nodes", Json::Arr(nodes))])
+    }
+}
+
+// ---- workload generators ---------------------------------------------------
+
+/// The transformer prefill as a linear graph — the same per-layer edges
+/// as [`crate::plan::transformer_chains`] (`ffn_up ← attn_out`,
+/// `ffn_down ← ffn_up`; qkv and attn_out take fresh A because the
+/// attention block computes between them). Like `detect`, edges only
+/// materialize where [`feeds`] allows — wide-output precisions
+/// (int8→int16/int32) produce an edge-free graph instead of an error.
+/// `TransformerConfig` is one generator among many here.
+pub fn transformer_graph(cfg: &TransformerConfig) -> ModelGraph {
+    let mut g = ModelGraph::new("transformer");
+    for (i, shape) in cfg.trace().into_iter().enumerate() {
+        let in_layer = i % 4; // qkv, attn_out, ffn_up, ffn_down
+        let chainable = i < 4 * cfg.n_layers
+            && (in_layer == 2 || in_layer == 3)
+            && feeds(&g.node(i - 1).shape, &shape);
+        if chainable {
+            g.add_after(&[i - 1], shape).expect("feeds-checked edge");
+        } else {
+            g.add(shape);
+        }
+    }
+    g
+}
+
+/// Full attention-block DAG: per layer, Q/K/V projections *fan out* from
+/// the shared block input, the output projection consumes the mixed
+/// values (softmax mixing is elementwise-transparent), and the MLP input
+/// *rejoins* the residual stream with the attention output. Layer `l+1`
+/// consumes `join(ffn_down_l, attn_out_l)` — the second residual. At
+/// least 8 nodes from one layer: embed, q, k, v, attn_out, ffn_up,
+/// ffn_down, lm_head.
+pub fn attention_graph(cfg: &TransformerConfig) -> Result<ModelGraph> {
+    let p = cfg.precision;
+    let (s, d, f) = (cfg.seq, cfg.d_model, cfg.d_ffn);
+    let mut g = ModelGraph::new("attention");
+    let embed = g.add(GemmShape::new("embed", s, d, d, p));
+    let mut residual: Vec<NodeId> = vec![embed];
+    for l in 0..cfg.n_layers.max(1) {
+        let proj = |nm: &str| GemmShape::new(&format!("L{l}.{nm}"), s, d, d, p);
+        let _q = g.add_after(&residual, proj("q"))?;
+        let _k = g.add_after(&residual, proj("k"))?;
+        let v = g.add_after(&residual, proj("v"))?;
+        let attn_out = g.add_after(&[v], proj("attn_out"))?;
+        // Residual rejoin: the MLP consumes residual-stream + attention.
+        let mut rejoin = residual.clone();
+        rejoin.push(attn_out);
+        let ffn_up = g.add_after(&rejoin, GemmShape::new(&format!("L{l}.ffn_up"), s, d, f, p))?;
+        let ffn_down =
+            g.add_after(&[ffn_up], GemmShape::new(&format!("L{l}.ffn_down"), s, f, d, p))?;
+        residual = vec![ffn_down, attn_out];
+    }
+    g.add_after(&[residual[0]], GemmShape::new("lm_head", s, d, cfg.vocab, p))?;
+    Ok(g)
+}
+
+/// MoE-style branching: a gate probe plus `n_experts` independent
+/// up/down chains fanning out from the shared input, rejoined by an
+/// output projection consuming the experts' summed Cs.
+pub fn moe_graph(
+    seq: usize,
+    d_model: usize,
+    d_ffn: usize,
+    n_experts: usize,
+    p: Precision,
+) -> Result<ModelGraph> {
+    ensure!(n_experts >= 1, "need at least one expert");
+    let mut g = ModelGraph::new("moe");
+    let input = g.add(GemmShape::new("input", seq, d_model, d_model, p));
+    g.add_after(&[input], GemmShape::new("gate", seq, d_model, 4 * n_experts.div_ceil(4), p))?;
+    let mut downs = Vec::with_capacity(n_experts);
+    for e in 0..n_experts {
+        let up =
+            g.add_after(&[input], GemmShape::new(&format!("e{e}.up"), seq, d_model, d_ffn, p))?;
+        downs.push(
+            g.add_after(&[up], GemmShape::new(&format!("e{e}.down"), seq, d_ffn, d_model, p))?,
+        );
+    }
+    g.add_after(&downs, GemmShape::new("combine", seq, d_model, d_model, p))?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sq(name: &str, s: usize, p: Precision) -> GemmShape {
+        GemmShape::new(name, s, s, s, p)
+    }
+
+    #[test]
+    fn builder_validates_edges_and_joins() {
+        let mut g = ModelGraph::new("t");
+        let a = g.add(sq("a", 64, Precision::I8I8));
+        let b = g.add_after(&[a], sq("b", 64, Precision::I8I8)).unwrap();
+        // Geometry mismatch.
+        assert!(g.add_after(&[a], GemmShape::new("bad", 32, 64, 64, Precision::I8I8)).is_err());
+        // Dtype mismatch.
+        assert!(g.add_after(&[a], sq("bad", 64, Precision::Bf16)).is_err());
+        // Unknown / duplicate inputs.
+        assert!(g.add_after(&[7], sq("bad", 64, Precision::I8I8)).is_err());
+        assert!(g.add_after(&[a, a], sq("bad", 64, Precision::I8I8)).is_err());
+        // A join of two int8 producers is fine — and shows up in stats.
+        let j = g.add_after(&[a, b], sq("join", 64, Precision::I8I8)).unwrap();
+        assert_eq!(g.node(j).inputs, vec![a, b]);
+        assert_eq!((g.len(), g.edges(), g.joins(), g.fan_outs()), (3, 3, 1, 1));
+        assert_eq!(g.consumers(a), &[b, j]);
+        assert_eq!(g.sinks(), vec![j]);
+    }
+
+    #[test]
+    fn bfp16_joins_are_rejected() {
+        let mut g = ModelGraph::new("t");
+        let a = g.add(sq("a", 64, Precision::Bfp16));
+        let b = g.add_after(&[a], sq("b", 64, Precision::Bfp16)).unwrap();
+        // Linear block-FP edges are fine; elementwise rejoin is not.
+        let err = g.add_after(&[a, b], sq("j", 64, Precision::Bfp16)).unwrap_err();
+        assert!(err.to_string().contains("rejoin"), "{err}");
+        // Wide int outputs cannot feed anything, joins included.
+        let mut w = ModelGraph::new("w");
+        let x = w.add(sq("x", 64, Precision::I8I16));
+        assert!(w.add_after(&[x], sq("y", 64, Precision::I8I16)).is_err());
+    }
+
+    #[test]
+    fn wide_sinks_may_consume_int8_producers() {
+        // int8 C feeds a wider-accumulating consumer (out_feeds_in), the
+        // shape the assignment pass's sink widening produces.
+        let mut g = ModelGraph::new("t");
+        let a = g.add(sq("a", 64, Precision::I8I8));
+        assert!(g.add_after(&[a], sq("wide", 64, Precision::I8I16)).is_ok());
+    }
+
+    #[test]
+    fn linear_mirrors_detect_edges() {
+        let shapes = vec![
+            sq("a", 64, Precision::I8I8),
+            sq("b", 64, Precision::I8I8),
+            sq("c", 64, Precision::Bf16),
+            sq("d", 64, Precision::Bf16),
+        ];
+        let g = ModelGraph::linear("lin", &shapes);
+        let edges: Vec<usize> = g.nodes().iter().map(|n| n.inputs.len()).collect();
+        assert_eq!(edges, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn attention_graph_has_the_advertised_structure() {
+        let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
+        let g = attention_graph(&cfg).unwrap();
+        assert_eq!(g.len(), 8, "embed..lm_head");
+        // QKV fan-out: embed feeds q, k, v and the residual rejoin.
+        assert_eq!(g.consumers(0).len(), 4);
+        assert!(g.joins() >= 1, "residual rejoin present");
+        // Two layers chain through the double residual.
+        let g2 = attention_graph(&TransformerConfig { n_layers: 2, ..cfg }).unwrap();
+        assert_eq!(g2.len(), 14);
+        assert!(g2.joins() >= 4);
+    }
+
+    #[test]
+    fn moe_graph_branches_and_rejoins() {
+        let g = moe_graph(128, 256, 512, 4, Precision::I8I8).unwrap();
+        assert_eq!(g.len(), 2 + 8 + 1);
+        assert_eq!(g.consumers(0).len(), 5, "gate + 4 experts share the input");
+        let combine = g.len() - 1;
+        assert_eq!(g.node(combine).inputs.len(), 4, "all experts rejoin");
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
+        let g = attention_graph(&cfg).unwrap();
+        let text = g.to_json().to_string_pretty();
+        let back = ModelGraph::from_json_str(&text).unwrap();
+        assert_eq!(back.len(), g.len());
+        assert_eq!(back.edges(), g.edges());
+        for (a, b) in g.nodes().iter().zip(back.nodes()) {
+            assert_eq!(a.shape.name, b.shape.name);
+            assert_eq!((a.shape.m, a.shape.k, a.shape.n), (b.shape.m, b.shape.k, b.shape.n));
+            assert_eq!(a.shape.precision, b.shape.precision);
+            assert_eq!(a.inputs, b.inputs);
+        }
+    }
+
+    #[test]
+    fn wide_precision_transformer_graph_degrades_to_edge_free() {
+        // int8→int16/int32 outputs feed nothing, so the generator must
+        // mirror `detect` (no edges) instead of panicking — reachable
+        // from `compile --workload transformer --precision i8i16`.
+        for p in [Precision::I8I16, Precision::I8I32] {
+            let cfg = TransformerConfig { n_layers: 2, precision: p, ..Default::default() };
+            let g = transformer_graph(&cfg);
+            assert_eq!(g.len(), 9);
+            assert_eq!(g.edges(), 0, "{p}: wide outputs cannot chain");
+        }
+        // The int8 default keeps the layer edges.
+        let g8 = transformer_graph(&TransformerConfig { n_layers: 2, ..Default::default() });
+        assert_eq!(g8.edges(), 4);
+    }
+
+    #[test]
+    fn duplicate_builder_names_still_round_trip_through_json() {
+        // The builder (and GGML-style traces) never promised unique op
+        // names; the JSON format does. to_json uniquifies later
+        // duplicates as `name#id`, preserving structure.
+        let mut g = ModelGraph::new("dup");
+        let a = g.add(sq("x", 64, Precision::I8I8));
+        let b = g.add_after(&[a], sq("x", 64, Precision::I8I8)).unwrap();
+        g.add_after(&[a, b], sq("x", 64, Precision::I8I8)).unwrap();
+        let back = ModelGraph::from_json_str(&g.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.node(1).inputs, vec![0]);
+        assert_eq!(back.node(2).inputs, vec![0, 1]);
+        assert_eq!(back.node(0).shape.name, "x");
+        assert_eq!(back.node(2).shape.name, "x#2");
+    }
+
+    #[test]
+    fn json_parser_rejects_malformed_graphs() {
+        // Unknown input name (forward references cannot express cycles).
+        let fwd = r#"{"name":"x","nodes":[
+            {"name":"a","m":8,"k":8,"n":8,"precision":"i8i8","inputs":["b"]},
+            {"name":"b","m":8,"k":8,"n":8,"precision":"i8i8"}]}"#;
+        assert!(ModelGraph::from_json_str(fwd).is_err());
+        // Duplicate names.
+        let dup = r#"{"name":"x","nodes":[
+            {"name":"a","m":8,"k":8,"n":8,"precision":"i8i8"},
+            {"name":"a","m":8,"k":8,"n":8,"precision":"i8i8"}]}"#;
+        assert!(ModelGraph::from_json_str(dup).is_err());
+        // Unknown precision names the node.
+        let bad = r#"{"name":"x","nodes":[{"name":"a","m":8,"k":8,"n":8,"precision":"fp8"}]}"#;
+        let err = ModelGraph::from_json_str(bad).unwrap_err().to_string();
+        assert!(err.contains("'a'") && err.contains("fp8"), "{err}");
+        // bfp16 + row-major B rejected at parse time, like the trace parser.
+        let bfp = r#"{"name":"x","nodes":[
+            {"name":"a","m":8,"k":8,"n":8,"precision":"bfp16","layout":"rowmajor"}]}"#;
+        assert!(ModelGraph::from_json_str(bfp).is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Lowering: decompose a [`ModelGraph`] into maximal linear chains at
+//! branch/join points (DESIGN.md §11).
+//!
+//! The chain planner ([`crate::plan`]) and the coordinator's chain path
+//! already handle everything *linear*: L2-resident fused edges, dispatch
+//! amortization, design grouping. Lowering reuses all of it unchanged by
+//! cutting the DAG exactly where linearity ends:
+//!
+//! * a node **extends** its immediate predecessor's chain iff its
+//!   in-edges are a subset of `{prev}` *and* `prev`'s C has no consumer
+//!   other than (possibly) this node — i.e. no fan-out to stage and no
+//!   join to wait for. The edge becomes `consumes_prev`, eligible for
+//!   the planner's L2 fusion rule.
+//! * otherwise the node **starts a new chain**, and each of its in-edges
+//!   becomes an explicit [`StagedEdge`]: the producer's C round-trips
+//!   DRAM and is staged into the consumer's A (cloned per consumer on
+//!   fan-out, elementwise-rejoined on fan-in).
+//!
+//! Two structural invariants fall out of the rule and are load-bearing
+//! downstream: every staged edge's *consumer* is a chain head (its A is
+//! the chain's entry operand, `Coordinator::submit_chain_staged`), and
+//! every staged edge's *producer* is a chain tail (its C is the chain's
+//! functional result, `ChainResponse::result`).
+//!
+//! On a purely linear graph the rule reproduces
+//! [`GemmChain::detect`] exactly — one chain, same ops, same
+//! `consumes_prev` flags — so the existing planner goldens transfer
+//! (property-tested in `rust/tests/graph_props.rs`).
+//!
+//! A deliberate consequence of that equivalence: a *source* node (no
+//! inputs) following a *sink* extends the sink's chain too, exactly as
+//! `detect` packs an edge-free trace into one sequential chain. An
+//! edge-free run is read as a sequential instruction stream whose
+//! same-design ops ride one submission (dispatch amortization) — not
+//! as parallel work. Graphs that want branches spread across the fleet
+//! express the independence structurally (fan-out from a shared
+//! producer, as every DAG generator here does); those nodes carry
+//! in-edges, so the glue rule never applies to them.
+
+use crate::plan::{ChainOp, GemmChain};
+use crate::util::json::{num, obj, s, Json};
+
+use super::ir::{ModelGraph, NodeId};
+
+/// A cross-chain tensor dependency: `producer`'s C is written to DRAM
+/// and staged as (part of) `consumer`'s A.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StagedEdge {
+    pub producer: NodeId,
+    pub consumer: NodeId,
+}
+
+/// The lowered form: linear chains plus the staged cross-chain edges.
+#[derive(Clone, Debug, Default)]
+pub struct Lowered {
+    pub chains: Vec<GemmChain>,
+    /// `node_pos[id]` → (chain index, op index within the chain).
+    pub node_pos: Vec<(usize, usize)>,
+    pub staged: Vec<StagedEdge>,
+    /// First node id per chain (kept alongside the chains so scheduler
+    /// hot loops don't rescan `node_pos`).
+    heads: Vec<NodeId>,
+    /// Last node id per chain.
+    tails: Vec<NodeId>,
+}
+
+impl Lowered {
+    /// Node id of chain `ci`'s first op (reverse of [`Self::node_pos`]).
+    pub fn chain_head(&self, ci: usize) -> NodeId {
+        self.heads[ci]
+    }
+
+    /// Node id of chain `ci`'s last op.
+    pub fn chain_tail(&self, ci: usize) -> NodeId {
+        self.tails[ci]
+    }
+
+    /// Predecessor chains per chain (deduped, ascending): the chain-level
+    /// DAG the fleet partitioner schedules.
+    pub fn chain_deps(&self) -> Vec<Vec<usize>> {
+        let mut deps: Vec<Vec<usize>> = vec![Vec::new(); self.chains.len()];
+        for e in &self.staged {
+            let pc = self.node_pos[e.producer].0;
+            let cc = self.node_pos[e.consumer].0;
+            if pc != cc && !deps[cc].contains(&pc) {
+                deps[cc].push(pc);
+            }
+        }
+        for d in &mut deps {
+            d.sort_unstable();
+        }
+        deps
+    }
+
+    /// Structurally chainable (`consumes_prev`) edges across all chains —
+    /// the upper bound on what the planner can fuse.
+    pub fn chain_edges(&self) -> usize {
+        self.chains.iter().map(GemmChain::edges).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let chains: Vec<Json> = self
+            .chains
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("name", s(&c.name)),
+                    ("ops", Json::Arr(c.ops.iter().map(|o| s(&o.shape.name)).collect())),
+                    ("edges", num(c.edges() as f64)),
+                ])
+            })
+            .collect();
+        let staged: Vec<Json> = self
+            .staged
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("producer", num(e.producer as f64)),
+                    ("consumer", num(e.consumer as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![("chains", Json::Arr(chains)), ("staged_edges", Json::Arr(staged))])
+    }
+}
+
+/// Lower `g` into maximal linear chains (see the module docs for the
+/// cut rule). Chain names are `{graph}.c{i}.{head-op}`; a graph that
+/// lowers to a single chain keeps the graph's own name, so a linear
+/// graph round-trips [`GemmChain::detect`] including the name.
+pub fn lower(g: &ModelGraph) -> Lowered {
+    let mut out = Lowered::default();
+    for id in 0..g.len() {
+        let node = g.node(id);
+        let extendable = id > 0
+            && node.inputs.iter().all(|&p| p + 1 == id)
+            && g.consumers(id - 1).iter().all(|&c| c == id);
+        if extendable {
+            let (ci, _) = out.node_pos[id - 1];
+            let consumes_prev = node.inputs == [id - 1];
+            out.chains[ci].ops.push(ChainOp { shape: node.shape.clone(), consumes_prev });
+            out.node_pos.push((ci, out.chains[ci].len() - 1));
+            out.tails[ci] = id;
+        } else {
+            let ci = out.chains.len();
+            let mut chain =
+                GemmChain::new(&format!("{}.c{ci}.{}", g.name, node.shape.name));
+            chain.ops.push(ChainOp { shape: node.shape.clone(), consumes_prev: false });
+            out.chains.push(chain);
+            out.node_pos.push((ci, 0));
+            out.heads.push(id);
+            out.tails.push(id);
+            for &p in &node.inputs {
+                out.staged.push(StagedEdge { producer: p, consumer: id });
+            }
+        }
+    }
+    if out.chains.len() == 1 {
+        out.chains[0].name = g.name.clone();
+    }
+    debug_assert!(out.staged.iter().all(|e| {
+        let (pc, pi) = out.node_pos[e.producer];
+        let (cc, ci) = out.node_pos[e.consumer];
+        pi + 1 == out.chains[pc].len() && ci == 0 && pc != cc
+    }));
+    out
+}
+
+/// The isolated-dispatch baseline: every node its own single-op chain,
+/// every edge staged — what a DAG-unaware dispatcher would submit. The
+/// savings claims of the `graph_vs_chain` bench are measured against
+/// this under the *same* fleet scheduler.
+pub fn isolate(g: &ModelGraph) -> Lowered {
+    let mut out = Lowered::default();
+    for id in 0..g.len() {
+        let node = g.node(id);
+        let mut chain = GemmChain::new(&format!("{}.n{id}.{}", g.name, node.shape.name));
+        chain.ops.push(ChainOp { shape: node.shape.clone(), consumes_prev: false });
+        out.chains.push(chain);
+        out.node_pos.push((id, 0));
+        out.heads.push(id);
+        out.tails.push(id);
+        for &p in &node.inputs {
+            out.staged.push(StagedEdge { producer: p, consumer: id });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::Precision;
+    use crate::graph::ir::attention_graph;
+    use crate::workload::{GemmShape, TransformerConfig};
+
+    #[test]
+    fn attention_layer_lowers_at_branch_and_join_points() {
+        let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
+        let g = attention_graph(&cfg).unwrap();
+        let low = lower(&g);
+        // embed | q | k | v→attn_out | ffn_up→ffn_down→lm_head.
+        let lens: Vec<usize> = low.chains.iter().map(GemmChain::len).collect();
+        assert_eq!(lens, vec![1, 1, 1, 2, 3]);
+        // v→attn_out and ffn_up→ffn_down→lm_head are chainable edges.
+        assert_eq!(low.chain_edges(), 3);
+        // Staged: embed→{q,k,v}, and the rejoin {embed,attn_out}→ffn_up.
+        assert_eq!(low.staged.len(), 5);
+        // Every staged producer is a chain tail, every consumer a head.
+        for e in &low.staged {
+            let (pc, pi) = low.node_pos[e.producer];
+            assert_eq!(pi + 1, low.chains[pc].len(), "producer {} not a tail", e.producer);
+            assert_eq!(low.node_pos[e.consumer].1, 0, "consumer {} not a head", e.consumer);
+        }
+        // Chain-level DAG: q, k, v-chain all depend on embed's chain; the
+        // ffn chain depends on embed (residual) and the v-chain.
+        assert_eq!(low.chain_deps(), vec![vec![], vec![0], vec![0], vec![0], vec![0, 3]]);
+        assert_eq!(low.chain_head(4), 5);
+        assert_eq!(low.chain_tail(3), 4);
+    }
+
+    #[test]
+    fn linear_graph_lowers_to_one_chain_matching_detect() {
+        let trace = TransformerConfig { n_layers: 2, ..Default::default() }.trace();
+        let g = ModelGraph::linear("trace", &trace);
+        let low = lower(&g);
+        assert_eq!(low.chains.len(), 1);
+        assert!(low.staged.is_empty());
+        let want = GemmChain::detect("trace", &trace);
+        let got = &low.chains[0];
+        assert_eq!(got.name, want.name);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.ops.iter().zip(&want.ops) {
+            assert_eq!(a.consumes_prev, b.consumes_prev, "{}", a.shape.name);
+            assert_eq!(a.shape.name, b.shape.name);
+        }
+    }
+
+    #[test]
+    fn fan_out_breaks_the_producer_chain() {
+        // a→b with a also feeding c: b must not extend a's chain (a's C
+        // has an external consumer and must round-trip DRAM).
+        let mut g = ModelGraph::new("t");
+        let a = g.add(GemmShape::new("a", 64, 64, 64, Precision::I8I8));
+        g.add_after(&[a], GemmShape::new("b", 64, 64, 64, Precision::I8I8)).unwrap();
+        g.add_after(&[a], GemmShape::new("c", 64, 64, 64, Precision::I8I8)).unwrap();
+        let low = lower(&g);
+        assert_eq!(low.chains.len(), 3);
+        assert_eq!(low.staged.len(), 2);
+        assert_eq!(low.chain_edges(), 0);
+    }
+
+    #[test]
+    fn isolate_is_all_singletons() {
+        let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
+        let g = attention_graph(&cfg).unwrap();
+        let iso = isolate(&g);
+        assert_eq!(iso.chains.len(), g.len());
+        assert!(iso.chains.iter().all(|c| c.len() == 1));
+        assert_eq!(iso.staged.len(), g.edges());
+        assert_eq!(iso.chain_edges(), 0);
+    }
+}

@@ -1,0 +1,46 @@
+//! Graph compiler: whole-model DAG ingestion, mixed-precision
+//! assignment, and fleet-wide scheduling (DESIGN.md §11, docs/graphs.md).
+//!
+//! The layer every multi-op workload plugs into: the chain planner
+//! ([`crate::plan`]) stops at linear `consumes_prev` pipelines, but real
+//! DL models are DAGs — Q/K/V share an input, residuals rejoin, MoE
+//! branches fan out. This module compiles a whole model down to the
+//! primitives the rest of the stack already serves:
+//!
+//! * [`ir`] — the [`ir::ModelGraph`] IR: GEMM nodes, tensor-dependency
+//!   edges with fan-out/fan-in, a builder API, a JSON "ONNX-lite"
+//!   parser, and workload generators (linear traces, transformer,
+//!   full attention, MoE — `TransformerConfig` is one generator among
+//!   many).
+//! * [`lower`] — decompose the DAG into maximal linear chains at
+//!   branch/join points; intra-chain edges keep the planner's
+//!   L2-residency fusion, cross-chain edges become explicit staged
+//!   tensors.
+//! * [`assign`] — pick int8/bf16/bfp16 per node from an accuracy-budget
+//!   policy plus the simulator's cost model, respecting edge legality
+//!   and the fleet router's generation routing (bfp16 stays on XDNA2).
+//! * [`partition`] — map independent branches onto the coordinator's
+//!   devices with a deterministic critical-path-aware list scheduler
+//!   and a makespan estimate bounded by critical path and serial sum.
+//! * [`exec`] — functional execution of the DAG: packed-executor and
+//!   reference oracles per node, and `serve_graph` driving the live
+//!   coordinator with device-pinned, tensor-staged chain submissions.
+//!
+//! CLI: `xdna-gemm compile` (docs/graphs.md walkthrough); bench:
+//! `graph_vs_chain`; example: `examples/model_graph.rs`.
+
+pub mod assign;
+pub mod exec;
+pub mod ir;
+pub mod lower;
+pub mod partition;
+
+pub use assign::{assign, err_cost, route_gen, AssignOptions, Assignment, NodeChoice};
+pub use exec::{execute_functional, join_images, reference_results, serve_graph};
+pub use ir::{
+    attention_graph, joinable, moe_graph, transformer_graph, ModelGraph, ModelNode, NodeId,
+};
+pub use lower::{isolate, lower, Lowered, StagedEdge};
+pub use partition::{
+    chain_exec_s, partition, staged_bytes, Partition, PartitionOptions, ScheduledChain,
+};

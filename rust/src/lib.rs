@@ -26,6 +26,9 @@
 //!   executor that moves real bytes through the simulated hierarchy.
 //! * [`plan`] — chain planner: fuse producer→consumer GEMM chains with
 //!   L2-resident reuse, amortized dispatch and design grouping.
+//! * [`graph`] — graph compiler: whole-model DAG IR with fan-out/fan-in,
+//!   lowering to maximal linear chains, mixed-precision assignment, and
+//!   critical-path-aware fleet partitioning (`docs/graphs.md`).
 //! * [`runtime`] — PJRT client; loads the AOT Pallas/JAX artifacts
 //!   (`artifacts/*.hlo.txt`) and executes them from the request path.
 //! * [`coordinator`] — sharded GEMM-as-a-service: admission queue,
@@ -42,6 +45,7 @@ pub mod harness;
 pub mod dtype;
 pub mod dtype_bfp16;
 pub mod gemm;
+pub mod graph;
 pub mod mem;
 pub mod model;
 pub mod optimizer;

@@ -21,8 +21,16 @@
 //!                [--threads T] [--iters I] [--rowmajor-b] [--bdchain]
 //!                [--no-pack]                  packed functional executor timing
 //! xdna-gemm plan [--gen G] [--precision P] [--seq S] [--layers L]
-//!                [--mixed] [--serve] [--devices D]
+//!                [--mixed] [--serve] [--devices D] [--json]
 //!                                             chain planner: fused vs isolated
+//! xdna-gemm compile [--graph FILE.json | --workload attention|moe|transformer]
+//!                   [--gen G] [--devices D] [--mix xdna:xdna2] [--budget B]
+//!                   [--precision P] [--seq S] [--layers L] [--d-model D]
+//!                   [--d-ffn F] [--vocab V] [--experts E] [--json]
+//!                   [--serve] [--functional] [--threads T]
+//!                                             graph compiler: DAG → assigned,
+//!                                             lowered, fleet-partitioned plan
+//!                                             (docs/graphs.md)
 //! xdna-gemm artifacts [--dir artifacts]       list + smoke the AOT bundle
 //! ```
 //!
@@ -43,7 +51,7 @@ use xdna_gemm::util::cli::Args;
 use xdna_gemm::workload::TransformerConfig;
 
 const USAGE: &str = "usage: xdna-gemm <table1|table2|table3|fig6|fig7|fig8|ablations|optimize|\
-                     simulate|exec|serve|plan|artifacts> [options]";
+                     simulate|exec|serve|plan|compile|artifacts> [options]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -276,6 +284,27 @@ fn main() -> Result<()> {
                 &planner.plan_isolated(&chains),
                 BdMode::Overlapped,
             );
+            if args.flag("json") {
+                if args.flag("serve") {
+                    bail!("--json and --serve are mutually exclusive (run them separately)");
+                }
+                // Machine-readable PlanReport pair (scripts/bench.sh
+                // consumes this instead of scraping the summary lines).
+                let doc = xdna_gemm::util::json::obj(vec![
+                    ("command", xdna_gemm::util::json::s("plan")),
+                    ("gen", xdna_gemm::util::json::s(gen.name())),
+                    ("precision", xdna_gemm::util::json::s(p.name())),
+                    ("chains", xdna_gemm::util::json::num(chains.len() as f64)),
+                    ("isolated", isolated.to_json()),
+                    ("chained", fused.to_json()),
+                    (
+                        "speedup",
+                        xdna_gemm::util::json::num(fused.speedup_over(&isolated)),
+                    ),
+                ]);
+                println!("{}", doc.to_string_pretty());
+                return Ok(());
+            }
             println!(
                 "chain plan for {gen}/{}: {} chains over seq={} d={} ffn={} x{} layers",
                 p.paper_name(),
@@ -301,6 +330,176 @@ fn main() -> Result<()> {
                 let opts = CoordinatorOptions::fleet(vec![gen; n_devices.max(1)]);
                 let m = harness::serve_chains(opts, &chains)?;
                 println!("\nserved through the coordinator fleet:\n{}", m.summary());
+            }
+        }
+        "compile" => {
+            use xdna_gemm::graph::{self, AssignOptions, ModelGraph, PartitionOptions};
+            use xdna_gemm::util::json::{num, obj, s};
+            let gen = parse_gen(args.get("gen").unwrap_or("xdna2"))?;
+            let n_devices = args.usize_opt("devices", 2)?.max(1);
+            let pattern = match args.get("mix") {
+                Some(m) => parse_mix(m)?,
+                None => vec![gen],
+            };
+            let fleet = expand_mix(&pattern, n_devices);
+            let p = parse_precision(args.get("precision").unwrap_or("i8i8"))?;
+            let cfg = TransformerConfig {
+                precision: p,
+                seq: args.usize_opt("seq", 512)?,
+                n_layers: args.usize_opt("layers", 1)?,
+                d_model: args.usize_opt("d-model", 768)?,
+                d_ffn: args.usize_opt("d-ffn", 3072)?,
+                vocab: args.usize_opt("vocab", 50257)?,
+            };
+            let g = match args.get("graph") {
+                Some(path) => ModelGraph::from_json_str(&std::fs::read_to_string(path)?)?,
+                None => match args.get("workload").unwrap_or("attention") {
+                    "attention" => graph::attention_graph(&cfg)?,
+                    "moe" => graph::moe_graph(
+                        cfg.seq,
+                        cfg.d_model,
+                        cfg.d_ffn,
+                        args.usize_opt("experts", 4)?,
+                        p,
+                    )?,
+                    "transformer" => graph::transformer_graph(&cfg),
+                    other => bail!("unknown workload '{other}' (attention|moe|transformer)"),
+                },
+            };
+            let budget = args.f64_opt("budget", 1.0)?;
+            let assigned = graph::assign(
+                &g,
+                &AssignOptions { budget_per_node: budget, fleet: fleet.clone() },
+            )?;
+            let low = graph::lower(&assigned.graph);
+            let part =
+                graph::partition(&assigned.graph, &low, &PartitionOptions::fleet(fleet.clone()));
+            let iso = graph::partition(
+                &assigned.graph,
+                &graph::isolate(&assigned.graph),
+                &PartitionOptions::fleet(fleet.clone()),
+            );
+            let single = graph::partition(
+                &assigned.graph,
+                &low,
+                &PartitionOptions::fleet(vec![fleet[0]]),
+            );
+            let vs_isolated = iso.makespan_s / part.makespan_s;
+            let vs_single = single.makespan_s / part.makespan_s;
+            if args.flag("json") {
+                if args.flag("serve") {
+                    bail!("--json and --serve are mutually exclusive (run them separately)");
+                }
+                // The lowered chains also get the chain planner's
+                // single-device PlanReport (same schema as `plan --json`).
+                let planner = xdna_gemm::plan::Planner::new(fleet[0]);
+                let chained = xdna_gemm::plan::evaluate(
+                    &planner.plan(&low.chains),
+                    BdMode::Overlapped,
+                );
+                let doc = obj(vec![
+                    ("command", s("compile")),
+                    ("graph", assigned.graph.to_json()),
+                    ("assignment", assigned.to_json()),
+                    ("lowered", low.to_json()),
+                    ("plan_report_single_device", chained.to_json()),
+                    ("partition", part.to_json()),
+                    (
+                        "baselines",
+                        obj(vec![
+                            ("isolated_makespan_s", num(iso.makespan_s)),
+                            ("single_device_makespan_s", num(single.makespan_s)),
+                        ]),
+                    ),
+                    ("speedup_vs_isolated", num(vs_isolated)),
+                    ("speedup_vs_single_device", num(vs_single)),
+                ]);
+                println!("{}", doc.to_string_pretty());
+                return Ok(());
+            }
+            println!(
+                "graph '{}': {} nodes, {} edges ({} fan-outs, {} joins), {:.2} GMACs",
+                assigned.graph.name,
+                assigned.graph.len(),
+                assigned.graph.edges(),
+                assigned.graph.fan_outs(),
+                assigned.graph.joins(),
+                assigned.graph.total_ops() / 2e9
+            );
+            println!(
+                "assignment: budget {:.2} err units, spent {:.2} | est {:.3} ms isolated-sum",
+                assigned.err_budget,
+                assigned.err_spent,
+                assigned.est_s * 1e3
+            );
+            for (node, choice) in assigned.graph.nodes().iter().zip(&assigned.choices) {
+                println!(
+                    "  {:<16} {:>6} on {:<5} est {:>8.3} ms",
+                    node.shape.name,
+                    node.shape.precision.to_string(),
+                    choice.gen.name(),
+                    choice.est_s * 1e3
+                );
+            }
+            println!(
+                "lowered: {} chains ({} chainable edges), {} staged cross-chain tensors",
+                low.chains.len(),
+                low.chain_edges(),
+                low.staged.len()
+            );
+            let fleet_names: Vec<&str> = fleet.iter().map(|d| d.name()).collect();
+            println!("partition on [{}]:", fleet_names.join(", "));
+            for sc in &part.schedule {
+                println!(
+                    "  dev{} {:<24} start {:>8.3} ms  xfer {:>6.3} ms  exec {:>8.3} ms  \
+                     finish {:>8.3} ms",
+                    sc.device,
+                    low.chains[sc.chain].name,
+                    sc.start_s * 1e3,
+                    sc.xfer_s * 1e3,
+                    sc.exec_s * 1e3,
+                    sc.finish_s * 1e3
+                );
+            }
+            println!(
+                "makespan {:.3} ms (critical path {:.3} ms, serial {:.3} ms) | \
+                 isolated {:.3} ms → {vs_isolated:.2}x | single-device {:.3} ms → {vs_single:.2}x",
+                part.makespan_s * 1e3,
+                part.critical_path_s * 1e3,
+                part.serial_s * 1e3,
+                iso.makespan_s * 1e3,
+                single.makespan_s * 1e3
+            );
+            if args.flag("serve") {
+                let opts = CoordinatorOptions {
+                    devices: fleet.clone(),
+                    backend: if args.flag("functional") {
+                        Backend::Functional
+                    } else {
+                        Backend::SimOnly
+                    },
+                    exec_threads: args.usize_opt("threads", 1)?,
+                    ..Default::default()
+                };
+                let coord = xdna_gemm::coordinator::Coordinator::start(opts);
+                let responses = graph::serve_graph(
+                    &coord,
+                    &assigned.graph,
+                    &low,
+                    &part,
+                    args.flag("functional"),
+                )?;
+                let staged: usize = responses.iter().map(|r| r.staged_edges).sum();
+                let fused: usize = responses.iter().map(|r| r.fused_edges).sum();
+                let m = coord.shutdown();
+                println!(
+                    "\nserved through the coordinator fleet ({} chains, {} staged tensors, \
+                     {} fused edges):\n{}",
+                    responses.len(),
+                    staged,
+                    fused,
+                    m.summary()
+                );
             }
         }
         "artifacts" => {

@@ -216,6 +216,33 @@ impl PlanReport {
         baseline.t_total() / self.t_total()
     }
 
+    /// Machine-readable form for `plan --json` / `compile --json`
+    /// (`scripts/bench.sh` and CI consume this instead of scraping
+    /// [`Self::summary`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj, Json};
+        obj(vec![
+            ("dispatches", num(self.dispatches as f64)),
+            ("chains", num(self.chains as f64)),
+            ("fused_edges", num(self.fused_edges as f64)),
+            ("elided_dispatches", num(self.elided_dispatches as f64)),
+            ("reconfigurations", num(self.reconfigurations as f64)),
+            ("ops", num(self.ops)),
+            ("dram_bytes", num(self.dram_bytes)),
+            ("t_steady_s", num(self.t_steady)),
+            ("t_prologue_s", num(self.t_prologue)),
+            ("t_stall_s", num(self.t_stall)),
+            ("t_dispatch_s", num(self.t_dispatch)),
+            ("t_reconfig_s", num(self.t_reconfig)),
+            ("t_total_s", num(self.t_total())),
+            ("tops", num(self.tops())),
+            (
+                "per_chain_s",
+                Json::Arr(self.per_chain_s.iter().map(|&t| num(t)).collect()),
+            ),
+        ])
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "{} dispatches in {} chains | {:.3} ms total = steady {:.3} + prologue {:.3} + \
@@ -398,6 +425,22 @@ mod tests {
         // Per-chain makespans cover the whole schedule.
         let sum: f64 = grouped.per_chain_s.iter().sum();
         assert!((sum - grouped.t_total()).abs() < 1e-9 * grouped.t_total().max(1.0));
+    }
+
+    #[test]
+    fn plan_report_json_round_trips_the_totals() {
+        let cfg = TransformerConfig { n_layers: 2, ..Default::default() };
+        let chains = transformer_chains(&cfg);
+        let rep = evaluate(&Planner::new(Generation::Xdna2).plan(&chains), BdMode::Overlapped);
+        let j = crate::util::json::Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("dispatches").unwrap().as_usize(), Some(rep.dispatches));
+        assert_eq!(j.get("fused_edges").unwrap().as_usize(), Some(rep.fused_edges));
+        let t = j.get("t_total_s").unwrap().as_f64().unwrap();
+        assert!((t - rep.t_total()).abs() < 1e-12 * rep.t_total());
+        assert_eq!(
+            j.get("per_chain_s").unwrap().as_arr().unwrap().len(),
+            rep.per_chain_s.len()
+        );
     }
 
     #[test]

@@ -90,6 +90,20 @@ impl TransformerConfig {
         crate::plan::transformer_chains(self)
     }
 
+    /// The prefill trace as a whole-model graph (`crate::graph`) — the
+    /// linear generator; `TransformerConfig` is just one producer of
+    /// [`crate::graph::ModelGraph`]s next to the branching
+    /// attention/MoE generators and the JSON parser.
+    pub fn graph(&self) -> crate::graph::ModelGraph {
+        crate::graph::transformer_graph(self)
+    }
+
+    /// The full attention-block DAG for this config (QKV fan-out +
+    /// residual rejoins, `crate::graph::attention_graph`).
+    pub fn attention_graph(&self) -> anyhow::Result<crate::graph::ModelGraph> {
+        crate::graph::attention_graph(self)
+    }
+
     /// Distinct (m, k, n) shapes in the trace — what the design cache
     /// actually has to handle (Sec. 5.3.1).
     pub fn distinct_shapes(&self) -> Vec<(usize, usize, usize)> {

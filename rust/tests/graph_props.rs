@@ -1,0 +1,202 @@
+//! Graph↔chain equivalence layer (ISSUE 5): lowering a purely *linear*
+//! [`ModelGraph`] must reproduce [`GemmChain::detect`] on the same trace
+//! bit-for-bit — same chain, same planner output dispatch by dispatch,
+//! same fused-edge decisions, same functional execution result — so the
+//! graph compiler provably degenerates to the PR-2 chain planner when
+//! there is nothing DAG-shaped about the workload. Plus determinism of
+//! the partitioner (same input → same schedule) and the structural
+//! goldens the Python transliteration cross-checks
+//! (python/tests/test_graph_model.py).
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::coordinator::{Backend, Coordinator, CoordinatorOptions};
+use xdna_gemm::dtype::{Layout, Precision};
+use xdna_gemm::gemm::refimpl;
+use xdna_gemm::graph::{
+    execute_functional, isolate, lower, partition, ModelGraph, PartitionOptions,
+};
+use xdna_gemm::plan::{GemmChain, Planner};
+use xdna_gemm::util::prop::prop_check;
+use xdna_gemm::util::rng::Rng;
+use xdna_gemm::workload::{GemmShape, TransformerConfig};
+
+/// Random trace whose consecutive shapes sometimes chain (geometry +
+/// dtype line up) and sometimes don't — the detect() input class.
+fn random_trace(rng: &mut Rng) -> Vec<GemmShape> {
+    let dims = [64usize, 128, 192, 256];
+    let precs = [Precision::I8I8, Precision::I8I8, Precision::Bf16, Precision::I8I16];
+    let len = 2 + rng.below(5);
+    let mut out: Vec<GemmShape> = Vec::with_capacity(len);
+    for i in 0..len {
+        let (m, k) = match out.last() {
+            // Bias toward chainable geometry: reuse prev (m, n) as (m, k).
+            Some(prev) if rng.below(3) > 0 => (prev.m, prev.n),
+            _ => (*rng.pick(&dims), *rng.pick(&dims)),
+        };
+        let mut g = GemmShape::new(
+            &format!("op{i}"),
+            m,
+            k,
+            *rng.pick(&dims),
+            *rng.pick(&precs),
+        );
+        if rng.below(6) == 0 && g.precision != Precision::Bfp16 {
+            g.b_layout = Layout::RowMajor;
+        }
+        out.push(g);
+    }
+    out
+}
+
+fn assert_chains_equal(a: &GemmChain, b: &GemmChain) {
+    assert_eq!(a.name, b.name);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.ops.iter().zip(&b.ops) {
+        assert_eq!(x.consumes_prev, y.consumes_prev, "{}", x.shape.name);
+        assert_eq!(x.shape.name, y.shape.name);
+        assert_eq!((x.shape.m, x.shape.k, x.shape.n), (y.shape.m, y.shape.k, y.shape.n));
+        assert_eq!(x.shape.precision, y.shape.precision);
+        assert_eq!(x.shape.b_layout, y.shape.b_layout);
+    }
+}
+
+#[test]
+fn linear_graph_lowering_reproduces_detect_bit_for_bit() {
+    prop_check("linear lowering ≡ GemmChain::detect", 24, |rng| {
+        let trace = random_trace(rng);
+        let g = ModelGraph::linear("trace", &trace);
+        let lowered = lower(&g);
+        assert_eq!(lowered.chains.len(), 1, "linear graphs lower to one chain");
+        assert!(lowered.staged.is_empty());
+        let detected = GemmChain::detect("trace", &trace);
+        assert_chains_equal(&lowered.chains[0], &detected);
+
+        // The planner sees identical input, so the compiled schedule is
+        // identical dispatch by dispatch: same design, same fusion and
+        // amortization overrides, same chain slots — on both generations.
+        for gen in Generation::ALL {
+            let planner = Planner::new(gen);
+            let from_graph = planner.plan(&lowered.chains);
+            let from_detect = planner.plan(std::slice::from_ref(&detected));
+            assert_eq!(from_graph.fused_edges(), from_detect.fused_edges());
+            assert_eq!(from_graph.elided_dispatches(), from_detect.elided_dispatches());
+            assert_eq!(from_graph.dispatches.len(), from_detect.dispatches.len());
+            for (x, y) in from_graph.dispatches.iter().zip(&from_detect.dispatches) {
+                assert_eq!(x.shape.name, y.shape.name);
+                assert_eq!(x.cfg.label(), y.cfg.label());
+                assert_eq!(x.overrides, y.overrides);
+                assert_eq!(x.chain, y.chain);
+            }
+        }
+    });
+}
+
+#[test]
+fn linear_graph_functional_result_matches_the_chain_path() {
+    // The functional half of the equivalence: serving the lowered chain
+    // through the coordinator produces bit-identical bytes to serving
+    // the detect() chain — same staged intermediate, same final C.
+    let p = Precision::I8I8;
+    let trace = vec![
+        GemmShape::new("op0", 64, 64, 64, p),
+        GemmShape::new("op1", 64, 64, 64, p),
+        GemmShape::new("op2", 64, 64, 128, p),
+    ];
+    let g = ModelGraph::linear("trace", &trace);
+    let lowered = lower(&g);
+    let detected = GemmChain::detect("trace", &trace);
+
+    let run = |chain: GemmChain| {
+        let c = Coordinator::start(CoordinatorOptions {
+            gen: Generation::Xdna,
+            backend: Backend::Functional,
+            ..Default::default()
+        });
+        let resp = c.call_chain(chain).unwrap();
+        let out = resp.result.expect("functional chain result");
+        c.shutdown();
+        (out, resp.staged_edges)
+    };
+    let (from_graph, staged_a) = run(lowered.chains[0].clone());
+    let (from_detect, staged_b) = run(detected);
+    assert_eq!(staged_a, staged_b);
+    assert!(refimpl::matrices_equal(&from_graph, &from_detect, p));
+
+    // And the pure-executor graph path agrees with the coordinator path
+    // on the tail tensor.
+    let results = execute_functional(&g, Generation::Xdna, 1).unwrap();
+    assert!(refimpl::matrices_equal(results.last().unwrap(), &from_graph, p));
+}
+
+#[test]
+fn partitioner_is_deterministic_and_respects_dependencies() {
+    let cfg = TransformerConfig { n_layers: 2, ..Default::default() };
+    let g = cfg.attention_graph().unwrap();
+    let lowered = lower(&g);
+    let opts = PartitionOptions::fleet(vec![Generation::Xdna2, Generation::Xdna2]);
+    let a = partition(&g, &lowered, &opts);
+    let b = partition(&g, &lowered, &opts);
+    assert_eq!(a.device_of, b.device_of);
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+    // Dependencies: every chain starts at or after all predecessors end.
+    let deps = lowered.chain_deps();
+    for sc in &a.schedule {
+        for &d in &deps[sc.chain] {
+            let pred_finish = a
+                .schedule
+                .iter()
+                .find(|s| s.chain == d)
+                .map(|s| s.finish_s)
+                .unwrap();
+            assert!(
+                sc.start_s >= pred_finish - 1e-12,
+                "chain {} starts before its predecessor {d} finishes",
+                sc.chain
+            );
+        }
+    }
+    // Bounds: critical path ≤ makespan ≤ serial sum (+ transfers slack).
+    assert!(a.makespan_s >= a.critical_path_s - 1e-12);
+    assert!(a.critical_path_s <= a.serial_s + 1e-12);
+}
+
+#[test]
+fn structural_goldens_match_the_python_transliteration() {
+    // Pinned jointly with python/tests/test_graph_model.py (the
+    // cross-language check of the partitioner's decision function): the
+    // one-layer attention graph on a warm 2×XDNA2 fleet.
+    let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
+    let g = cfg.attention_graph().unwrap();
+    let lowered = lower(&g);
+    // Chains: embed | q | k | v→attn_out | ffn_up→ffn_down→lm_head.
+    let lens: Vec<usize> = lowered.chains.iter().map(GemmChain::len).collect();
+    assert_eq!(lens, vec![1, 1, 1, 2, 3]);
+    assert_eq!(lowered.staged.len(), 5);
+    assert_eq!(
+        lowered.chain_deps(),
+        vec![vec![], vec![0], vec![0], vec![0], vec![0, 3]]
+    );
+    let part = partition(
+        &g,
+        &lowered,
+        &PartitionOptions::fleet(vec![Generation::Xdna2, Generation::Xdna2]),
+    );
+    // The critical path (embed → v/attn_out → ffn/lm_head) stays on
+    // device 0; q and k fill device 1; device 0 never idles, so the
+    // makespan *is* the critical path.
+    assert_eq!(part.device_of, vec![0, 1, 1, 0, 0]);
+    assert!((part.makespan_s - part.critical_path_s).abs() < 1e-12);
+    assert!(part.makespan_s < part.serial_s);
+    // The DAG-aware schedule beats the isolated-dispatch baseline under
+    // the same scheduler, on both generations (acceptance).
+    for gen in Generation::ALL {
+        let dag = partition(&g, &lowered, &PartitionOptions::fleet(vec![gen; 2]));
+        let iso = partition(&g, &isolate(&g), &PartitionOptions::fleet(vec![gen; 2]));
+        assert!(
+            dag.makespan_s < iso.makespan_s,
+            "{gen}: dag {:.3} ms !< isolated {:.3} ms",
+            dag.makespan_s * 1e3,
+            iso.makespan_s * 1e3
+        );
+    }
+}

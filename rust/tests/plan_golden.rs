@@ -6,10 +6,19 @@
 //! that is a *reviewed decision* about the serving dataflow, not noise:
 //! update the golden value together with the change that moved it.
 
-use xdna_gemm::arch::Generation;
+use xdna_gemm::arch::{balanced_config, Generation};
 use xdna_gemm::dtype::Precision;
-use xdna_gemm::plan::{transformer_chains, Planner};
-use xdna_gemm::workload::TransformerConfig;
+use xdna_gemm::plan::{l2_headroom, resident_c_bytes, transformer_chains, Planner};
+use xdna_gemm::workload::{GemmShape, TransformerConfig};
+
+/// The XDNA2 native-bfp16 knife-edge (DESIGN.md §10): on the default
+/// transformer layer, attn_out's padded C misses the balanced design's
+/// free L2 by exactly this many bytes, which is why the bfp16 row in
+/// the fused-edge golden below reads 0 on XDNA2 while the much slower
+/// XDNA emulation design fuses. Any capacity-math or config change that
+/// moves this constant must update it *here*, deliberately, instead of
+/// silently flipping a plan.
+const XDNA2_BFP16_L2_SHORTFALL_BYTES: usize = 896;
 
 fn layer_plan(gen: Generation, p: Precision) -> xdna_gemm::plan::ChainPlan {
     let cfg = TransformerConfig { n_layers: 1, precision: p, ..Default::default() };
@@ -56,6 +65,26 @@ fn transformer_layer_fused_edges_are_pinned() {
         // ride the first op's host submission.
         assert_eq!(plan.elided_dispatches(), 3, "{gen}/{p}");
     }
+}
+
+#[test]
+fn xdna2_bfp16_knife_edge_shortfall_is_exactly_896_bytes() {
+    // attn_out (512×768×768 bfp16) under the XDNA2 balanced design
+    // (140x40x144, k_mt 440): padded C = 560·1152 blocks-along-N at
+    // 12 bits/value = 967 680 B vs 966 784 B of post-working-set L2
+    // headroom. Numbers independently recomputed in
+    // python/tests/test_bfp16_model.py.
+    let cfg = balanced_config(Generation::Xdna2, Precision::Bfp16);
+    let producer = GemmShape::new("attn_out", 512, 768, 768, Precision::Bfp16);
+    let c_bytes = resident_c_bytes(&cfg, &producer);
+    let headroom = l2_headroom(&cfg);
+    assert_eq!(c_bytes, 967_680, "padded bfp16 C size moved");
+    assert_eq!(headroom, 966_784, "balanced-design L2 headroom moved");
+    assert_eq!(
+        c_bytes - headroom,
+        XDNA2_BFP16_L2_SHORTFALL_BYTES,
+        "the watched knife-edge shifted — capacity math or config change?"
+    );
 }
 
 #[test]

@@ -1,17 +1,19 @@
 #!/usr/bin/env bash
-# Perf-trajectory artifact (ISSUE 3, extended by ISSUE 4): run the
-# hotpath, chain_vs_isolated and bfp16_vs_bf16 benches with JSON
-# recording enabled and merge them into BENCH_PR4.json — GEMM/s,
-# functional GB/s, the packing / threading speedups over the
-# re-streaming serial executor, and the native-bfp16 vs bf16-emulation
-# speedup — so future PRs can diff against a machine-readable baseline.
+# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–5): run the
+# hotpath, chain_vs_isolated, bfp16_vs_bf16 and graph_vs_chain benches
+# with JSON recording enabled and merge them into BENCH_PR5.json —
+# GEMM/s, functional GB/s, packing/threading speedups, the native-bfp16
+# vs bf16-emulation speedup, and the graph compiler's DAG-aware-schedule
+# speedups over the isolated-dispatch and single-device-chain baselines
+# (both generations) — so future PRs can diff against a machine-readable
+# baseline.
 #
-# usage: scripts/bench.sh [out.json]     (default: BENCH_PR4.json)
+# usage: scripts/bench.sh [out.json]     (default: BENCH_PR5.json)
 #        BENCH_MS=500 scripts/bench.sh   (longer per-case budget)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-out="${1:-BENCH_PR4.json}"
+out="${1:-BENCH_PR5.json}"
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
 
@@ -26,13 +28,16 @@ BENCH_JSON="$tmp/chain.json" cargo bench --bench chain_vs_isolated
 echo "==> cargo bench --bench bfp16_vs_bf16"
 BENCH_JSON="$tmp/bfp16.json" cargo bench --bench bfp16_vs_bf16
 
+echo "==> cargo bench --bench graph_vs_chain"
+BENCH_JSON="$tmp/graph.json" cargo bench --bench graph_vs_chain
+
 echo "==> merging into $out"
-python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$tmp/bfp16.json" "$out" <<'PY'
+python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$tmp/bfp16.json" "$tmp/graph.json" "$out" <<'PY'
 import json
 import sys
 
-hot, chain, bfp, out = sys.argv[1], sys.argv[2], sys.argv[3], sys.argv[4]
-groups = [json.load(open(p)) for p in (hot, chain, bfp)]
+hot, chain, bfp, graph, out = sys.argv[1:6]
+groups = [json.load(open(p)) for p in (hot, chain, bfp, graph)]
 
 
 def thrpt(group, name):
@@ -43,9 +48,11 @@ def thrpt(group, name):
 
 
 summary = {
-    "artifact": "BENCH_PR4",
+    "artifact": "BENCH_PR5",
     "description": "packed+parallel functional executor vs re-streaming serial "
-    "baseline, plus native bfp16 vs bf16 emulation on XDNA2",
+    "baseline, native bfp16 vs bf16 emulation on XDNA2, and the graph "
+    "compiler's DAG-aware fleet schedule vs isolated-dispatch and "
+    "single-device-chain baselines",
     "gemms_per_s": thrpt(groups[0], "executor_gemms_per_s"),
     "functional_gb_per_s": thrpt(groups[0], "executor_functional_gb_s"),
     "packing_speedup_serial": thrpt(groups[0], "executor_packing_speedup"),
@@ -53,6 +60,12 @@ summary = {
     "bfp16_vs_bf16_speedup": thrpt(groups[2], "bfp16_vs_bf16_speedup"),
     "bfp16_vs_bf16_aligned_speedup": thrpt(groups[2], "bfp16_vs_bf16_aligned_speedup"),
     "bfp16_table3_tops": thrpt(groups[2], "bfp16_table3_tops"),
+    "graph_vs_isolated_speedup_xdna": thrpt(groups[3], "graph_vs_isolated_speedup_xdna"),
+    "graph_vs_isolated_speedup_xdna2": thrpt(groups[3], "graph_vs_isolated_speedup_xdna2"),
+    "graph_vs_chain_speedup_xdna": thrpt(groups[3], "graph_vs_chain_speedup_xdna"),
+    "graph_vs_chain_speedup_xdna2": thrpt(groups[3], "graph_vs_chain_speedup_xdna2"),
+    "moe_vs_isolated_speedup_xdna2": thrpt(groups[3], "moe_vs_isolated_speedup_xdna2"),
+    "moe_vs_chain_speedup_xdna2": thrpt(groups[3], "moe_vs_chain_speedup_xdna2"),
     "groups": groups,
 }
 with open(out, "w") as f:
