@@ -36,7 +36,7 @@ fn main() -> Result<()> {
         let trace = model.trace();
         let responses: Vec<_> = trace
             .iter()
-            .map(|g| coord.submit(GemmRequest::sim(g.clone())))
+            .map(|g| coord.submit(GemmRequest::sim(g.clone())).expect("coordinator up"))
             .collect::<Vec<_>>()
             .into_iter()
             .map(|rx| rx.recv().unwrap())
@@ -67,7 +67,7 @@ fn main() -> Result<()> {
         }
         t.print();
 
-        let m = coord.shutdown();
+        let m = coord.shutdown().expect("clean shutdown");
         let pass_ms = m.total_device_s() * 1e3;
         println!(
             "full prefill pass: {:.2} ms on device | sustained {:.2} TOPS | \

@@ -118,7 +118,7 @@ fn main() -> Result<()> {
             sg.node(tail).shape.precision,
         );
     }
-    let m = coord.shutdown();
+    let m = coord.shutdown()?;
     println!(
         "\nfunctionally served {} chains on the fleet (bit-exact vs dataflow: {exact}):\n{}",
         responses.len(),

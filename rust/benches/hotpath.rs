@@ -118,7 +118,7 @@ fn main() {
         )
     });
     b.throughput("coordinator", 1.0 / s.mean_s, "req/s");
-    coord.shutdown();
+    coord.shutdown().unwrap();
 
     b.finish();
 }

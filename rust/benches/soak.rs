@@ -1,0 +1,110 @@
+//! Long-horizon soak: a mixed two-tenant int8+bfp16 trace (≥10k ops by
+//! default) served through the coordinator fleet with periodic seeded
+//! faults — leader kills, DMA stalls, cache storms, dropped responses —
+//! asserting that throughput and tail latency stay inside bounds and
+//! that the per-tenant accounting conserves over the whole horizon.
+//!
+//! `SOAK_OPS` scales the horizon (CI runs a short seeded iteration:
+//! `SOAK_OPS=1500`); `BENCH_JSON` emits the machine-readable record
+//! `scripts/bench.sh` folds into `BENCH_PR6.json`.
+
+use std::time::Instant;
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::coordinator::{
+    Coordinator, CoordinatorOptions, FaultPlan, GemmRequest, TenantSpec,
+};
+use xdna_gemm::dtype::Precision;
+use xdna_gemm::util::bench::Bench;
+use xdna_gemm::workload::GemmShape;
+
+fn main() {
+    let n: usize = std::env::var("SOAK_OPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+    let b = Bench::new("soak");
+
+    // Quantized-LLM serving mix: tenant 0 is int8 decode/prefill
+    // traffic at high priority, tenant 1 is a native-bfp16 batch tenant
+    // (ColMajor B — the tuned XDNA2 block-datapath shape).
+    let opts = CoordinatorOptions {
+        devices: vec![Generation::Xdna2, Generation::Xdna],
+        tenants: vec![
+            TenantSpec { name: "llm-int8".into(), priority: 1, quota: 256 },
+            TenantSpec { name: "llm-bfp16".into(), priority: 0, quota: 256 },
+        ],
+        // Periodic faults across the horizon: roughly one per 500 ops
+        // per device, spread over the first 1/8th of forwards so kills
+        // land while queues are deep.
+        chaos: Some(FaultPlan::from_seed(
+            0x50AC,
+            2,
+            ((n / 8).max(8)) as u64,
+            (n / 500).max(2),
+        )),
+        ..Default::default()
+    };
+    let plan = opts.chaos.clone().expect("plan set above");
+
+    let decode = GemmShape::new("decode", 256, 4096, 4096, Precision::I8I8);
+    let prefill = GemmShape::new("prefill", 1024, 1024, 4096, Precision::I8I8);
+    let block = GemmShape::new("block", 512, 512, 512, Precision::Bfp16);
+
+    let coord = Coordinator::start(opts);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        // 3:1 int8:bfp16 — the int8 side alternates decode and prefill.
+        if i % 4 == 3 {
+            let g = GemmShape { name: format!("{}#{i}", block.name), ..block.clone() };
+            rxs.push(coord.submit_for(1, GemmRequest::sim(g)).expect("admission"));
+        } else {
+            let base = if i % 2 == 0 { &decode } else { &prefill };
+            let g = GemmShape { name: format!("{}#{i}", base.name), ..base.clone() };
+            rxs.push(coord.submit_for(0, GemmRequest::sim(g)).expect("admission"));
+        }
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        rx.recv().unwrap_or_else(|_| panic!("request {i} lost its reply"));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = coord.shutdown().expect("drained shutdown");
+
+    // Invariants: the soak is a test first and a bench second.
+    assert!(m.conserves(), "per-tenant conservation over the full horizon");
+    assert_eq!(m.count(), n, "every op executed exactly once");
+    for t in &m.tenants {
+        assert_eq!(t.failed, 0, "tenant '{}' lost work", t.name);
+        assert_eq!(t.pending, 0);
+        assert!(t.max_in_flight <= t.quota as u64, "tenant '{}' quota", t.name);
+    }
+    let fleet_tops = m.fleet_tops();
+    let sustained = m.device_tops();
+    let p99_device_ms = m.device_time_percentile(99.0) * 1e3;
+    assert!(
+        sustained >= 3.0,
+        "sustained TOPS collapsed under faults: {sustained:.2}"
+    );
+    assert!(
+        p99_device_ms <= 50.0,
+        "p99 device time blew past bound: {p99_device_ms:.2} ms"
+    );
+
+    println!(
+        "soak: {n} ops | {} faults fired ({} scheduled) | {} respawns | {} requeues",
+        m.fault_log().len(),
+        plan.total_events(),
+        m.leader_respawns,
+        m.total_requeued()
+    );
+    println!("{}", m.summary());
+
+    b.throughput("soak_ops_per_s", n as f64 / wall_s, "ops/s");
+    b.throughput("soak_fleet_tops", fleet_tops, "TOPS");
+    b.throughput("soak_sustained_tops", sustained, "TOPS");
+    b.throughput("soak_p99_device_ms", p99_device_ms, "ms");
+    b.throughput("soak_faults_fired", m.fault_log().len() as f64, "faults");
+    b.throughput("soak_requeues", m.total_requeued() as f64, "requeues");
+    b.finish();
+}

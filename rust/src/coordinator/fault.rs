@@ -1,0 +1,260 @@
+//! Deterministic fault injection for the fleet coordinator (ISSUE 6).
+//!
+//! A [`FaultPlan`] is a per-device schedule of faults expressed in the
+//! only clock the coordinator controls deterministically: the router's
+//! **forward counter** (the 1-based count of units the router has handed
+//! to that device's leader). Wall-clock triggers would make chaos runs
+//! unrepeatable; counter triggers make the same seed reproduce the exact
+//! same event sequence on every run, which is what lets the chaos suite
+//! pin bit-exactness against a fault-free baseline and CI re-run a seed
+//! and diff the logs byte-for-byte.
+//!
+//! The plan is derived from a seed with the repo's own xoshiro256**
+//! ([`crate::util::rng::Rng`]), so `python/tests/test_chaos_model.py`
+//! can re-derive the identical plan in an independent implementation
+//! and both sides pin the same golden literal.
+
+use crate::util::rng::Rng;
+
+/// What goes wrong when a fault fires. All kinds are attached to the
+/// unit of work whose forward made the device's counter reach the
+/// event's `seq`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The device leader dies before executing the tagged unit. The
+    /// tagged unit and the rest of its batch are handed back to the
+    /// router for requeue; the router respawns the leader (or spills to
+    /// a sibling device once the respawn budget is exhausted).
+    LeaderKill,
+    /// An injected DMA-latency stall: the tagged unit executes
+    /// normally but its device time is inflated by `stall_s` seconds.
+    DmaStall {
+        /// Extra seconds of modeled DMA latency.
+        stall_s: f64,
+    },
+    /// A design-cache eviction storm: the leader's design cache and
+    /// loaded-design state are wiped before the tagged unit runs, so it
+    /// pays a cold compile + reconfiguration.
+    CacheStorm,
+    /// The leader drops the unit without executing it (a lost
+    /// response). The router requeues it at the front of the device
+    /// queue, so the client still gets exactly one reply.
+    DropResponse,
+}
+
+impl FaultKind {
+    /// Short stable label for logs and summaries.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::LeaderKill => "leader_kill",
+            FaultKind::DmaStall { .. } => "dma_stall",
+            FaultKind::CacheStorm => "cache_storm",
+            FaultKind::DropResponse => "drop_response",
+        }
+    }
+}
+
+/// One scheduled fault: fires when the device's forward counter reaches
+/// `seq` (1-based; the first unit forwarded to the device has seq 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Forward-counter threshold on the owning device.
+    pub seq: u64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A fault that actually fired, as logged by the router.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultRecord {
+    /// Device whose leader the fault targeted.
+    pub device: usize,
+    /// Forward count at which it fired.
+    pub seq: u64,
+    /// What happened.
+    pub kind: FaultKind,
+}
+
+/// Per-device fault schedule. `events[d]` is sorted by `seq` with
+/// distinct seqs; the router consumes it in order as forwards happen.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// `events[d]` = the schedule for device `d`.
+    pub events: Vec<Vec<FaultEvent>>,
+}
+
+/// Per-device seed salt (an arbitrary odd 64-bit constant, mirrored by
+/// the Python transliteration) so each device draws an independent
+/// stream from the same plan seed.
+pub const DEVICE_SALT: u64 = 0xA24B_AED4_963E_E407;
+
+impl FaultPlan {
+    /// A plan with no events (chaos disabled).
+    pub fn empty() -> FaultPlan {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// Derive a plan from a seed: for each device, `per_device`
+    /// distinct forward-counter thresholds drawn uniformly from
+    /// `1..=horizon`, sorted ascending, each paired with a fault kind
+    /// drawn from the same stream. Deterministic: the same
+    /// `(seed, n_devices, horizon, per_device)` always yields the same
+    /// plan, byte for byte.
+    pub fn from_seed(seed: u64, n_devices: usize, horizon: u64, per_device: usize) -> FaultPlan {
+        let horizon = horizon.max(1);
+        let mut events = Vec::with_capacity(n_devices);
+        for d in 0..n_devices {
+            let salt = ((d as u64) + 1).wrapping_mul(DEVICE_SALT);
+            let mut rng = Rng::seeded(seed.wrapping_add(salt));
+            let want = per_device.min(horizon as usize);
+            let mut seqs: Vec<u64> = Vec::with_capacity(want);
+            while seqs.len() < want {
+                let c = 1 + rng.next_u64() % horizon;
+                if !seqs.contains(&c) {
+                    seqs.push(c);
+                }
+            }
+            seqs.sort_unstable();
+            let evs: Vec<FaultEvent> =
+                seqs.into_iter().map(|seq| FaultEvent { seq, kind: draw_kind(&mut rng) }).collect();
+            events.push(evs);
+        }
+        FaultPlan { events }
+    }
+
+    /// A plan with exactly one event, for targeted regression tests.
+    pub fn single(n_devices: usize, device: usize, seq: u64, kind: FaultKind) -> FaultPlan {
+        FaultPlan { events: vec![Vec::new(); n_devices] }.with_event(device, seq, kind)
+    }
+
+    /// Insert one event, keeping the device's schedule sorted by `seq`.
+    /// Grows the plan if `device` is beyond the current device count.
+    pub fn with_event(mut self, device: usize, seq: u64, kind: FaultKind) -> FaultPlan {
+        if self.events.len() <= device {
+            self.events.resize(device + 1, Vec::new());
+        }
+        let evs = &mut self.events[device];
+        let at = evs.partition_point(|e| e.seq < seq);
+        evs.insert(at, FaultEvent { seq, kind });
+        self
+    }
+
+    /// Schedule for device `d` (empty past the plan's device count).
+    pub fn device_events(&self, d: usize) -> &[FaultEvent] {
+        self.events.get(d).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Total scheduled events across all devices.
+    pub fn total_events(&self) -> usize {
+        self.events.iter().map(Vec::len).sum()
+    }
+
+    /// Scheduled leader deaths — what the respawn budget must cover for
+    /// no work to spill off-device.
+    pub fn kills(&self) -> usize {
+        self.events
+            .iter()
+            .flatten()
+            .filter(|e| e.kind == FaultKind::LeaderKill)
+            .count()
+    }
+}
+
+fn draw_kind(rng: &mut Rng) -> FaultKind {
+    match rng.next_u64() % 4 {
+        0 => FaultKind::LeaderKill,
+        1 => FaultKind::DmaStall { stall_s: (0.5 + 4.5 * rng.f64()) * 1e-3 },
+        2 => FaultKind::CacheStorm,
+        _ => FaultKind::DropResponse,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_plan() {
+        let a = FaultPlan::from_seed(0xDEAD_BEEF, 3, 64, 5);
+        let b = FaultPlan::from_seed(0xDEAD_BEEF, 3, 64, 5);
+        assert_eq!(a, b);
+        assert_ne!(a, FaultPlan::from_seed(0xDEAD_BEF0, 3, 64, 5));
+    }
+
+    #[test]
+    fn seqs_sorted_distinct_within_horizon() {
+        for seed in 0..16u64 {
+            let plan = FaultPlan::from_seed(seed, 4, 32, 8);
+            assert_eq!(plan.events.len(), 4);
+            for evs in &plan.events {
+                assert_eq!(evs.len(), 8);
+                for w in evs.windows(2) {
+                    assert!(w[0].seq < w[1].seq, "seqs must be strictly ascending");
+                }
+                for e in evs {
+                    assert!((1..=32).contains(&e.seq));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_device_clamped_to_horizon() {
+        let plan = FaultPlan::from_seed(1, 2, 3, 10);
+        for evs in &plan.events {
+            assert_eq!(evs.len(), 3, "cannot schedule more distinct seqs than the horizon");
+        }
+    }
+
+    #[test]
+    fn golden_plan_matches_python_transliteration() {
+        // Pinned against python/tests/test_chaos_model.py, which
+        // re-derives the same plan from an independent xoshiro256**
+        // implementation. Any drift in Rng or from_seed breaks both.
+        let plan = FaultPlan::from_seed(2, 2, 32, 4);
+        let want = FaultPlan {
+            events: vec![
+                vec![
+                    FaultEvent { seq: 3, kind: FaultKind::CacheStorm },
+                    FaultEvent { seq: 12, kind: FaultKind::CacheStorm },
+                    FaultEvent { seq: 18, kind: FaultKind::DropResponse },
+                    FaultEvent { seq: 25, kind: FaultKind::LeaderKill },
+                ],
+                vec![
+                    FaultEvent { seq: 6, kind: FaultKind::LeaderKill },
+                    FaultEvent { seq: 7, kind: FaultKind::LeaderKill },
+                    FaultEvent {
+                        seq: 13,
+                        kind: FaultKind::DmaStall { stall_s: 0.004359766823757453 },
+                    },
+                    FaultEvent { seq: 17, kind: FaultKind::LeaderKill },
+                ],
+            ],
+        };
+        assert_eq!(plan, want);
+        assert_eq!(plan.total_events(), 8);
+        assert_eq!(plan.kills(), 4);
+    }
+
+    #[test]
+    fn builders_keep_schedules_sorted() {
+        let plan = FaultPlan::single(2, 1, 5, FaultKind::LeaderKill)
+            .with_event(1, 2, FaultKind::CacheStorm)
+            .with_event(1, 9, FaultKind::DropResponse)
+            .with_event(3, 1, FaultKind::DropResponse);
+        assert_eq!(plan.device_events(0), &[]);
+        let seqs: Vec<u64> = plan.device_events(1).iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 5, 9]);
+        assert_eq!(plan.events.len(), 4, "with_event grows the plan");
+        assert_eq!(plan.device_events(7), &[], "out-of-range devices have no events");
+        assert_eq!(plan.kills(), 1);
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        assert_eq!(FaultKind::LeaderKill.name(), "leader_kill");
+        assert_eq!(FaultKind::DmaStall { stall_s: 1e-3 }.name(), "dma_stall");
+        assert_eq!(FaultKind::CacheStorm.name(), "cache_storm");
+        assert_eq!(FaultKind::DropResponse.name(), "drop_response");
+    }
+}

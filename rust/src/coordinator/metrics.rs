@@ -12,6 +12,7 @@
 use crate::arch::Generation;
 use crate::util::stats;
 
+use super::fault::FaultRecord;
 use super::router::CacheStats;
 
 /// One completed request's accounting.
@@ -31,6 +32,47 @@ pub struct RequestRecord {
     /// Chain id when the request arrived as part of a planned chain
     /// (`Coordinator::submit_chain`).
     pub chain: Option<u64>,
+    /// Tenant index (`CoordinatorOptions::tenants`; 0 = the implicit
+    /// default tenant).
+    pub tenant: usize,
+}
+
+/// Per-tenant admission accounting (ISSUE 6 multi-model serving). The
+/// conservation invariant the chaos suite pins:
+/// `completed + failed + pending == submitted` at every instant, with
+/// `pending == 0` after a drained shutdown. Requeues (leader death,
+/// dropped responses) are counted separately — a requeued unit is still
+/// pending, never lost.
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    pub name: String,
+    /// Priority class (higher preempts lower in device queues).
+    pub priority: u8,
+    /// Max in-flight units admitted past the backlog (0 = unbounded).
+    pub quota: usize,
+    /// Units accepted from this tenant (chains count as one unit).
+    pub submitted: u64,
+    /// Units that produced a response.
+    pub completed: u64,
+    /// Units whose response channel was dropped (panicked leader unit,
+    /// or no live device left to serve a requeue).
+    pub failed: u64,
+    /// Requeue events (fault-killed or dropped units re-served). One
+    /// unit can be requeued more than once.
+    pub requeued: u64,
+    /// Units admitted but not yet completed/failed (snapshot depth:
+    /// quota backlog + device queues + in-flight).
+    pub pending: u64,
+    /// High-water mark of concurrently in-flight units — the quota
+    /// enforcement witness (`max_in_flight <= quota` when bounded).
+    pub max_in_flight: u64,
+}
+
+impl TenantStats {
+    /// The admission conservation invariant.
+    pub fn conserves(&self) -> bool {
+        self.completed + self.failed + self.pending == self.submitted
+    }
 }
 
 /// One completed chain's accounting: every op ran back to back on one
@@ -139,6 +181,19 @@ pub struct FleetMetrics {
     /// Per-chain completions (`Coordinator::submit_chain`), in
     /// completion order.
     pub chains: Vec<ChainRecord>,
+    /// Per-tenant admission accounting, indexed like
+    /// `CoordinatorOptions::tenants` (a single implicit "default"
+    /// tenant when none were configured).
+    pub tenants: Vec<TenantStats>,
+    /// Faults that fired, in router observation order (see
+    /// [`Self::fault_log`] for the canonical deterministic order).
+    pub faults: Vec<FaultRecord>,
+    /// Leaders respawned after an injected or genuine death.
+    pub leader_respawns: u64,
+    /// Per-device router→leader forward counts — the clock domain the
+    /// fault plan's `seq` thresholds live in. An event fires iff its
+    /// `seq <= forwards[device]`.
+    pub forwards: Vec<u64>,
 }
 
 impl FleetMetrics {
@@ -234,6 +289,66 @@ impl FleetMetrics {
         }
     }
 
+    /// Per-tenant stats by configured name.
+    pub fn tenant(&self, name: &str) -> Option<&TenantStats> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+
+    /// Whether every tenant satisfies the admission conservation
+    /// invariant (`completed + failed + pending == submitted`).
+    pub fn conserves(&self) -> bool {
+        self.tenants.iter().all(TenantStats::conserves)
+    }
+
+    /// Total requeue events across tenants (fault-killed or dropped
+    /// units that were re-served).
+    pub fn total_requeued(&self) -> u64 {
+        self.tenants.iter().map(|t| t.requeued).sum()
+    }
+
+    /// The fired-fault log in its canonical deterministic order:
+    /// sorted by (device, seq). Two runs of the same seed and config
+    /// must produce identical logs — pinned by `tests/chaos_props.rs`.
+    pub fn fault_log(&self) -> Vec<FaultRecord> {
+        let mut log = self.faults.clone();
+        log.sort_by_key(|f| (f.device, f.seq));
+        log
+    }
+
+    /// Host-latency percentile restricted to one tenant's records.
+    pub fn tenant_latency_percentile(&self, tenant: usize, p: f64) -> f64 {
+        let xs: Vec<f64> = self
+            .devices
+            .iter()
+            .flat_map(|d| d.metrics.records.iter())
+            .filter(|r| r.tenant == tenant)
+            .map(|r| r.host_latency_s)
+            .collect();
+        stats::percentile(&xs, p)
+    }
+
+    /// Device-time percentile restricted to one tenant's records.
+    pub fn tenant_device_time_percentile(&self, tenant: usize, p: f64) -> f64 {
+        let xs: Vec<f64> = self
+            .devices
+            .iter()
+            .flat_map(|d| d.metrics.records.iter())
+            .filter(|r| r.tenant == tenant)
+            .map(|r| r.device_s)
+            .collect();
+        stats::percentile(&xs, p)
+    }
+
+    /// Total ops served for one tenant.
+    pub fn tenant_ops(&self, tenant: usize) -> f64 {
+        self.devices
+            .iter()
+            .flat_map(|d| d.metrics.records.iter())
+            .filter(|r| r.tenant == tenant)
+            .map(|r| r.ops)
+            .sum()
+    }
+
     /// All records merged into one stream (legacy single-device view).
     pub fn merged(&self) -> Metrics {
         let mut m = Metrics::default();
@@ -291,6 +406,33 @@ impl FleetMetrics {
                 self.chains.iter().map(|c| c.elided_dispatches).sum::<usize>()
             );
         }
+        if self.tenants.len() > 1 {
+            for (i, t) in self.tenants.iter().enumerate() {
+                let _ = writeln!(
+                    s,
+                    "  tenant {:>10} (prio {}, quota {}): {} submitted | {} completed | \
+                     {} failed | {} requeued | peak in-flight {} | p99 device {:.3} ms",
+                    t.name,
+                    t.priority,
+                    t.quota,
+                    t.submitted,
+                    t.completed,
+                    t.failed,
+                    t.requeued,
+                    t.max_in_flight,
+                    self.tenant_device_time_percentile(i, 99.0) * 1e3
+                );
+            }
+        }
+        if !self.faults.is_empty() || self.leader_respawns > 0 {
+            let _ = writeln!(
+                s,
+                "chaos: {} faults fired | {} leader respawns | {} requeues",
+                self.faults.len(),
+                self.leader_respawns,
+                self.total_requeued()
+            );
+        }
         let _ = write!(
             s,
             "router: {} affinity hits / {} misses ({} spills) | hit rate {:.1}%",
@@ -318,6 +460,7 @@ mod tests {
             reconfigured: reconf,
             verified: Some(true),
             chain: None,
+            tenant: 0,
         }
     }
 
@@ -357,7 +500,7 @@ mod tests {
             router_hits: 2,
             router_misses: 1,
             router_spills: 0,
-            chains: Vec::new(),
+            ..Default::default()
         };
         assert_eq!(fm.count(), 3);
         assert_eq!(fm.n_devices(), 2);
@@ -410,5 +553,68 @@ mod tests {
         assert_eq!(fm.makespan_s(), 0.0);
         assert_eq!(fm.router_hit_rate(), 0.0);
         assert!(fm.all_verified());
+        assert!(fm.conserves(), "no tenants vacuously conserve");
+        assert_eq!(fm.total_requeued(), 0);
+        assert!(fm.fault_log().is_empty());
+    }
+
+    #[test]
+    fn tenant_conservation_invariant() {
+        let t = TenantStats {
+            name: "llm".into(),
+            submitted: 10,
+            completed: 7,
+            failed: 1,
+            pending: 2,
+            requeued: 3,
+            ..Default::default()
+        };
+        assert!(t.conserves(), "requeues do not break conservation");
+        let lost = TenantStats { submitted: 10, completed: 9, ..Default::default() };
+        assert!(!lost.conserves(), "a lost unit must be visible");
+    }
+
+    #[test]
+    fn tenant_rollups_filter_by_tenant_index() {
+        let mut d0 = Metrics::default();
+        d0.push(RequestRecord { tenant: 1, ..rec(1, 0, 0.010, 1e9, false) });
+        d0.push(rec(2, 0, 0.020, 4e9, false));
+        let fm = FleetMetrics {
+            devices: vec![DeviceMetrics {
+                gen: Generation::Xdna2,
+                metrics: d0,
+                cache: CacheStats::default(),
+            }],
+            tenants: vec![
+                TenantStats { name: "a".into(), submitted: 1, completed: 1, ..Default::default() },
+                TenantStats { name: "b".into(), submitted: 1, completed: 1, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        assert!((fm.tenant_ops(0) - 4e9).abs() < 1.0);
+        assert!((fm.tenant_ops(1) - 1e9).abs() < 1.0);
+        assert!((fm.tenant_device_time_percentile(1, 99.0) - 0.010).abs() < 1e-12);
+        assert!(fm.tenant("a").is_some() && fm.tenant("zzz").is_none());
+        assert!(fm.conserves());
+        let s = fm.summary();
+        assert!(s.contains("tenant"), "multi-tenant runs list tenants: {s}");
+    }
+
+    #[test]
+    fn fault_log_is_sorted_by_device_then_seq() {
+        use super::super::fault::FaultKind;
+        let fm = FleetMetrics {
+            faults: vec![
+                FaultRecord { device: 1, seq: 4, kind: FaultKind::LeaderKill },
+                FaultRecord { device: 0, seq: 9, kind: FaultKind::CacheStorm },
+                FaultRecord { device: 0, seq: 2, kind: FaultKind::DropResponse },
+            ],
+            leader_respawns: 1,
+            ..Default::default()
+        };
+        let log = fm.fault_log();
+        let order: Vec<(usize, u64)> = log.iter().map(|f| (f.device, f.seq)).collect();
+        assert_eq!(order, vec![(0, 2), (0, 9), (1, 4)]);
+        assert!(fm.summary().contains("chaos: 3 faults fired"), "{}", fm.summary());
     }
 }

@@ -21,20 +21,36 @@
 //! fused L2-resident edges and amortized dispatches; per-chain makespan
 //! surfaces in the fleet metrics.
 //!
+//! The coordinator is hardened for multi-tenant, failure-prone
+//! operation (DESIGN.md §12): named tenants with priority classes and
+//! admission quotas share the fleet, device leaders are restartable
+//! (a killed leader's work requeues bit-exact onto a respawned leader
+//! or spills to a sibling), and a deterministic seeded fault plan
+//! ([`fault::FaultPlan`], `serve --chaos <seed>`) injects leader
+//! deaths, DMA stalls, cache-eviction storms, and dropped responses.
+//!
 //! * [`router`]  — design cache (LRU + hit accounting), device state,
 //!   and the fleet's affinity/least-loaded device selector.
-//! * [`service`] — admission queue, leader pool, batching scheduler,
-//!   backpressure, drain-on-shutdown.
-//! * [`metrics`] — per-request records, per-device aggregates, and the
-//!   fleet rollup (fleet vs sustained TOPS, latency percentiles).
+//! * [`service`] — admission queue, tenant quotas/priorities, leader
+//!   pool + respawn, batching scheduler, backpressure,
+//!   drain-on-shutdown.
+//! * [`metrics`] — per-request records, per-device aggregates, the
+//!   fleet rollup (fleet vs sustained TOPS, latency percentiles), and
+//!   per-tenant conservation accounting.
+//! * [`fault`]   — the seeded, forward-counter-clocked fault plan.
 
+pub mod fault;
 pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use metrics::{ChainRecord, DeviceMetrics, FleetMetrics, Metrics, RequestRecord};
+pub use fault::{FaultEvent, FaultKind, FaultPlan, FaultRecord};
+pub use metrics::{
+    ChainRecord, DeviceMetrics, FleetMetrics, Metrics, RequestRecord, TenantStats,
+};
 pub use router::{CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter, RouteKind};
 pub use service::{
-    expand_mix, functional_a, functional_b, functional_inputs, parse_mix, Backend,
-    ChainResponse, ChainStaging, Coordinator, CoordinatorOptions, GemmRequest, GemmResponse,
+    expand_mix, functional_a, functional_b, functional_inputs, parse_mix, parse_tenants,
+    Backend, ChainResponse, ChainStaging, Coordinator, CoordinatorOptions, GemmRequest,
+    GemmResponse, TenantSpec,
 };

@@ -69,6 +69,20 @@ impl CacheStats {
     }
 }
 
+impl std::ops::Add for CacheStats {
+    type Output = CacheStats;
+
+    /// Counter-wise sum — folding a respawned leader's fresh cache stats
+    /// into the totals its dead predecessor accumulated.
+    fn add(self, o: CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits + o.hits,
+            misses: self.misses + o.misses,
+            evictions: self.evictions + o.evictions,
+        }
+    }
+}
+
 /// Tuned design per key, with LRU eviction when bounded. Defaults to the
 /// paper's balanced configs on a miss; `insert` lets the autotuner
 /// (`optimizer::balanced`) override.
@@ -174,6 +188,16 @@ impl DesignCache {
         }
     }
 
+    /// Drop every resident design (a forced eviction storm — the chaos
+    /// layer's `CacheStorm`). Evictions are counted; hit/miss history is
+    /// retained, so a storm shows up as an eviction spike followed by
+    /// cold misses.
+    pub fn clear(&mut self) {
+        self.stats.evictions += self.designs.len() as u64;
+        self.designs.clear();
+        self.lru.clear();
+    }
+
     fn admit(&mut self, key: DesignKey, cfg: TilingConfig) {
         if self.capacity > 0 {
             while self.designs.len() >= self.capacity {
@@ -220,6 +244,13 @@ impl DeviceState {
 
     pub fn current(&self) -> Option<DesignKey> {
         self.current
+    }
+
+    /// Forget the loaded design (leader restart / eviction storm): the
+    /// next [`Self::switch_to`] pays a full reconfiguration even for the
+    /// design that was just resident.
+    pub fn invalidate(&mut self) {
+        self.current = None;
     }
 }
 
@@ -359,6 +390,26 @@ impl FleetRouter {
     /// reconciliation bounds the divergence to the in-flight window.
     pub fn sync_residency(&mut self, d: usize, resident: &[DesignKey]) {
         self.held[d] = resident.iter().copied().collect();
+    }
+
+    /// Remove a failed device from routing: forget its modeled residency
+    /// and pin its virtual load at +inf so [`Self::route`],
+    /// [`Self::route_chain`] and [`Self::warm`] never select it again.
+    /// Irreversible — a leader that exhausts its respawn budget leaves
+    /// the fleet for the rest of the run.
+    pub fn mark_dead(&mut self, d: usize) {
+        self.held[d].clear();
+        self.load_s[d] = f64::INFINITY;
+    }
+
+    /// Whether `d` has been removed from routing by [`Self::mark_dead`].
+    pub fn is_dead(&self, d: usize) -> bool {
+        self.load_s[d].is_infinite()
+    }
+
+    /// Devices still eligible for routing.
+    pub fn live_devices(&self) -> usize {
+        self.load_s.iter().filter(|l| l.is_finite()).count()
     }
 
     /// Estimated execution seconds for `ops` at `precision` on `device`
@@ -698,6 +749,56 @@ mod tests {
         // Free routing then sees the pinned backlog: the next unpinned
         // request lands on the less-loaded holder.
         assert_eq!(r.route(k, ops).device, 0);
+    }
+
+    #[test]
+    fn cache_clear_counts_evictions_and_goes_cold() {
+        let mut c = DesignCache::with_capacity(Generation::Xdna2, 0);
+        let k1 = key(Precision::I8I8, Layout::ColMajor);
+        let k2 = key(Precision::Bf16, Layout::ColMajor);
+        c.get(k1);
+        c.get(k2);
+        c.clear();
+        assert!(c.is_empty() && c.resident().is_empty());
+        assert_eq!(c.stats().evictions, 2, "a storm evicts everything resident");
+        c.get(k1); // cold again
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 3));
+    }
+
+    #[test]
+    fn invalidate_forces_reconfiguration() {
+        let mut dev = DeviceState::default();
+        let gen = Generation::Xdna;
+        let k = key(Precision::I8I8, Layout::ColMajor);
+        assert!(dev.switch_to(gen, k) > 0.0);
+        assert_eq!(dev.switch_to(gen, k), 0.0);
+        dev.invalidate();
+        assert_eq!(dev.current(), None);
+        assert_eq!(dev.switch_to(gen, k), gen.spec().reconfig_s, "storm → full reload");
+    }
+
+    #[test]
+    fn dead_device_is_never_routed_to() {
+        let mut r = FleetRouter::new(vec![Generation::Xdna2, Generation::Xdna]);
+        let k = key(Precision::I8I8, Layout::ColMajor);
+        assert_eq!(r.route(k, 1e9).device, 0, "XDNA2 wins while alive");
+        r.mark_dead(0);
+        assert!(r.is_dead(0) && !r.is_dead(1));
+        assert_eq!(r.live_devices(), 1);
+        assert!(!r.holds(0, k), "dead device's residency is forgotten");
+        for _ in 0..8 {
+            assert_eq!(r.route(k, 1e9).device, 1);
+        }
+        assert_eq!(r.warm(key(Precision::Bf16, Layout::ColMajor)), 1);
+    }
+
+    #[test]
+    fn cache_stats_add_is_counterwise() {
+        let a = CacheStats { hits: 3, misses: 2, evictions: 1 };
+        let b = CacheStats { hits: 10, misses: 0, evictions: 4 };
+        assert_eq!(a + b, CacheStats { hits: 13, misses: 2, evictions: 5 });
+        assert_eq!(a + CacheStats::default(), a);
     }
 
     #[test]

@@ -12,6 +12,26 @@
 //! `max_in_flight` requests outstanding per device; completions flow
 //! back to refill the window, and shutdown drains every queue before
 //! the leaders exit.
+//!
+//! # Multi-tenant hardening (ISSUE 6)
+//!
+//! The coordinator serves several named [`TenantSpec`]s at once: each
+//! tenant has a priority class (higher preempts lower in the per-device
+//! queues) and an admission quota (at most `quota` units in flight; the
+//! excess waits in a per-tenant backlog drained highest-priority-first
+//! as completions free slots). Per-tenant accounting lands in
+//! [`super::metrics::TenantStats`] with the conservation invariant
+//! `completed + failed + pending == submitted`.
+//!
+//! Leaders are **restartable**: a leader killed by the fault layer (or
+//! panicked by a poisoned unit) hands its unexecuted units and its
+//! receive channel back to the router, which respawns a fresh leader on
+//! the same channel and requeues the units at the front of the device
+//! queue — staged-tensor state lives in the unit itself
+//! ([`ChainStaging`]), so re-execution is bit-exact. Once a device's
+//! respawn budget is exhausted it leaves the fleet and its work spills
+//! to sibling devices (or fails visibly when none remain). The
+//! deterministic fault plan itself is [`super::fault::FaultPlan`].
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
@@ -30,7 +50,10 @@ use crate::sim::{simulate_gemm, simulate_gemm_with, BdMode, GemmReport};
 use crate::tiling::TilingConfig;
 use crate::workload::GemmShape;
 
-use super::metrics::{ChainRecord, DeviceMetrics, FleetMetrics, Metrics, RequestRecord};
+use super::fault::{FaultKind, FaultPlan, FaultRecord};
+use super::metrics::{
+    ChainRecord, DeviceMetrics, FleetMetrics, Metrics, RequestRecord, TenantStats,
+};
 use super::router::{CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter};
 
 /// How requests execute.
@@ -51,11 +74,22 @@ pub struct GemmRequest {
     /// Check the functional result against `refimpl` (expensive).
     pub verify: bool,
     pub bd_mode: BdMode,
+    /// Test hook (the chaos suite's genuine-panic containment tests):
+    /// the executing leader panics on this unit. Always `false` outside
+    /// tests.
+    #[doc(hidden)]
+    pub poison: bool,
 }
 
 impl GemmRequest {
     pub fn sim(shape: GemmShape) -> GemmRequest {
-        GemmRequest { shape, data: None, verify: false, bd_mode: BdMode::Overlapped }
+        GemmRequest {
+            shape,
+            data: None,
+            verify: false,
+            bd_mode: BdMode::Overlapped,
+            poison: false,
+        }
     }
 }
 
@@ -102,6 +136,64 @@ pub struct GemmResponse {
     pub result: Option<Matrix>,
 }
 
+/// One named tenant sharing the fleet (`serve --tenants`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Priority class: higher-priority units preempt lower ones in every
+    /// device queue (decode-style traffic ahead of batch prefill).
+    pub priority: u8,
+    /// Max in-flight units for this tenant (0 = unbounded). Excess
+    /// admissions wait in a per-tenant backlog, drained
+    /// highest-priority-first as completions free slots.
+    pub quota: usize,
+}
+
+impl Default for TenantSpec {
+    fn default() -> Self {
+        TenantSpec { name: "default".to_string(), priority: 0, quota: 0 }
+    }
+}
+
+/// Parse a `--tenants` spec: comma-separated `name[:priority[:quota]]`,
+/// e.g. `decode:2:8,prefill:0:32`.
+pub fn parse_tenants(s: &str) -> Result<Vec<TenantSpec>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let mut parts = tok.split(':');
+        let name = parts.next().unwrap_or("").trim();
+        if name.is_empty() {
+            bail!("empty tenant name in '{s}'");
+        }
+        let priority = match parts.next() {
+            Some(p) => p
+                .trim()
+                .parse::<u8>()
+                .map_err(|_| anyhow!("tenant '{name}': priority '{p}' is not a u8"))?,
+            None => 0,
+        };
+        let quota = match parts.next() {
+            Some(q) => q
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("tenant '{name}': quota '{q}' is not an integer"))?,
+            None => 0,
+        };
+        if parts.next().is_some() {
+            bail!("tenant '{tok}': expected name[:priority[:quota]]");
+        }
+        out.push(TenantSpec { name: name.to_string(), priority, quota });
+    }
+    if out.is_empty() {
+        bail!("empty tenant spec '{s}'");
+    }
+    Ok(out)
+}
+
 #[derive(Clone, Debug)]
 pub struct CoordinatorOptions {
     /// Generation of the single device when `devices` is empty.
@@ -132,6 +224,17 @@ pub struct CoordinatorOptions {
     /// (`serve --functional --threads T`). Results are bit-identical for
     /// every value (`gemm::exec::ExecOptions::threads`).
     pub exec_threads: usize,
+    /// Named tenants sharing the fleet (`serve --tenants`). Empty →
+    /// one implicit unbounded "default" tenant at priority 0; every
+    /// `submit` goes to tenant 0 unless `submit_for` says otherwise.
+    pub tenants: Vec<TenantSpec>,
+    /// Deterministic fault-injection plan (`serve --chaos <seed>`).
+    /// `None` disables the chaos layer entirely.
+    pub chaos: Option<FaultPlan>,
+    /// How many times each device's leader may be respawned after a
+    /// (injected or genuine) death before the device is marked dead and
+    /// its work spills to sibling devices.
+    pub max_leader_respawns: usize,
 }
 
 impl Default for CoordinatorOptions {
@@ -145,6 +248,9 @@ impl Default for CoordinatorOptions {
             design_capacity: 0,
             admission_capacity: 4096,
             exec_threads: 1,
+            tenants: Vec::new(),
+            chaos: None,
+            max_leader_respawns: 16,
         }
     }
 }
@@ -161,6 +267,15 @@ impl CoordinatorOptions {
             vec![self.gen]
         } else {
             self.devices.clone()
+        }
+    }
+
+    /// The resolved tenant list (at least the implicit default tenant).
+    pub fn tenant_specs(&self) -> Vec<TenantSpec> {
+        if self.tenants.is_empty() {
+            vec![TenantSpec::default()]
+        } else {
+            self.tenants.clone()
         }
     }
 }
@@ -198,9 +313,13 @@ pub fn expand_mix(pattern: &[Generation], n: usize) -> Vec<Generation> {
 /// A submitted request travelling router → leader.
 struct Pending {
     id: u64,
+    tenant: usize,
     req: GemmRequest,
     tx: Sender<GemmResponse>,
     t0: Instant,
+    /// Set when the unit has been requeued (leader death / dropped
+    /// response): requeued units do not re-advance the fault clock.
+    requeued: bool,
 }
 
 /// DAG-aware chain submission context (`Coordinator::submit_chain_staged`,
@@ -212,7 +331,8 @@ struct Pending {
 pub struct ChainStaging {
     /// Fleet device index to place the chain on (bypasses the router's
     /// affinity choice; load accounting still applies). `None` routes by
-    /// leading design key as before.
+    /// leading design key as before. A pin to a device that has since
+    /// died falls back to free routing.
     pub device: Option<usize>,
     /// Entry A for the chain's first op under `Backend::Functional`: a
     /// staged producer C (or an elementwise join of several). `None`
@@ -220,14 +340,18 @@ pub struct ChainStaging {
     pub a0: Option<Matrix>,
 }
 
-/// A submitted chain travelling router → leader as one unit.
+/// A submitted chain travelling router → leader as one unit. The staged
+/// entry A rides inside, so a requeued chain re-derives the identical
+/// functional dataflow on the respawned (or sibling) leader.
 struct PendingChain {
     id: u64,
+    tenant: usize,
     chain: GemmChain,
     bd_mode: BdMode,
     staging: ChainStaging,
     tx: Sender<ChainResponse>,
     t0: Instant,
+    requeued: bool,
 }
 
 /// One schedulable unit in a router queue / leader batch: a single
@@ -258,6 +382,47 @@ impl Unit {
             }
         }
     }
+
+    fn tenant(&self) -> usize {
+        match self {
+            Unit::Req(p) => p.tenant,
+            Unit::Chain(c) => c.tenant,
+        }
+    }
+
+    fn was_requeued(&self) -> bool {
+        match self {
+            Unit::Req(p) => p.requeued,
+            Unit::Chain(c) => c.requeued,
+        }
+    }
+
+    fn mark_requeued(&mut self) {
+        match self {
+            Unit::Req(p) => p.requeued = true,
+            Unit::Chain(c) => c.requeued = true,
+        }
+    }
+}
+
+/// Leader → router batch acknowledgement.
+struct BatchReport {
+    dev: usize,
+    records: Vec<RequestRecord>,
+    chains: Vec<ChainRecord>,
+    cache: CacheStats,
+    /// The leader's authoritative design-cache LRU state for residency
+    /// reconciliation (empty on leader death — the cache died with it).
+    resident: Vec<DesignKey>,
+    /// In-flight slots retired by this batch: executed units plus
+    /// panicked units (which produce no records but leave the window).
+    retired: usize,
+    /// Admission outcome per retired unit: `(tenant, failed)` where
+    /// `failed` means the unit produced no response (panicked leader).
+    completions: Vec<(usize, bool)>,
+    /// Units the leader did not execute (dropped responses, or the
+    /// remainder of a killed batch) — the router requeues them.
+    requeue: Vec<Unit>,
 }
 
 enum Msg {
@@ -265,21 +430,19 @@ enum Msg {
     SubmitChain(Box<PendingChain>),
     Warm(DesignKey),
     Flush(Sender<FleetMetrics>),
-    /// Leader → router: a batch completed. `resident` is the leader's
-    /// authoritative design-cache LRU state for residency reconciliation.
-    Done {
-        dev: usize,
-        records: Vec<RequestRecord>,
-        chains: Vec<ChainRecord>,
-        cache: CacheStats,
-        resident: Vec<DesignKey>,
-    },
+    /// Leader → router: a batch completed.
+    Done(BatchReport),
+    /// Leader → router: the leader died (fault-injected kill). Carries
+    /// the batch accounting like `Done`, plus the leader's receive
+    /// channel so a respawned leader inherits any units still in transit
+    /// — nothing in the channel is lost.
+    LeaderDown(BatchReport, Receiver<DeviceMsg>),
     Shutdown,
 }
 
 enum DeviceMsg {
-    Run(Box<Pending>),
-    RunChain(Box<PendingChain>),
+    Run(Box<Pending>, Option<FaultKind>),
+    RunChain(Box<PendingChain>, Option<FaultKind>),
     Warm(DesignKey),
     Shutdown,
 }
@@ -290,15 +453,17 @@ pub struct Coordinator {
     handle: Option<JoinHandle<FleetMetrics>>,
     next_id: std::sync::atomic::AtomicU64,
     n_devices: usize,
+    n_tenants: usize,
 }
 
 impl Coordinator {
     pub fn start(opts: CoordinatorOptions) -> Coordinator {
         let n_devices = opts.device_gens().len();
+        let n_tenants = opts.tenant_specs().len();
         let (tx, rx) = sync_channel::<Msg>(opts.admission_capacity.max(1));
         let done_tx = tx.clone();
         let handle = std::thread::spawn(move || router_loop(opts, rx, done_tx));
-        Coordinator { tx, handle: Some(handle), next_id: 0.into(), n_devices }
+        Coordinator { tx, handle: Some(handle), next_id: 0.into(), n_devices, n_tenants }
     }
 
     /// Devices in the running fleet.
@@ -306,20 +471,43 @@ impl Coordinator {
         self.n_devices
     }
 
-    /// Submit a request; the response arrives on the returned channel.
-    /// Blocks only when the admission queue is full (backpressure).
-    pub fn submit(&self, req: GemmRequest) -> Receiver<GemmResponse> {
+    /// Configured tenants (1 when only the implicit default exists).
+    pub fn n_tenants(&self) -> usize {
+        self.n_tenants
+    }
+
+    /// Submit a request as the default tenant (0); the response arrives
+    /// on the returned channel. Blocks only when the admission queue is
+    /// full (backpressure). `Err` when the router is down — a dead
+    /// coordinator is a typed error, never a caller abort.
+    pub fn submit(&self, req: GemmRequest) -> Result<Receiver<GemmResponse>> {
+        self.submit_for(0, req)
+    }
+
+    /// Submit a request on behalf of tenant `tenant` (an index into
+    /// `CoordinatorOptions::tenants`).
+    pub fn submit_for(&self, tenant: usize, req: GemmRequest) -> Result<Receiver<GemmResponse>> {
+        if tenant >= self.n_tenants {
+            bail!("tenant {tenant} out of range ({} tenants)", self.n_tenants);
+        }
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (rtx, rrx) = channel();
         self.tx
-            .send(Msg::Submit(Box::new(Pending { id, req, tx: rtx, t0: Instant::now() })))
-            .expect("coordinator thread alive");
-        rrx
+            .send(Msg::Submit(Box::new(Pending {
+                id,
+                tenant,
+                req,
+                tx: rtx,
+                t0: Instant::now(),
+                requeued: false,
+            })))
+            .map_err(|_| anyhow!("coordinator is down (router thread exited)"))?;
+        Ok(rrx)
     }
 
     /// Blocking convenience wrapper.
     pub fn call(&self, req: GemmRequest) -> Result<GemmResponse> {
-        self.submit(req).recv().map_err(|e| anyhow!("coordinator dropped: {e}"))
+        self.submit(req)?.recv().map_err(|e| anyhow!("coordinator dropped: {e}"))
     }
 
     /// Submit a whole chain: the router places it on one device by its
@@ -332,7 +520,16 @@ impl Coordinator {
     /// semantics); the functional staged-C path is
     /// `gemm::exec::Executor::execute_chain`.
     pub fn submit_chain(&self, chain: GemmChain) -> Result<Receiver<ChainResponse>> {
-        self.submit_chain_staged(chain, ChainStaging::default())
+        self.submit_chain_staged_for(0, chain, ChainStaging::default())
+    }
+
+    /// [`Self::submit_chain`] on behalf of a specific tenant.
+    pub fn submit_chain_for(
+        &self,
+        tenant: usize,
+        chain: GemmChain,
+    ) -> Result<Receiver<ChainResponse>> {
+        self.submit_chain_staged_for(tenant, chain, ChainStaging::default())
     }
 
     /// The DAG-aware chain entry point (`graph::lower` cross-chain
@@ -347,6 +544,19 @@ impl Coordinator {
         chain: GemmChain,
         staging: ChainStaging,
     ) -> Result<Receiver<ChainResponse>> {
+        self.submit_chain_staged_for(0, chain, staging)
+    }
+
+    /// [`Self::submit_chain_staged`] on behalf of a specific tenant.
+    pub fn submit_chain_staged_for(
+        &self,
+        tenant: usize,
+        chain: GemmChain,
+        staging: ChainStaging,
+    ) -> Result<Receiver<ChainResponse>> {
+        if tenant >= self.n_tenants {
+            bail!("tenant {tenant} out of range ({} tenants)", self.n_tenants);
+        }
         if chain.is_empty() {
             bail!("empty chain '{}'", chain.name);
         }
@@ -395,13 +605,15 @@ impl Coordinator {
         self.tx
             .send(Msg::SubmitChain(Box::new(PendingChain {
                 id,
+                tenant,
                 chain,
                 bd_mode: BdMode::Overlapped,
                 staging,
                 tx: rtx,
                 t0: Instant::now(),
+                requeued: false,
             })))
-            .expect("coordinator thread alive");
+            .map_err(|_| anyhow!("coordinator is down (router thread exited)"))?;
         Ok(rrx)
     }
 
@@ -426,10 +638,15 @@ impl Coordinator {
     }
 
     /// Stop accepting work, drain every queue, stop the leaders, and
-    /// return the final fleet metrics.
-    pub fn shutdown(mut self) -> FleetMetrics {
+    /// return the final fleet metrics. A router thread that itself
+    /// panicked surfaces as a typed `Err`, not a caller abort.
+    pub fn shutdown(mut self) -> Result<FleetMetrics> {
         let _ = self.tx.send(Msg::Shutdown);
-        self.handle.take().unwrap().join().expect("router panicked")
+        self.handle
+            .take()
+            .expect("router handle present until shutdown/drop")
+            .join()
+            .map_err(|_| anyhow!("coordinator router panicked"))
     }
 }
 
@@ -442,29 +659,445 @@ impl Drop for Coordinator {
     }
 }
 
-/// Forward queued work to leader `d` while its in-flight window allows.
-/// A chain counts its full length against the window but is forwarded
-/// whole whenever any window remains (it may overshoot — splitting it
-/// would forfeit the fused edges, and a chain longer than the window
-/// must not deadlock).
-fn pump(
-    d: usize,
+/// Per-device router queue split into priority lanes: pop serves the
+/// highest non-empty class first, FIFO within a class; requeued units
+/// re-enter at the *front* of their class so a leader death never
+/// reorders a tenant's stream behind later submissions.
+struct PrioQueue {
+    /// `lanes[p]` holds priority-`p` units; pop scans from the back.
+    lanes: Vec<VecDeque<Unit>>,
+}
+
+impl PrioQueue {
+    fn new(classes: usize) -> PrioQueue {
+        PrioQueue { lanes: (0..classes.max(1)).map(|_| VecDeque::new()).collect() }
+    }
+
+    fn lane(&self, prio: usize) -> usize {
+        prio.min(self.lanes.len() - 1)
+    }
+
+    fn push_back(&mut self, prio: usize, unit: Unit) {
+        let l = self.lane(prio);
+        self.lanes[l].push_back(unit);
+    }
+
+    fn push_front(&mut self, prio: usize, unit: Unit) {
+        let l = self.lane(prio);
+        self.lanes[l].push_front(unit);
+    }
+
+    fn pop(&mut self) -> Option<Unit> {
+        self.lanes.iter_mut().rev().find_map(VecDeque::pop_front)
+    }
+
+    fn is_empty(&self) -> bool {
+        self.lanes.iter().all(VecDeque::is_empty)
+    }
+}
+
+/// The router thread's whole state: fleet model, per-device queues and
+/// windows, tenant admission, leader lifecycle, and the fault clock.
+struct RouterCore {
+    opts: CoordinatorOptions,
+    gens: Vec<Generation>,
+    n_dev: usize,
     max_in_flight: usize,
-    queues: &mut [VecDeque<Unit>],
-    in_flight: &mut [usize],
-    leader_txs: &[Sender<DeviceMsg>],
-) {
-    while in_flight[d] < max_in_flight {
-        match queues[d].pop_front() {
-            Some(unit) => {
-                in_flight[d] += unit.len();
-                let _ = leader_txs[d].send(match unit {
-                    Unit::Req(p) => DeviceMsg::Run(p),
-                    Unit::Chain(c) => DeviceMsg::RunChain(c),
-                });
-            }
-            None => break,
+    specs: Vec<TenantSpec>,
+    /// Tenant indices in backlog-drain order: priority desc, index asc.
+    tenant_order: Vec<usize>,
+    fleet: FleetRouter,
+    queues: Vec<PrioQueue>,
+    in_flight: Vec<usize>,
+    per_dev: Vec<Metrics>,
+    caches: Vec<CacheStats>,
+    /// Cache stats accumulated by each device's *dead* leaders — a
+    /// respawned leader starts a fresh cache, so its stats are summed
+    /// onto this base.
+    cache_base: Vec<CacheStats>,
+    chain_records: Vec<ChainRecord>,
+    /// `None` marks a dead device (respawn budget exhausted).
+    leader_txs: Vec<Option<Sender<DeviceMsg>>>,
+    leader_handles: Vec<Option<JoinHandle<CacheStats>>>,
+    /// Kept open so respawned leaders can be handed a `Done` path; the
+    /// router therefore never sees the admission channel close and
+    /// relies on `Msg::Shutdown` (which `Coordinator::drop` guarantees).
+    respawn_tx: SyncSender<Msg>,
+    respawns_left: Vec<usize>,
+    leader_respawns: u64,
+    tstats: Vec<TenantStats>,
+    tenant_inflight: Vec<usize>,
+    backlog: Vec<VecDeque<Unit>>,
+    plan: FaultPlan,
+    /// Next unconsumed plan event per device.
+    next_event: Vec<usize>,
+    /// Fresh-unit forward count per device — the fault clock. Requeued
+    /// units do not advance it, so the fired-event log is a
+    /// deterministic function of submission order even though batch
+    /// composition (and hence kill-remainder sizes) is not.
+    forwarded: Vec<u64>,
+    faults: Vec<FaultRecord>,
+}
+
+impl RouterCore {
+    fn new(opts: CoordinatorOptions, done_tx: SyncSender<Msg>) -> RouterCore {
+        let gens = opts.device_gens();
+        let n_dev = gens.len();
+        let specs = opts.tenant_specs();
+        let classes = specs.iter().map(|t| t.priority as usize).max().unwrap_or(0) + 1;
+        let mut tenant_order: Vec<usize> = (0..specs.len()).collect();
+        tenant_order.sort_by_key(|&t| (std::cmp::Reverse(specs[t].priority), t));
+        let plan = opts.chaos.clone().unwrap_or_default();
+
+        let mut leader_txs = Vec::with_capacity(n_dev);
+        let mut leader_handles = Vec::with_capacity(n_dev);
+        for (d, gen) in gens.iter().copied().enumerate() {
+            let (ltx, lrx) = channel::<DeviceMsg>();
+            let o = opts.clone();
+            let done = done_tx.clone();
+            leader_handles
+                .push(Some(std::thread::spawn(move || leader_loop(d, gen, o, lrx, done))));
+            leader_txs.push(Some(ltx));
         }
+
+        let tstats = specs
+            .iter()
+            .map(|s| TenantStats {
+                name: s.name.clone(),
+                priority: s.priority,
+                quota: s.quota,
+                ..Default::default()
+            })
+            .collect();
+
+        RouterCore {
+            fleet: FleetRouter::with_capacity(gens.clone(), opts.design_capacity),
+            queues: (0..n_dev).map(|_| PrioQueue::new(classes)).collect(),
+            in_flight: vec![0; n_dev],
+            per_dev: (0..n_dev).map(|_| Metrics::default()).collect(),
+            caches: vec![CacheStats::default(); n_dev],
+            cache_base: vec![CacheStats::default(); n_dev],
+            chain_records: Vec::new(),
+            leader_txs,
+            leader_handles,
+            respawn_tx: done_tx,
+            respawns_left: vec![opts.max_leader_respawns; n_dev],
+            leader_respawns: 0,
+            tenant_inflight: vec![0; specs.len()],
+            backlog: (0..specs.len()).map(|_| VecDeque::new()).collect(),
+            tstats,
+            plan,
+            next_event: vec![0; n_dev],
+            forwarded: vec![0; n_dev],
+            faults: Vec::new(),
+            max_in_flight: opts.max_in_flight.max(1),
+            tenant_order,
+            specs,
+            gens,
+            n_dev,
+            opts,
+        }
+    }
+
+    fn live(&self) -> usize {
+        self.leader_txs.iter().filter(|t| t.is_some()).count()
+    }
+
+    /// Admit a freshly submitted unit: count it for its tenant and
+    /// either launch it or park it in the tenant's quota backlog.
+    fn admit(&mut self, unit: Unit) {
+        let t = unit.tenant();
+        self.tstats[t].submitted += 1;
+        self.tstats[t].pending += 1;
+        let quota = self.specs[t].quota;
+        if (quota > 0 && self.tenant_inflight[t] >= quota) || !self.backlog[t].is_empty() {
+            self.backlog[t].push_back(unit);
+        } else {
+            self.launch(unit);
+        }
+    }
+
+    /// Route a unit onto a live device's queue (it now occupies one of
+    /// its tenant's quota slots). With no live device left the unit
+    /// fails visibly: its response channel drops and the tenant's
+    /// `failed` counter records it.
+    fn launch(&mut self, unit: Unit) {
+        let t = unit.tenant();
+        self.tenant_inflight[t] += 1;
+        if self.live() == 0 {
+            self.tenant_inflight[t] -= 1;
+            self.finish_unit(t, true);
+            return;
+        }
+        let hw = self.tenant_inflight[t] as u64;
+        if hw > self.tstats[t].max_in_flight {
+            self.tstats[t].max_in_flight = hw;
+        }
+        let d = self.place(&unit);
+        let prio = self.specs[t].priority as usize;
+        self.queues[d].push_back(prio, unit);
+        self.pump(d);
+    }
+
+    /// Routing decision for a unit (requires a live device). A chain
+    /// pinned to a dead device falls back to free chain routing.
+    fn place(&mut self, unit: &Unit) -> usize {
+        match unit {
+            Unit::Req(p) => {
+                let key = DesignKey::for_shape(&p.req.shape);
+                self.fleet.route(key, p.req.shape.ops()).device
+            }
+            Unit::Chain(c) => {
+                let key = DesignKey::for_shape(&c.chain.ops[0].shape);
+                let ops = c.chain.total_ops();
+                match c.staging.device {
+                    Some(d) if self.leader_txs[d].is_some() => {
+                        self.fleet.route_to(d, key, ops).device
+                    }
+                    _ => self.fleet.route_chain(key, ops).device,
+                }
+            }
+        }
+    }
+
+    /// Record a unit's terminal outcome for its tenant.
+    fn finish_unit(&mut self, t: usize, failed: bool) {
+        if failed {
+            self.tstats[t].failed += 1;
+        } else {
+            self.tstats[t].completed += 1;
+        }
+        self.tstats[t].pending -= 1;
+    }
+
+    /// Launch backlogged units while quotas allow, highest priority
+    /// class first (FIFO within a tenant).
+    fn drain_backlogs(&mut self) {
+        for t in self.tenant_order.clone() {
+            let quota = self.specs[t].quota;
+            while !self.backlog[t].is_empty() && (quota == 0 || self.tenant_inflight[t] < quota)
+            {
+                let unit = self.backlog[t].pop_front().expect("checked non-empty");
+                self.launch(unit);
+            }
+        }
+    }
+
+    /// Forward queued work to leader `d` while its in-flight window
+    /// allows. A chain counts its full length against the window but is
+    /// forwarded whole whenever any window remains (it may overshoot —
+    /// splitting it would forfeit the fused edges, and a chain longer
+    /// than the window must not deadlock).
+    fn pump(&mut self, d: usize) {
+        if self.leader_txs[d].is_none() {
+            return;
+        }
+        while self.in_flight[d] < self.max_in_flight {
+            match self.queues[d].pop() {
+                Some(unit) => self.forward(d, unit),
+                None => break,
+            }
+        }
+    }
+
+    /// Hand one unit to leader `d`, advancing the fault clock (fresh
+    /// units only) and attaching the plan's next fault when its
+    /// threshold is reached.
+    fn forward(&mut self, d: usize, unit: Unit) {
+        self.in_flight[d] += unit.len();
+        let mut fault = None;
+        if !unit.was_requeued() {
+            self.forwarded[d] += 1;
+            let seq = self.forwarded[d];
+            if let Some(ev) = self.plan.device_events(d).get(self.next_event[d]).copied() {
+                if ev.seq <= seq {
+                    fault = Some(ev.kind);
+                    self.next_event[d] += 1;
+                    self.faults.push(FaultRecord { device: d, seq, kind: ev.kind });
+                }
+            }
+        }
+        let msg = match unit {
+            Unit::Req(p) => DeviceMsg::Run(p, fault),
+            Unit::Chain(c) => DeviceMsg::RunChain(c, fault),
+        };
+        if let Some(tx) = &self.leader_txs[d] {
+            let _ = tx.send(msg);
+        }
+    }
+
+    fn warm(&mut self, key: DesignKey) {
+        if self.live() == 0 {
+            return;
+        }
+        let d = self.fleet.warm(key);
+        if let Some(tx) = &self.leader_txs[d] {
+            let _ = tx.send(DeviceMsg::Warm(key));
+        }
+    }
+
+    /// A leader's normal batch acknowledgement: retire the window
+    /// slots, fold in records, complete tenants, requeue dropped units
+    /// at the front of the same device's queue, and refill.
+    fn on_done(&mut self, r: BatchReport) {
+        let dev = r.dev;
+        let back: usize = r.requeue.iter().map(Unit::len).sum();
+        self.in_flight[dev] -= r.retired + back;
+        self.caches[dev] = self.cache_base[dev] + r.cache;
+        self.fleet.sync_residency(dev, &r.resident);
+        for rec in r.records {
+            self.per_dev[dev].push(rec);
+        }
+        self.chain_records.extend(r.chains);
+        for (t, failed) in r.completions {
+            self.tenant_inflight[t] -= 1;
+            self.finish_unit(t, failed);
+        }
+        for mut unit in r.requeue.into_iter().rev() {
+            unit.mark_requeued();
+            let t = unit.tenant();
+            self.tstats[t].requeued += 1;
+            let prio = self.specs[t].priority as usize;
+            self.queues[dev].push_front(prio, unit);
+        }
+        self.drain_backlogs();
+        self.pump(dev);
+    }
+
+    /// A leader died. Fold in what it completed, then either respawn a
+    /// fresh leader on the *same* channel (units still in transit are
+    /// inherited, nothing is lost) and requeue the killed batch's
+    /// remainder, or — once the respawn budget is exhausted — mark the
+    /// device dead, drain its channel ourselves (we hold the only
+    /// sender), and spill every orphan to the surviving siblings.
+    fn on_leader_down(&mut self, r: BatchReport, lrx: Receiver<DeviceMsg>) {
+        let dev = r.dev;
+        let back: usize = r.requeue.iter().map(Unit::len).sum();
+        self.in_flight[dev] -= r.retired + back;
+        self.cache_base[dev] = self.cache_base[dev] + r.cache;
+        self.caches[dev] = self.cache_base[dev];
+        // The leader's design cache died with it.
+        self.fleet.sync_residency(dev, &[]);
+        for rec in r.records {
+            self.per_dev[dev].push(rec);
+        }
+        self.chain_records.extend(r.chains);
+        for (t, failed) in r.completions {
+            self.tenant_inflight[t] -= 1;
+            self.finish_unit(t, failed);
+        }
+        if let Some(h) = self.leader_handles[dev].take() {
+            let _ = h.join(); // thread already returned; stats rode the report
+        }
+
+        let mut orphans: Vec<Unit> = r.requeue;
+        if self.respawns_left[dev] > 0 {
+            self.respawns_left[dev] -= 1;
+            self.leader_respawns += 1;
+            let o = self.opts.clone();
+            let done = self.respawn_tx.clone();
+            let gen = self.gens[dev];
+            self.leader_handles[dev] =
+                Some(std::thread::spawn(move || leader_loop(dev, gen, o, lrx, done)));
+            for mut unit in orphans.into_iter().rev() {
+                unit.mark_requeued();
+                let t = unit.tenant();
+                self.tstats[t].requeued += 1;
+                let prio = self.specs[t].priority as usize;
+                self.queues[dev].push_front(prio, unit);
+            }
+            self.pump(dev);
+        } else {
+            self.leader_txs[dev] = None;
+            self.fleet.mark_dead(dev);
+            while let Ok(m) = lrx.try_recv() {
+                match m {
+                    DeviceMsg::Run(p, _) => {
+                        self.in_flight[dev] -= 1;
+                        orphans.push(Unit::Req(p));
+                    }
+                    DeviceMsg::RunChain(c, _) => {
+                        self.in_flight[dev] -= c.chain.len();
+                        orphans.push(Unit::Chain(c));
+                    }
+                    DeviceMsg::Warm(_) | DeviceMsg::Shutdown => {}
+                }
+            }
+            debug_assert_eq!(self.in_flight[dev], 0, "dead leader's window fully retired");
+            while let Some(u) = self.queues[dev].pop() {
+                orphans.push(u);
+            }
+            for mut unit in orphans {
+                unit.mark_requeued();
+                self.requeue_elsewhere(unit);
+            }
+        }
+        self.drain_backlogs();
+    }
+
+    /// Re-serve a unit whose device died for good: free routing across
+    /// the survivors, or a visible failure when none remain.
+    fn requeue_elsewhere(&mut self, unit: Unit) {
+        let t = unit.tenant();
+        self.tstats[t].requeued += 1;
+        if self.live() == 0 {
+            // Nowhere left to run: the unit's response channel drops
+            // (the client sees a closed channel) and the tenant's
+            // accounting records the failure.
+            self.tenant_inflight[t] -= 1;
+            self.finish_unit(t, true);
+            return;
+        }
+        let d = self.place(&unit);
+        let prio = self.specs[t].priority as usize;
+        self.queues[d].push_back(prio, unit);
+        self.pump(d);
+    }
+
+    fn idle(&self) -> bool {
+        self.queues.iter().all(PrioQueue::is_empty)
+            && self.in_flight.iter().all(|&n| n == 0)
+            && self.backlog.iter().all(VecDeque::is_empty)
+    }
+
+    fn assemble(&self) -> FleetMetrics {
+        let mut fm = FleetMetrics {
+            devices: Vec::with_capacity(self.n_dev),
+            router_hits: self.fleet.hits,
+            router_misses: self.fleet.misses,
+            router_spills: self.fleet.spills,
+            chains: self.chain_records.clone(),
+            tenants: self.tstats.clone(),
+            faults: self.faults.clone(),
+            leader_respawns: self.leader_respawns,
+            forwards: self.forwarded.clone(),
+        };
+        for d in 0..self.n_dev {
+            fm.devices.push(DeviceMetrics {
+                gen: self.gens[d],
+                metrics: self.per_dev[d].clone(),
+                cache: self.caches[d],
+            });
+        }
+        fm
+    }
+
+    /// Stop the surviving leaders (the queues are already drained) and
+    /// assemble the final metrics.
+    fn finish(mut self) -> FleetMetrics {
+        for tx in self.leader_txs.iter().flatten() {
+            let _ = tx.send(DeviceMsg::Shutdown);
+        }
+        self.leader_txs.clear();
+        let handles: Vec<_> = self.leader_handles.iter_mut().map(Option::take).collect();
+        for (d, h) in handles.into_iter().enumerate() {
+            if let Some(h) = h {
+                if let Ok(stats) = h.join() {
+                    self.caches[d] = self.cache_base[d] + stats;
+                }
+            }
+        }
+        self.assemble()
     }
 }
 
@@ -473,132 +1106,54 @@ fn router_loop(
     rx: Receiver<Msg>,
     done_tx: SyncSender<Msg>,
 ) -> FleetMetrics {
-    let gens = opts.device_gens();
-    let n_dev = gens.len();
-    let max_in_flight = opts.max_in_flight.max(1);
-
-    let mut fleet = FleetRouter::with_capacity(gens.clone(), opts.design_capacity);
-    let mut queues: Vec<VecDeque<Unit>> = (0..n_dev).map(|_| VecDeque::new()).collect();
-    let mut in_flight = vec![0usize; n_dev];
-    let mut per_dev: Vec<Metrics> = (0..n_dev).map(|_| Metrics::default()).collect();
-    let mut caches = vec![CacheStats::default(); n_dev];
-    let mut chain_records: Vec<ChainRecord> = Vec::new();
-
-    let mut leader_txs: Vec<Sender<DeviceMsg>> = Vec::with_capacity(n_dev);
-    let mut leader_handles: Vec<JoinHandle<CacheStats>> = Vec::with_capacity(n_dev);
-    for (d, gen) in gens.iter().copied().enumerate() {
-        let (ltx, lrx) = channel::<DeviceMsg>();
-        let o = opts.clone();
-        let done = done_tx.clone();
-        leader_handles.push(std::thread::spawn(move || leader_loop(d, gen, o, lrx, done)));
-        leader_txs.push(ltx);
-    }
-    // The router's own clone kept the channel open for the leaders'
-    // `Done` sends; those have their own clones now.
-    drop(done_tx);
-
-    let assemble = |per_dev: &[Metrics],
-                    caches: &[CacheStats],
-                    fleet: &FleetRouter,
-                    chain_records: &[ChainRecord]| {
-        let mut fm = FleetMetrics {
-            devices: Vec::with_capacity(n_dev),
-            router_hits: fleet.hits,
-            router_misses: fleet.misses,
-            router_spills: fleet.spills,
-            chains: chain_records.to_vec(),
-        };
-        for d in 0..n_dev {
-            fm.devices.push(DeviceMetrics {
-                gen: gens[d],
-                metrics: per_dev[d].clone(),
-                cache: caches[d],
-            });
-        }
-        fm
-    };
-
+    let mut core = RouterCore::new(opts, done_tx);
     let mut draining = false;
     loop {
         let msg = match rx.recv() {
             Ok(m) => m,
-            // All senders gone: clients dropped and every leader exited.
+            // Unreachable while the core holds its respawn sender, but
+            // a defensive break keeps the drain semantics obvious.
             Err(_) => break,
         };
         match msg {
-            Msg::Submit(p) => {
-                let key = DesignKey::for_shape(&p.req.shape);
-                let d = fleet.route(key, p.req.shape.ops()).device;
-                queues[d].push_back(Unit::Req(p));
-                pump(d, max_in_flight, &mut queues, &mut in_flight, &leader_txs);
-            }
-            Msg::SubmitChain(c) => {
-                // Chain affinity: one routing decision for the whole
-                // chain, charged with its total ops. A pinned chain (the
-                // graph partitioner's placement) bypasses the device
-                // choice but still updates the load/residency model.
-                let key = DesignKey::for_shape(&c.chain.ops[0].shape);
-                let d = match c.staging.device {
-                    Some(d) => fleet.route_to(d, key, c.chain.total_ops()).device,
-                    None => fleet.route_chain(key, c.chain.total_ops()).device,
-                };
-                queues[d].push_back(Unit::Chain(c));
-                pump(d, max_in_flight, &mut queues, &mut in_flight, &leader_txs);
-            }
-            Msg::Warm(key) => {
-                let d = fleet.warm(key);
-                let _ = leader_txs[d].send(DeviceMsg::Warm(key));
-            }
+            Msg::Submit(p) => core.admit(Unit::Req(p)),
+            Msg::SubmitChain(c) => core.admit(Unit::Chain(c)),
+            Msg::Warm(key) => core.warm(key),
             Msg::Flush(tx) => {
-                let _ = tx.send(assemble(&per_dev, &caches, &fleet, &chain_records));
+                let _ = tx.send(core.assemble());
             }
-            Msg::Done { dev, records, chains, cache, resident } => {
-                in_flight[dev] -= records.len();
-                caches[dev] = cache;
-                fleet.sync_residency(dev, &resident);
-                for r in records {
-                    per_dev[dev].push(r);
-                }
-                chain_records.extend(chains);
-                pump(dev, max_in_flight, &mut queues, &mut in_flight, &leader_txs);
-            }
+            Msg::Done(report) => core.on_done(report),
+            Msg::LeaderDown(report, lrx) => core.on_leader_down(report, lrx),
             Msg::Shutdown => draining = true,
         }
-        let idle = queues.iter().all(VecDeque::is_empty) && in_flight.iter().all(|&n| n == 0);
-        if draining && idle {
+        if draining && core.idle() {
             break;
         }
     }
+    core.finish()
+}
 
-    // Leaders are idle (every forwarded request was acknowledged), so a
-    // Shutdown is the next message each will see.
-    for ltx in &leader_txs {
-        let _ = ltx.send(DeviceMsg::Shutdown);
-    }
-    drop(leader_txs);
-    for (d, h) in leader_handles.into_iter().enumerate() {
-        if let Ok(stats) = h.join() {
-            caches[d] = stats;
-        }
-    }
-    assemble(&per_dev, &caches, &fleet, &chain_records)
+/// What a leader carries between batches: its design cache and the
+/// array's loaded-design state.
+struct LeaderState {
+    cache: DesignCache,
+    device: DeviceState,
 }
 
 /// Absorb one message into the leader's batch / state.
 fn absorb(
     m: DeviceMsg,
     gen: Generation,
-    batch: &mut Vec<Unit>,
-    cache: &mut DesignCache,
-    device: &mut DeviceState,
+    batch: &mut Vec<(Unit, Option<FaultKind>)>,
+    state: &mut LeaderState,
     shutdown: &mut bool,
 ) {
     match m {
-        DeviceMsg::Run(p) => batch.push(Unit::Req(p)),
-        DeviceMsg::RunChain(c) => batch.push(Unit::Chain(c)),
+        DeviceMsg::Run(p, f) => batch.push((Unit::Req(p), f)),
+        DeviceMsg::RunChain(c, f) => batch.push((Unit::Chain(c), f)),
         DeviceMsg::Warm(key) => {
-            cache.warm(key);
-            device.switch_to(gen, key);
+            state.cache.warm(key);
+            state.device.switch_to(gen, key);
         }
         DeviceMsg::Shutdown => *shutdown = true,
     }
@@ -610,24 +1165,27 @@ fn absorb(
 /// shared device state. Under `Backend::Functional` every op also runs
 /// through the packed executor, and each producer→consumer edge feeds
 /// the staged C straight into the next op as its A — the functional
-/// mirror of the planner's fused dataflow.
+/// mirror of the planner's fused dataflow. `stall_s` (injected DMA
+/// stall) is charged to the first op. Records are appended only on
+/// completion, so a panicking chain leaves no partial accounting.
 fn run_chain(
     dev: usize,
     gen: Generation,
     pc: PendingChain,
     opts: &CoordinatorOptions,
-    cache: &mut DesignCache,
-    device: &mut DeviceState,
+    state: &mut LeaderState,
     records: &mut Vec<RequestRecord>,
+    stall_s: f64,
 ) -> (ChainRecord, Sender<ChainResponse>, ChainResponse) {
-    let PendingChain { id, chain, bd_mode, staging, tx, t0 } = pc;
+    let PendingChain { id, tenant, chain, bd_mode, staging, tx, t0, .. } = pc;
     let cfgs: Vec<TilingConfig> =
-        chain.ops.iter().map(|o| *cache.get(DesignKey::for_shape(&o.shape))).collect();
+        chain.ops.iter().map(|o| *state.cache.get(DesignKey::for_shape(&o.shape))).collect();
     let ovs = overrides_for(&cfgs, &chain);
     let mut chain_s = 0.0;
     let mut fused = 0;
     let mut elided = 0;
     let mut reports = Vec::with_capacity(chain.len());
+    let mut chain_recs: Vec<RequestRecord> = Vec::with_capacity(chain.len());
     // A staged entry A (DAG cross-chain edge) pre-loads the slot the
     // first op consumes; intra-chain edges refill it op by op.
     let mut staged: Option<Matrix> = staging.a0;
@@ -636,10 +1194,10 @@ fn run_chain(
     let mut func_failed = false;
     for (i, op) in chain.ops.iter().enumerate() {
         let key = DesignKey::for_shape(&op.shape);
-        let reconfig_s = device.switch_to(gen, key);
+        let reconfig_s = state.device.switch_to(gen, key);
         let sim =
             simulate_gemm_with(&cfgs[i], op.shape.m, op.shape.k, op.shape.n, bd_mode, ovs[i]);
-        let device_s = sim.t_total + reconfig_s;
+        let device_s = sim.t_total + reconfig_s + if i == 0 { stall_s } else { 0.0 };
         chain_s += device_s;
         fused += ovs[i].a_in_l2 as usize;
         elided += ovs[i].elide_dispatch as usize;
@@ -680,7 +1238,7 @@ fn run_chain(
                 }
             }
         }
-        records.push(RequestRecord {
+        chain_recs.push(RequestRecord {
             id,
             name: op.shape.name.clone(),
             device: dev,
@@ -690,9 +1248,11 @@ fn run_chain(
             reconfigured: reconfig_s > 0.0,
             verified: op_verified,
             chain: Some(id),
+            tenant,
         });
         reports.push(sim);
     }
+    records.append(&mut chain_recs);
     let record = ChainRecord {
         id,
         name: chain.name.clone(),
@@ -716,6 +1276,54 @@ fn run_chain(
     (record, tx, response)
 }
 
+/// Execute one single-request unit (the non-chain leg of a batch).
+/// `stall_s` is an injected DMA stall added to the device time.
+fn run_request(
+    dev: usize,
+    gen: Generation,
+    p: Pending,
+    opts: &CoordinatorOptions,
+    state: &mut LeaderState,
+    stall_s: f64,
+) -> (RequestRecord, Sender<GemmResponse>, GemmResponse) {
+    let Pending { id, tenant, req, tx, t0, .. } = p;
+    if req.poison {
+        panic!("poisoned request (chaos containment hook)");
+    }
+    let key = DesignKey::for_shape(&req.shape);
+    let cfg = *state.cache.get(key);
+    let reconfig_s = state.device.switch_to(gen, key);
+    let sim = simulate_gemm(&cfg, req.shape.m, req.shape.k, req.shape.n, req.bd_mode);
+    let (result, verified) = match opts.backend {
+        Backend::SimOnly => (None, None),
+        Backend::Functional => run_functional(&cfg, &req, opts.exec_threads),
+    };
+    let device_s = sim.t_total + reconfig_s + stall_s;
+    let record = RequestRecord {
+        id,
+        name: req.shape.name.clone(),
+        device: dev,
+        device_s,
+        host_latency_s: t0.elapsed().as_secs_f64(),
+        ops: req.shape.ops(),
+        reconfigured: reconfig_s > 0.0,
+        verified,
+        chain: None,
+        tenant,
+    };
+    let response = GemmResponse {
+        id,
+        name: req.shape.name,
+        device: dev,
+        sim,
+        device_s,
+        reconfigured: reconfig_s > 0.0,
+        verified,
+        result,
+    };
+    (record, tx, response)
+}
+
 fn leader_loop(
     dev: usize,
     gen: Generation,
@@ -723,8 +1331,10 @@ fn leader_loop(
     rx: Receiver<DeviceMsg>,
     done: SyncSender<Msg>,
 ) -> CacheStats {
-    let mut cache = DesignCache::with_capacity(gen, opts.design_capacity);
-    let mut device = DeviceState::default();
+    let mut state = LeaderState {
+        cache: DesignCache::with_capacity(gen, opts.design_capacity),
+        device: DeviceState::default(),
+    };
 
     loop {
         // Block for the first message, then drain up to the batch window.
@@ -732,12 +1342,12 @@ fn leader_loop(
             Ok(m) => m,
             Err(_) => break,
         };
-        let mut batch: Vec<Unit> = Vec::new();
+        let mut batch: Vec<(Unit, Option<FaultKind>)> = Vec::new();
         let mut shutdown = false;
-        absorb(first, gen, &mut batch, &mut cache, &mut device, &mut shutdown);
+        absorb(first, gen, &mut batch, &mut state, &mut shutdown);
         while batch.len() < opts.batch_window.max(1) {
             match rx.try_recv() {
-                Ok(m) => absorb(m, gen, &mut batch, &mut cache, &mut device, &mut shutdown),
+                Ok(m) => absorb(m, gen, &mut batch, &mut state, &mut shutdown),
                 Err(_) => break,
             }
         }
@@ -745,72 +1355,123 @@ fn leader_loop(
         // Size-class batching: stable-group by design key so a burst of
         // mixed-precision traffic pays each reconfiguration once. Chains
         // group by their leading op and stay contiguous.
-        batch.sort_by_key(Unit::sort_key);
+        batch.sort_by_key(|(u, _)| u.sort_key());
 
         let mut records = Vec::with_capacity(batch.len());
         let mut chain_records = Vec::new();
         let mut responses = Vec::new();
         let mut chain_responses = Vec::new();
-        for unit in batch {
+        let mut completions: Vec<(usize, bool)> = Vec::new();
+        let mut dropped: Vec<Unit> = Vec::new();
+        let mut retired = 0usize;
+        let mut killed: Option<Vec<Unit>> = None;
+
+        let mut it = batch.into_iter();
+        loop {
+            let Some((unit, fault)) = it.next() else { break };
+            match fault {
+                Some(FaultKind::LeaderKill) => {
+                    // This leader dies before executing the tagged unit:
+                    // it and the rest of the batch go back to the router.
+                    let mut rq = vec![unit];
+                    rq.extend(it.by_ref().map(|(u, _)| u));
+                    killed = Some(rq);
+                    break;
+                }
+                Some(FaultKind::DropResponse) => {
+                    // Lost response: the unit is not executed here; the
+                    // router re-serves it, so the client still gets
+                    // exactly one reply.
+                    dropped.push(unit);
+                    continue;
+                }
+                Some(FaultKind::CacheStorm) => {
+                    state.cache.clear();
+                    state.device.invalidate();
+                }
+                _ => {}
+            }
+            let stall_s = match fault {
+                Some(FaultKind::DmaStall { stall_s }) => stall_s,
+                _ => 0.0,
+            };
+            let unit_len = unit.len();
+            let tenant = unit.tenant();
+            retired += unit_len;
+            // Genuine panics (not injected kills) are contained per
+            // unit: the unit's response channel drops with the unwound
+            // stack, the tenant records a failure, and the leader keeps
+            // serving the rest of the batch.
             match unit {
                 Unit::Chain(pc) => {
-                    let (rec, tx, resp) =
-                        run_chain(dev, gen, *pc, &opts, &mut cache, &mut device, &mut records);
-                    chain_records.push(rec);
-                    chain_responses.push((tx, resp));
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_chain(dev, gen, *pc, &opts, &mut state, &mut records, stall_s)
+                    }));
+                    match run {
+                        Ok((rec, tx, resp)) => {
+                            completions.push((tenant, false));
+                            chain_records.push(rec);
+                            chain_responses.push((tx, resp));
+                        }
+                        Err(_) => completions.push((tenant, true)),
+                    }
                 }
                 Unit::Req(p) => {
-                    let Pending { id, req, tx, t0 } = *p;
-                    let key = DesignKey::for_shape(&req.shape);
-                    let cfg = *cache.get(key);
-                    let reconfig_s = device.switch_to(gen, key);
-                    let sim =
-                        simulate_gemm(&cfg, req.shape.m, req.shape.k, req.shape.n, req.bd_mode);
-
-                    let (result, verified) = match opts.backend {
-                        Backend::SimOnly => (None, None),
-                        Backend::Functional => run_functional(&cfg, &req, opts.exec_threads),
-                    };
-
-                    let device_s = sim.t_total + reconfig_s;
-                    records.push(RequestRecord {
-                        id,
-                        name: req.shape.name.clone(),
-                        device: dev,
-                        device_s,
-                        host_latency_s: t0.elapsed().as_secs_f64(),
-                        ops: req.shape.ops(),
-                        reconfigured: reconfig_s > 0.0,
-                        verified,
-                        chain: None,
-                    });
-                    responses.push((
-                        tx,
-                        GemmResponse {
-                            id,
-                            name: req.shape.name,
-                            device: dev,
-                            sim,
-                            device_s,
-                            reconfigured: reconfig_s > 0.0,
-                            verified,
-                            result,
-                        },
-                    ));
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_request(dev, gen, *p, &opts, &mut state, stall_s)
+                    }));
+                    match run {
+                        Ok((rec, tx, resp)) => {
+                            completions.push((tenant, false));
+                            records.push(rec);
+                            responses.push((tx, resp));
+                        }
+                        Err(_) => completions.push((tenant, true)),
+                    }
                 }
             }
         }
-        // Acknowledge to the router before responding to clients: a
-        // client holding its response can then rely on a subsequent
-        // metrics snapshot including its request.
-        if !records.is_empty() {
-            let _ = done.send(Msg::Done {
+
+        if let Some(requeue) = killed {
+            // Leader death: ship the batch accounting, the unexecuted
+            // units, and our receiver (so a respawned leader inherits
+            // whatever is still in the channel) back to the router;
+            // answer the clients whose units did complete; then die.
+            let report = BatchReport {
                 dev,
                 records,
                 chains: chain_records,
-                cache: cache.stats(),
-                resident: cache.resident(),
-            });
+                cache: state.cache.stats(),
+                resident: Vec::new(),
+                retired,
+                completions,
+                requeue,
+            };
+            let _ = done.send(Msg::LeaderDown(report, rx));
+            for (tx, resp) in responses {
+                let _ = tx.send(resp);
+            }
+            for (tx, resp) in chain_responses {
+                let _ = tx.send(resp);
+            }
+            return state.cache.stats();
+        }
+
+        // Acknowledge to the router before responding to clients: a
+        // client holding its response can then rely on a subsequent
+        // metrics snapshot including its request.
+        if !records.is_empty() || !completions.is_empty() || !dropped.is_empty() {
+            let report = BatchReport {
+                dev,
+                records,
+                chains: chain_records,
+                cache: state.cache.stats(),
+                resident: state.cache.resident(),
+                retired,
+                completions,
+                requeue: dropped,
+            };
+            let _ = done.send(Msg::Done(report));
         }
         for (tx, resp) in responses {
             let _ = tx.send(resp);
@@ -823,7 +1484,7 @@ fn leader_loop(
             break;
         }
     }
-    cache.stats()
+    state.cache.stats()
 }
 
 /// Deterministic functional A for `shape` (seeded from its geometry) —
@@ -903,10 +1564,16 @@ mod tests {
             .call(GemmRequest::sim(GemmShape::new("t2", 4096, 4320, 4480, Precision::I8I16)))
             .unwrap();
         assert!(!resp2.reconfigured, "design reused");
-        let m = c.shutdown();
+        let m = c.shutdown().unwrap();
         assert_eq!(m.count(), 2);
         assert_eq!(m.reconfigurations(), 1);
         assert_eq!(m.n_devices(), 1, "default options run one device");
+        // Single implicit tenant: accounting conserves and drains.
+        assert_eq!(m.tenants.len(), 1);
+        assert_eq!(m.tenants[0].name, "default");
+        assert_eq!((m.tenants[0].submitted, m.tenants[0].completed), (2, 2));
+        assert!(m.conserves());
+        assert_eq!(m.tenants[0].pending, 0, "drained shutdown leaves nothing pending");
     }
 
     #[test]
@@ -919,11 +1586,12 @@ mod tests {
         });
         let trace = TransformerConfig { seq: 512, ..Default::default() }.trace();
         let n = trace.len();
-        let rxs: Vec<_> = trace.into_iter().map(|g| c.submit(GemmRequest::sim(g))).collect();
+        let rxs: Vec<_> =
+            trace.into_iter().map(|g| c.submit(GemmRequest::sim(g)).unwrap()).collect();
         for rx in rxs {
             rx.recv().unwrap();
         }
-        let m = c.shutdown();
+        let m = c.shutdown().unwrap();
         assert_eq!(m.count(), n);
         assert_eq!(m.reconfigurations(), 1);
         assert!(m.device_tops() > 1.0);
@@ -943,13 +1611,13 @@ mod tests {
         for round in 0..4 {
             for p in Precision::ALL {
                 let g = GemmShape::new(&format!("r{round}-{p}"), 1024, 1024, 1024, p);
-                rxs.push(c.submit(GemmRequest::sim(g)));
+                rxs.push(c.submit(GemmRequest::sim(g)).unwrap());
             }
         }
         for rx in rxs {
             rx.recv().unwrap();
         }
-        let m = c.shutdown();
+        let m = c.shutdown().unwrap();
         assert_eq!(m.count(), 16);
         assert!(
             m.reconfigurations() <= 8,
@@ -972,7 +1640,7 @@ mod tests {
         assert_eq!(resp.verified, Some(true));
         let out = resp.result.unwrap();
         assert_eq!((out.rows, out.cols), (64, 64));
-        c.shutdown();
+        c.shutdown().unwrap();
     }
 
     #[test]
@@ -1001,7 +1669,7 @@ mod tests {
         let mid = refimpl::ref_gemm(&a0, &b0, Precision::I8I8).unwrap();
         let want = refimpl::ref_gemm(&mid, &b1, Precision::I8I8).unwrap();
         assert!(refimpl::matrices_equal(&got, &want, Precision::I8I8));
-        c.shutdown();
+        c.shutdown().unwrap();
     }
 
     #[test]
@@ -1021,7 +1689,7 @@ mod tests {
         assert!(resp.result.is_none());
         assert_eq!(resp.verified, Some(false));
         assert!(resp.sim.tops > 0.0, "simulation still accounts the padded dispatch");
-        c.shutdown();
+        c.shutdown().unwrap();
     }
 
     #[test]
@@ -1046,7 +1714,7 @@ mod tests {
         assert_eq!(resp.reports[2].a_bytes, 0.0);
         assert_eq!(resp.reports[1].c_bytes, 0.0);
         assert!(resp.reports[3].a_bytes > 0.0);
-        let m = c.shutdown();
+        let m = c.shutdown().unwrap();
         assert_eq!(m.count(), 4, "each chain op is one record");
         assert_eq!(m.chains.len(), 1);
         assert_eq!(m.chains[0].device, resp.device);
@@ -1060,6 +1728,8 @@ mod tests {
             .records
             .iter()
             .all(|r| r.chain == Some(resp.id)));
+        // A chain is ONE tenant unit even though it yields 4 records.
+        assert_eq!((m.tenants[0].submitted, m.tenants[0].completed), (1, 1));
     }
 
     #[test]
@@ -1078,16 +1748,19 @@ mod tests {
             for rx in rxs {
                 rx.recv().unwrap();
             }
-            c.shutdown()
+            c.shutdown().unwrap()
         };
         let isolated = {
             let c = Coordinator::start(CoordinatorOptions::default());
-            let rxs: Vec<_> =
-                cfgs.trace().into_iter().map(|g| c.submit(GemmRequest::sim(g))).collect();
+            let rxs: Vec<_> = cfgs
+                .trace()
+                .into_iter()
+                .map(|g| c.submit(GemmRequest::sim(g)).unwrap())
+                .collect();
             for rx in rxs {
                 rx.recv().unwrap();
             }
-            c.shutdown()
+            c.shutdown().unwrap()
         };
         assert_eq!(chained.count(), isolated.count());
         let ops = isolated.total_ops();
@@ -1153,7 +1826,7 @@ mod tests {
         assert!(c
             .submit_chain_staged(chain4, ChainStaging { device: None, a0: Some(wrong_ty) })
             .is_err());
-        let m = c.shutdown();
+        let m = c.shutdown().unwrap();
         assert_eq!(m.count(), 1);
         assert_eq!(c2_count(&m, 1), 1, "record landed on the pinned device");
     }
@@ -1166,7 +1839,7 @@ mod tests {
     fn empty_chain_is_rejected() {
         let c = Coordinator::start(CoordinatorOptions::default());
         assert!(c.submit_chain(crate::plan::GemmChain::new("empty")).is_err());
-        let m = c.shutdown();
+        let m = c.shutdown().unwrap();
         assert_eq!(m.count(), 0);
     }
 
@@ -1187,5 +1860,84 @@ mod tests {
                 Generation::Xdna,
             ]
         );
+    }
+
+    #[test]
+    fn tenant_spec_parsing() {
+        assert_eq!(
+            parse_tenants("decode:2:8,prefill:0:32").unwrap(),
+            vec![
+                TenantSpec { name: "decode".into(), priority: 2, quota: 8 },
+                TenantSpec { name: "prefill".into(), priority: 0, quota: 32 },
+            ]
+        );
+        assert_eq!(
+            parse_tenants("solo").unwrap(),
+            vec![TenantSpec { name: "solo".into(), priority: 0, quota: 0 }]
+        );
+        assert_eq!(
+            parse_tenants("a:1").unwrap(),
+            vec![TenantSpec { name: "a".into(), priority: 1, quota: 0 }]
+        );
+        assert!(parse_tenants("").is_err());
+        assert!(parse_tenants(":1:2").is_err());
+        assert!(parse_tenants("x:hot").is_err());
+        assert!(parse_tenants("x:1:2:3").is_err());
+    }
+
+    #[test]
+    fn prio_queue_orders_by_class_then_fifo() {
+        fn unit(id: u64, tenant: usize) -> Unit {
+            let (tx, _rx) = channel();
+            Unit::Req(Box::new(Pending {
+                id,
+                tenant,
+                req: GemmRequest::sim(GemmShape::new("q", 64, 64, 64, Precision::I8I8)),
+                tx,
+                t0: Instant::now(),
+                requeued: false,
+            }))
+        }
+        fn id_of(u: &Unit) -> u64 {
+            match u {
+                Unit::Req(p) => p.id,
+                Unit::Chain(c) => c.id,
+            }
+        }
+        let mut q = PrioQueue::new(3);
+        q.push_back(0, unit(1, 0));
+        q.push_back(0, unit(2, 0));
+        q.push_back(2, unit(3, 1));
+        q.push_back(1, unit(4, 2));
+        q.push_back(2, unit(5, 1));
+        // Requeue jumps the front of its own class, not other classes.
+        q.push_front(1, unit(6, 2));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|u| id_of(&u)).collect();
+        assert_eq!(order, vec![3, 5, 6, 4, 1, 2]);
+        assert!(q.is_empty());
+        // Out-of-range priorities clamp to the top class.
+        let mut q2 = PrioQueue::new(1);
+        q2.push_back(7, unit(9, 0));
+        assert_eq!(q2.pop().map(|u| id_of(&u)), Some(9));
+    }
+
+    #[test]
+    fn submit_for_validates_tenant_index() {
+        let c = Coordinator::start(CoordinatorOptions::default());
+        assert_eq!(c.n_tenants(), 1);
+        let req = GemmRequest::sim(GemmShape::new("t", 64, 64, 64, Precision::I8I8));
+        assert!(c.submit_for(1, req.clone()).is_err(), "only tenant 0 exists by default");
+        assert!(c.submit_for(0, req).is_ok());
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn default_options_have_no_chaos() {
+        let o = CoordinatorOptions::default();
+        assert!(o.chaos.is_none());
+        assert!(o.tenants.is_empty());
+        assert_eq!(o.tenant_specs().len(), 1);
+        assert_eq!(o.tenant_specs()[0].name, "default");
+        assert_eq!(o.max_leader_respawns, 16);
     }
 }

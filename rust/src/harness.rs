@@ -359,19 +359,25 @@ pub fn serve_trace(
 ) -> crate::Result<crate::coordinator::FleetMetrics> {
     use crate::coordinator::{Coordinator, GemmRequest};
     anyhow::ensure!(!trace.is_empty(), "empty trace");
+    let n_tenants = opts.tenant_specs().len();
     let coord = Coordinator::start(opts);
     let mut rxs = Vec::with_capacity(n);
     for i in 0..n {
         let g = &trace[i % trace.len()];
-        rxs.push(coord.submit(GemmRequest::sim(crate::workload::GemmShape {
-            name: format!("{}#{i}", g.name),
-            ..g.clone()
-        })));
+        // Multi-tenant serving: spread the trace round-robin across the
+        // configured tenants (tenant 0 when none were configured).
+        rxs.push(coord.submit_for(
+            i % n_tenants,
+            GemmRequest::sim(crate::workload::GemmShape {
+                name: format!("{}#{i}", g.name),
+                ..g.clone()
+            }),
+        )?);
     }
     for rx in rxs {
         rx.recv()?;
     }
-    Ok(coord.shutdown())
+    coord.shutdown()
 }
 
 /// Drive a coordinator fleet over whole chains (chain affinity: each
@@ -384,15 +390,16 @@ pub fn serve_chains(
 ) -> crate::Result<crate::coordinator::FleetMetrics> {
     use crate::coordinator::Coordinator;
     anyhow::ensure!(chains.iter().any(|c| !c.is_empty()), "no non-empty chains");
+    let n_tenants = opts.tenant_specs().len();
     let coord = Coordinator::start(opts);
     let mut rxs = Vec::with_capacity(chains.len());
-    for chain in chains.iter().filter(|c| !c.is_empty()) {
-        rxs.push(coord.submit_chain(chain.clone())?);
+    for (i, chain) in chains.iter().filter(|c| !c.is_empty()).enumerate() {
+        rxs.push(coord.submit_chain_for(i % n_tenants, chain.clone())?);
     }
     for rx in rxs {
         rx.recv()?;
     }
-    Ok(coord.shutdown())
+    coord.shutdown()
 }
 
 #[cfg(test)]

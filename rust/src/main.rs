@@ -16,7 +16,12 @@
 //! xdna-gemm serve --requests N [--devices D] [--mix xdna:xdna2] [--gen G]
 //!                 [--window W] [--in-flight F] [--skew | --trace FILE]
 //!                 [--threads T --functional]
+//!                 [--tenants NAME[:PRIO[:QUOTA]],...]
+//!                 [--chaos SEED [--chaos-events E] [--chaos-horizon H]]
 //!                                             sharded coordinator load demo
+//!                                             (multi-tenant admission and
+//!                                             seeded fault injection,
+//!                                             docs/serving.md)
 //! xdna-gemm exec [--gen G] [--precision P] [--m M] [--k K] [--n N]
 //!                [--threads T] [--iters I] [--rowmajor-b] [--bdchain]
 //!                [--no-pack]                  packed functional executor timing
@@ -41,7 +46,9 @@
 use anyhow::{bail, Result};
 
 use xdna_gemm::arch::Generation;
-use xdna_gemm::coordinator::{expand_mix, parse_mix, Backend, CoordinatorOptions};
+use xdna_gemm::coordinator::{
+    expand_mix, parse_mix, parse_tenants, Backend, CoordinatorOptions, FaultPlan,
+};
 use xdna_gemm::dtype::{Layout, Precision};
 use xdna_gemm::gemm::exec::{ExecOptions, Fidelity};
 use xdna_gemm::harness;
@@ -229,9 +236,30 @@ fn main() -> Result<()> {
                 Some(s) => parse_mix(s)?,
                 None => vec![gen],
             };
+            let devices = expand_mix(&pattern, n_devices);
+            // `--tenants hi:2:8,lo` names tenant classes; requests are
+            // round-robined across them by the harness. `--chaos SEED`
+            // arms the deterministic fault-injection layer (ISSUE 6).
+            let tenants = match args.get("tenants") {
+                Some(s) => parse_tenants(s)?,
+                None => Vec::new(),
+            };
+            let chaos = match args.get("chaos") {
+                Some(s) => {
+                    let seed: u64 = s
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--chaos expects a u64 seed, got '{s}'"))?;
+                    let horizon = args.usize_opt("chaos-horizon", 64)? as u64;
+                    let events = args.usize_opt("chaos-events", 4)?;
+                    Some(FaultPlan::from_seed(seed, devices.len(), horizon, events))
+                }
+                None => None,
+            };
             let opts = CoordinatorOptions {
                 gen,
-                devices: expand_mix(&pattern, n_devices),
+                devices,
+                tenants,
+                chaos,
                 batch_window: args.usize_opt("window", 16)?,
                 max_in_flight: args.usize_opt("in-flight", 64)?,
                 // `--functional` runs real numerics through the packed
@@ -491,7 +519,7 @@ fn main() -> Result<()> {
                 )?;
                 let staged: usize = responses.iter().map(|r| r.staged_edges).sum();
                 let fused: usize = responses.iter().map(|r| r.fused_edges).sum();
-                let m = coord.shutdown();
+                let m = coord.shutdown()?;
                 println!(
                     "\nserved through the coordinator fleet ({} chains, {} staged tensors, \
                      {} fused edges):\n{}",

@@ -24,11 +24,13 @@ fn affinity_partitions_designs_across_devices() {
     ]));
     let mut rxs = Vec::new();
     for i in 0..20 {
-        rxs.push(c.submit(GemmRequest::sim(shape(&format!("a{i}"), 1024, Precision::I8I8))));
-        rxs.push(c.submit(GemmRequest::sim(shape(&format!("b{i}"), 1024, Precision::Bf16))));
+        let a = GemmRequest::sim(shape(&format!("a{i}"), 1024, Precision::I8I8));
+        let b = GemmRequest::sim(shape(&format!("b{i}"), 1024, Precision::Bf16));
+        rxs.push(c.submit(a).unwrap());
+        rxs.push(c.submit(b).unwrap());
     }
     let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
-    let m = c.shutdown();
+    let m = c.shutdown().unwrap();
 
     assert_eq!(m.count(), 40);
     assert_eq!(m.reconfigurations(), 2, "one design load per device");
@@ -118,7 +120,7 @@ fn warmup_hides_reconfiguration_from_requests() {
     c.warm(key);
     let resp = c.call(GemmRequest::sim(shape("w", 2048, Precision::I8I16))).unwrap();
     assert!(!resp.reconfigured, "warmed design must be resident already");
-    let m = c.shutdown();
+    let m = c.shutdown().unwrap();
     assert_eq!(m.count(), 1);
     assert_eq!(m.reconfigurations(), 0);
     assert_eq!(m.router_hits, 1, "warmup pre-assigns affinity");
@@ -136,9 +138,9 @@ fn shutdown_drains_queued_requests() {
     let trace = skewed_trace(64, 3);
     let rxs: Vec<_> = trace
         .iter()
-        .map(|g| c.submit(GemmRequest::sim(g.clone())))
+        .map(|g| c.submit(GemmRequest::sim(g.clone())).unwrap())
         .collect();
-    let m = c.shutdown();
+    let m = c.shutdown().unwrap();
     assert_eq!(m.count(), 64, "drain must complete queued work");
     let mut served = 0;
     for rx in rxs {
@@ -252,7 +254,7 @@ fn metrics_snapshot_while_serving() {
     assert_eq!(snap.count(), 8);
     assert_eq!(snap.n_devices(), 1);
     assert!(snap.fleet_tops() > 0.0);
-    let fin = c.shutdown();
+    let fin = c.shutdown().unwrap();
     assert_eq!(fin.count(), 8);
 }
 
@@ -269,7 +271,7 @@ fn design_cache_eviction_surfaces_in_fleet_metrics() {
         let p = if i % 2 == 0 { Precision::I8I8 } else { Precision::Bf16 };
         c.call(GemmRequest::sim(shape(&format!("e{i}"), 512, p))).unwrap();
     }
-    let m = c.shutdown();
+    let m = c.shutdown().unwrap();
     let cache = m.devices[0].cache;
     assert_eq!(cache.misses, 4, "capacity-1 cache cannot hold both designs");
     assert!(cache.evictions >= 3, "{} evictions", cache.evictions);

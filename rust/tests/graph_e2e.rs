@@ -91,7 +91,7 @@ fn branching_attention_graph_compiles_and_runs_bit_exact_end_to_end() {
     let staged_total: usize = responses.iter().map(|r| r.staged_edges).sum();
     assert!(staged_total >= 5, "staged edges actually consumed: {staged_total}");
 
-    let m = coord.shutdown();
+    let m = coord.shutdown().unwrap();
     assert!(m.all_verified());
     assert_eq!(m.chains.len(), 5);
     assert_eq!(m.count(), 8, "one record per graph node");
@@ -131,5 +131,5 @@ fn bf16_graph_stages_identically_through_both_functional_paths() {
             Precision::Bf16
         ));
     }
-    coord.shutdown();
+    coord.shutdown().unwrap();
 }

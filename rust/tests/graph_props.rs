@@ -114,7 +114,7 @@ fn linear_graph_functional_result_matches_the_chain_path() {
         });
         let resp = c.call_chain(chain).unwrap();
         let out = resp.result.expect("functional chain result");
-        c.shutdown();
+        c.shutdown().unwrap();
         (out, resp.staged_edges)
     };
     let (from_graph, staged_a) = run(lowered.chains[0].clone());

@@ -68,13 +68,13 @@ fn functional_coordinator_serves_verified_trace() {
     for g in model.trace() {
         let mut req = GemmRequest::sim(g);
         req.verify = true;
-        rxs.push(coord.submit(req));
+        rxs.push(coord.submit(req).unwrap());
     }
     for rx in rxs {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.verified, Some(true), "{}", resp.name);
     }
-    let m = coord.shutdown();
+    let m = coord.shutdown().unwrap();
     assert!(m.all_verified());
     assert_eq!(m.reconfigurations(), 1);
 }

@@ -1,23 +1,25 @@
 #!/usr/bin/env bash
-# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–5): run the
-# hotpath, chain_vs_isolated, bfp16_vs_bf16 and graph_vs_chain benches
-# with JSON recording enabled and merge them into BENCH_PR5.json —
-# GEMM/s, functional GB/s, packing/threading speedups, the native-bfp16
-# vs bf16-emulation speedup, and the graph compiler's DAG-aware-schedule
-# speedups over the isolated-dispatch and single-device-chain baselines
-# (both generations) — so future PRs can diff against a machine-readable
-# baseline.
+# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–6): run the
+# hotpath, chain_vs_isolated, bfp16_vs_bf16, graph_vs_chain and soak
+# benches with JSON recording enabled and merge them into
+# BENCH_PR6.json — GEMM/s, functional GB/s, packing/threading speedups,
+# the native-bfp16 vs bf16-emulation speedup, the graph compiler's
+# DAG-aware-schedule speedups, and the chaos-soak's sustained TOPS /
+# p99 / fault counters under a mixed two-tenant trace with injected
+# faults — so future PRs can diff against a machine-readable baseline.
 #
-# usage: scripts/bench.sh [out.json]     (default: BENCH_PR5.json)
+# usage: scripts/bench.sh [out.json]     (default: BENCH_PR6.json)
 #        BENCH_MS=500 scripts/bench.sh   (longer per-case budget)
+#        SOAK_OPS=1500 scripts/bench.sh  (shorter soak horizon)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-out="${1:-BENCH_PR5.json}"
+out="${1:-BENCH_PR6.json}"
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
 
 export BENCH_MS="${BENCH_MS:-200}"
+export SOAK_OPS="${SOAK_OPS:-10000}"
 
 echo "==> cargo bench --bench hotpath"
 BENCH_JSON="$tmp/hotpath.json" cargo bench --bench hotpath
@@ -31,13 +33,17 @@ BENCH_JSON="$tmp/bfp16.json" cargo bench --bench bfp16_vs_bf16
 echo "==> cargo bench --bench graph_vs_chain"
 BENCH_JSON="$tmp/graph.json" cargo bench --bench graph_vs_chain
 
+echo "==> cargo bench --bench soak (SOAK_OPS=$SOAK_OPS)"
+BENCH_JSON="$tmp/soak.json" cargo bench --bench soak
+
 echo "==> merging into $out"
-python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$tmp/bfp16.json" "$tmp/graph.json" "$out" <<'PY'
+python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$tmp/bfp16.json" "$tmp/graph.json" \
+    "$tmp/soak.json" "$out" <<'PY'
 import json
 import sys
 
-hot, chain, bfp, graph, out = sys.argv[1:6]
-groups = [json.load(open(p)) for p in (hot, chain, bfp, graph)]
+hot, chain, bfp, graph, soak, out = sys.argv[1:7]
+groups = [json.load(open(p)) for p in (hot, chain, bfp, graph, soak)]
 
 
 def thrpt(group, name):
@@ -48,11 +54,12 @@ def thrpt(group, name):
 
 
 summary = {
-    "artifact": "BENCH_PR5",
+    "artifact": "BENCH_PR6",
     "description": "packed+parallel functional executor vs re-streaming serial "
-    "baseline, native bfp16 vs bf16 emulation on XDNA2, and the graph "
+    "baseline, native bfp16 vs bf16 emulation on XDNA2, the graph "
     "compiler's DAG-aware fleet schedule vs isolated-dispatch and "
-    "single-device-chain baselines",
+    "single-device-chain baselines, and the two-tenant chaos soak "
+    "(sustained TOPS / p99 under seeded fault injection)",
     "gemms_per_s": thrpt(groups[0], "executor_gemms_per_s"),
     "functional_gb_per_s": thrpt(groups[0], "executor_functional_gb_s"),
     "packing_speedup_serial": thrpt(groups[0], "executor_packing_speedup"),
@@ -66,6 +73,12 @@ summary = {
     "graph_vs_chain_speedup_xdna2": thrpt(groups[3], "graph_vs_chain_speedup_xdna2"),
     "moe_vs_isolated_speedup_xdna2": thrpt(groups[3], "moe_vs_isolated_speedup_xdna2"),
     "moe_vs_chain_speedup_xdna2": thrpt(groups[3], "moe_vs_chain_speedup_xdna2"),
+    "soak_ops_per_s": thrpt(groups[4], "soak_ops_per_s"),
+    "soak_fleet_tops": thrpt(groups[4], "soak_fleet_tops"),
+    "soak_sustained_tops": thrpt(groups[4], "soak_sustained_tops"),
+    "soak_p99_device_ms": thrpt(groups[4], "soak_p99_device_ms"),
+    "soak_faults_fired": thrpt(groups[4], "soak_faults_fired"),
+    "soak_requeues": thrpt(groups[4], "soak_requeues"),
     "groups": groups,
 }
 with open(out, "w") as f:
