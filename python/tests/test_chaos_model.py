@@ -193,8 +193,9 @@ def test_quota_bounds_in_flight_and_everything_completes():
 
 def test_conservation_holds_under_partial_failure():
     # Mirror of TenantStats::conserves(): completed + failed + pending
-    # == submitted, with requeues counted separately (a requeued unit
-    # stays pending — it is never lost and never double-completed).
+    # == submitted, with requeues counted separately as re-placement
+    # events (a requeued unit stays pending until it completes, or
+    # fails when no live device remains — never double-completed).
     submitted, completed, failed, pending, requeued = 10, 7, 1, 2, 3
     assert completed + failed + pending == submitted
     assert requeued >= 0  # orthogonal counter, can exceed failures

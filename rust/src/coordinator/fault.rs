@@ -107,10 +107,16 @@ impl FaultPlan {
             let salt = ((d as u64) + 1).wrapping_mul(DEVICE_SALT);
             let mut rng = Rng::seeded(seed.wrapping_add(salt));
             let want = per_device.min(horizon as usize);
+            // Rejection sampling with set-backed membership: the
+            // accept/reject decisions (and so the RNG draw order, which
+            // the downstream kind draws and the Python transliteration's
+            // seed-2 golden both depend on) are identical to the naive
+            // linear-scan version, without the O(want·horizon) scans.
+            let mut seen = std::collections::HashSet::with_capacity(want);
             let mut seqs: Vec<u64> = Vec::with_capacity(want);
             while seqs.len() < want {
                 let c = 1 + rng.next_u64() % horizon;
-                if !seqs.contains(&c) {
+                if seen.insert(c) {
                     seqs.push(c);
                 }
             }

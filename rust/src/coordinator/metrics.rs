@@ -41,8 +41,9 @@ pub struct RequestRecord {
 /// conservation invariant the chaos suite pins:
 /// `completed + failed + pending == submitted` at every instant, with
 /// `pending == 0` after a drained shutdown. Requeues (leader death,
-/// dropped responses) are counted separately — a requeued unit is still
-/// pending, never lost.
+/// dropped responses) are counted separately and leave the invariant
+/// untouched — a requeued unit stays pending until it retires as
+/// completed, or as failed when no live device remains to re-serve it.
 #[derive(Clone, Debug, Default)]
 pub struct TenantStats {
     pub name: String,
@@ -57,8 +58,12 @@ pub struct TenantStats {
     /// Units whose response channel was dropped (panicked leader unit,
     /// or no live device left to serve a requeue).
     pub failed: u64,
-    /// Requeue events (fault-killed or dropped units re-served). One
-    /// unit can be requeued more than once.
+    /// Re-placement events: any unit moved off a dead or killed leader
+    /// (whether it was in flight, in transit, or still queued on that
+    /// device) plus drop-response re-serves. Counts the event, not the
+    /// outcome — a unit spilled when no live device remains is counted
+    /// here and then terminally fails; one unit can be requeued more
+    /// than once.
     pub requeued: u64,
     /// Units admitted but not yet completed/failed (snapshot depth:
     /// quota backlog + device queues + in-flight).

@@ -1372,8 +1372,12 @@ fn leader_loop(
             match fault {
                 Some(FaultKind::LeaderKill) => {
                     // This leader dies before executing the tagged unit:
-                    // it and the rest of the batch go back to the router.
-                    let mut rq = vec![unit];
+                    // it, any drop-tagged units already collected this
+                    // batch, and the rest of the batch go back to the
+                    // router (in batch order, so requeue-at-front
+                    // preserves it).
+                    let mut rq = std::mem::take(&mut dropped);
+                    rq.push(unit);
                     rq.extend(it.by_ref().map(|(u, _)| u));
                     killed = Some(rq);
                     break;

@@ -304,6 +304,47 @@ fn dropped_response_is_served_exactly_once_and_bit_exact() {
     ));
 }
 
+/// Regression: a DropResponse collected early in a batch must ride the
+/// LeaderKill requeue when the same leader dies later in that batch.
+/// The lost variant leaked the dropped unit entirely — no reply, router
+/// in-flight window never retired (shutdown drain hangs), tenant
+/// conservation broken.
+#[test]
+fn drop_then_kill_in_same_batch_loses_nothing() {
+    // Forward clock: seq 1 = busy unit (no fault), seq 2 = drop,
+    // seq 3 = kill. The busy unit's real functional matmul occupies the
+    // leader while the router forwards the drop- and kill-tagged units,
+    // so they drain into one leader batch; sort_key ties break on unit
+    // id, keeping the drop ahead of the kill.
+    let plan = FaultPlan::single(1, 0, 2, FaultKind::DropResponse)
+        .with_event(0, 3, FaultKind::LeaderKill);
+    let c = Coordinator::start(CoordinatorOptions {
+        gen: Generation::Xdna,
+        backend: Backend::Functional,
+        chaos: Some(plan),
+        ..Default::default()
+    });
+    let busy = GemmShape::new("busy", 256, 256, 256, Precision::I8I8);
+    let r0 = c.submit(GemmRequest::sim(busy)).unwrap();
+    let r1 = c.submit(GemmRequest::sim(small("dropped", Precision::I8I8))).unwrap();
+    let r2 = c.submit(GemmRequest::sim(small("killed", Precision::I8I8))).unwrap();
+    r0.recv().expect("busy unit answered");
+    r1.recv().expect("dropped unit re-served despite the same-batch kill");
+    r2.recv().expect("killed unit re-served");
+    let m = c.shutdown().unwrap();
+    assert!(m.conserves(), "drop+kill in one batch must not leak accounting");
+    assert_eq!(m.tenants[0].completed, 3);
+    assert_eq!(m.tenants[0].failed, 0);
+    assert_eq!(m.tenants[0].pending, 0);
+    assert_eq!(m.count(), 3, "each unit leaves exactly one record");
+    assert_eq!(m.fault_log().len(), 2, "both scheduled faults fired");
+    assert!(
+        m.total_requeued() >= 2,
+        "the dropped and the killed unit both requeued ({} requeues)",
+        m.total_requeued()
+    );
+}
+
 #[test]
 fn dma_stall_inflates_only_the_tagged_unit() {
     let stall = 0.25; // seconds — dwarfs any 64^3 device time
