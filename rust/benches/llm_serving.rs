@@ -1,0 +1,100 @@
+//! ISSUE 7 acceptance artifact: continuous-batching LLM serving.
+//!
+//! Runs the same open-loop Poisson load twice per generation — coalesced
+//! decode rounds (one `[S, K]·[K, N]` chain per device per round, skinny
+//! design class) vs the per-session M=1 baseline — and asserts the
+//! coalescing speedup on decode device time, where both modes pay the
+//! prefill and the prefill↔decode reconfigurations identically. Time is
+//! virtual, so tokens/s and the p50/p99 token latencies are
+//! deterministic; the wall clock only bounds the runtime itself.
+//!
+//! `LLM_SESSIONS` scales the load (CI smoke uses the default);
+//! `BENCH_JSON` emits the machine-readable record `scripts/bench.sh`
+//! folds into `BENCH_PR7.json`.
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::coordinator::{CoordinatorOptions, LlmOptions};
+use xdna_gemm::harness;
+use xdna_gemm::util::bench::Bench;
+use xdna_gemm::workload::llm::LlmLoad;
+use xdna_gemm::workload::TransformerConfig;
+
+fn main() {
+    let sessions: usize = std::env::var("LLM_SESSIONS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12);
+    let b = Bench::new("llm_serving");
+
+    // A mid-size decode-heavy model: large enough that a decode forward
+    // pass is layer-dominated, small enough that the uncoalesced
+    // baseline (hundreds of M=1 chains) stays fast in debug CI.
+    let load = LlmLoad {
+        model: TransformerConfig {
+            n_layers: 4,
+            d_model: 512,
+            d_ffn: 1024,
+            vocab: 2048,
+            seq: 256,
+            ..Default::default()
+        },
+        sessions,
+        // Arrivals land inside the first prefill's cold design load, so
+        // sessions genuinely overlap and decode rounds coalesce.
+        arrival_rate: 5000.0,
+        decode_tokens: (8, 24),
+        seed: 7,
+    };
+
+    for gen in [Generation::Xdna2, Generation::Xdna] {
+        let run = |coalesce: bool| {
+            let opts = LlmOptions { load, coalesce, ..Default::default() };
+            let (report, metrics) =
+                harness::serve_llm(CoordinatorOptions::fleet(vec![gen]), &opts)
+                    .expect("serving run");
+            assert!(report.conserved(), "{gen}: token conservation");
+            assert_eq!(report.tokens_failed, 0, "{gen}: lost tokens");
+            assert_eq!(report.tokens_pending, 0, "{gen}: undrained tokens");
+            assert_eq!(report.sessions_completed, report.sessions);
+            assert!(metrics.conserves(), "{gen}: fleet tenant conservation");
+            report
+        };
+        let co = run(true);
+        let un = run(false);
+        println!("[{gen}] {}", co.summary());
+        println!("[{gen}] {}", un.summary());
+        assert_eq!(co.tokens_completed, un.tokens_completed, "{gen}: same work");
+        assert!(co.mean_batch > 2.0, "{gen}: no session overlap ({:.1})", co.mean_batch);
+
+        // The pinned acceptance number: coalescing S sessions into one
+        // M=S chain cuts decode device time ~S× (every decode M pads to
+        // the same native M = SKINNY_M_MAX GEMM).
+        let speedup = un.decode_busy_s / co.decode_busy_s;
+        assert!(
+            speedup >= 2.0,
+            "{gen}: coalescing decode speedup only {speedup:.2}x"
+        );
+        assert!(co.makespan_s < un.makespan_s, "{gen}: makespan must improve");
+
+        let g = gen.name();
+        b.throughput(&format!("llm_tokens_per_s_{g}"), co.tokens_per_s, "tok/s");
+        b.throughput(
+            &format!("llm_token_p50_ms_{g}"),
+            co.token_lat_p50_s.expect("completed tokens") * 1e3,
+            "ms",
+        );
+        b.throughput(
+            &format!("llm_token_p99_ms_{g}"),
+            co.token_lat_p99_s.expect("completed tokens") * 1e3,
+            "ms",
+        );
+        b.throughput(
+            &format!("llm_ttft_p50_ms_{g}"),
+            co.ttft_p50_s.expect("completed sessions") * 1e3,
+            "ms",
+        );
+        b.throughput(&format!("llm_coalesce_speedup_{g}"), speedup, "x");
+        b.throughput(&format!("llm_mean_batch_{g}"), co.mean_batch, "sessions/round");
+    }
+    b.finish();
+}

@@ -81,7 +81,8 @@ fn main() {
     }
     let fleet_tops = m.fleet_tops();
     let sustained = m.device_tops();
-    let p99_device_ms = m.device_time_percentile(99.0) * 1e3;
+    let p99_device_ms =
+        m.device_time_percentile(99.0).expect("soak completed ops, so p99 exists") * 1e3;
     assert!(
         sustained >= 3.0,
         "sustained TOPS collapsed under faults: {sustained:.2}"

@@ -231,6 +231,43 @@ pub fn balanced_config(gen: Generation, p: Precision) -> TilingConfig {
     .expect("paper configs are valid")
 }
 
+/// The largest problem-M the skinny design class targets: coalesced
+/// decode batches of up to 64 tokens (ISSUE 7). Shapes with `m` at or
+/// below this route to [`skinny_balanced_config`]-derived designs; the
+/// router's [`crate::coordinator::DesignKey`] keys on the class.
+pub const SKINNY_M_MAX: usize = 64;
+
+/// Dedicated skinny-M balanced configurations for coalesced decode
+/// batches (M ≈ 8–64). The paper's balanced points assume M is large —
+/// e.g. the XDNA2 int8 design's native M is 144·4 = 576, so an M=33
+/// decode batch pads 17×. These designs fix the kernel M-tile at 16
+/// (native M = 16·4 = 64, one `SKINNY_M_MAX` block) and keep the wide
+/// design's K/N kernel shape and `k_mt`, which stays valid by strict
+/// monotonicity: shrinking `m_ct` only shrinks the A/C L1 buffers and
+/// the A/C L2 footprints against an already-valid point.
+///
+/// Note these kernels are *inherently* DMA-bound — Eq. 4 needs
+/// `m_ct ≳ 56` on XDNA2 int8 to cover the B stream — so unlike the wide
+/// table there is no compute-bound balanced point to find; the skinny
+/// search (`optimizer::optimize_skinny`) confirms the landscape is flat
+/// (B traffic dominates at M ≤ 64) and these picks sit on its plateau.
+pub fn skinny_balanced_config(gen: Generation, p: Precision) -> TilingConfig {
+    let wide = balanced_config(gen, p);
+    let spec = gen.spec();
+    TilingConfig::new(
+        gen,
+        p,
+        16,
+        wide.kernel.k_ct,
+        wide.kernel.n_ct,
+        wide.k_mt,
+        spec.array_rows,
+        spec.shim_cols,
+        Layout::ColMajor,
+    )
+    .expect("skinny configs shrink a valid wide config")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +311,28 @@ mod tests {
                 let cfg = balanced_config(gen, p);
                 assert_eq!(cfg.m_rows, 4);
                 assert_eq!(cfg.n_cols, gen.spec().shim_cols);
+            }
+        }
+    }
+
+    #[test]
+    fn skinny_configs_valid_and_one_block_covers_the_class() {
+        for gen in Generation::ALL {
+            for p in Precision::ALL_EXTENDED {
+                let cfg = skinny_balanced_config(gen, p);
+                let (nm, _, _) = cfg.native();
+                assert_eq!(nm, SKINNY_M_MAX, "{gen} {p:?}: native M is one skinny block");
+                // The whole point: a decode batch pads dramatically less
+                // than under the wide design.
+                let wide = balanced_config(gen, p);
+                for m in [8, 33, 64] {
+                    let skinny_eff = cfg.padding_efficiency(m, 768, 768);
+                    let wide_eff = wide.padding_efficiency(m, 768, 768);
+                    assert!(
+                        skinny_eff > 2.0 * wide_eff,
+                        "{gen} {p:?} M={m}: skinny {skinny_eff:.3} vs wide {wide_eff:.3}"
+                    );
+                }
             }
         }
     }

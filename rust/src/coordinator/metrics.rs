@@ -135,12 +135,15 @@ impl Metrics {
         self.records.iter().filter(|r| r.reconfigured).count()
     }
 
-    pub fn latency_percentile(&self, p: f64) -> f64 {
+    /// `None` when no requests completed — an empty stream has no p99,
+    /// it must not report a perfect one (ISSUE 7 bugfix).
+    pub fn latency_percentile(&self, p: f64) -> Option<f64> {
         let xs: Vec<f64> = self.records.iter().map(|r| r.host_latency_s).collect();
         stats::percentile(&xs, p)
     }
 
-    pub fn device_time_percentile(&self, p: f64) -> f64 {
+    /// `None` when no requests completed (see [`Self::latency_percentile`]).
+    pub fn device_time_percentile(&self, p: f64) -> Option<f64> {
         let xs: Vec<f64> = self.records.iter().map(|r| r.device_s).collect();
         stats::percentile(&xs, p)
     }
@@ -152,14 +155,23 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "{} requests | device {:.2} ms | {:.2} TOPS sustained | \
-             p50/p99 device {:.2}/{:.2} ms | {} reconfigurations",
+             p50/p99 device {}/{} ms | {} reconfigurations",
             self.count(),
             self.total_device_s() * 1e3,
             self.device_tops(),
-            self.device_time_percentile(50.0) * 1e3,
-            self.device_time_percentile(99.0) * 1e3,
+            fmt_ms(self.device_time_percentile(50.0), 2),
+            fmt_ms(self.device_time_percentile(99.0), 2),
             self.reconfigurations()
         )
+    }
+}
+
+/// Render an optional latency (seconds) as milliseconds, or `n/a` when
+/// there is no sample to rank (zero completed ops).
+fn fmt_ms(x: Option<f64>, prec: usize) -> String {
+    match x {
+        Some(v) => format!("{:.*}", prec, v * 1e3),
+        None => "n/a".to_string(),
     }
 }
 
@@ -253,8 +265,9 @@ impl FleetMetrics {
         self.devices.iter().all(|d| d.metrics.all_verified())
     }
 
-    /// Host-latency percentile over every record in the fleet.
-    pub fn latency_percentile(&self, p: f64) -> f64 {
+    /// Host-latency percentile over every record in the fleet (`None`
+    /// when no requests completed).
+    pub fn latency_percentile(&self, p: f64) -> Option<f64> {
         let xs: Vec<f64> = self
             .devices
             .iter()
@@ -263,8 +276,9 @@ impl FleetMetrics {
         stats::percentile(&xs, p)
     }
 
-    /// Device-time percentile over every record in the fleet.
-    pub fn device_time_percentile(&self, p: f64) -> f64 {
+    /// Device-time percentile over every record in the fleet (`None`
+    /// when no requests completed).
+    pub fn device_time_percentile(&self, p: f64) -> Option<f64> {
         let xs: Vec<f64> = self
             .devices
             .iter()
@@ -321,7 +335,9 @@ impl FleetMetrics {
     }
 
     /// Host-latency percentile restricted to one tenant's records.
-    pub fn tenant_latency_percentile(&self, tenant: usize, p: f64) -> f64 {
+    /// `None` when the tenant completed nothing — a zero-op tenant has
+    /// no p99, it must not report a perfect one (ISSUE 7 bugfix).
+    pub fn tenant_latency_percentile(&self, tenant: usize, p: f64) -> Option<f64> {
         let xs: Vec<f64> = self
             .devices
             .iter()
@@ -332,8 +348,10 @@ impl FleetMetrics {
         stats::percentile(&xs, p)
     }
 
-    /// Device-time percentile restricted to one tenant's records.
-    pub fn tenant_device_time_percentile(&self, tenant: usize, p: f64) -> f64 {
+    /// Device-time percentile restricted to one tenant's records
+    /// (`None` when the tenant completed nothing — see
+    /// [`Self::tenant_latency_percentile`]).
+    pub fn tenant_device_time_percentile(&self, tenant: usize, p: f64) -> Option<f64> {
         let xs: Vec<f64> = self
             .devices
             .iter()
@@ -394,11 +412,11 @@ impl FleetMetrics {
         }
         let _ = writeln!(
             s,
-            "latency: device p50/p95/p99 {:.3}/{:.3}/{:.3} ms | host p95 {:.3} ms",
-            self.device_time_percentile(50.0) * 1e3,
-            self.device_time_percentile(95.0) * 1e3,
-            self.device_time_percentile(99.0) * 1e3,
-            self.latency_percentile(95.0) * 1e3
+            "latency: device p50/p95/p99 {}/{}/{} ms | host p95 {} ms",
+            fmt_ms(self.device_time_percentile(50.0), 3),
+            fmt_ms(self.device_time_percentile(95.0), 3),
+            fmt_ms(self.device_time_percentile(99.0), 3),
+            fmt_ms(self.latency_percentile(95.0), 3)
         );
         if !self.chains.is_empty() {
             let _ = writeln!(
@@ -416,7 +434,7 @@ impl FleetMetrics {
                 let _ = writeln!(
                     s,
                     "  tenant {:>10} (prio {}, quota {}): {} submitted | {} completed | \
-                     {} failed | {} requeued | peak in-flight {} | p99 device {:.3} ms",
+                     {} failed | {} requeued | peak in-flight {} | p99 device {} ms",
                     t.name,
                     t.priority,
                     t.quota,
@@ -425,7 +443,7 @@ impl FleetMetrics {
                     t.failed,
                     t.requeued,
                     t.max_in_flight,
-                    self.tenant_device_time_percentile(i, 99.0) * 1e3
+                    fmt_ms(self.tenant_device_time_percentile(i, 99.0), 3)
                 );
             }
         }
@@ -598,11 +616,40 @@ mod tests {
         };
         assert!((fm.tenant_ops(0) - 4e9).abs() < 1.0);
         assert!((fm.tenant_ops(1) - 1e9).abs() < 1.0);
-        assert!((fm.tenant_device_time_percentile(1, 99.0) - 0.010).abs() < 1e-12);
+        assert!((fm.tenant_device_time_percentile(1, 99.0).unwrap() - 0.010).abs() < 1e-12);
         assert!(fm.tenant("a").is_some() && fm.tenant("zzz").is_none());
         assert!(fm.conserves());
         let s = fm.summary();
         assert!(s.contains("tenant"), "multi-tenant runs list tenants: {s}");
+    }
+
+    #[test]
+    fn zero_op_tenant_has_no_percentile_not_a_perfect_one() {
+        // Regression (ISSUE 7): a tenant with zero completed ops used to
+        // report p99 = 0.0 ms — indistinguishable from "infinitely fast".
+        let mut d0 = Metrics::default();
+        d0.push(rec(1, 0, 0.010, 1e9, false)); // tenant 0 only
+        let fm = FleetMetrics {
+            devices: vec![DeviceMetrics {
+                gen: Generation::Xdna2,
+                metrics: d0,
+                cache: CacheStats::default(),
+            }],
+            tenants: vec![
+                TenantStats { name: "busy".into(), submitted: 1, completed: 1, ..Default::default() },
+                TenantStats { name: "idle".into(), ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(fm.tenant_latency_percentile(1, 99.0), None);
+        assert_eq!(fm.tenant_device_time_percentile(1, 99.0), None);
+        assert!(fm.tenant_latency_percentile(0, 99.0).is_some());
+        // Fleet-wide empty case too: no records at all → None.
+        let empty = FleetMetrics::default();
+        assert_eq!(empty.latency_percentile(99.0), None);
+        assert_eq!(empty.device_time_percentile(99.0), None);
+        // And the summary renders the hole as n/a rather than 0.000.
+        assert!(fm.summary().contains("n/a"), "{}", fm.summary());
     }
 
     #[test]

@@ -40,15 +40,19 @@
 //! * [`fault`]   — the seeded, forward-counter-clocked fault plan.
 
 pub mod fault;
+pub mod llm;
 pub mod metrics;
 pub mod router;
 pub mod service;
 
 pub use fault::{FaultEvent, FaultKind, FaultPlan, FaultRecord};
+pub use llm::{serve_llm, LlmOptions, LlmReport};
 pub use metrics::{
     ChainRecord, DeviceMetrics, FleetMetrics, Metrics, RequestRecord, TenantStats,
 };
-pub use router::{CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter, RouteKind};
+pub use router::{
+    CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter, MClass, RouteKind,
+};
 pub use service::{
     expand_mix, functional_a, functional_b, functional_inputs, parse_mix, parse_tenants,
     Backend, ChainResponse, ChainStaging, Coordinator, CoordinatorOptions, GemmRequest,

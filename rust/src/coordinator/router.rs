@@ -12,10 +12,41 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::arch::{balanced_config, Generation};
+use crate::arch::{balanced_config, skinny_balanced_config, Generation, SKINNY_M_MAX};
 use crate::dtype::{Layout, Precision};
 use crate::tiling::TilingConfig;
 use crate::workload::GemmShape;
+
+/// Problem-M design class (ISSUE 7): the paper's balanced points assume
+/// a large M (native M is 320–576 depending on generation/precision), so
+/// a coalesced decode batch (M ≈ 8–64) would pad 5–17× under them.
+/// Shapes with `m <= SKINNY_M_MAX` key on dedicated skinny designs
+/// ([`crate::arch::skinny_balanced_config`]) instead — a distinct
+/// residency/affinity bucket, exactly like a precision or layout change.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum MClass {
+    /// Decode-batch class: `m <= SKINNY_M_MAX` (64).
+    Skinny,
+    /// The paper's large-M regime (prefill GEMMs, Tables 2–3 shapes).
+    Wide,
+}
+
+impl MClass {
+    /// Classify a problem M.
+    pub fn of_m(m: usize) -> MClass {
+        if m <= SKINNY_M_MAX {
+            MClass::Skinny
+        } else {
+            MClass::Wide
+        }
+    }
+
+    /// Classify a tiling config by its native M (what one array pass
+    /// covers): skinny designs have native M = `SKINNY_M_MAX`.
+    pub fn of_config(cfg: &TilingConfig) -> MClass {
+        MClass::of_m(cfg.native().0)
+    }
+}
 
 /// What identifies a loaded NPU design: same-key requests reuse the
 /// configuration, changing only the cheap per-size parameters
@@ -24,13 +55,20 @@ use crate::workload::GemmShape;
 pub struct DesignKey {
     pub precision: Precision,
     pub b_layout: Layout,
+    /// Skinny (decode-batch) vs wide (prefill) design class.
+    pub m_class: MClass,
 }
 
 impl DesignKey {
-    /// The design a request needs: its precision/layout bucket
+    /// The design a request needs: its precision/layout/M-class bucket
     /// (canonicalized — see [`Self::normalized`]).
     pub fn for_shape(shape: &GemmShape) -> DesignKey {
-        DesignKey { precision: shape.precision, b_layout: shape.b_layout }.normalized()
+        DesignKey {
+            precision: shape.precision,
+            b_layout: shape.b_layout,
+            m_class: MClass::of_m(shape.m),
+        }
+        .normalized()
     }
 
     /// The canonical key for design derivation: bfp16 has exactly one
@@ -104,7 +142,9 @@ impl DesignCache {
         let mut c = DesignCache::with_capacity(gen, 0);
         for p in Precision::ALL {
             for layout in [Layout::RowMajor, Layout::ColMajor] {
-                c.warm(DesignKey { precision: p, b_layout: layout });
+                for m_class in [MClass::Wide, MClass::Skinny] {
+                    c.warm(DesignKey { precision: p, b_layout: layout, m_class });
+                }
             }
         }
         c
@@ -149,6 +189,16 @@ impl DesignCache {
         self.lru.iter().copied().collect()
     }
 
+    /// The balanced default for a key: wide keys get the paper's Tables
+    /// 2–3 points, skinny keys the dedicated decode-batch designs.
+    fn derive(&self, key: DesignKey) -> TilingConfig {
+        let base = match key.m_class {
+            MClass::Skinny => skinny_balanced_config(self.gen, key.precision),
+            MClass::Wide => balanced_config(self.gen, key.precision),
+        };
+        base.with_b_layout(key.b_layout)
+    }
+
     /// Resident design for `key`, deriving the balanced default on a miss
     /// (evicting the least-recently-used entry when bounded). Keys are
     /// canonicalized first ([`DesignKey::normalized`]), so no key can
@@ -160,7 +210,7 @@ impl DesignCache {
             self.touch(key);
         } else {
             self.stats.misses += 1;
-            self.admit(key, balanced_config(self.gen, key.precision).with_b_layout(key.b_layout));
+            self.admit(key, self.derive(key));
         }
         self.designs.get(&key).expect("resident after get")
     }
@@ -172,14 +222,20 @@ impl DesignCache {
         if self.designs.contains_key(&key) {
             self.touch(key);
         } else {
-            self.admit(key, balanced_config(self.gen, key.precision).with_b_layout(key.b_layout));
+            self.admit(key, self.derive(key));
         }
     }
 
     /// Override a design (autotuning results). Counts as a warm insert.
+    /// The key's M-class is inferred from the config's native M, so a
+    /// tuned skinny design lands in the skinny bucket.
     pub fn insert(&mut self, cfg: TilingConfig) {
         assert_eq!(cfg.gen, self.gen);
-        let key = DesignKey { precision: cfg.precision, b_layout: cfg.b_layout };
+        let key = DesignKey {
+            precision: cfg.precision,
+            b_layout: cfg.b_layout,
+            m_class: MClass::of_config(&cfg),
+        };
         if self.designs.contains_key(&key) {
             self.designs.insert(key, cfg);
             self.touch(key);
@@ -519,7 +575,11 @@ mod tests {
     use super::*;
 
     fn key(p: Precision, l: Layout) -> DesignKey {
-        DesignKey { precision: p, b_layout: l }
+        DesignKey { precision: p, b_layout: l, m_class: MClass::Wide }
+    }
+
+    fn skinny_key(p: Precision, l: Layout) -> DesignKey {
+        DesignKey { precision: p, b_layout: l, m_class: MClass::Skinny }
     }
 
     #[test]
@@ -537,6 +597,59 @@ mod tests {
         // Pre-warmed: every get above was a hit.
         assert_eq!(c.stats().misses, 0);
         assert_eq!(c.stats().hits, 9);
+    }
+
+    #[test]
+    fn skinny_keys_resolve_to_the_skinny_designs() {
+        // Both M-classes are pre-warmed; the skinny bucket returns the
+        // dedicated decode-batch design (m_ct = 16, native M = 64), not
+        // the wide paper point.
+        for gen in Generation::ALL {
+            let mut c = DesignCache::new(gen);
+            for p in Precision::ALL {
+                let skinny = *c.get(skinny_key(p, Layout::ColMajor));
+                let wide = *c.get(key(p, Layout::ColMajor));
+                assert_eq!(skinny.kernel.m_ct, 16, "{gen} {p:?}");
+                assert_eq!(skinny.native().0, crate::arch::SKINNY_M_MAX);
+                assert!(wide.native().0 > crate::arch::SKINNY_M_MAX);
+                // Same K/N kernel plan — only the M dimension shrinks.
+                assert_eq!(skinny.kernel.k_ct, wide.kernel.k_ct);
+                assert_eq!(skinny.kernel.n_ct, wide.kernel.n_ct);
+            }
+            assert_eq!(c.stats().misses, 0, "skinny class is pre-warmed too");
+        }
+    }
+
+    #[test]
+    fn for_shape_classifies_m_into_design_classes() {
+        use crate::workload::GemmShape;
+        for (m, want) in [(1, MClass::Skinny), (33, MClass::Skinny), (64, MClass::Skinny),
+            (65, MClass::Wide), (512, MClass::Wide)]
+        {
+            let s = GemmShape::new("t", m, 768, 768, Precision::I8I8);
+            assert_eq!(DesignKey::for_shape(&s).m_class, want, "M={m}");
+        }
+    }
+
+    #[test]
+    fn skinny_and_wide_are_distinct_affinity_buckets() {
+        // A decode batch and a prefill GEMM at the same precision/layout
+        // must not share residency: switching between them is a real
+        // array reconfiguration.
+        let mut r = FleetRouter::new(vec![Generation::Xdna2, Generation::Xdna2]);
+        let ops = 2.0 * 1024.0f64.powi(3);
+        let wide = key(Precision::I8I8, Layout::ColMajor);
+        let skinny = skinny_key(Precision::I8I8, Layout::ColMajor);
+        let d_wide = r.route(wide, ops);
+        let d_skinny = r.route(skinny, ops);
+        assert_ne!(d_wide.device, d_skinny.device, "distinct designs split the fleet");
+        assert_eq!(r.route(skinny, ops).kind, RouteKind::Affinity);
+        // DeviceState accounting: swapping classes costs a reconfig.
+        let mut dev = DeviceState::default();
+        let gen = Generation::Xdna2;
+        assert!(dev.switch_to(gen, wide) > 0.0);
+        assert!(dev.switch_to(gen, skinny) > 0.0, "class switch reconfigures");
+        assert_eq!(dev.reconfigurations, 2);
     }
 
     #[test]

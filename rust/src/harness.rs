@@ -402,6 +402,23 @@ pub fn serve_chains(
     coord.shutdown()
 }
 
+/// Drive a coordinator fleet with the continuous-batching LLM serving
+/// runtime (DESIGN.md §13): prefill chains through the wide design
+/// class, per-round coalesced decode batches through the skinny class.
+/// Returns the serving report plus the fleet metrics after a drained
+/// shutdown. Shared by `xdna-gemm serve-llm`, the `llm_serving` bench,
+/// and the fleet tests.
+pub fn serve_llm(
+    opts: crate::coordinator::CoordinatorOptions,
+    llm: &crate::coordinator::LlmOptions,
+) -> crate::Result<(crate::coordinator::LlmReport, crate::coordinator::FleetMetrics)> {
+    use crate::coordinator::Coordinator;
+    let coord = Coordinator::start(opts);
+    let report = crate::coordinator::serve_llm(&coord, llm);
+    let metrics = coord.shutdown()?;
+    Ok((report?, metrics))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

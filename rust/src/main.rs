@@ -22,6 +22,16 @@
 //!                                             (multi-tenant admission and
 //!                                             seeded fault injection,
 //!                                             docs/serving.md)
+//! xdna-gemm serve-llm [--sessions S] [--rate R] [--decode-min A] [--decode-max B]
+//!                 [--seed SEED] [--devices D] [--mix xdna:xdna2] [--gen G]
+//!                 [--no-coalesce] [--max-batch M] [--precision P]
+//!                 [--seq S] [--layers L] [--d-model D] [--d-ffn F] [--vocab V]
+//!                                             continuous-batching LLM serving:
+//!                                             prefill chains (wide designs) +
+//!                                             coalesced decode rounds (skinny
+//!                                             designs), p50/p99 token latency
+//!                                             under open-loop Poisson load
+//!                                             (docs/serving.md)
 //! xdna-gemm exec [--gen G] [--precision P] [--m M] [--k K] [--n N]
 //!                [--threads T] [--iters I] [--rowmajor-b] [--bdchain]
 //!                [--no-pack]                  packed functional executor timing
@@ -58,7 +68,7 @@ use xdna_gemm::util::cli::Args;
 use xdna_gemm::workload::TransformerConfig;
 
 const USAGE: &str = "usage: xdna-gemm <table1|table2|table3|fig6|fig7|fig8|ablations|optimize|\
-                     simulate|exec|serve|plan|compile|artifacts> [options]";
+                     simulate|exec|serve|serve-llm|plan|compile|artifacts> [options]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -285,6 +295,59 @@ fn main() -> Result<()> {
             };
             let m = harness::serve_trace(opts, &trace, n)?;
             println!("{}", m.summary());
+        }
+        "serve-llm" => {
+            use xdna_gemm::coordinator::LlmOptions;
+            use xdna_gemm::workload::llm::LlmLoad;
+            let gen = parse_gen(args.get("gen").unwrap_or("xdna2"))?;
+            let n_devices = args.usize_opt("devices", 2)?;
+            if n_devices == 0 {
+                bail!("--devices must be at least 1");
+            }
+            let pattern = match args.get("mix") {
+                Some(s) => parse_mix(s)?,
+                None => vec![gen],
+            };
+            let devices = expand_mix(&pattern, n_devices);
+            let p = parse_precision(args.get("precision").unwrap_or("i8i8"))?;
+            let default_load = LlmLoad::default();
+            let model = TransformerConfig {
+                precision: p,
+                seq: args.usize_opt("seq", default_load.model.seq)?,
+                n_layers: args.usize_opt("layers", default_load.model.n_layers)?,
+                d_model: args.usize_opt("d-model", default_load.model.d_model)?,
+                d_ffn: args.usize_opt("d-ffn", default_load.model.d_ffn)?,
+                vocab: args.usize_opt("vocab", default_load.model.vocab)?,
+            };
+            let load = LlmLoad {
+                model,
+                sessions: args.usize_opt("sessions", default_load.sessions)?,
+                arrival_rate: args.f64_opt("rate", default_load.arrival_rate)?,
+                decode_tokens: (
+                    args.usize_opt("decode-min", default_load.decode_tokens.0)?,
+                    args.usize_opt("decode-max", default_load.decode_tokens.1)?,
+                ),
+                seed: args.usize_opt("seed", default_load.seed as usize)? as u64,
+            };
+            if load.arrival_rate <= 0.0 {
+                bail!("--rate must be positive");
+            }
+            if load.decode_tokens.0 < 1 || load.decode_tokens.1 < load.decode_tokens.0 {
+                bail!("--decode-min/--decode-max must satisfy 1 <= min <= max");
+            }
+            let llm = LlmOptions {
+                load,
+                coalesce: !args.flag("no-coalesce"),
+                max_batch: args.usize_opt("max-batch", LlmOptions::default().max_batch)?,
+                ..Default::default()
+            };
+            let opts = CoordinatorOptions { gen, devices, ..Default::default() };
+            let (report, metrics) = harness::serve_llm(opts, &llm)?;
+            println!("{}", report.summary());
+            if !report.conserved() {
+                bail!("token conservation violated: {report:?}");
+            }
+            println!("{}", metrics.summary());
         }
         "plan" => {
             let gen = parse_gen(args.get("gen").unwrap_or("xdna2"))?;

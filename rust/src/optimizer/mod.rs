@@ -8,9 +8,16 @@
 //!   step with the `m_ct·n_ct`-maximizing objective, "measure" each
 //!   candidate on the calibrated simulator, and stop at the first
 //!   performance drop — compute and memory are then balanced.
+//!
+//! [`balanced::optimize_skinny`] runs the skinny-M variant of the search
+//! (ISSUE 7): kernel M fixed at `SKINNY_M_MAX / m_rows`, candidates
+//! ranked at the decode-batch M instead of the 4K square, Eq. 4 waived
+//! (every skinny kernel is DMA-bound by construction).
 
 pub mod balanced;
 pub mod ip;
 
-pub use balanced::{eval_size_for, optimize_balanced, BalancedOptions, BalancedResult};
+pub use balanced::{
+    eval_size_for, optimize_balanced, optimize_skinny, BalancedOptions, BalancedResult,
+};
 pub use ip::{solve_single_core, IpObjective, IpOptions, IpSolution};

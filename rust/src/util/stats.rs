@@ -18,23 +18,29 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation on the sorted copy (p in [0, 100]).
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
+///
+/// `None` when there is nothing to rank: an empty sample, or one that is
+/// all-NaN after filtering. NaN samples (a poisoned latency, a 0/0 rate)
+/// are dropped rather than sorted — `partial_cmp().unwrap()` on NaN used
+/// to panic the metrics rollup mid-serve, and `total_cmp` alone would
+/// instead rank NaN above +inf and corrupt the high percentiles.
+pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return None;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
+    Some(if lo == hi {
         v[lo]
     } else {
         v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
-    }
+    })
 }
 
-pub fn median(xs: &[f64]) -> f64 {
+pub fn median(xs: &[f64]) -> Option<f64> {
     percentile(xs, 50.0)
 }
 
@@ -54,9 +60,9 @@ mod tests {
     fn basics() {
         let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
         assert_eq!(mean(&xs), 3.0);
-        assert_eq!(median(&xs), 3.0);
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(median(&xs), Some(3.0));
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 100.0), Some(5.0));
         assert!((stddev(&xs) - 1.5811388).abs() < 1e-6);
         assert_eq!(min(&xs), 1.0);
         assert_eq!(max(&xs), 5.0);
@@ -65,7 +71,26 @@ mod tests {
     #[test]
     fn percentile_interpolates() {
         let xs = [0.0, 10.0];
-        assert_eq!(percentile(&xs, 50.0), 5.0);
-        assert_eq!(percentile(&xs, 25.0), 2.5);
+        assert_eq!(percentile(&xs, 50.0), Some(5.0));
+        assert_eq!(percentile(&xs, 25.0), Some(2.5));
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // Regression: a single NaN used to panic the sort. It must be
+        // filtered, not ranked (total_cmp would put it above +inf).
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 100.0), Some(3.0));
+        assert_eq!(percentile(&xs, 50.0), Some(2.0));
+        assert_eq!(median(&[f64::NAN, 5.0]), Some(5.0));
+    }
+
+    #[test]
+    fn empty_or_all_nan_percentile_is_none_not_zero() {
+        // Regression: empty samples used to report 0.0 — a tenant with
+        // zero completed ops claimed a perfect p99.
+        assert_eq!(percentile(&[], 99.0), None);
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 99.0), None);
+        assert_eq!(median(&[]), None);
     }
 }

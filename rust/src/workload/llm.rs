@@ -1,0 +1,191 @@
+//! LLM serving workload: sessions, open-loop Poisson arrivals, and the
+//! prefill/decode GEMM shapes of continuous batching (ISSUE 7).
+//!
+//! Serving an LLM splits each request into two GEMM regimes:
+//!
+//! * **prefill** — the whole prompt in one forward pass: the paper's
+//!   large-M shapes (`[512, 768] · [768, 2304]`-class), served through
+//!   the existing chain path where the balanced *wide* designs apply;
+//! * **decode** — one token per forward pass per session: `[1, K] ·
+//!   [K, N]` GEMVs that waste a wide design's array. Continuous
+//!   batching coalesces the concurrent sessions' next-token GEMVs into
+//!   one `[S, K] · [K, N]` GEMM per layer, which is exactly the
+//!   skinny-M design class (`S <= arch::SKINNY_M_MAX`).
+//!
+//! Everything here is deterministic from a seed: arrivals are an
+//! exponential-gap Poisson process over `util::rng::Rng`, and decode
+//! lengths are sampled from the same stream, so a load is reproducible
+//! across runs, platforms and the coalesced/uncoalesced baselines.
+
+use crate::plan::GemmChain;
+use crate::util::rng::Rng;
+use crate::workload::{GemmShape, TransformerConfig};
+
+/// One serving session: a prompt arriving at a virtual time, followed
+/// by autoregressive decode.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub id: usize,
+    /// Virtual arrival time (seconds) of the open-loop Poisson process.
+    pub arrival_s: f64,
+    /// Prompt length in tokens (the prefill GEMM's M).
+    pub prefill_tokens: usize,
+    /// Tokens to generate after prefill.
+    pub decode_tokens: usize,
+}
+
+/// A deterministic serving load: `sessions` sessions arriving at
+/// `arrival_rate` per virtual second, each decoding a seeded-uniform
+/// number of tokens in `decode_tokens`.
+#[derive(Clone, Copy, Debug)]
+pub struct LlmLoad {
+    pub model: TransformerConfig,
+    pub sessions: usize,
+    /// Open-loop Poisson arrival rate, sessions per virtual second.
+    pub arrival_rate: f64,
+    /// Inclusive range of decode lengths, sampled per session.
+    pub decode_tokens: (usize, usize),
+    pub seed: u64,
+}
+
+impl Default for LlmLoad {
+    fn default() -> Self {
+        LlmLoad {
+            // The prefill default stays the paper-class [512,768]x[768,*]
+            // shape; the lm_head vocab is trimmed so a decode forward
+            // pass is layer-dominated like production serving stacks
+            // (the full 50k-vocab head would be one GEMM outweighing
+            // all 12 layers at M <= 64).
+            model: TransformerConfig { vocab: 4096, ..Default::default() },
+            sessions: 16,
+            arrival_rate: 4.0,
+            decode_tokens: (8, 32),
+            seed: 7,
+        }
+    }
+}
+
+impl LlmLoad {
+    /// Materialize the deterministic session list. Arrivals are sorted
+    /// by construction (cumulative exponential gaps).
+    pub fn sessions(&self) -> Vec<SessionSpec> {
+        assert!(self.arrival_rate > 0.0, "arrival rate must be positive");
+        let (lo, hi) = self.decode_tokens;
+        assert!(lo >= 1 && hi >= lo, "decode token range must be 1 <= lo <= hi");
+        let mut rng = Rng::seeded(self.seed ^ 0x11f3_77a9);
+        let mut t = 0.0;
+        (0..self.sessions)
+            .map(|id| {
+                // Exponential inter-arrival gap: -ln(1-U)/rate. `f64()`
+                // is in [0,1), so 1-U is in (0,1] and ln is finite.
+                t += -(1.0 - rng.f64()).ln() / self.arrival_rate;
+                let decode_tokens = lo + rng.below(hi - lo + 1);
+                SessionSpec {
+                    id,
+                    arrival_s: t,
+                    prefill_tokens: self.model.seq,
+                    decode_tokens,
+                }
+            })
+            .collect()
+    }
+
+    /// Total decode tokens across all sessions (the conservation
+    /// denominator: completed + failed + pending must equal this).
+    pub fn total_decode_tokens(&self) -> usize {
+        self.sessions().iter().map(|s| s.decode_tokens).sum()
+    }
+}
+
+/// The prefill forward pass as one chain: every layer's four GEMMs plus
+/// the lm_head, with producer→consumer edges auto-detected. One chain —
+/// not one per layer — so the whole prompt lands on a single device and
+/// the session's KV cache is device-resident from the first token.
+pub fn prefill_chain(model: &TransformerConfig, name: &str) -> GemmChain {
+    GemmChain::detect(name, &model.trace())
+}
+
+/// One decode forward step for a coalesced batch of `m` sessions: the
+/// per-layer GEMM trace at M = m. With `m = 1` this is the uncoalesced
+/// per-session GEMV sequence; with `m = S` it is the continuous-batching
+/// step where S sessions' next tokens share every weight stream.
+pub fn decode_step_shapes(model: &TransformerConfig, m: usize, prefix: &str) -> Vec<GemmShape> {
+    let batched = TransformerConfig { seq: m, ..*model };
+    batched
+        .trace()
+        .into_iter()
+        .map(|g| GemmShape { name: format!("{prefix}.{}", g.name), ..g })
+        .collect()
+}
+
+/// [`decode_step_shapes`] as a single chain (edges auto-detected), the
+/// unit the serving runtime submits per device per decode round.
+pub fn decode_step_chain(model: &TransformerConfig, m: usize, name: &str) -> GemmChain {
+    GemmChain::detect(name, &decode_step_shapes(model, m, name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SKINNY_M_MAX;
+    use crate::coordinator::{DesignKey, MClass};
+
+    #[test]
+    fn arrivals_are_deterministic_sorted_and_rate_scaled() {
+        let load = LlmLoad { sessions: 64, ..Default::default() };
+        let a = load.sessions();
+        let b = load.sessions();
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "non-deterministic");
+            assert_eq!(x.decode_tokens, y.decode_tokens);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s, "arrivals out of order");
+        }
+        // Mean inter-arrival ~ 1/rate (loose: 64 samples).
+        let mean_gap = a.last().unwrap().arrival_s / 64.0;
+        assert!(
+            (0.5 / load.arrival_rate..2.0 / load.arrival_rate).contains(&mean_gap),
+            "mean gap {mean_gap} vs 1/rate {}",
+            1.0 / load.arrival_rate
+        );
+        // A different seed moves the arrivals.
+        let other = LlmLoad { seed: 99, ..load }.sessions();
+        assert!(a.iter().zip(&other).any(|(x, y)| x.arrival_s != y.arrival_s));
+    }
+
+    #[test]
+    fn decode_lengths_cover_the_range() {
+        let load = LlmLoad { sessions: 256, decode_tokens: (4, 6), ..Default::default() };
+        let lens: Vec<usize> = load.sessions().iter().map(|s| s.decode_tokens).collect();
+        assert!(lens.iter().all(|&l| (4..=6).contains(&l)));
+        for want in 4..=6 {
+            assert!(lens.contains(&want), "256 samples never hit {want}");
+        }
+        assert_eq!(load.total_decode_tokens(), lens.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn decode_step_is_skinny_class_and_prefill_is_wide() {
+        let model = LlmLoad::default().model;
+        for m in [1, 8, SKINNY_M_MAX] {
+            for g in decode_step_shapes(&model, m, "r0") {
+                assert_eq!(g.m, m);
+                assert_eq!(DesignKey::for_shape(&g).m_class, MClass::Skinny, "{}", g.name);
+            }
+        }
+        let chain = decode_step_chain(&model, 8, "r0");
+        assert_eq!(chain.len(), 4 * model.n_layers + 1);
+        // Same-layer ffn edges fuse; cross-layer residual edges too
+        // (ffn_down's N == next qkv's K == d_model, same M).
+        assert!(chain.edges() >= 2 * model.n_layers);
+
+        let pre = prefill_chain(&model, "s0.prefill");
+        assert_eq!(pre.len(), 4 * model.n_layers + 1);
+        for op in &pre.ops {
+            assert_eq!(op.shape.m, model.seq);
+            assert_eq!(DesignKey::for_shape(&op.shape).m_class, MClass::Wide);
+        }
+    }
+}

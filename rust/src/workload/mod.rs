@@ -2,6 +2,8 @@
 //! (transformer / MLP inference layers), GGML-style shape import, and the
 //! Figs. 7–8 roofline sweep generator.
 
+pub mod llm;
+
 use crate::dtype::{Layout, Precision};
 use crate::tiling::TilingConfig;
 use crate::util::rng::Rng;
@@ -18,7 +20,16 @@ pub struct GemmShape {
 }
 
 impl GemmShape {
+    /// Panics on a zero dimension: a degenerate GEMM has no ops and
+    /// divides by zero in `padding_efficiency`/TOPS math downstream, so
+    /// it is rejected at construction (ISSUE 7 bugfix). Shapes arriving
+    /// from external text go through [`parse_trace`], which reports the
+    /// offending line as an `Err` instead.
     pub fn new(name: &str, m: usize, k: usize, n: usize, p: Precision) -> GemmShape {
+        assert!(
+            m > 0 && k > 0 && n > 0,
+            "GemmShape '{name}': zero dimension in {m}x{k}x{n} (all of M, K, N must be >= 1)"
+        );
         GemmShape {
             name: name.to_string(),
             m,
@@ -278,8 +289,16 @@ pub fn parse_trace(text: &str) -> anyhow::Result<Vec<GemmShape>> {
             anyhow::bail!("line {}: expected `name M K N precision [layout]`", lineno + 1);
         }
         let parse_dim = |s: &str, what: &str| -> anyhow::Result<usize> {
-            s.parse()
-                .map_err(|_| anyhow::anyhow!("line {}: bad {what} '{s}'", lineno + 1))
+            let v: usize = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("line {}: bad {what} '{s}'", lineno + 1))?;
+            if v == 0 {
+                anyhow::bail!(
+                    "line {}: {what} must be >= 1 (got 0; a zero-dimension GEMM has no work)",
+                    lineno + 1
+                );
+            }
+            Ok(v)
         };
         let precision = Precision::parse(toks[4]).ok_or_else(|| {
             anyhow::anyhow!("line {}: unknown precision '{}'", lineno + 1, toks[4])
@@ -358,6 +377,27 @@ blk0.ffn_down 512 11008 4096 bf16  # trailing comment
         assert!(parse_trace("x 1 2 3 i8i8 diagonal").is_err());
         // Comments and blanks alone are fine.
         assert!(parse_trace("# nothing\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_zero_dimensions_at_parse_time() {
+        // Regression (ISSUE 7): zero dims used to parse fine and then
+        // divide by zero in ops()/padding_efficiency downstream. The
+        // error must name the line and the dimension.
+        for (text, dim) in
+            [("x 0 2 3 i8i8", "M"), ("x 1 0 3 i8i8", "K"), ("x 1 2 0 i8i8", "N")]
+        {
+            let err = parse_trace(text).unwrap_err().to_string();
+            assert!(err.contains("line 1") && err.contains(dim), "{err}");
+        }
+        let err = parse_trace("ok 1 2 3 i8i8\nbad 4 0 6 bf16").unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains('K'), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "zero dimension")]
+    fn gemm_shape_new_rejects_zero_dimensions() {
+        let _ = GemmShape::new("bad", 512, 0, 768, Precision::I8I8);
     }
 
     #[test]

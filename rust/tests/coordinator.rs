@@ -4,7 +4,7 @@
 
 use xdna_gemm::arch::Generation;
 use xdna_gemm::coordinator::{
-    Coordinator, CoordinatorOptions, DesignKey, GemmRequest,
+    Coordinator, CoordinatorOptions, DesignKey, GemmRequest, MClass,
 };
 use xdna_gemm::dtype::{Layout, Precision};
 use xdna_gemm::harness;
@@ -116,7 +116,11 @@ fn mixed_generation_fleet_is_speed_weighted() {
 #[test]
 fn warmup_hides_reconfiguration_from_requests() {
     let c = Coordinator::start(CoordinatorOptions::default());
-    let key = DesignKey { precision: Precision::I8I16, b_layout: Layout::ColMajor };
+    let key = DesignKey {
+        precision: Precision::I8I16,
+        b_layout: Layout::ColMajor,
+        m_class: MClass::Wide,
+    };
     c.warm(key);
     let resp = c.call(GemmRequest::sim(shape("w", 2048, Precision::I8I16))).unwrap();
     assert!(!resp.reconfigured, "warmed design must be resident already");

@@ -94,6 +94,67 @@ fn balanced_winners_and_history_satisfy_capacity_rules_for_every_combination() {
 }
 
 #[test]
+fn wide_and_skinny_designs_validate_and_pad_correctly_at_decode_batch_m() {
+    // ISSUE 7 satellite: every shipped design — the wide balanced table
+    // AND the skinny decode-batch table — must be a valid placement for
+    // every generation × precision (bfp16 included), and padding any
+    // decode-class M (1, 8, 33, SKINNY_M_MAX) must land exactly on the
+    // design's native grid: minimal (one native-M row of CompTiles, one
+    // k_mt step, one native-N column beyond the problem at most) and
+    // block-aligned for bfp16.
+    use xdna_gemm::arch::{balanced_config, skinny_balanced_config, SKINNY_M_MAX};
+    use xdna_gemm::dtype_bfp16::BLOCK;
+    use xdna_gemm::tiling::round_up;
+
+    let probe = [(768usize, 2304usize), (256, 512), (3072, 768)];
+    for gen in Generation::ALL {
+        for p in Precision::ALL_EXTENDED {
+            let wide = balanced_config(gen, p);
+            let skinny = skinny_balanced_config(gen, p);
+            for (which, cfg) in [("wide", &wide), ("skinny", &skinny)] {
+                let ctx = format!("{gen}/{p} {which}");
+                assert_config_ok(cfg, &ctx);
+                assert_kernel_ok(gen, p, &cfg.kernel, false, &ctx);
+                let (nm, nk, nn) = cfg.native();
+                if p == Precision::Bfp16 {
+                    // bfp16 shares an exponent per 8 values along the
+                    // reduction: every staged K extent is whole blocks,
+                    // and B must stream column-major.
+                    assert_eq!(cfg.b_layout, Layout::ColMajor, "{ctx}");
+                    assert_eq!(cfg.kernel.k_ct % BLOCK, 0, "{ctx}");
+                    assert_eq!(nk % BLOCK, 0, "{ctx}");
+                }
+                for m in [1usize, 8, 33, SKINNY_M_MAX] {
+                    for (k, n) in probe {
+                        let (pm, pk, pn) = cfg.padded(m, k, n);
+                        assert_eq!(pm, round_up(m, nm), "{ctx} m={m}");
+                        assert_eq!(pk, round_up(k, nk), "{ctx} k={k}");
+                        assert_eq!(pn, round_up(n, nn), "{ctx} n={n}");
+                        assert!(pm >= m && pk >= k && pn >= n, "{ctx}");
+                        assert!(pm < m + nm && pk < k + nk && pn < n + nn, "{ctx}");
+                        let eff = cfg.padding_efficiency(m, k, n);
+                        assert!(eff > 0.0 && eff <= 1.0, "{ctx}: eff {eff}");
+                    }
+                }
+                // Every decode-class M pads to ONE native-M tile on the
+                // skinny design (its native M is SKINNY_M_MAX exactly) —
+                // the invariant that makes a coalesced M=S round cost the
+                // same device time as a single M=1 GEMV.
+                if which == "skinny" {
+                    assert_eq!(nm, SKINNY_M_MAX, "{ctx}");
+                    for m in [1usize, 8, 33, SKINNY_M_MAX] {
+                        assert_eq!(cfg.padded(m, 768, 768).0, SKINNY_M_MAX, "{ctx} m={m}");
+                    }
+                }
+            }
+            // The two classes genuinely differ where it matters: a wide
+            // design's native M exceeds the skinny cap.
+            assert!(wide.native().0 > SKINNY_M_MAX, "{gen}/{p}: wide is not wide");
+        }
+    }
+}
+
+#[test]
 fn paper_balanced_configs_are_reproducible_property_instances() {
     // The shipped designs are themselves instances of the property: a
     // randomized spot-check that with_b_layout / c_double_buffered

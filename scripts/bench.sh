@@ -1,20 +1,22 @@
 #!/usr/bin/env bash
-# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–6): run the
-# hotpath, chain_vs_isolated, bfp16_vs_bf16, graph_vs_chain and soak
-# benches with JSON recording enabled and merge them into
-# BENCH_PR6.json — GEMM/s, functional GB/s, packing/threading speedups,
+# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–7): run the
+# hotpath, chain_vs_isolated, bfp16_vs_bf16, graph_vs_chain, soak and
+# llm_serving benches with JSON recording enabled and merge them into
+# BENCH_PR7.json — GEMM/s, functional GB/s, packing/threading speedups,
 # the native-bfp16 vs bf16-emulation speedup, the graph compiler's
-# DAG-aware-schedule speedups, and the chaos-soak's sustained TOPS /
-# p99 / fault counters under a mixed two-tenant trace with injected
-# faults — so future PRs can diff against a machine-readable baseline.
+# DAG-aware-schedule speedups, the chaos-soak's sustained TOPS /
+# p99 / fault counters, and the continuous-batching LLM serving
+# tokens/s, p50/p99 token latency and coalescing speedup — so future
+# PRs can diff against a machine-readable baseline.
 #
-# usage: scripts/bench.sh [out.json]     (default: BENCH_PR6.json)
+# usage: scripts/bench.sh [out.json]     (default: BENCH_PR7.json)
 #        BENCH_MS=500 scripts/bench.sh   (longer per-case budget)
 #        SOAK_OPS=1500 scripts/bench.sh  (shorter soak horizon)
+#        LLM_SESSIONS=6 scripts/bench.sh (lighter serving load)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-out="${1:-BENCH_PR6.json}"
+out="${1:-BENCH_PR7.json}"
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
 
@@ -36,14 +38,17 @@ BENCH_JSON="$tmp/graph.json" cargo bench --bench graph_vs_chain
 echo "==> cargo bench --bench soak (SOAK_OPS=$SOAK_OPS)"
 BENCH_JSON="$tmp/soak.json" cargo bench --bench soak
 
+echo "==> cargo bench --bench llm_serving"
+BENCH_JSON="$tmp/llm.json" cargo bench --bench llm_serving
+
 echo "==> merging into $out"
 python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$tmp/bfp16.json" "$tmp/graph.json" \
-    "$tmp/soak.json" "$out" <<'PY'
+    "$tmp/soak.json" "$tmp/llm.json" "$out" <<'PY'
 import json
 import sys
 
-hot, chain, bfp, graph, soak, out = sys.argv[1:7]
-groups = [json.load(open(p)) for p in (hot, chain, bfp, graph, soak)]
+hot, chain, bfp, graph, soak, llm, out = sys.argv[1:8]
+groups = [json.load(open(p)) for p in (hot, chain, bfp, graph, soak, llm)]
 
 
 def thrpt(group, name):
@@ -54,12 +59,15 @@ def thrpt(group, name):
 
 
 summary = {
-    "artifact": "BENCH_PR6",
+    "artifact": "BENCH_PR7",
     "description": "packed+parallel functional executor vs re-streaming serial "
     "baseline, native bfp16 vs bf16 emulation on XDNA2, the graph "
     "compiler's DAG-aware fleet schedule vs isolated-dispatch and "
-    "single-device-chain baselines, and the two-tenant chaos soak "
-    "(sustained TOPS / p99 under seeded fault injection)",
+    "single-device-chain baselines, the two-tenant chaos soak "
+    "(sustained TOPS / p99 under seeded fault injection), and the "
+    "continuous-batching LLM serving runtime (tokens/s, p50/p99 token "
+    "latency, coalesced-vs-per-session decode speedup on both "
+    "generations)",
     "gemms_per_s": thrpt(groups[0], "executor_gemms_per_s"),
     "functional_gb_per_s": thrpt(groups[0], "executor_functional_gb_s"),
     "packing_speedup_serial": thrpt(groups[0], "executor_packing_speedup"),
@@ -79,6 +87,14 @@ summary = {
     "soak_p99_device_ms": thrpt(groups[4], "soak_p99_device_ms"),
     "soak_faults_fired": thrpt(groups[4], "soak_faults_fired"),
     "soak_requeues": thrpt(groups[4], "soak_requeues"),
+    "llm_tokens_per_s_xdna2": thrpt(groups[5], "llm_tokens_per_s_xdna2"),
+    "llm_token_p50_ms_xdna2": thrpt(groups[5], "llm_token_p50_ms_xdna2"),
+    "llm_token_p99_ms_xdna2": thrpt(groups[5], "llm_token_p99_ms_xdna2"),
+    "llm_coalesce_speedup_xdna2": thrpt(groups[5], "llm_coalesce_speedup_xdna2"),
+    "llm_tokens_per_s_xdna": thrpt(groups[5], "llm_tokens_per_s_xdna"),
+    "llm_token_p50_ms_xdna": thrpt(groups[5], "llm_token_p50_ms_xdna"),
+    "llm_token_p99_ms_xdna": thrpt(groups[5], "llm_token_p99_ms_xdna"),
+    "llm_coalesce_speedup_xdna": thrpt(groups[5], "llm_coalesce_speedup_xdna"),
     "groups": groups,
 }
 with open(out, "w") as f:
