@@ -1,0 +1,76 @@
+//! ISSUE 8 acceptance artifact: the cost of always-on integrity.
+//!
+//! Serves the paper's Table 2–3 GEMM sizes through the coordinator
+//! three times per generation — `--integrity off`, `abft`, `full` —
+//! and compares summed device seconds. The SimOnly backend charges the
+//! configured check on the device clock via the calibrated cost model
+//! (`sim::abft_check_seconds`), so the numbers are deterministic and
+//! the assertions are the PR's acceptance criteria:
+//!
+//! * ABFT adds ≤5% device time over integrity-off on both generations
+//!   (in practice ~0.01%: the checksum pass is O(mk+kn+mn) against the
+//!   GEMM's O(mkn)).
+//! * ABFT is ≥10x cheaper than the `verify:full` reference recompute —
+//!   the reason it can stay on under load while `full` cannot.
+//!
+//! `BENCH_JSON` emits the machine-readable record `scripts/bench.sh`
+//! folds into `BENCH_PR8.json`.
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::coordinator::{CoordinatorOptions, IntegrityMode};
+use xdna_gemm::harness;
+use xdna_gemm::util::bench::Bench;
+use xdna_gemm::workload::GemmShape;
+
+fn main() {
+    let b = Bench::new("abft_overhead");
+    for gen in [Generation::Xdna, Generation::Xdna2] {
+        let trace: Vec<GemmShape> = harness::TABLE23_PAPER
+            .iter()
+            .filter(|row| row.0 == gen)
+            .map(|&(_, p, _, _, _, (m, k, n), _)| {
+                GemmShape::new(&format!("{}_{}", gen.name(), p.name()), m, k, n, p)
+            })
+            .collect();
+        let run = |mode: IntegrityMode| {
+            let opts = CoordinatorOptions {
+                gen,
+                devices: vec![gen],
+                integrity: mode,
+                ..Default::default()
+            };
+            let m = harness::serve_trace(opts, &trace, 2 * trace.len()).expect("serve");
+            m.total_device_s()
+        };
+        let off = run(IntegrityMode::Off);
+        let abft = run(IntegrityMode::Abft);
+        let full = run(IntegrityMode::Full);
+        let abft_pct = 100.0 * (abft - off) / off;
+        let full_pct = 100.0 * (full - off) / off;
+        println!(
+            "[{gen}] device time: off {:.3} ms | abft {:.3} ms (+{abft_pct:.4}%) | \
+             full {:.3} ms (+{full_pct:.1}%)",
+            off * 1e3,
+            abft * 1e3,
+            full * 1e3
+        );
+        assert!(abft > off, "{gen}: the checksum cost must land on the device clock");
+        assert!(abft_pct <= 5.0, "{gen}: ABFT overhead {abft_pct:.4}% exceeds the 5% budget");
+        assert!(
+            full - off >= 10.0 * (abft - off),
+            "{gen}: ABFT must be >=10x cheaper than a full recompute \
+             (abft +{:.3e}s, full +{:.3e}s)",
+            abft - off,
+            full - off
+        );
+        let g = gen.name();
+        b.throughput(&format!("abft_overhead_pct_{g}"), abft_pct, "%");
+        b.throughput(&format!("full_verify_overhead_pct_{g}"), full_pct, "%");
+        b.throughput(
+            &format!("full_over_abft_cost_ratio_{g}"),
+            (full - off) / (abft - off),
+            "x",
+        );
+    }
+    b.finish();
+}

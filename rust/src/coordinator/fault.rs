@@ -40,6 +40,20 @@ pub enum FaultKind {
     /// response). The router requeues it at the front of the device
     /// queue, so the client still gets exactly one reply.
     DropResponse,
+    /// Silent data corruption (ISSUE 8): the tagged unit executes
+    /// normally, then bits of its completed C image (or the staged
+    /// chain tensor it feeds downstream) are flipped. Nothing crashes —
+    /// only an integrity check can see it. Detection and recovery are
+    /// the ABFT layer's job ([`crate::gemm::abft`]).
+    CorruptResult {
+        /// Word selector: the corrupted index is `word % c_words`, so
+        /// one event is meaningful for any result shape.
+        word: u64,
+        /// XOR mask applied to the selected word. Never a no-op:
+        /// [`crate::gemm::abft::corrupt_word`] degrades a zero mask to
+        /// bit 0 and masks bfp16 pad words to their live byte.
+        xor_mask: u32,
+    },
 }
 
 impl FaultKind {
@@ -50,6 +64,7 @@ impl FaultKind {
             FaultKind::DmaStall { .. } => "dma_stall",
             FaultKind::CacheStorm => "cache_storm",
             FaultKind::DropResponse => "drop_response",
+            FaultKind::CorruptResult { .. } => "corrupt_result",
         }
     }
 }
@@ -87,6 +102,13 @@ pub struct FaultPlan {
 /// the Python transliteration) so each device draws an independent
 /// stream from the same plan seed.
 pub const DEVICE_SALT: u64 = 0xA24B_AED4_963E_E407;
+
+/// Per-device salt for the **corruption** stream — deliberately distinct
+/// from [`DEVICE_SALT`] so arming [`FaultKind::CorruptResult`] events
+/// draws from an independent xoshiro stream and never shifts the
+/// fail-stop plan a seed already pins (the seed-2 golden below is
+/// byte-identical with and without corruption armed).
+pub const CORRUPT_SALT: u64 = 0xC3A5_C85C_97CB_3127;
 
 impl FaultPlan {
     /// A plan with no events (chaos disabled).
@@ -163,6 +185,72 @@ impl FaultPlan {
             .flatten()
             .filter(|e| e.kind == FaultKind::LeaderKill)
             .count()
+    }
+
+    /// Scheduled silent-corruption events.
+    pub fn corruptions(&self) -> usize {
+        self.events
+            .iter()
+            .flatten()
+            .filter(|e| matches!(e.kind, FaultKind::CorruptResult { .. }))
+            .count()
+    }
+
+    /// Arm `per_device` [`FaultKind::CorruptResult`] events per device on
+    /// top of this plan. The events are drawn from an independent
+    /// per-device stream (seeded with [`CORRUPT_SALT`]): fresh seqs are
+    /// rejection-sampled against the device's *existing* thresholds, so
+    /// corruption never lands on the same unit as a fail-stop fault, and
+    /// the existing schedule is not moved by a single draw. Deterministic
+    /// — mirrored by `corruption_events` in
+    /// `python/tests/test_integrity_model.py`.
+    pub fn with_corruption(
+        mut self,
+        seed: u64,
+        n_devices: usize,
+        horizon: u64,
+        per_device: usize,
+    ) -> FaultPlan {
+        let horizon = horizon.max(1);
+        if self.events.len() < n_devices {
+            self.events.resize(n_devices, Vec::new());
+        }
+        for d in 0..n_devices {
+            let salt = ((d as u64) + 1).wrapping_mul(CORRUPT_SALT);
+            let mut rng = Rng::seeded(seed.wrapping_add(salt));
+            let mut seen: std::collections::HashSet<u64> =
+                self.events[d].iter().map(|e| e.seq).collect();
+            let want = per_device.min((horizon as usize).saturating_sub(seen.len()));
+            let mut seqs: Vec<u64> = Vec::with_capacity(want);
+            while seqs.len() < want {
+                let c = 1 + rng.next_u64() % horizon;
+                if seen.insert(c) {
+                    seqs.push(c);
+                }
+            }
+            seqs.sort_unstable();
+            for seq in seqs {
+                let word = rng.next_u64();
+                let mask = rng.next_u64() as u32;
+                let xor_mask = if mask == 0 { 1 } else { mask };
+                let evs = &mut self.events[d];
+                let at = evs.partition_point(|e| e.seq < seq);
+                let kind = FaultKind::CorruptResult { word, xor_mask };
+                evs.insert(at, FaultEvent { seq, kind });
+            }
+        }
+        self
+    }
+
+    /// A pure silent-corruption plan (no fail-stop events).
+    pub fn corruption_only(
+        seed: u64,
+        n_devices: usize,
+        horizon: u64,
+        per_device: usize,
+    ) -> FaultPlan {
+        FaultPlan { events: vec![Vec::new(); n_devices] }
+            .with_corruption(seed, n_devices, horizon, per_device)
     }
 }
 
@@ -262,5 +350,79 @@ mod tests {
         assert_eq!(FaultKind::DmaStall { stall_s: 1e-3 }.name(), "dma_stall");
         assert_eq!(FaultKind::CacheStorm.name(), "cache_storm");
         assert_eq!(FaultKind::DropResponse.name(), "drop_response");
+        assert_eq!(FaultKind::CorruptResult { word: 0, xor_mask: 1 }.name(), "corrupt_result");
+    }
+
+    #[test]
+    fn corruption_golden_matches_python_and_never_moves_the_base_plan() {
+        // Pinned against test_integrity_model.py::test_corruption_plan_
+        // seed2_golden: the PR-6 seed-2 plan gains exactly two
+        // CorruptResult events per device, drawn from the CORRUPT_SALT
+        // stream, without moving a single existing event.
+        let base = FaultPlan::from_seed(2, 2, 32, 4);
+        let plan = base.clone().with_corruption(2, 2, 32, 2);
+        assert_eq!(plan.total_events(), base.total_events() + 4);
+        assert_eq!(plan.corruptions(), 4);
+        assert_eq!(plan.kills(), base.kills(), "fail-stop schedule untouched");
+        for d in 0..2 {
+            let base_evs = base.device_events(d);
+            let kept: Vec<FaultEvent> = plan.device_events(d)
+                .iter()
+                .copied()
+                .filter(|e| !matches!(e.kind, FaultKind::CorruptResult { .. }))
+                .collect();
+            assert_eq!(kept, base_evs, "device {d}: base events moved");
+        }
+        let corr = |d: usize| -> Vec<(u64, u64, u32)> {
+            plan.device_events(d)
+                .iter()
+                .filter_map(|e| match e.kind {
+                    FaultKind::CorruptResult { word, xor_mask } => {
+                        Some((e.seq, word, xor_mask))
+                    }
+                    _ => None,
+                })
+                .collect()
+        };
+        assert_eq!(
+            corr(0),
+            vec![
+                (21, 6898576805263037612, 0x1EDA_FEBC),
+                (29, 12113513064234870111, 0x9725_FF6F),
+            ]
+        );
+        assert_eq!(
+            corr(1),
+            vec![
+                (11, 10056184684129657251, 0xB1B3_60CB),
+                (30, 6101993186801645025, 0x7B16_0F40),
+            ]
+        );
+    }
+
+    #[test]
+    fn corruption_only_golden_seed7() {
+        // test_integrity_model.py::test_corruption_only_plan_seed7_golden
+        let plan = FaultPlan::corruption_only(7, 1, 16, 3);
+        let want = vec![
+            FaultEvent {
+                seq: 10,
+                kind: FaultKind::CorruptResult { word: 5158167014563121986, xor_mask: 0xA320_3E96 },
+            },
+            FaultEvent {
+                seq: 11,
+                kind: FaultKind::CorruptResult { word: 5166436897857171591, xor_mask: 0x545A_7A14 },
+            },
+            FaultEvent {
+                seq: 12,
+                kind: FaultKind::CorruptResult {
+                    word: 15423587528627081610,
+                    xor_mask: 0x49CA_CBA2,
+                },
+            },
+        ];
+        assert_eq!(plan.device_events(0), want);
+        assert_eq!(plan.corruptions(), 3);
+        assert_eq!(plan.kills(), 0);
     }
 }

@@ -233,7 +233,7 @@ pub fn serve_llm(coord: &Coordinator, opts: &LlmOptions) -> Result<LlmReport> {
                     let rx = coord.submit_chain_staged_for(
                         opts.tenant,
                         chain,
-                        ChainStaging { device: Some(d), a0: None },
+                        ChainStaging { device: Some(d), ..Default::default() },
                     );
                     in_flight.push((d, chunk.to_vec(), rx));
                 } else {
@@ -243,7 +243,7 @@ pub fn serve_llm(coord: &Coordinator, opts: &LlmOptions) -> Result<LlmReport> {
                         let rx = coord.submit_chain_staged_for(
                             opts.tenant,
                             chain,
-                            ChainStaging { device: Some(d), a0: None },
+                            ChainStaging { device: Some(d), ..Default::default() },
                         );
                         in_flight.push((d, vec![i], rx));
                     }
@@ -381,6 +381,31 @@ mod tests {
         let m = coord.shutdown().unwrap();
         let t = &m.tenants[0];
         assert_eq!(t.submitted, t.completed + t.failed);
+    }
+
+    #[test]
+    fn chaos_with_integrity_preserves_token_conservation() {
+        // Satellite fix (ISSUE 8): the serve-llm path used to drop the
+        // fault plan on the floor. A seeded chaos plan (kills, stalls,
+        // drops, result corruption) now rides the coordinator under
+        // serve_llm, and every requested token is still accounted
+        // exactly once — faults surface as requeues or visible
+        // failures, never as lost tokens.
+        use crate::coordinator::{FaultPlan, IntegrityMode};
+        let plan = FaultPlan::from_seed(2, 2, 48, 3).with_corruption(2, 2, 48, 2);
+        let coord = Coordinator::start(CoordinatorOptions {
+            devices: vec![Generation::Xdna2, Generation::Xdna],
+            chaos: Some(plan),
+            integrity: IntegrityMode::Abft,
+            ..Default::default()
+        });
+        let opts = LlmOptions { load: small_load(), ..Default::default() };
+        let r = serve_llm(&coord, &opts).unwrap();
+        assert!(r.conserved(), "{r:?}");
+        assert_eq!(r.tokens_pending, 0);
+        let m = coord.shutdown().unwrap();
+        assert!(!m.faults.is_empty(), "the plan must actually fire");
+        assert!(m.tenants.iter().all(|t| t.conserves()), "{:?}", m.tenants);
     }
 
     #[test]

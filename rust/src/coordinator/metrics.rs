@@ -15,6 +15,54 @@ use crate::util::stats;
 use super::fault::FaultRecord;
 use super::router::CacheStats;
 
+/// Result-integrity outcome of one served unit (ISSUE 8). Replaces the
+/// overloaded `verified: Option<bool>` tri-state: clients can now tell
+/// "never checked" apart from "checked, silently corrupted, and healed
+/// by verified recompute".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Integrity {
+    /// No integrity checking was enabled for this unit.
+    #[default]
+    NotChecked,
+    /// Every check the configured mode runs passed first try.
+    Passed,
+    /// A check failed and the unit was recomputed (`retries` attempts)
+    /// until it validated — the served result is clean.
+    Recovered {
+        /// Recompute attempts spent before the result validated.
+        retries: u32,
+    },
+    /// Checks kept failing past `max_integrity_retries`: the response
+    /// is surfaced as failed, never silently served.
+    Failed,
+}
+
+impl Integrity {
+    /// Whether the served result is trustworthy (checked-and-clean or
+    /// never checked; `Failed` is the only poisoned state).
+    pub fn ok(&self) -> bool {
+        *self != Integrity::Failed
+    }
+
+    /// Whether any integrity check ran on this unit.
+    pub fn checked(&self) -> bool {
+        *self != Integrity::NotChecked
+    }
+}
+
+/// One-release compatibility with the pre-ISSUE-8 `verified` tri-state:
+/// `NotChecked → None`, `Passed`/`Recovered → Some(true)`,
+/// `Failed → Some(false)`.
+impl From<Integrity> for Option<bool> {
+    fn from(i: Integrity) -> Option<bool> {
+        match i {
+            Integrity::NotChecked => None,
+            Integrity::Passed | Integrity::Recovered { .. } => Some(true),
+            Integrity::Failed => Some(false),
+        }
+    }
+}
+
 /// One completed request's accounting.
 #[derive(Clone, Debug)]
 pub struct RequestRecord {
@@ -28,13 +76,21 @@ pub struct RequestRecord {
     pub host_latency_s: f64,
     pub ops: f64,
     pub reconfigured: bool,
-    pub verified: Option<bool>,
+    /// Result-integrity outcome (ABFT and/or full reference verify).
+    pub integrity: Integrity,
     /// Chain id when the request arrived as part of a planned chain
     /// (`Coordinator::submit_chain`).
     pub chain: Option<u64>,
     /// Tenant index (`CoordinatorOptions::tenants`; 0 = the implicit
     /// default tenant).
     pub tenant: usize,
+}
+
+impl RequestRecord {
+    /// Legacy view of [`Self::integrity`] (kept one release).
+    pub fn verified(&self) -> Option<bool> {
+        self.integrity.into()
+    }
 }
 
 /// Per-tenant admission accounting (ISSUE 6 multi-model serving). The
@@ -71,12 +127,40 @@ pub struct TenantStats {
     /// High-water mark of concurrently in-flight units — the quota
     /// enforcement witness (`max_in_flight <= quota` when bounded).
     pub max_in_flight: u64,
+    /// Units whose results went through at least one integrity check.
+    pub integrity_checked: u64,
+    /// Checked units that validated first try.
+    pub integrity_passed: u64,
+    /// Checked units healed by verified recompute within the budget.
+    pub integrity_recovered: u64,
+    /// Checked units that exhausted the recompute budget (surfaced as
+    /// failed responses, never silently served).
+    pub integrity_failed: u64,
 }
 
 impl TenantStats {
-    /// The admission conservation invariant.
+    /// The admission conservation invariant, extended (ISSUE 8) with
+    /// integrity accounting: every checked unit is exactly one of
+    /// passed / recovered / failed — a corrupt result can neither
+    /// vanish nor be double-counted.
     pub fn conserves(&self) -> bool {
         self.completed + self.failed + self.pending == self.submitted
+            && self.integrity_checked
+                == self.integrity_passed + self.integrity_recovered + self.integrity_failed
+    }
+
+    /// Fold one served record's integrity outcome into the counters.
+    pub fn record_integrity(&mut self, i: Integrity) {
+        if !i.checked() {
+            return;
+        }
+        self.integrity_checked += 1;
+        match i {
+            Integrity::Passed => self.integrity_passed += 1,
+            Integrity::Recovered { .. } => self.integrity_recovered += 1,
+            Integrity::Failed => self.integrity_failed += 1,
+            Integrity::NotChecked => unreachable!("filtered above"),
+        }
     }
 }
 
@@ -149,7 +233,7 @@ impl Metrics {
     }
 
     pub fn all_verified(&self) -> bool {
-        self.records.iter().all(|r| r.verified != Some(false))
+        self.records.iter().all(|r| r.integrity.ok())
     }
 
     pub fn summary(&self) -> String {
@@ -325,6 +409,24 @@ impl FleetMetrics {
         self.tenants.iter().map(|t| t.requeued).sum()
     }
 
+    /// Fleet-wide integrity counters:
+    /// `(checked, passed, recovered, failed)` summed across tenants.
+    pub fn integrity_totals(&self) -> (u64, u64, u64, u64) {
+        self.tenants.iter().fold((0, 0, 0, 0), |acc, t| {
+            (
+                acc.0 + t.integrity_checked,
+                acc.1 + t.integrity_passed,
+                acc.2 + t.integrity_recovered,
+                acc.3 + t.integrity_failed,
+            )
+        })
+    }
+
+    /// Units healed by verified recompute across the fleet.
+    pub fn total_recovered(&self) -> u64 {
+        self.integrity_totals().2
+    }
+
     /// The fired-fault log in its canonical deterministic order:
     /// sorted by (device, seq). Two runs of the same seed and config
     /// must produce identical logs — pinned by `tests/chaos_props.rs`.
@@ -456,6 +558,14 @@ impl FleetMetrics {
                 self.total_requeued()
             );
         }
+        let (ichecked, ipassed, irecovered, ifailed) = self.integrity_totals();
+        if ichecked > 0 {
+            let _ = writeln!(
+                s,
+                "integrity: {ichecked} checked | {ipassed} passed | \
+                 {irecovered} recovered | {ifailed} failed"
+            );
+        }
         let _ = write!(
             s,
             "router: {} affinity hits / {} misses ({} spills) | hit rate {:.1}%",
@@ -481,7 +591,7 @@ mod tests {
             host_latency_s: device_s * 1.1,
             ops,
             reconfigured: reconf,
-            verified: Some(true),
+            integrity: Integrity::Passed,
             chain: None,
             tenant: 0,
         }
@@ -595,6 +705,77 @@ mod tests {
         assert!(t.conserves(), "requeues do not break conservation");
         let lost = TenantStats { submitted: 10, completed: 9, ..Default::default() };
         assert!(!lost.conserves(), "a lost unit must be visible");
+    }
+
+    #[test]
+    fn integrity_counters_fold_into_conservation() {
+        let mut t = TenantStats { name: "llm".into(), submitted: 4, ..Default::default() };
+        t.record_integrity(Integrity::NotChecked); // no-op
+        t.record_integrity(Integrity::Passed);
+        t.record_integrity(Integrity::Recovered { retries: 1 });
+        t.record_integrity(Integrity::Failed);
+        t.completed = 3;
+        t.failed = 1;
+        assert_eq!(
+            (t.integrity_checked, t.integrity_passed, t.integrity_recovered, t.integrity_failed),
+            (3, 1, 1, 1)
+        );
+        assert!(t.conserves());
+        // A checked unit that lands in no outcome bucket is a bug the
+        // invariant must catch.
+        t.integrity_checked += 1;
+        assert!(!t.conserves(), "orphaned integrity check must be visible");
+    }
+
+    #[test]
+    fn integrity_legacy_tristate_mapping() {
+        assert_eq!(Option::<bool>::from(Integrity::NotChecked), None);
+        assert_eq!(Option::<bool>::from(Integrity::Passed), Some(true));
+        assert_eq!(Option::<bool>::from(Integrity::Recovered { retries: 2 }), Some(true));
+        assert_eq!(Option::<bool>::from(Integrity::Failed), Some(false));
+        assert!(Integrity::Recovered { retries: 1 }.ok());
+        assert!(!Integrity::Failed.ok());
+        assert!(!Integrity::NotChecked.checked());
+        let r = RequestRecord { integrity: Integrity::Failed, ..rec(9, 0, 0.01, 1e9, false) };
+        assert_eq!(r.verified(), Some(false));
+        let mut m = Metrics::default();
+        m.push(r);
+        assert!(!m.all_verified(), "a Failed record poisons all_verified");
+    }
+
+    #[test]
+    fn fleet_integrity_rollup_and_summary_line() {
+        let fm = FleetMetrics {
+            tenants: vec![
+                TenantStats {
+                    name: "a".into(),
+                    submitted: 3,
+                    completed: 3,
+                    integrity_checked: 3,
+                    integrity_passed: 2,
+                    integrity_recovered: 1,
+                    ..Default::default()
+                },
+                TenantStats {
+                    name: "b".into(),
+                    submitted: 2,
+                    completed: 1,
+                    failed: 1,
+                    integrity_checked: 2,
+                    integrity_passed: 1,
+                    integrity_failed: 1,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(fm.integrity_totals(), (5, 3, 1, 1));
+        assert_eq!(fm.total_recovered(), 1);
+        assert!(fm.conserves());
+        let s = fm.summary();
+        assert!(s.contains("integrity: 5 checked"), "{s}");
+        // Integrity-off runs keep the summary free of the line.
+        assert!(!FleetMetrics::default().summary().contains("integrity:"));
     }
 
     #[test]

@@ -27,7 +27,17 @@
 //! (a killed leader's work requeues bit-exact onto a respawned leader
 //! or spills to a sibling), and a deterministic seeded fault plan
 //! ([`fault::FaultPlan`], `serve --chaos <seed>`) injects leader
-//! deaths, DMA stalls, cache-eviction storms, and dropped responses.
+//! deaths, DMA stalls, cache-eviction storms, dropped responses, and
+//! silent result corruption.
+//!
+//! End-to-end result integrity (DESIGN.md §14, `serve --integrity`):
+//! every completed result can be checksum-verified
+//! ([`crate::gemm::abft`]) or fully recomputed before it is served; a
+//! detected corruption triggers a bounded verified recompute at the
+//! front of the device queue, surfaces as
+//! [`metrics::Integrity::Recovered`] in the response and the tenant's
+//! integrity counters, and an exhausted retry budget fails visibly —
+//! a corrupt C is never served silently.
 //!
 //! * [`router`]  — design cache (LRU + hit accounting), device state,
 //!   and the fleet's affinity/least-loaded device selector.
@@ -45,16 +55,16 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use fault::{FaultEvent, FaultKind, FaultPlan, FaultRecord};
+pub use fault::{FaultEvent, FaultKind, FaultPlan, FaultRecord, CORRUPT_SALT};
 pub use llm::{serve_llm, LlmOptions, LlmReport};
 pub use metrics::{
-    ChainRecord, DeviceMetrics, FleetMetrics, Metrics, RequestRecord, TenantStats,
+    ChainRecord, DeviceMetrics, FleetMetrics, Integrity, Metrics, RequestRecord, TenantStats,
 };
 pub use router::{
     CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter, MClass, RouteKind,
 };
 pub use service::{
-    expand_mix, functional_a, functional_b, functional_inputs, parse_mix, parse_tenants,
-    Backend, ChainResponse, ChainStaging, Coordinator, CoordinatorOptions, GemmRequest,
-    GemmResponse, TenantSpec,
+    expand_mix, functional_a, functional_b, functional_inputs, parse_integrity, parse_mix,
+    parse_tenants, Backend, ChainResponse, ChainStaging, Coordinator, CoordinatorOptions,
+    GemmRequest, GemmResponse, IntegrityMode, TenantSpec,
 };

@@ -42,6 +42,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::arch::Generation;
 use crate::dtype::{Layout, Precision};
+use crate::gemm::abft::{self, AbftChecksums};
 use crate::gemm::exec::{ExecOptions, Executor};
 use crate::gemm::refimpl;
 use crate::mem::Matrix;
@@ -52,7 +53,7 @@ use crate::workload::GemmShape;
 
 use super::fault::{FaultKind, FaultPlan, FaultRecord};
 use super::metrics::{
-    ChainRecord, DeviceMetrics, FleetMetrics, Metrics, RequestRecord, TenantStats,
+    ChainRecord, DeviceMetrics, FleetMetrics, Integrity, Metrics, RequestRecord, TenantStats,
 };
 use super::router::{CacheStats, DesignCache, DesignKey, DeviceState, FleetRouter};
 
@@ -79,6 +80,13 @@ pub struct GemmRequest {
     /// tests.
     #[doc(hidden)]
     pub poison: bool,
+    /// Test hook (the integrity suite): XOR a deterministic bit pattern
+    /// into this many of the unit's first execution attempts' C images,
+    /// before the integrity check runs. The count decrements per
+    /// attempt, so `corrupt: 1` yields one corrupted execution followed
+    /// by a clean verified recompute. Always `0` outside tests.
+    #[doc(hidden)]
+    pub corrupt: u8,
 }
 
 impl GemmRequest {
@@ -89,6 +97,7 @@ impl GemmRequest {
             verify: false,
             bd_mode: BdMode::Overlapped,
             poison: false,
+            corrupt: 0,
         }
     }
 }
@@ -112,12 +121,17 @@ pub struct ChainResponse {
     /// producer→consumer edge fed the staged C straight into the packed
     /// executor as the next op's A. `None` if any op's functional
     /// execution failed (the failing op's record carries
-    /// `verified: Some(false)`).
+    /// [`Integrity::Failed`]).
     pub result: Option<Matrix>,
     /// Edges where a staged functional C actually fed an op's A: the
     /// chain's internal `consumes_prev` edges, plus the submission's
     /// entry A when one was staged (`ChainStaging::a0`).
     pub staged_edges: usize,
+    /// Chain-level integrity outcome: `Failed` if any op failed,
+    /// `Recovered` if the whole chain was recomputed after a detected
+    /// corruption, `Passed` when checks ran clean, `NotChecked`
+    /// otherwise.
+    pub integrity: Integrity,
 }
 
 #[derive(Debug)]
@@ -131,9 +145,23 @@ pub struct GemmResponse {
     /// Device seconds including any design reconfiguration.
     pub device_s: f64,
     pub reconfigured: bool,
-    pub verified: Option<bool>,
-    /// Functional result (when requested).
+    /// End-to-end integrity outcome for this result: the coordinator's
+    /// configured check ([`CoordinatorOptions::integrity`]) plus the
+    /// request's own `verify` reference check.
+    pub integrity: Integrity,
+    /// Functional result (when requested). `None` on execution failure
+    /// — or when an integrity mismatch exhausted its retry budget: a
+    /// corrupted C is never served.
     pub result: Option<Matrix>,
+}
+
+impl GemmResponse {
+    /// Legacy tri-state view of [`Self::integrity`] (`None` = never
+    /// checked). Kept for one release for callers of the old
+    /// `verified` field.
+    pub fn verified(&self) -> Option<bool> {
+        self.integrity.into()
+    }
 }
 
 /// One named tenant sharing the fleet (`serve --tenants`).
@@ -194,6 +222,35 @@ pub fn parse_tenants(s: &str) -> Result<Vec<TenantSpec>> {
     Ok(out)
 }
 
+/// Which end-to-end integrity check runs on every completed result
+/// (`serve --integrity`). Orthogonal to [`GemmRequest::verify`], the
+/// per-request reference check that reports but never retries.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum IntegrityMode {
+    /// No result checking: results — corrupted or not — are served
+    /// exactly as produced.
+    #[default]
+    Off,
+    /// ABFT checksum verification ([`crate::gemm::abft`]):
+    /// `O(mk + kn + mn)` checksum work per result instead of the full
+    /// `O(mkn)` recompute, with a bounded verified-recompute retry on
+    /// mismatch.
+    Abft,
+    /// Full reference recompute per result (`refimpl::ref_gemm`) — the
+    /// expensive baseline ABFT is measured against.
+    Full,
+}
+
+/// Parse a `--integrity` flag value: `off`, `abft`, or `full`.
+pub fn parse_integrity(s: &str) -> Result<IntegrityMode> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" => Ok(IntegrityMode::Off),
+        "abft" | "checksum" => Ok(IntegrityMode::Abft),
+        "full" | "verify" => Ok(IntegrityMode::Full),
+        other => bail!("unknown integrity mode '{other}' (expected off|abft|full)"),
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct CoordinatorOptions {
     /// Generation of the single device when `devices` is empty.
@@ -235,6 +292,16 @@ pub struct CoordinatorOptions {
     /// (injected or genuine) death before the device is marked dead and
     /// its work spills to sibling devices.
     pub max_leader_respawns: usize,
+    /// End-to-end result integrity checking (`serve --integrity`):
+    /// every completed result is validated before it is served, and a
+    /// mismatch triggers a bounded verified recompute at the front of
+    /// the device queue. Under `Backend::SimOnly` only the check's
+    /// modeled cost lands on the device clock.
+    pub integrity: IntegrityMode,
+    /// How many verified-recompute retries an integrity mismatch may
+    /// consume before the unit fails visibly ([`Integrity::Failed`],
+    /// `result: None`) — a corrupted result is never served silently.
+    pub max_integrity_retries: usize,
 }
 
 impl Default for CoordinatorOptions {
@@ -251,6 +318,8 @@ impl Default for CoordinatorOptions {
             tenants: Vec::new(),
             chaos: None,
             max_leader_respawns: 16,
+            integrity: IntegrityMode::Off,
+            max_integrity_retries: 2,
         }
     }
 }
@@ -320,6 +389,10 @@ struct Pending {
     /// Set when the unit has been requeued (leader death / dropped
     /// response): requeued units do not re-advance the fault clock.
     requeued: bool,
+    /// Verified-recompute attempts already consumed by integrity
+    /// mismatches, bounded by
+    /// [`CoordinatorOptions::max_integrity_retries`].
+    integrity_retries: u32,
 }
 
 /// DAG-aware chain submission context (`Coordinator::submit_chain_staged`,
@@ -338,6 +411,13 @@ pub struct ChainStaging {
     /// staged producer C (or an elementwise join of several). `None`
     /// falls back to the deterministic generated A.
     pub a0: Option<Matrix>,
+    /// ABFT checksums the producer captured over `a0`
+    /// (`graph::exec::serve_graph` attaches them): the consuming leader
+    /// re-validates the staged image before executing on it, so a
+    /// corrupted cross-chain edge is detected at the edge instead of
+    /// silently feeding every downstream op. `None` skips the edge
+    /// check.
+    pub a0_sums: Option<AbftChecksums>,
 }
 
 /// A submitted chain travelling router → leader as one unit. The staged
@@ -352,6 +432,10 @@ struct PendingChain {
     tx: Sender<ChainResponse>,
     t0: Instant,
     requeued: bool,
+    /// Whole-chain verified-recompute attempts consumed by integrity
+    /// mismatches (the chain re-derives its staged dataflow from
+    /// `staging`, so recovery is bit-exact).
+    integrity_retries: u32,
 }
 
 /// One schedulable unit in a router queue / leader batch: a single
@@ -500,6 +584,7 @@ impl Coordinator {
                 tx: rtx,
                 t0: Instant::now(),
                 requeued: false,
+                integrity_retries: 0,
             })))
             .map_err(|_| anyhow!("coordinator is down (router thread exited)"))?;
         Ok(rrx)
@@ -612,6 +697,7 @@ impl Coordinator {
                 tx: rtx,
                 t0: Instant::now(),
                 requeued: false,
+                integrity_retries: 0,
             })))
             .map_err(|_| anyhow!("coordinator is down (router thread exited)"))?;
         Ok(rrx)
@@ -946,6 +1032,7 @@ impl RouterCore {
         self.caches[dev] = self.cache_base[dev] + r.cache;
         self.fleet.sync_residency(dev, &r.resident);
         for rec in r.records {
+            self.tstats[rec.tenant].record_integrity(rec.integrity);
             self.per_dev[dev].push(rec);
         }
         self.chain_records.extend(r.chains);
@@ -979,6 +1066,7 @@ impl RouterCore {
         // The leader's design cache died with it.
         self.fleet.sync_residency(dev, &[]);
         for rec in r.records {
+            self.tstats[rec.tenant].record_integrity(rec.integrity);
             self.per_dev[dev].push(rec);
         }
         self.chain_records.extend(r.chains);
@@ -1159,15 +1247,25 @@ fn absorb(
     }
 }
 
+/// Outcome of one chain unit on a leader: completed (respond + record)
+/// or handed back for a verified recompute after a detected
+/// corruption. Boxed so the enum stays pointer-sized.
+enum ChainOutcome {
+    Done(Box<(ChainRecord, Sender<ChainResponse>, ChainResponse)>),
+    Retry(Box<PendingChain>),
+}
+
 /// Execute one chain on the leader's device: designs resolved from the
 /// leader's cache, fused edges and dispatch amortization from the same
 /// rule the offline planner uses, reconfiguration charged through the
 /// shared device state. Under `Backend::Functional` every op also runs
 /// through the packed executor, and each producer→consumer edge feeds
 /// the staged C straight into the next op as its A — the functional
-/// mirror of the planner's fused dataflow. `stall_s` (injected DMA
-/// stall) is charged to the first op. Records are appended only on
-/// completion, so a panicking chain leaves no partial accounting.
+/// mirror of the planner's fused dataflow. An injected DMA stall is
+/// charged to the first op; an injected `CorruptResult` flips bits in
+/// the first op's C, where the staged dataflow would propagate it the
+/// furthest. Records are appended only on completion, so a panicking
+/// or retried chain leaves no partial accounting.
 fn run_chain(
     dev: usize,
     gen: Generation,
@@ -1175,9 +1273,28 @@ fn run_chain(
     opts: &CoordinatorOptions,
     state: &mut LeaderState,
     records: &mut Vec<RequestRecord>,
-    stall_s: f64,
-) -> (ChainRecord, Sender<ChainResponse>, ChainResponse) {
-    let PendingChain { id, tenant, chain, bd_mode, staging, tx, t0, .. } = pc;
+    fault: Option<FaultKind>,
+) -> ChainOutcome {
+    let PendingChain { id, tenant, chain, bd_mode, staging, tx, t0, requeued, integrity_retries } =
+        pc;
+    let stall_s = match fault {
+        Some(FaultKind::DmaStall { stall_s }) => stall_s,
+        _ => 0.0,
+    };
+    let checking = opts.integrity != IntegrityMode::Off;
+    let functional = opts.backend == Backend::Functional;
+    // A detected corruption retries the *whole* chain (recovery must
+    // re-derive the identical staged dataflow), so keep a copy of the
+    // submission's staging to rebuild the unit from.
+    let staging_retry = if functional && checking {
+        ChainStaging {
+            device: staging.device,
+            a0: staging.a0.clone(),
+            a0_sums: staging.a0_sums.clone(),
+        }
+    } else {
+        ChainStaging::default()
+    };
     let cfgs: Vec<TilingConfig> =
         chain.ops.iter().map(|o| *state.cache.get(DesignKey::for_shape(&o.shape))).collect();
     let ovs = overrides_for(&cfgs, &chain);
@@ -1192,20 +1309,49 @@ fn run_chain(
     let mut staged_edges = 0usize;
     let mut result: Option<Matrix> = None;
     let mut func_failed = false;
+    // Re-validate a checksummed staged entry A before executing on it:
+    // a corrupted cross-chain edge cannot be healed by recomputing
+    // *this* chain (its producer already completed), so a mismatch
+    // fails the chain immediately instead of burning retries.
+    let mut edge_corrupt = false;
+    if functional && checking {
+        if let (Some(a0), Some(sums)) = (&staged, &staging.a0_sums) {
+            if !abft::validate(a0, sums) {
+                edge_corrupt = true;
+                func_failed = true;
+            }
+        }
+    }
+    let mut retry = false;
     for (i, op) in chain.ops.iter().enumerate() {
         let key = DesignKey::for_shape(&op.shape);
         let reconfig_s = state.device.switch_to(gen, key);
         let sim =
             simulate_gemm_with(&cfgs[i], op.shape.m, op.shape.k, op.shape.n, bd_mode, ovs[i]);
-        let device_s = sim.t_total + reconfig_s + if i == 0 { stall_s } else { 0.0 };
+        let (m, k, n) = (op.shape.m, op.shape.k, op.shape.n);
+        let device_s = sim.t_total
+            + reconfig_s
+            + if i == 0 { stall_s } else { 0.0 }
+            + integrity_seconds(opts.integrity, gen, cfgs[i].precision, m, k, n);
         chain_s += device_s;
         fused += ovs[i].a_in_l2 as usize;
         elided += ovs[i].elide_dispatch as usize;
         // A failed op poisons the rest of the functional run: no random-A
         // substitution for downstream consumers, no final result — the
         // caller sees `result: None` instead of a silently wrong C.
-        let mut op_verified = None;
-        if opts.backend == Backend::Functional && !func_failed {
+        let mut op_integrity = if checking && !func_failed {
+            if integrity_retries > 0 {
+                Integrity::Recovered { retries: integrity_retries }
+            } else {
+                Integrity::Passed
+            }
+        } else {
+            Integrity::NotChecked
+        };
+        if i == 0 && edge_corrupt {
+            op_integrity = Integrity::Failed;
+        }
+        if functional && !func_failed {
             let exec = Executor::with_options(
                 cfgs[i],
                 ExecOptions { threads: opts.exec_threads, ..Default::default() },
@@ -1222,19 +1368,60 @@ fn run_chain(
                 };
                 Ok((a, functional_b(&op.shape, cfgs[i].precision)?))
             })();
-            match inputs.and_then(|(a, b)| exec.execute(&a, &b)) {
-                Ok(c) => {
-                    // Move (never clone) the C image: it becomes the final
-                    // result, or the staged A of a consuming next op.
-                    if i + 1 == chain.ops.len() {
-                        result = Some(c);
-                    } else if chain.ops[i + 1].consumes_prev {
-                        staged = Some(c);
+            let executed = match inputs {
+                Ok((a, b)) => exec.execute(&a, &b).ok().map(|c| (a, b, c)),
+                Err(_) => None,
+            };
+            match executed {
+                Some((a, b, mut c)) => {
+                    // Checksums are captured over the as-produced C;
+                    // only then does the fault layer flip bits — a
+                    // checksum captured afterwards would happily
+                    // validate the corrupted image.
+                    let sums = checking.then(|| abft::capture(&c));
+                    if i == 0 {
+                        if let Some(FaultKind::CorruptResult { word, xor_mask }) = fault {
+                            abft::corrupt_word(&mut c, word, xor_mask);
+                        }
+                    }
+                    // `None` = the check itself could not run (treated
+                    // as a terminal failure, recompute would not help).
+                    let clean: Option<bool> = match opts.integrity {
+                        IntegrityMode::Off => Some(true),
+                        IntegrityMode::Abft => Some(
+                            abft::validate(&c, sums.as_ref().expect("captured when checking"))
+                                && abft::operand_invariant(&a, &b, &c, cfgs[i].precision)
+                                    != Some(false),
+                        ),
+                        IntegrityMode::Full => refimpl::ref_gemm(&a, &b, cfgs[i].precision)
+                            .ok()
+                            .map(|w| refimpl::matrices_equal(&c, &w, cfgs[i].precision)),
+                    };
+                    match clean {
+                        Some(true) => {
+                            // Move (never clone) the C image: it becomes
+                            // the final result, or the staged A of a
+                            // consuming next op.
+                            if i + 1 == chain.ops.len() {
+                                result = Some(c);
+                            } else if chain.ops[i + 1].consumes_prev {
+                                staged = Some(c);
+                            }
+                        }
+                        Some(false) if (integrity_retries as usize) < opts.max_integrity_retries =>
+                        {
+                            retry = true;
+                            break;
+                        }
+                        Some(false) | None => {
+                            func_failed = true;
+                            op_integrity = Integrity::Failed;
+                        }
                     }
                 }
-                Err(_) => {
+                None => {
                     func_failed = true;
-                    op_verified = Some(false);
+                    op_integrity = Integrity::Failed;
                 }
             }
         }
@@ -1246,11 +1433,28 @@ fn run_chain(
             host_latency_s: t0.elapsed().as_secs_f64(),
             ops: op.shape.ops(),
             reconfigured: reconfig_s > 0.0,
-            verified: op_verified,
+            integrity: op_integrity,
             chain: Some(id),
             tenant,
         });
         reports.push(sim);
+    }
+    if retry {
+        // Verified recompute: the unit goes back to the router, which
+        // requeues it at the front of this device's queue. The retried
+        // attempt leaves no records — the clean re-execution accounts
+        // for the whole chain.
+        return ChainOutcome::Retry(Box::new(PendingChain {
+            id,
+            tenant,
+            chain,
+            bd_mode,
+            staging: staging_retry,
+            tx,
+            t0,
+            requeued,
+            integrity_retries: integrity_retries + 1,
+        }));
     }
     records.append(&mut chain_recs);
     let record = ChainRecord {
@@ -1262,6 +1466,17 @@ fn run_chain(
         elided_dispatches: elided,
         device_s: chain_s,
     };
+    let chain_integrity = if func_failed {
+        Integrity::Failed
+    } else if checking {
+        if integrity_retries > 0 {
+            Integrity::Recovered { retries: integrity_retries }
+        } else {
+            Integrity::Passed
+        }
+    } else {
+        Integrity::NotChecked
+    };
     let response = ChainResponse {
         id,
         name: chain.name,
@@ -1272,33 +1487,114 @@ fn run_chain(
         reports,
         result,
         staged_edges,
+        integrity: chain_integrity,
     };
-    (record, tx, response)
+    ChainOutcome::Done(Box::new((record, tx, response)))
+}
+
+/// Modeled device-clock cost of the enabled integrity check at one
+/// shape: the ABFT checksum pass ([`crate::sim::abft_check_seconds`]),
+/// or a full reference recompute charged at the generation's peak MAC
+/// rate — the `O(mk + kn + mn)` vs `O(mkn)` gap the ABFT scheme exists
+/// to exploit.
+fn integrity_seconds(
+    mode: IntegrityMode,
+    gen: Generation,
+    p: Precision,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> f64 {
+    match mode {
+        IntegrityMode::Off => 0.0,
+        IntegrityMode::Abft => crate::sim::abft_check_seconds(gen, p, m, k, n),
+        IntegrityMode::Full => {
+            2.0 * (m as f64) * (k as f64) * (n as f64) / (gen.spec().peak_tops(p) * 1e12)
+        }
+    }
+}
+
+/// Outcome of one single-request unit on a leader: completed, or
+/// handed back for a verified recompute. Boxed so the enum stays
+/// pointer-sized.
+enum ReqOutcome {
+    Done(Box<(RequestRecord, Sender<GemmResponse>, GemmResponse)>),
+    Retry(Box<Pending>),
 }
 
 /// Execute one single-request unit (the non-chain leg of a batch).
-/// `stall_s` is an injected DMA stall added to the device time.
+/// The unit's injected fault (DMA stall / result corruption) is
+/// applied here; a corruption caught by the integrity check within the
+/// retry budget hands the unit back instead of responding.
 fn run_request(
     dev: usize,
     gen: Generation,
     p: Pending,
     opts: &CoordinatorOptions,
     state: &mut LeaderState,
-    stall_s: f64,
-) -> (RequestRecord, Sender<GemmResponse>, GemmResponse) {
-    let Pending { id, tenant, req, tx, t0, .. } = p;
+    fault: Option<FaultKind>,
+) -> ReqOutcome {
+    let Pending { id, tenant, mut req, tx, t0, requeued, integrity_retries } = p;
     if req.poison {
         panic!("poisoned request (chaos containment hook)");
     }
+    let stall_s = match fault {
+        Some(FaultKind::DmaStall { stall_s }) => stall_s,
+        _ => 0.0,
+    };
     let key = DesignKey::for_shape(&req.shape);
     let cfg = *state.cache.get(key);
     let reconfig_s = state.device.switch_to(gen, key);
     let sim = simulate_gemm(&cfg, req.shape.m, req.shape.k, req.shape.n, req.bd_mode);
-    let (result, verified) = match opts.backend {
-        Backend::SimOnly => (None, None),
-        Backend::Functional => run_functional(&cfg, &req, opts.exec_threads),
+    let (result, integrity) = match opts.backend {
+        Backend::SimOnly => {
+            // Timing-only: there are no bytes to check, but the check's
+            // modeled cost still lands on the device clock (below) and
+            // the record reflects that the result was covered.
+            let i = if opts.integrity == IntegrityMode::Off {
+                Integrity::NotChecked
+            } else {
+                Integrity::Passed
+            };
+            (None, i)
+        }
+        Backend::Functional => match run_functional(&cfg, &mut req, id, fault, opts) {
+            Attempt::Done(result, i) => {
+                let i = match i {
+                    Integrity::Passed if integrity_retries > 0 => {
+                        Integrity::Recovered { retries: integrity_retries }
+                    }
+                    other => other,
+                };
+                (result, i)
+            }
+            Attempt::Corrupt => {
+                if (integrity_retries as usize) < opts.max_integrity_retries {
+                    // Verified recompute: back to the router, which
+                    // requeues the unit at the front of this device's
+                    // queue for a clean re-execution (no fault is
+                    // re-applied to requeued units).
+                    return ReqOutcome::Retry(Box::new(Pending {
+                        id,
+                        tenant,
+                        req,
+                        tx,
+                        t0,
+                        requeued,
+                        integrity_retries: integrity_retries + 1,
+                    }));
+                }
+                // Budget exhausted: fail visibly — a corrupted C is
+                // never served.
+                (None, Integrity::Failed)
+            }
+        },
     };
-    let device_s = sim.t_total + reconfig_s + stall_s;
+    let (m, k, n) = (req.shape.m, req.shape.k, req.shape.n);
+    let device_s = sim.t_total
+        + reconfig_s
+        + stall_s
+        + integrity_seconds(opts.integrity, gen, cfg.precision, m, k, n);
     let record = RequestRecord {
         id,
         name: req.shape.name.clone(),
@@ -1307,7 +1603,7 @@ fn run_request(
         host_latency_s: t0.elapsed().as_secs_f64(),
         ops: req.shape.ops(),
         reconfigured: reconfig_s > 0.0,
-        verified,
+        integrity,
         chain: None,
         tenant,
     };
@@ -1318,10 +1614,10 @@ fn run_request(
         sim,
         device_s,
         reconfigured: reconfig_s > 0.0,
-        verified,
+        integrity,
         result,
     };
-    (record, tx, response)
+    ReqOutcome::Done(Box::new((record, tx, response)))
 }
 
 fn leader_loop(
@@ -1395,40 +1691,48 @@ fn leader_loop(
                 }
                 _ => {}
             }
-            let stall_s = match fault {
-                Some(FaultKind::DmaStall { stall_s }) => stall_s,
-                _ => 0.0,
-            };
             let unit_len = unit.len();
             let tenant = unit.tenant();
             retired += unit_len;
             // Genuine panics (not injected kills) are contained per
             // unit: the unit's response channel drops with the unwound
             // stack, the tenant records a failure, and the leader keeps
-            // serving the rest of the batch.
+            // serving the rest of the batch. An integrity retry is not
+            // a completion: the unit rides the requeue path back to the
+            // front of this device's queue for a clean recompute.
             match unit {
                 Unit::Chain(pc) => {
                     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        run_chain(dev, gen, *pc, &opts, &mut state, &mut records, stall_s)
+                        run_chain(dev, gen, *pc, &opts, &mut state, &mut records, fault)
                     }));
                     match run {
-                        Ok((rec, tx, resp)) => {
+                        Ok(ChainOutcome::Done(d)) => {
+                            let (rec, tx, resp) = *d;
                             completions.push((tenant, false));
                             chain_records.push(rec);
                             chain_responses.push((tx, resp));
+                        }
+                        Ok(ChainOutcome::Retry(pc)) => {
+                            retired -= unit_len;
+                            dropped.push(Unit::Chain(pc));
                         }
                         Err(_) => completions.push((tenant, true)),
                     }
                 }
                 Unit::Req(p) => {
                     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        run_request(dev, gen, *p, &opts, &mut state, stall_s)
+                        run_request(dev, gen, *p, &opts, &mut state, fault)
                     }));
                     match run {
-                        Ok((rec, tx, resp)) => {
+                        Ok(ReqOutcome::Done(d)) => {
+                            let (rec, tx, resp) = *d;
                             completions.push((tenant, false));
                             records.push(rec);
                             responses.push((tx, resp));
+                        }
+                        Ok(ReqOutcome::Retry(p)) => {
+                            retired -= unit_len;
+                            dropped.push(Unit::Req(p));
                         }
                         Err(_) => completions.push((tenant, true)),
                     }
@@ -1497,7 +1801,7 @@ fn leader_loop(
 /// shapes produce padded-block images (`refimpl::input_matrix`); an
 /// unrepresentable shape (word-misaligned, or a bfp16 K not covering
 /// whole blocks) is an `Err`, which the serving paths surface as a
-/// failed functional op (`result: None`, `verified: Some(false)`)
+/// failed functional op (`result: None`, [`Integrity::Failed`])
 /// instead of panicking a device leader.
 pub fn functional_a(shape: &GemmShape, p: Precision) -> Result<Matrix> {
     let mut a = refimpl::input_matrix(shape.m, shape.k, p, Layout::RowMajor)?;
@@ -1517,11 +1821,41 @@ pub fn functional_inputs(shape: &GemmShape, p: Precision) -> Result<(Matrix, Mat
     Ok((functional_a(shape, p)?, functional_b(shape, p)?))
 }
 
+/// Outcome of one functional execution attempt.
+enum Attempt {
+    /// The enabled integrity check caught a corrupted C — recomputable
+    /// (the corruption struck *after* a correct execution).
+    Corrupt,
+    /// Terminal outcome: the result (if any) and its integrity verdict.
+    /// Execution errors and `verify` reference mismatches land here as
+    /// `Failed` — a recompute would fail identically.
+    Done(Option<Matrix>, Integrity),
+}
+
+/// Deterministically corrupt a completed C image: the fault plan's
+/// `CorruptResult` event, then the `GemmRequest::corrupt` test hook
+/// (which burns one corrupted attempt per count, so retries converge
+/// on a clean recompute). Runs whether or not an integrity check is
+/// enabled — with `--integrity off` a corrupted result is served
+/// as-is, which is exactly the silent-corruption failure mode the
+/// checks exist to close.
+fn corrupt_result(c: &mut Matrix, id: u64, fault: Option<FaultKind>, corrupt: &mut u8) {
+    if let Some(FaultKind::CorruptResult { word, xor_mask }) = fault {
+        abft::corrupt_word(c, word, xor_mask);
+    }
+    if *corrupt > 0 {
+        *corrupt -= 1;
+        abft::corrupt_word(c, id ^ 0x9E37_79B9_7F4A_7C15, 0xDEAD_BEEF);
+    }
+}
+
 fn run_functional(
     cfg: &crate::tiling::TilingConfig,
-    req: &GemmRequest,
-    threads: usize,
-) -> (Option<Matrix>, Option<bool>) {
+    req: &mut GemmRequest,
+    id: u64,
+    fault: Option<FaultKind>,
+    opts: &CoordinatorOptions,
+) -> Attempt {
     let p = cfg.precision;
     // Borrow caller-supplied operands; only generated inputs are owned.
     let generated;
@@ -1530,24 +1864,54 @@ fn run_functional(
         None => {
             generated = match functional_inputs(&req.shape, p) {
                 Ok(g) => g,
-                Err(_) => return (None, Some(false)),
+                Err(_) => return Attempt::Done(None, Integrity::Failed),
             };
             (&generated.0, &generated.1)
         }
     };
-    let exec = Executor::with_options(*cfg, ExecOptions { threads, ..Default::default() });
-    match exec.execute(a, b) {
-        Ok(c) => {
-            let verified = if req.verify {
-                let want = refimpl::ref_gemm(a, b, p).expect("ref");
-                Some(refimpl::matrices_equal(&c, &want, p))
-            } else {
-                None
-            };
-            (Some(c), verified)
+    let exec = Executor::with_options(
+        *cfg,
+        ExecOptions { threads: opts.exec_threads, ..Default::default() },
+    );
+    let mut c = match exec.execute(a, b) {
+        Ok(c) => c,
+        Err(_) => return Attempt::Done(None, Integrity::Failed),
+    };
+    // Checksums are captured over the as-produced C; only then does the
+    // fault layer (and the test hook) flip bits — a checksum captured
+    // afterwards would happily validate the corrupted image.
+    let sums = (opts.integrity != IntegrityMode::Off).then(|| abft::capture(&c));
+    corrupt_result(&mut c, id, fault, &mut req.corrupt);
+    let mut integrity = match opts.integrity {
+        IntegrityMode::Off => Integrity::NotChecked,
+        IntegrityMode::Abft => {
+            let sums = sums.as_ref().expect("captured when checking");
+            // Two-level check: exact raw-word checksums over C (catches
+            // any post-execution flip, all precisions), plus the
+            // Huang–Abraham operand grand-total invariant where the
+            // precision's arithmetic admits one.
+            if !abft::validate(&c, sums) || abft::operand_invariant(a, b, &c, p) == Some(false) {
+                return Attempt::Corrupt;
+            }
+            Integrity::Passed
         }
-        Err(_) => (None, Some(false)),
+        IntegrityMode::Full => match refimpl::ref_gemm(a, b, p) {
+            Ok(want) if refimpl::matrices_equal(&c, &want, p) => Integrity::Passed,
+            Ok(_) => return Attempt::Corrupt,
+            Err(_) => return Attempt::Done(None, Integrity::Failed),
+        },
+    };
+    if req.verify {
+        // The legacy per-request reference check: reports, never
+        // retries (and keeps the result, as it always has).
+        let want = refimpl::ref_gemm(a, b, p).expect("ref");
+        integrity = if refimpl::matrices_equal(&c, &want, p) {
+            Integrity::Passed
+        } else {
+            Integrity::Failed
+        };
     }
+    Attempt::Done(Some(c), integrity)
 }
 
 #[cfg(test)]
@@ -1641,7 +2005,8 @@ mod tests {
         let mut req = GemmRequest::sim(GemmShape::new("fv", 64, 64, 64, Precision::I8I8));
         req.verify = true;
         let resp = c.call(req).unwrap();
-        assert_eq!(resp.verified, Some(true));
+        assert_eq!(resp.integrity, Integrity::Passed);
+        assert_eq!(resp.verified(), Some(true), "legacy tri-state view");
         let out = resp.result.unwrap();
         assert_eq!((out.rows, out.cols), (64, 64));
         c.shutdown().unwrap();
@@ -1680,8 +2045,8 @@ mod tests {
     fn ragged_bfp16_functional_request_fails_gracefully() {
         // K=100 covers no whole number of 8-value blocks, so no block
         // image can represent the operands. The functional path must
-        // poison the request (result: None, verified: Some(false)) —
-        // never panic the device leader (sim timing still reports, the
+        // poison the request (result: None, Integrity::Failed) — never
+        // panic the device leader (sim timing still reports, the
         // simulator pads like any precision).
         let c = Coordinator::start(CoordinatorOptions {
             backend: Backend::Functional,
@@ -1691,7 +2056,8 @@ mod tests {
             .call(GemmRequest::sim(GemmShape::new("ragged", 64, 100, 64, Precision::Bfp16)))
             .unwrap();
         assert!(resp.result.is_none());
-        assert_eq!(resp.verified, Some(false));
+        assert_eq!(resp.integrity, Integrity::Failed);
+        assert_eq!(resp.verified(), Some(false), "legacy tri-state view");
         assert!(resp.sim.tops > 0.0, "simulation still accounts the padded dispatch");
         c.shutdown().unwrap();
     }
@@ -1799,7 +2165,7 @@ mod tests {
         let rx = c
             .submit_chain_staged(
                 chain,
-                ChainStaging { device: Some(1), a0: Some(staged_c.clone()) },
+                ChainStaging { device: Some(1), a0: Some(staged_c.clone()), a0_sums: None },
             )
             .unwrap();
         let resp = rx.recv().unwrap();
@@ -1814,13 +2180,13 @@ mod tests {
         let mut chain2 = crate::plan::GemmChain::new("bad-pin");
         chain2.push(s1.clone());
         assert!(c
-            .submit_chain_staged(chain2, ChainStaging { device: Some(7), a0: None })
+            .submit_chain_staged(chain2, ChainStaging { device: Some(7), ..Default::default() })
             .is_err());
         let mut chain3 = crate::plan::GemmChain::new("bad-a0");
         chain3.push(s1.clone());
         let wrong = Matrix::zeroed(32, 64, 1, Layout::RowMajor).unwrap();
         assert!(c
-            .submit_chain_staged(chain3, ChainStaging { device: None, a0: Some(wrong) })
+            .submit_chain_staged(chain3, ChainStaging { a0: Some(wrong), ..Default::default() })
             .is_err());
         // Right dims, wrong element dtype (bf16 bytes into an int8 op):
         // rejected at submit, never reinterpreted as raw bytes.
@@ -1828,7 +2194,10 @@ mod tests {
         chain4.push(s1.clone());
         let wrong_ty = Matrix::zeroed(64, 64, 2, Layout::RowMajor).unwrap();
         assert!(c
-            .submit_chain_staged(chain4, ChainStaging { device: None, a0: Some(wrong_ty) })
+            .submit_chain_staged(
+                chain4,
+                ChainStaging { a0: Some(wrong_ty), ..Default::default() },
+            )
             .is_err());
         let m = c.shutdown().unwrap();
         assert_eq!(m.count(), 1);
@@ -1900,6 +2269,7 @@ mod tests {
                 tx,
                 t0: Instant::now(),
                 requeued: false,
+                integrity_retries: 0,
             }))
         }
         fn id_of(u: &Unit) -> u64 {
@@ -1943,5 +2313,131 @@ mod tests {
         assert_eq!(o.tenant_specs().len(), 1);
         assert_eq!(o.tenant_specs()[0].name, "default");
         assert_eq!(o.max_leader_respawns, 16);
+        assert_eq!(o.integrity, IntegrityMode::Off, "integrity checking is opt-in");
+        assert_eq!(o.max_integrity_retries, 2);
+    }
+
+    #[test]
+    fn integrity_mode_parsing() {
+        assert_eq!(parse_integrity("off").unwrap(), IntegrityMode::Off);
+        assert_eq!(parse_integrity("abft").unwrap(), IntegrityMode::Abft);
+        assert_eq!(parse_integrity(" Full ").unwrap(), IntegrityMode::Full);
+        assert_eq!(parse_integrity("checksum").unwrap(), IntegrityMode::Abft);
+        assert!(parse_integrity("paranoid").is_err());
+    }
+
+    #[test]
+    fn abft_integrity_passes_clean_functional_traffic() {
+        // Clean runs under --integrity abft: every record checks out,
+        // nothing is retried, and the tenant counters conserve.
+        let c = Coordinator::start(CoordinatorOptions {
+            gen: Generation::Xdna2,
+            backend: Backend::Functional,
+            integrity: IntegrityMode::Abft,
+            ..Default::default()
+        });
+        for p in [Precision::I8I8, Precision::Bf16] {
+            let resp =
+                c.call(GemmRequest::sim(GemmShape::new("clean", 64, 64, 64, p))).unwrap();
+            assert_eq!(resp.integrity, Integrity::Passed, "{p}");
+            assert!(resp.result.is_some());
+        }
+        let m = c.shutdown().unwrap();
+        let (checked, passed, recovered, failed) = m.integrity_totals();
+        assert_eq!((checked, passed, recovered, failed), (2, 2, 0, 0));
+        assert!(m.tenants.iter().all(TenantStats::conserves));
+    }
+
+    #[test]
+    fn corrupted_result_is_detected_and_recovered_bit_exactly() {
+        // The corrupt test hook flips a word in the first attempt's C;
+        // ABFT detects it and the verified recompute must serve the
+        // exact bits of an uncorrupted run.
+        let mk = || {
+            Coordinator::start(CoordinatorOptions {
+                gen: Generation::Xdna2,
+                backend: Backend::Functional,
+                integrity: IntegrityMode::Abft,
+                ..Default::default()
+            })
+        };
+        let shape = GemmShape::new("c", 64, 64, 64, Precision::I8I8);
+        let c = mk();
+        let clean = c.call(GemmRequest::sim(shape.clone())).unwrap();
+        assert_eq!(clean.integrity, Integrity::Passed);
+        c.shutdown().unwrap();
+
+        let c = mk();
+        let mut req = GemmRequest::sim(shape);
+        req.corrupt = 1;
+        let resp = c.call(req).unwrap();
+        assert_eq!(resp.integrity, Integrity::Recovered { retries: 1 });
+        assert_eq!(resp.verified(), Some(true), "recovered counts as good");
+        assert!(refimpl::matrices_equal(
+            resp.result.as_ref().unwrap(),
+            clean.result.as_ref().unwrap(),
+            Precision::I8I8,
+        ));
+        let m = c.shutdown().unwrap();
+        let (checked, passed, recovered, failed) = m.integrity_totals();
+        assert_eq!((checked, passed, recovered, failed), (1, 0, 1, 0));
+        assert_eq!(m.tenants[0].requeued, 1, "the retry rode the requeue path");
+        assert!(m.tenants[0].conserves());
+    }
+
+    #[test]
+    fn integrity_retry_budget_exhaustion_fails_visibly() {
+        // Three corrupted attempts against a budget of two retries: the
+        // unit fails visibly (result: None) instead of hanging or
+        // serving corrupt bits.
+        let c = Coordinator::start(CoordinatorOptions {
+            gen: Generation::Xdna2,
+            backend: Backend::Functional,
+            integrity: IntegrityMode::Abft,
+            max_integrity_retries: 2,
+            ..Default::default()
+        });
+        let mut req = GemmRequest::sim(GemmShape::new("c3", 64, 64, 64, Precision::I8I8));
+        req.corrupt = 3;
+        let resp = c.call(req).unwrap();
+        assert_eq!(resp.integrity, Integrity::Failed);
+        assert!(resp.result.is_none(), "a corrupted C is never served");
+        let m = c.shutdown().unwrap();
+        let (checked, _, _, failed) = m.integrity_totals();
+        assert_eq!((checked, failed), (1, 1));
+        assert_eq!(m.tenants[0].requeued, 2, "both retries were consumed");
+        assert!(m.tenants[0].conserves());
+        assert_eq!(m.tenants[0].completed, 1, "the unit still completes (with Failed)");
+    }
+
+    #[test]
+    fn sim_only_integrity_charges_the_checksum_cost() {
+        // SimOnly has no bytes to check, but --integrity abft must
+        // charge the checksum pass on the device clock: same traffic,
+        // strictly more device seconds, and records marked Passed.
+        let run = |mode| {
+            let c = Coordinator::start(CoordinatorOptions {
+                gen: Generation::Xdna2,
+                integrity: mode,
+                ..Default::default()
+            });
+            let shape = GemmShape::new("s", 1024, 1024, 1024, Precision::I8I8);
+            let resp = c.call(GemmRequest::sim(shape)).unwrap();
+            (resp.device_s, resp.integrity, c.shutdown().unwrap())
+        };
+        let (off_s, off_i, m_off) = run(IntegrityMode::Off);
+        let (abft_s, abft_i, m_abft) = run(IntegrityMode::Abft);
+        let (full_s, _, _) = run(IntegrityMode::Full);
+        assert_eq!(off_i, Integrity::NotChecked);
+        assert_eq!(abft_i, Integrity::Passed);
+        assert_eq!(m_off.integrity_totals().0, 0);
+        assert_eq!(m_abft.integrity_totals().0, 1);
+        assert!(abft_s > off_s, "checksum cost lands on the device clock");
+        assert!(
+            abft_s - off_s < (full_s - off_s) / 10.0,
+            "ABFT at least 10x cheaper than a full recompute: abft +{:.3e}s, full +{:.3e}s",
+            abft_s - off_s,
+            full_s - off_s
+        );
     }
 }

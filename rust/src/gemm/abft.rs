@@ -1,0 +1,321 @@
+//! Algorithm-based fault tolerance (ABFT) for GEMM results — the PR-8
+//! integrity layer (DESIGN.md §14).
+//!
+//! Two complementary checks, both cheap next to the GEMM itself:
+//!
+//! * **Capture checksums** ([`capture`] / [`validate`]): per-storage-row
+//!   and per-word-column wrapping u64 sums of the C image's raw 32-bit
+//!   words, taken the moment the executor hands the image over (the
+//!   "pack step" pass — the panels are already resident). Re-validation
+//!   is an *exact integer* compare for every precision, bf16/bfp16
+//!   included, so a single corrupted word always changes its row sum
+//!   and its column sum: detection of any logically visible flip is
+//!   guaranteed and false positives are impossible. This is what the
+//!   coordinator re-checks on every staged edge before a producer's C
+//!   becomes a consumer's A.
+//! * **Operand grand-total invariant** ([`operand_invariant`]): the
+//!   Huang–Abraham identity `(eᵀA)·(Be) = eᵀCe` — the column-sum row of
+//!   A dotted with the row-sum column of B must equal the grand total
+//!   of C. Exact in i64 for i8i32; bounded by a derived ULP-style
+//!   tolerance for bf16 (RNE half-ulp `2⁻⁹` per element) and bfp16
+//!   (block re-quantization, `2⁻⁴` worst case — blocks quantize to
+//!   their max). i8i8/i8i16 return `None`: their saturating narrowing
+//!   breaks linearity, so the exact capture sums carry detection alone
+//!   there (the Python model shows the adversarial counterexample).
+//!
+//! The tolerance constants, the corruption-site arithmetic and the
+//! checksum cost model are transliterated and pinned in
+//! `python/tests/test_integrity_model.py`; keep them in lock-step.
+
+use crate::dtype::Precision;
+use crate::dtype_bfp16::BLOCK_WORDS;
+use crate::mem::Matrix;
+
+use super::refimpl::{logical_dims, packed_f32_bfp};
+
+/// Tolerance model for [`operand_invariant`]:
+/// `tol = SAFETY · abs_total · (rel + k·2⁻²⁴ + (m+n+k)·2⁻⁵²)` where
+/// `rel` is the per-element narrowing error (bf16 RNE half-ulp, bfp16
+/// block re-quantization), `k·2⁻²⁴` the f32 accumulation and the last
+/// term the f64 checksum arithmetic itself. Mirrored in
+/// `test_integrity_model.py` (margin shown < 0.5 over the shape grid).
+const TOL_SAFETY: f64 = 2.0;
+
+fn rel_term(p: Precision) -> Option<f64> {
+    match p {
+        Precision::Bf16 => Some(1.0 / 512.0),  // 2^-9
+        Precision::Bfp16 => Some(1.0 / 16.0),  // 2^-4 = 8 · (0.5/64)
+        Precision::I8I32 => Some(0.0),         // exact — checked in i64
+        Precision::I8I8 | Precision::I8I16 => None, // saturation: nonlinear
+    }
+}
+
+/// Derived tolerance bound for the grand-total invariant at one shape.
+/// `None` for precisions whose narrowed C has no linear invariant.
+pub fn tolerance(p: Precision, m: usize, k: usize, n: usize, abs_total: f64) -> Option<f64> {
+    let rel = rel_term(p)?;
+    let acc = k as f64 * (1.0f64 / (1u64 << 24) as f64);
+    let f64_err = (m + n + k) as f64 * (1.0f64 / (1u64 << 52) as f64);
+    Some(TOL_SAFETY * abs_total * (rel + acc + f64_err))
+}
+
+/// Row/column checksum vectors over a C image's raw words.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct AbftChecksums {
+    /// Wrapping u64 sum of each storage row's 32-bit words.
+    pub rows: Vec<u64>,
+    /// Wrapping u64 sum of each word column across storage rows.
+    pub cols: Vec<u64>,
+}
+
+/// Capture the checksum vectors of a result image (one pass over the
+/// already-resident words — the "extra pass over packed panels" of the
+/// pack step). Precision-agnostic: bit patterns, not values, so the
+/// compare in [`validate`] is exact for every dtype.
+pub fn capture(c: &Matrix) -> AbftChecksums {
+    let rw = c.row_words();
+    let nr = c.n_storage_rows();
+    let mut rows = vec![0u64; nr];
+    let mut cols = vec![0u64; rw];
+    for sr in 0..nr {
+        for wc in 0..rw {
+            let w = c.data[sr * rw + wc] as u64;
+            rows[sr] = rows[sr].wrapping_add(w);
+            cols[wc] = cols[wc].wrapping_add(w);
+        }
+    }
+    AbftChecksums { rows, cols }
+}
+
+/// Exact re-validation of an image against captured checksums. A single
+/// corrupted word changes its row and column sums by a nonzero delta
+/// (terms are < 2³², sums wrap in u64), so this never misses a flip and
+/// never fires on a clean image.
+pub fn validate(c: &Matrix, sums: &AbftChecksums) -> bool {
+    capture(c) == *sums
+}
+
+/// The Huang–Abraham grand-total invariant: checksum row of A times
+/// checksum column of B vs the total of C. `Some(ok)` where the
+/// narrowed C is linear enough to check (i8i32 exactly, bf16/bfp16
+/// within [`tolerance`]); `None` for the saturating narrowings.
+pub fn operand_invariant(a: &Matrix, b: &Matrix, c: &Matrix, p: Precision) -> Option<bool> {
+    rel_term(p)?;
+    let (m, k) = logical_dims(a);
+    let (_, n) = logical_dims(b);
+    match p {
+        Precision::I8I32 => {
+            let col_a = int_sums(a);
+            let row_b = int_sums_cols(b);
+            let want: i64 = col_a.iter().zip(&row_b).map(|(x, y)| x * y).sum();
+            let mut got = 0i64;
+            for i in 0..c.rows {
+                for j in 0..c.cols {
+                    got += c.get_i32(i, j) as i64;
+                }
+            }
+            Some(got == want)
+        }
+        Precision::Bf16 | Precision::Bfp16 => {
+            let av = dense_f32(a);
+            let bv = dense_f32(b);
+            let cv = dense_f32(c);
+            let mut want = 0.0f64;
+            let mut abs_total = 0.0f64;
+            for kk in 0..k {
+                let mut ca = 0.0f64;
+                let mut ca_abs = 0.0f64;
+                for i in 0..m {
+                    let v = av[i * k + kk] as f64;
+                    ca += v;
+                    ca_abs += v.abs();
+                }
+                let mut rb = 0.0f64;
+                let mut rb_abs = 0.0f64;
+                for j in 0..n {
+                    let v = bv[kk * n + j] as f64;
+                    rb += v;
+                    rb_abs += v.abs();
+                }
+                want += ca * rb;
+                abs_total += ca_abs * rb_abs;
+            }
+            let got: f64 = cv.iter().map(|&v| v as f64).sum();
+            let tol = tolerance(p, m, k, n, abs_total)?;
+            Some((got - want).abs() <= tol)
+        }
+        Precision::I8I8 | Precision::I8I16 => None,
+    }
+}
+
+/// Dense logical-row-major f32 view of a float operand (bf16 element
+/// grid or decoded bfp16 block image).
+fn dense_f32(m: &Matrix) -> Vec<f32> {
+    if m.is_bfp16() {
+        packed_f32_bfp(m)
+    } else {
+        m.packed_f32()
+    }
+}
+
+/// Column sums of a logical int8 image (`eᵀA`).
+fn int_sums(a: &Matrix) -> Vec<i64> {
+    let (m, k) = logical_dims(a);
+    let av = a.packed_i8();
+    let mut col = vec![0i64; k];
+    for i in 0..m {
+        for (kk, c) in col.iter_mut().enumerate() {
+            *c += av[i * k + kk] as i64;
+        }
+    }
+    col
+}
+
+/// Row sums of a logical int8 image (`Be`).
+fn int_sums_cols(b: &Matrix) -> Vec<i64> {
+    let (k, n) = logical_dims(b);
+    let bv = b.packed_i8();
+    let mut row = vec![0i64; k];
+    for (kk, r) in row.iter_mut().enumerate() {
+        for j in 0..n {
+            *r += bv[kk * n + j] as i64;
+        }
+    }
+    row
+}
+
+/// Flip bits in one word of a result image — the executor-side effect
+/// of [`crate::coordinator::FaultKind::CorruptResult`]. The site is
+/// `word % data.len()`; on bfp16 images a flip landing on a block
+/// cell's third word is masked to its live byte (mantissa\[7\] — bytes
+/// 1–3 are dead padding the codec ignores), and an all-dead mask
+/// degrades to bit 0, so every injected corruption is logically
+/// visible. Returns the resolved `(word_index, applied_mask)` — same
+/// arithmetic as `test_integrity_model.py`'s site pins.
+pub fn corrupt_word(c: &mut Matrix, word: u64, xor_mask: u32) -> (usize, u32) {
+    let len = c.data.len();
+    debug_assert!(len > 0, "cannot corrupt an empty image");
+    let idx = (word % len as u64) as usize;
+    let mut mask = xor_mask;
+    if c.is_bfp16() && idx % BLOCK_WORDS == 2 {
+        mask &= 0xFF;
+    }
+    if mask == 0 {
+        mask = 1;
+    }
+    c.data[idx] ^= mask;
+    (idx, mask)
+}
+
+/// Multiply-accumulate count of the full ABFT pass at one shape:
+/// `m·k + k·n` operand sums (the pack-step pass), `2·m·n` capture +
+/// re-validate walks over C, `2·k` for the checksum dot product. The
+/// sim model charges these at the device's MAC rate
+/// ([`crate::sim::abft_check_seconds`]) so reported TOPS stays honest.
+pub fn checksum_ops(m: usize, k: usize, n: usize) -> f64 {
+    (m * k + k * n + 2 * m * n + 2 * k) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::Layout;
+    use crate::gemm::refimpl;
+
+    fn filled(rows: usize, cols: usize, p: Precision, layout: Layout, seed: u64) -> Matrix {
+        let mut m = refimpl::input_matrix(rows, cols, p, layout).unwrap();
+        refimpl::fill_random(&mut m, p, seed);
+        m
+    }
+
+    #[test]
+    fn capture_sums_match_python_pin() {
+        // 2x4 row-major int8 [[1,-2,3,-4],[5,6,-7,8]] — the literal
+        // pinned in test_integrity_model.py::test_capture_sums_pin.
+        let mut c = Matrix::zeroed(2, 4, 1, Layout::RowMajor).unwrap();
+        for (j, v) in [1i8, -2, 3, -4].into_iter().enumerate() {
+            c.set_i8(0, j, v);
+        }
+        for (j, v) in [5i8, 6, -7, 8].into_iter().enumerate() {
+            c.set_i8(1, j, v);
+        }
+        let s = capture(&c);
+        assert_eq!(s.rows, vec![4228120065, 150537733]);
+        assert_eq!(s.cols, vec![4378657798]);
+        assert!(validate(&c, &s));
+    }
+
+    #[test]
+    fn every_single_word_flip_is_detected() {
+        for p in [Precision::I8I8, Precision::Bf16, Precision::Bfp16] {
+            let c0 = filled(16, 16, p, Layout::RowMajor, 5);
+            let sums = capture(&c0);
+            for word in [0u64, 7, 63, 0x5FBC_AB0D_DD73_D4AC] {
+                let mut c = c0.clone();
+                let (idx, mask) = corrupt_word(&mut c, word, 0x1EDA_FEBC);
+                assert!(mask != 0 && idx < c.data.len());
+                assert!(!validate(&c, &sums), "{p}: flip at word {idx} missed");
+                c.data[idx] ^= mask; // undo → exact match again
+                assert!(validate(&c, &sums));
+            }
+        }
+    }
+
+    #[test]
+    fn bfp16_pad_words_are_masked_to_the_live_byte() {
+        // 64x64 bfp16 C = 64x8 block cells = 1536 words; the seed-2
+        // dev-0 word lands on a pad word (1196 % 3 == 2) and the mask
+        // degrades to its live byte — pinned in test_integrity_model.py.
+        let mut c = Matrix::zeroed_bfp16(64, 64, Layout::RowMajor).unwrap();
+        assert_eq!(c.data.len(), 1536);
+        let (idx, mask) = corrupt_word(&mut c, 6898576805263037612, 0x1EDA_FEBC);
+        assert_eq!((idx, mask), (1196, 0xBC));
+        // All-dead mask on a pad word degrades to bit 0 of mantissa[7].
+        let mut c2 = Matrix::zeroed_bfp16(64, 64, Layout::RowMajor).unwrap();
+        let (idx2, mask2) = corrupt_word(&mut c2, 5, 0x1EDA_FE00);
+        assert_eq!((idx2, mask2), (5, 1));
+        // Either way the flip stays visible to the block codec: the
+        // mutated word is a live mantissa byte, not dead padding.
+        let blk = c2.get_bfp_block(0, 1);
+        assert_ne!(blk.mantissas[7], 0);
+    }
+
+    #[test]
+    fn i8i32_grand_total_invariant_is_exact() {
+        for (m, k, n) in [(8, 16, 8), (52, 100, 36), (17, 33, 9)] {
+            let a = filled(m, k, Precision::I8I32, Layout::RowMajor, 1);
+            let b = filled(k, n, Precision::I8I32, Layout::ColMajor, 2);
+            let c = refimpl::ref_gemm(&a, &b, Precision::I8I32).unwrap();
+            assert_eq!(operand_invariant(&a, &b, &c, Precision::I8I32), Some(true));
+            // A corrupted C (bit 30 of an i32 cell — far above any
+            // legitimate accumulation here) must break the identity.
+            let mut bad = c.clone();
+            corrupt_word(&mut bad, 3, 1 << 30);
+            assert_eq!(operand_invariant(&a, &b, &bad, Precision::I8I32), Some(false));
+        }
+    }
+
+    #[test]
+    fn float_invariants_pass_clean_and_saturating_kinds_opt_out() {
+        for (p, layout) in [(Precision::Bf16, Layout::ColMajor), (Precision::Bfp16, Layout::ColMajor)]
+        {
+            let (m, k, n) = (24, 56, 40);
+            let a = filled(m, k, p, Layout::RowMajor, 3);
+            let b = filled(k, n, p, layout, 4);
+            let c = refimpl::ref_gemm(&a, &b, p).unwrap();
+            assert_eq!(operand_invariant(&a, &b, &c, p), Some(true), "{p} clean run");
+        }
+        let a = filled(8, 16, Precision::I8I8, Layout::RowMajor, 5);
+        let b = filled(16, 8, Precision::I8I8, Layout::ColMajor, 6);
+        let c = refimpl::ref_gemm(&a, &b, Precision::I8I8).unwrap();
+        assert_eq!(operand_invariant(&a, &b, &c, Precision::I8I8), None);
+        assert_eq!(operand_invariant(&a, &b, &c, Precision::I8I16), None);
+    }
+
+    #[test]
+    fn checksum_ops_is_negligible_next_to_the_gemm() {
+        assert_eq!(checksum_ops(1024, 1024, 1024), 4196352.0);
+        let ratio = checksum_ops(1024, 1024, 1024) / (2.0 * 1024f64 * 1024.0 * 1024.0);
+        assert!(ratio < 0.002, "{ratio}");
+    }
+}

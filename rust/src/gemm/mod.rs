@@ -7,5 +7,6 @@
 //!   micro-kernels consume pre-tiled tiles, and C drains back through the
 //!   MemTile aggregation path. Proves the paper's mapping end to end.
 
+pub mod abft;
 pub mod exec;
 pub mod refimpl;

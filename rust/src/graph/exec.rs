@@ -31,6 +31,7 @@ use crate::coordinator::{
     functional_a, functional_b, ChainResponse, ChainStaging, Coordinator, DesignKey,
 };
 use crate::dtype::{sat_i8, Bf16, Layout, Precision};
+use crate::gemm::abft;
 use crate::gemm::exec::{ExecOptions, Executor};
 use crate::gemm::refimpl;
 use crate::mem::Matrix;
@@ -201,9 +202,14 @@ pub fn serve_graph(
         } else {
             None
         };
+        // Checksum the staged edge at the producer side: the consuming
+        // leader re-validates the image before executing on it, so a
+        // cross-chain tensor corrupted in transit is detected at the
+        // edge instead of silently feeding the downstream chain.
+        let a0_sums = a0.as_ref().map(abft::capture);
         let rx = coord.submit_chain_staged(
             lowered.chains[ci].clone(),
-            ChainStaging { device: Some(sc.device), a0 },
+            ChainStaging { device: Some(sc.device), a0, a0_sums },
         )?;
         pending.push_back((ci, rx));
     }

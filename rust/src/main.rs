@@ -17,15 +17,21 @@
 //!                 [--window W] [--in-flight F] [--skew | --trace FILE]
 //!                 [--threads T --functional]
 //!                 [--tenants NAME[:PRIO[:QUOTA]],...]
-//!                 [--chaos SEED [--chaos-events E] [--chaos-horizon H]]
+//!                 [--chaos SEED [--chaos-events E] [--chaos-horizon H]
+//!                  [--chaos-corrupt C]]
+//!                 [--integrity off|abft|full] [--integrity-retries R]
 //!                                             sharded coordinator load demo
-//!                                             (multi-tenant admission and
-//!                                             seeded fault injection,
+//!                                             (multi-tenant admission,
+//!                                             seeded fault injection, and
+//!                                             checksum-verified results,
 //!                                             docs/serving.md)
 //! xdna-gemm serve-llm [--sessions S] [--rate R] [--decode-min A] [--decode-max B]
 //!                 [--seed SEED] [--devices D] [--mix xdna:xdna2] [--gen G]
 //!                 [--no-coalesce] [--max-batch M] [--precision P]
 //!                 [--seq S] [--layers L] [--d-model D] [--d-ffn F] [--vocab V]
+//!                 [--chaos SEED [--chaos-events E] [--chaos-horizon H]
+//!                  [--chaos-corrupt C]]
+//!                 [--integrity off|abft|full] [--integrity-retries R]
 //!                                             continuous-batching LLM serving:
 //!                                             prefill chains (wide designs) +
 //!                                             coalesced decode rounds (skinny
@@ -57,7 +63,7 @@ use anyhow::{bail, Result};
 
 use xdna_gemm::arch::Generation;
 use xdna_gemm::coordinator::{
-    expand_mix, parse_mix, parse_tenants, Backend, CoordinatorOptions, FaultPlan,
+    expand_mix, parse_integrity, parse_mix, parse_tenants, Backend, CoordinatorOptions, FaultPlan,
 };
 use xdna_gemm::dtype::{Layout, Precision};
 use xdna_gemm::gemm::exec::{ExecOptions, Fidelity};
@@ -249,27 +255,21 @@ fn main() -> Result<()> {
             let devices = expand_mix(&pattern, n_devices);
             // `--tenants hi:2:8,lo` names tenant classes; requests are
             // round-robined across them by the harness. `--chaos SEED`
-            // arms the deterministic fault-injection layer (ISSUE 6).
+            // arms the deterministic fault-injection layer (ISSUE 6);
+            // `--integrity abft` checksum-verifies every served result
+            // and recomputes on mismatch (ISSUE 8).
             let tenants = match args.get("tenants") {
                 Some(s) => parse_tenants(s)?,
                 None => Vec::new(),
             };
-            let chaos = match args.get("chaos") {
-                Some(s) => {
-                    let seed: u64 = s
-                        .parse()
-                        .map_err(|_| anyhow::anyhow!("--chaos expects a u64 seed, got '{s}'"))?;
-                    let horizon = args.usize_opt("chaos-horizon", 64)? as u64;
-                    let events = args.usize_opt("chaos-events", 4)?;
-                    Some(FaultPlan::from_seed(seed, devices.len(), horizon, events))
-                }
-                None => None,
-            };
+            let chaos = parse_chaos(&args, devices.len())?;
             let opts = CoordinatorOptions {
                 gen,
                 devices,
                 tenants,
                 chaos,
+                integrity: parse_integrity(args.get("integrity").unwrap_or("off"))?,
+                max_integrity_retries: args.usize_opt("integrity-retries", 2)?,
                 batch_window: args.usize_opt("window", 16)?,
                 max_in_flight: args.usize_opt("in-flight", 64)?,
                 // `--functional` runs real numerics through the packed
@@ -341,7 +341,19 @@ fn main() -> Result<()> {
                 max_batch: args.usize_opt("max-batch", LlmOptions::default().max_batch)?,
                 ..Default::default()
             };
-            let opts = CoordinatorOptions { gen, devices, ..Default::default() };
+            // The chaos plan and integrity mode ride the coordinator the
+            // LLM runtime serves through — `serve-llm --chaos SEED` used
+            // to silently ignore the plan (ISSUE 8 satellite fix); token
+            // conservation is still checked below.
+            let chaos = parse_chaos(&args, devices.len())?;
+            let opts = CoordinatorOptions {
+                gen,
+                devices,
+                chaos,
+                integrity: parse_integrity(args.get("integrity").unwrap_or("off"))?,
+                max_integrity_retries: args.usize_opt("integrity-retries", 2)?,
+                ..Default::default()
+            };
             let (report, metrics) = harness::serve_llm(opts, &llm)?;
             println!("{}", report.summary());
             if !report.conserved() {
@@ -629,6 +641,25 @@ fn run_roofline(gen: Generation, points: usize) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// The shared `--chaos SEED [--chaos-events E] [--chaos-horizon H]
+/// [--chaos-corrupt C]` flags, parsed into a seeded fault plan.
+/// `--chaos-corrupt C` layers `C` silent result corruptions per device
+/// on top of the base plan (detected and recovered under
+/// `--integrity abft|full`, served corrupt under `--integrity off`).
+fn parse_chaos(args: &Args, n_devices: usize) -> Result<Option<FaultPlan>> {
+    let Some(s) = args.get("chaos") else { return Ok(None) };
+    let seed: u64 =
+        s.parse().map_err(|_| anyhow::anyhow!("--chaos expects a u64 seed, got '{s}'"))?;
+    let horizon = args.usize_opt("chaos-horizon", 64)? as u64;
+    let events = args.usize_opt("chaos-events", 4)?;
+    let corrupt = args.usize_opt("chaos-corrupt", 0)?;
+    let mut plan = FaultPlan::from_seed(seed, n_devices, horizon, events);
+    if corrupt > 0 {
+        plan = plan.with_corruption(seed, n_devices, horizon, corrupt);
+    }
+    Ok(Some(plan))
 }
 
 fn parse_gen(s: &str) -> Result<Generation> {

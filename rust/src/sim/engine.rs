@@ -107,6 +107,24 @@ pub struct GemmReport {
     pub trace: CoreTrace,
 }
 
+/// Modeled cost of the coordinator's ABFT checksum pass at one shape
+/// (DESIGN.md §14): `m·k + k·n + 2·m·n + 2·k` MAC-equivalents
+/// ([`crate::gemm::abft::checksum_ops`]) charged at the generation's
+/// peak MAC rate for the precision — the check is dense streaming
+/// arithmetic over data already resident, so peak rate is the right
+/// (optimistic, overhead-minimizing) model. The point of the model is
+/// the *ratio*: `O(mk + kn + mn)` checksum work vanishes next to the
+/// `O(mkn)` GEMM it protects.
+pub fn abft_check_seconds(
+    gen: crate::arch::Generation,
+    p: Precision,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> f64 {
+    crate::gemm::abft::checksum_ops(m, k, n) / (gen.spec().peak_tops(p) * 1e12)
+}
+
 /// Simulate one GEMM dispatch of `m × k × n` under `cfg`.
 ///
 /// Arbitrary sizes are zero-padded to the native grid exactly as the
@@ -279,6 +297,23 @@ mod tests {
             );
             // Padding must be a no-op at the paper's aligned sizes.
             assert_eq!((r.pm, r.pk, r.pn), (m, k, n));
+        }
+    }
+
+    #[test]
+    fn abft_cost_model_golden() {
+        // Pinned against python/tests/test_integrity_model.py: 1024³
+        // int8 on XDNA2 — 4 196 352 checksum MACs at 2·32·512·1.8 GHz.
+        let est = abft_check_seconds(Generation::Xdna2, Precision::I8I8, 1024, 1024, 1024);
+        let golden = 7.114583333333334e-08;
+        assert!((est - golden).abs() / golden < 1e-12, "{est}");
+        // And the ratio argument that makes ABFT viable: < 0.2% of the
+        // GEMM it protects, on both generations.
+        for gen in [Generation::Xdna, Generation::Xdna2] {
+            let cfg = balanced_config(gen, Precision::I8I8);
+            let r = simulate_gemm(&cfg, 1024, 1024, 1024, BdMode::Overlapped);
+            let check = abft_check_seconds(gen, Precision::I8I8, 1024, 1024, 1024);
+            assert!(check / r.t_total < 0.002, "{gen}: {}", check / r.t_total);
         }
     }
 

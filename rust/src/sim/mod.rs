@@ -19,4 +19,6 @@ pub mod dram;
 pub mod engine;
 pub mod trace;
 
-pub use engine::{simulate_gemm, simulate_gemm_with, BdMode, DispatchOverrides, GemmReport};
+pub use engine::{
+    abft_check_seconds, simulate_gemm, simulate_gemm_with, BdMode, DispatchOverrides, GemmReport,
+};

@@ -172,7 +172,7 @@ fn leader_death_mid_chain_is_bit_exact_vs_fault_free() {
         let rx = c
             .submit_chain_staged(
                 cons,
-                ChainStaging { device: None, a0: Some(staged_c.clone()) },
+                ChainStaging { device: None, a0: Some(staged_c.clone()), a0_sums: None },
             )
             .unwrap();
         let resp = rx.recv().unwrap();
@@ -296,7 +296,7 @@ fn dropped_response_is_served_exactly_once_and_bit_exact() {
     assert_eq!(fm.total_requeued(), 1, "the dropped unit was re-served");
     assert_eq!(cm.total_requeued(), 0);
     assert_eq!(fm.count(), 1, "re-served exactly once — one record");
-    assert_eq!(faulty.verified, Some(true));
+    assert_eq!(faulty.verified(), Some(true));
     assert!(refimpl::matrices_equal(
         faulty.result.as_ref().unwrap(),
         clean.result.as_ref().unwrap(),

@@ -72,7 +72,7 @@ fn functional_coordinator_serves_verified_trace() {
     }
     for rx in rxs {
         let resp = rx.recv().unwrap();
-        assert_eq!(resp.verified, Some(true), "{}", resp.name);
+        assert_eq!(resp.verified(), Some(true), "{}", resp.name);
     }
     let m = coord.shutdown().unwrap();
     assert!(m.all_verified());

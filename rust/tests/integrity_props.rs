@@ -1,0 +1,416 @@
+//! ISSUE 8 property suite: end-to-end result integrity.
+//!
+//! Three layers of guarantees, each pinned here:
+//!
+//! * **Checksum math** (`gemm::abft`) — clean executions always pass
+//!   capture/validate and the Huang–Abraham operand invariant (zero
+//!   false positives, including the bf16/bfp16 tolerance bounds, over
+//!   a sampled design/shape grid), while any single flipped C word is
+//!   always detected.
+//! * **Detect → recover wiring** — a seeded `CorruptResult` fault in
+//!   any dataflow path (isolated op, staged chain edge, whole graph)
+//!   is detected under `--integrity abft|full`, healed by a verified
+//!   recompute that is bit-exact vs a no-fault run, and surfaced as
+//!   `Recovered` in the response and tenant counters; an exhausted
+//!   budget is a visible `Failed`, never a hang and never served
+//!   corrupt bits.
+//! * **Determinism** — the same chaos seed (with corruption events
+//!   armed) produces the identical fault log, integrity totals, and
+//!   per-response outcomes across full process restarts (the CI
+//!   determinism job runs this suite twice).
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::coordinator::{
+    Backend, ChainStaging, Coordinator, CoordinatorOptions, FaultKind, FaultPlan, GemmRequest,
+    Integrity, IntegrityMode,
+};
+use xdna_gemm::dtype::{Layout, Precision};
+use xdna_gemm::gemm::abft;
+use xdna_gemm::gemm::exec::{Executor, Fidelity};
+use xdna_gemm::gemm::refimpl;
+use xdna_gemm::graph::{
+    assign, execute_functional, lower, partition, serve_graph, AssignOptions, PartitionOptions,
+};
+use xdna_gemm::mem::Matrix;
+use xdna_gemm::plan::GemmChain;
+use xdna_gemm::tiling::TilingConfig;
+use xdna_gemm::util::prop::prop_check;
+use xdna_gemm::workload::{GemmShape, TransformerConfig};
+
+fn coord(chaos: Option<FaultPlan>, mode: IntegrityMode, retries: usize) -> Coordinator {
+    Coordinator::start(CoordinatorOptions {
+        gen: Generation::Xdna2,
+        backend: Backend::Functional,
+        integrity: mode,
+        max_integrity_retries: retries,
+        chaos,
+        ..Default::default()
+    })
+}
+
+/// One scheduled corruption on the first unit the only device serves.
+fn corrupt_first(word: u64, xor_mask: u32) -> FaultPlan {
+    FaultPlan::single(1, 0, 1, FaultKind::CorruptResult { word, xor_mask })
+}
+
+#[test]
+fn clean_runs_pass_abft_and_any_single_word_flip_is_detected() {
+    // Random scaled-down designs over gen × precision × layout with a
+    // ragged M edge (the same sampler as tests/integration.rs): the
+    // capture checksums must accept the clean C, the operand invariant
+    // must never flag it (`Some(false)` would be a false positive),
+    // and flipping any single word must break validation.
+    prop_check("abft clean-pass / corrupt-detect", 16, |rng| {
+        let gen = *rng.pick(&[Generation::Xdna, Generation::Xdna2]);
+        let p = *rng.pick(&Precision::ALL);
+        let layout = *rng.pick(&[Layout::RowMajor, Layout::ColMajor]);
+        let (r, s, t) = p.micro_tile();
+        let m_ct = r * (1 + rng.below(2));
+        let k_ct = s * (1 + rng.below(2));
+        let n_ct = t.max(4) * (1 + rng.below(2));
+        let spec = gen.spec();
+        let Ok(cfg) = TilingConfig::new(
+            gen,
+            p,
+            m_ct,
+            k_ct,
+            n_ct,
+            k_ct * (1 + rng.below(3)),
+            spec.array_rows,
+            spec.shim_cols,
+            layout,
+        ) else {
+            return; // rare: misaligned n_ct·ty vs words (or bfp16 row-major)
+        };
+        let (nm, nk, nn) = cfg.native();
+        let (m, k, n) = (nm - rng.below(3), nk, nn);
+        let Ok(mut a) = Matrix::zeroed(m, k, p.ty_in(), Layout::RowMajor) else { return };
+        let Ok(mut b) = Matrix::zeroed(k, n, p.ty_in(), layout) else { return };
+        refimpl::fill_random(&mut a, p, rng.next_u64());
+        refimpl::fill_random(&mut b, p, rng.next_u64());
+        let c = Executor::new(cfg, Fidelity::Direct).execute(&a, &b).unwrap();
+        let sums = abft::capture(&c);
+        assert!(abft::validate(&c, &sums), "{}: clean C rejected", cfg.label());
+        assert_ne!(
+            abft::operand_invariant(&a, &b, &c, p),
+            Some(false),
+            "{}: operand-invariant false positive at {m}x{k}x{n}",
+            cfg.label()
+        );
+        let mut bad = c.clone();
+        let (idx, mask) = abft::corrupt_word(&mut bad, rng.next_u64(), rng.next_u64() as u32);
+        assert!(
+            !abft::validate(&bad, &sums),
+            "{}: flip of word {idx} (mask {mask:#x}) not detected",
+            cfg.label()
+        );
+    });
+}
+
+#[test]
+fn inexact_tolerance_bounds_have_zero_false_positives_on_the_shape_grid() {
+    // bf16/bfp16 get derived tolerance bounds and i8i32 an exact i64
+    // identity; over the sampled grid a clean reference result must
+    // never trip the invariant. The saturating int paths carry no
+    // linear invariant at all and must report `None`, not a guess.
+    for p in [Precision::Bf16, Precision::Bfp16, Precision::I8I32] {
+        // k and n stay in whole 8-value blocks so every shape is also
+        // bfp16-legal; m sweeps ragged values (bfp16 block edges get
+        // their pad bytes exercised by the odd n-words shapes).
+        for &(m, k, n) in &[(64, 64, 64), (17, 72, 40), (33, 64, 24), (50, 128, 16)] {
+            for seed in [1u64, 0xABCD, 0x5EED] {
+                let mut a = refimpl::input_matrix(m, k, p, Layout::RowMajor).unwrap();
+                let mut b = refimpl::input_matrix(k, n, p, Layout::ColMajor).unwrap();
+                refimpl::fill_random(&mut a, p, seed);
+                refimpl::fill_random(&mut b, p, seed ^ 0x9E37);
+                let c = refimpl::ref_gemm(&a, &b, p).unwrap();
+                assert_eq!(
+                    abft::operand_invariant(&a, &b, &c, p),
+                    Some(true),
+                    "{p} {m}x{k}x{n} seed {seed:#x}: false positive"
+                );
+            }
+        }
+    }
+    let mut a = refimpl::input_matrix(64, 64, Precision::I8I8, Layout::RowMajor).unwrap();
+    let mut b = refimpl::input_matrix(64, 64, Precision::I8I8, Layout::ColMajor).unwrap();
+    refimpl::fill_random(&mut a, Precision::I8I8, 3);
+    refimpl::fill_random(&mut b, Precision::I8I8, 4);
+    let c = refimpl::ref_gemm(&a, &b, Precision::I8I8).unwrap();
+    assert_eq!(
+        abft::operand_invariant(&a, &b, &c, Precision::I8I8),
+        None,
+        "saturating int8 has no linear invariant to check"
+    );
+}
+
+#[test]
+fn seeded_corruption_on_an_isolated_op_recovers_bit_exact() {
+    // Exact int8 and tolerance-bounded bf16 both ride the same wiring:
+    // detected first try, recomputed once at the queue front, served
+    // with the exact bits of a fault-free run.
+    for (p, mode) in [
+        (Precision::I8I8, IntegrityMode::Abft),
+        (Precision::Bf16, IntegrityMode::Abft),
+        (Precision::I8I8, IntegrityMode::Full),
+    ] {
+        let shape = GemmShape::new("iso", 64, 64, 64, p);
+        let c = coord(None, mode, 2);
+        let clean = c.call(GemmRequest::sim(shape.clone())).unwrap();
+        assert_eq!(clean.integrity, Integrity::Passed, "{p} {mode:?}");
+        c.shutdown().unwrap();
+
+        let c = coord(Some(corrupt_first(7, 0xFFFF_0001)), mode, 2);
+        let resp = c.call(GemmRequest::sim(shape)).unwrap();
+        assert_eq!(resp.integrity, Integrity::Recovered { retries: 1 }, "{p} {mode:?}");
+        assert_eq!(resp.verified(), Some(true), "recovered is good in the legacy view");
+        assert!(
+            refimpl::matrices_equal(
+                resp.result.as_ref().unwrap(),
+                clean.result.as_ref().unwrap(),
+                p,
+            ),
+            "{p} {mode:?}: recovery not bit-exact vs the no-fault run"
+        );
+        let m = c.shutdown().unwrap();
+        assert_eq!(m.integrity_totals(), (1, 0, 1, 0), "{p} {mode:?}");
+        assert_eq!(m.total_requeued(), 1, "the recompute rode the requeue path");
+        let log = m.fault_log();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0].kind.name(), "corrupt_result");
+        assert!(m.conserves());
+    }
+}
+
+#[test]
+fn integrity_off_serves_the_corrupt_bits_silently() {
+    // The failure mode the subsystem exists to close, demonstrated:
+    // with checking off the same seeded flip flows straight to the
+    // client as a well-formed, wrong answer.
+    let shape = GemmShape::new("off", 64, 64, 64, Precision::I8I8);
+    let c = coord(None, IntegrityMode::Off, 2);
+    let clean = c.call(GemmRequest::sim(shape.clone())).unwrap();
+    c.shutdown().unwrap();
+
+    let c = coord(Some(corrupt_first(7, 0xFFFF_0001)), IntegrityMode::Off, 2);
+    let resp = c.call(GemmRequest::sim(shape)).unwrap();
+    assert_eq!(resp.integrity, Integrity::NotChecked);
+    assert_eq!(resp.verified(), None);
+    assert!(
+        !refimpl::matrices_equal(
+            resp.result.as_ref().unwrap(),
+            clean.result.as_ref().unwrap(),
+            Precision::I8I8,
+        ),
+        "the injected corruption must actually reach the served bits"
+    );
+    let m = c.shutdown().unwrap();
+    assert_eq!(m.integrity_totals(), (0, 0, 0, 0));
+    assert_eq!(m.total_requeued(), 0);
+    assert_eq!(m.fault_log().len(), 1, "the fault still fired and was logged");
+}
+
+#[test]
+fn corrupt_staged_edge_is_rejected_at_the_consumer() {
+    let c = coord(None, IntegrityMode::Abft, 2);
+    let producer =
+        c.call(GemmRequest::sim(GemmShape::new("prod", 64, 64, 64, Precision::I8I8))).unwrap();
+    let staged_c = producer.result.unwrap();
+    let sums = abft::capture(&staged_c);
+    let mut cons = GemmChain::new("cons");
+    cons.push(GemmShape::new("cons.op0", 64, 64, 64, Precision::I8I8));
+
+    // Control: the honest tensor + checksums are consumed and pass.
+    let resp = c
+        .submit_chain_staged(
+            cons.clone(),
+            ChainStaging { device: None, a0: Some(staged_c.clone()), a0_sums: Some(sums.clone()) },
+        )
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert_eq!(resp.integrity, Integrity::Passed);
+    assert_eq!(resp.staged_edges, 1);
+    assert!(resp.result.is_some());
+
+    // A word flipped in transit: the consuming leader's re-validation
+    // rejects the edge outright — no retries burned (recomputing this
+    // chain cannot heal its already-completed producer), a visible
+    // Failed, and no result.
+    let mut bad = staged_c;
+    abft::corrupt_word(&mut bad, 11, 0x0080_4020);
+    let resp = c
+        .submit_chain_staged(
+            cons,
+            ChainStaging { device: None, a0: Some(bad), a0_sums: Some(sums) },
+        )
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert_eq!(resp.integrity, Integrity::Failed);
+    assert!(resp.result.is_none(), "a corrupt edge never feeds downstream ops");
+    let m = c.shutdown().unwrap();
+    assert_eq!(m.total_requeued(), 0, "edge corruption is terminal, not retried");
+    assert_eq!(m.integrity_totals(), (3, 2, 0, 1));
+    assert!(m.conserves());
+}
+
+#[test]
+fn chain_corruption_triggers_whole_chain_recovery_bit_exact() {
+    let mut chain = GemmChain::new("pair");
+    chain.push(GemmShape::new("pair.op0", 64, 64, 64, Precision::I8I8));
+    chain.push_chained(GemmShape::new("pair.op1", 64, 64, 64, Precision::I8I8)).unwrap();
+
+    let c = coord(None, IntegrityMode::Abft, 2);
+    let clean = c.submit_chain(chain.clone()).unwrap().recv().unwrap();
+    assert_eq!(clean.integrity, Integrity::Passed);
+    c.shutdown().unwrap();
+
+    // The fault flips the head op's C; recovery recomputes the whole
+    // chain so the staged producer→consumer edge is re-derived too.
+    let c = coord(Some(corrupt_first(42, 0x00FF_00FF)), IntegrityMode::Abft, 2);
+    let resp = c.submit_chain(chain).unwrap().recv().unwrap();
+    assert_eq!(resp.integrity, Integrity::Recovered { retries: 1 });
+    assert!(
+        refimpl::matrices_equal(
+            resp.result.as_ref().unwrap(),
+            clean.result.as_ref().unwrap(),
+            Precision::I8I8,
+        ),
+        "chain recovery not bit-exact vs the no-fault run"
+    );
+    let m = c.shutdown().unwrap();
+    assert_eq!(m.total_requeued(), 1);
+    assert_eq!(m.total_recovered(), 2, "both op records carry Recovered");
+    assert!(m.conserves());
+}
+
+#[test]
+fn exhausted_retry_budget_fails_visibly_and_conserves() {
+    // Two corrupted attempts against a budget of one retry: the unit
+    // completes as Failed with no result — never a hang, never served
+    // corrupt bits, and the tenant's books still balance.
+    let c = coord(None, IntegrityMode::Abft, 1);
+    let mut req = GemmRequest::sim(GemmShape::new("worst", 64, 64, 64, Precision::I8I8));
+    req.corrupt = 2;
+    let resp = c.call(req).unwrap();
+    assert_eq!(resp.integrity, Integrity::Failed);
+    assert_eq!(resp.verified(), Some(false));
+    assert!(resp.result.is_none(), "corrupt bits are never served");
+    let m = c.shutdown().unwrap();
+    assert_eq!(m.integrity_totals(), (1, 0, 0, 1));
+    assert_eq!(m.total_requeued(), 1, "exactly the budget was spent");
+    assert!(m.conserves());
+    assert_eq!(m.tenants[0].completed, 1, "failed-with-response, not hung");
+}
+
+#[test]
+fn graph_dataflow_with_seeded_corruption_recovers_end_to_end() {
+    // The branching attention DAG (fan-out + join) served through the
+    // coordinator with a corruption landing on the first chain: every
+    // chain tail must still match the pure-executor dataflow bit for
+    // bit, because the poisoned chain was recomputed before its staged
+    // C fed any consumer.
+    let gen = Generation::Xdna;
+    let cfg = TransformerConfig {
+        seq: 32,
+        d_model: 32,
+        d_ffn: 64,
+        vocab: 48,
+        n_layers: 1,
+        precision: Precision::I8I8,
+    };
+    let g = cfg.attention_graph().unwrap();
+    let fleet = vec![gen];
+    let assigned =
+        assign(&g, &AssignOptions { budget_per_node: 1.0, fleet: fleet.clone() }).unwrap();
+    let lowered = lower(&assigned.graph);
+    let part = partition(&assigned.graph, &lowered, &PartitionOptions::fleet(fleet.clone()));
+    let want = execute_functional(&assigned.graph, gen, 1).unwrap();
+
+    let coordinator = Coordinator::start(CoordinatorOptions {
+        devices: fleet,
+        backend: Backend::Functional,
+        integrity: IntegrityMode::Abft,
+        chaos: Some(corrupt_first(5, 0x1111_1110)),
+        ..Default::default()
+    });
+    let responses = serve_graph(&coordinator, &assigned.graph, &lowered, &part, true).unwrap();
+    for (ci, resp) in responses.iter().enumerate() {
+        assert!(resp.integrity.ok(), "chain {ci}: {:?}", resp.integrity);
+        let tail = lowered.chain_tail(ci);
+        assert!(
+            refimpl::matrices_equal(resp.result.as_ref().unwrap(), &want[tail], Precision::I8I8),
+            "chain {ci} tail differs after recovery"
+        );
+    }
+    let m = coordinator.shutdown().unwrap();
+    assert!(m.total_recovered() >= 1, "the corruption fired and was healed");
+    assert_eq!(m.fault_log().len(), 1);
+    assert!(m.conserves());
+}
+
+#[test]
+fn same_seed_corruption_history_is_fully_deterministic() {
+    // Full-history determinism with corruption events armed: outcomes,
+    // the fired-fault log, integrity totals, and requeue counts are
+    // identical run over run (and, via the CI determinism job, across
+    // process restarts).
+    let run = || {
+        let plan = FaultPlan::from_seed(5, 1, 8, 2).with_corruption(5, 1, 8, 2);
+        let c = Coordinator::start(CoordinatorOptions {
+            devices: vec![Generation::Xdna2],
+            backend: Backend::Functional,
+            integrity: IntegrityMode::Abft,
+            chaos: Some(plan),
+            ..Default::default()
+        });
+        let mut rxs = Vec::new();
+        for i in 0..12 {
+            let shape = GemmShape::new(&format!("r{i}"), 64, 64, 64, Precision::I8I8);
+            rxs.push(c.submit(GemmRequest::sim(shape)).unwrap());
+        }
+        let outcomes: Vec<Integrity> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().integrity).collect();
+        let m = c.shutdown().unwrap();
+        (outcomes, m.fault_log(), m.integrity_totals(), m.total_requeued())
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed must replay the identical history");
+    assert!(
+        a.1.iter().any(|f| f.kind.name() == "corrupt_result"),
+        "corruption events actually fired: {:?}",
+        a.1
+    );
+    assert!(a.2 .2 >= 1, "at least one unit was recovered: {:?}", a.2);
+}
+
+#[test]
+fn corruption_plan_sites_match_the_pinned_golden() {
+    // Cross-language pin (python/tests/test_integrity_model.py): the
+    // seed-2 corruption sites layered on the PR-6 plan, and the
+    // corruption-only seed-7 seqs, byte-for-byte.
+    let plan = FaultPlan::from_seed(2, 2, 32, 4).with_corruption(2, 2, 32, 2);
+    let corr = |d: usize| -> Vec<(u64, u64, u32)> {
+        plan.device_events(d)
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::CorruptResult { word, xor_mask } => Some((e.seq, word, xor_mask)),
+                _ => None,
+            })
+            .collect()
+    };
+    assert_eq!(
+        corr(0),
+        vec![(21, 6898576805263037612, 0x1EDA_FEBC), (29, 12113513064234870111, 0x9725_FF6F)]
+    );
+    assert_eq!(
+        corr(1),
+        vec![(11, 10056184684129657251, 0xB1B3_60CB), (30, 6101993186801645025, 0x7B16_0F40)]
+    );
+    let only = FaultPlan::corruption_only(7, 1, 16, 3);
+    let seqs: Vec<u64> = only.device_events(0).iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, vec![10, 11, 12]);
+    assert_eq!(only.corruptions(), 3);
+}

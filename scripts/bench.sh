@@ -1,22 +1,24 @@
 #!/usr/bin/env bash
-# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–7): run the
-# hotpath, chain_vs_isolated, bfp16_vs_bf16, graph_vs_chain, soak and
-# llm_serving benches with JSON recording enabled and merge them into
-# BENCH_PR7.json — GEMM/s, functional GB/s, packing/threading speedups,
-# the native-bfp16 vs bf16-emulation speedup, the graph compiler's
-# DAG-aware-schedule speedups, the chaos-soak's sustained TOPS /
-# p99 / fault counters, and the continuous-batching LLM serving
-# tokens/s, p50/p99 token latency and coalescing speedup — so future
-# PRs can diff against a machine-readable baseline.
+# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–8): run the
+# hotpath, chain_vs_isolated, bfp16_vs_bf16, graph_vs_chain, soak,
+# llm_serving and abft_overhead benches with JSON recording enabled and
+# merge them into BENCH_PR8.json — GEMM/s, functional GB/s,
+# packing/threading speedups, the native-bfp16 vs bf16-emulation
+# speedup, the graph compiler's DAG-aware-schedule speedups, the
+# chaos-soak's sustained TOPS / p99 / fault counters, the
+# continuous-batching LLM serving tokens/s + p50/p99 token latency +
+# coalescing speedup, and the ABFT integrity layer's device-time
+# overhead vs integrity-off and vs a full reference recompute — so
+# future PRs can diff against a machine-readable baseline.
 #
-# usage: scripts/bench.sh [out.json]     (default: BENCH_PR7.json)
+# usage: scripts/bench.sh [out.json]     (default: BENCH_PR8.json)
 #        BENCH_MS=500 scripts/bench.sh   (longer per-case budget)
 #        SOAK_OPS=1500 scripts/bench.sh  (shorter soak horizon)
 #        LLM_SESSIONS=6 scripts/bench.sh (lighter serving load)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-out="${1:-BENCH_PR7.json}"
+out="${1:-BENCH_PR8.json}"
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
 
@@ -41,14 +43,17 @@ BENCH_JSON="$tmp/soak.json" cargo bench --bench soak
 echo "==> cargo bench --bench llm_serving"
 BENCH_JSON="$tmp/llm.json" cargo bench --bench llm_serving
 
+echo "==> cargo bench --bench abft_overhead"
+BENCH_JSON="$tmp/abft.json" cargo bench --bench abft_overhead
+
 echo "==> merging into $out"
 python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$tmp/bfp16.json" "$tmp/graph.json" \
-    "$tmp/soak.json" "$tmp/llm.json" "$out" <<'PY'
+    "$tmp/soak.json" "$tmp/llm.json" "$tmp/abft.json" "$out" <<'PY'
 import json
 import sys
 
-hot, chain, bfp, graph, soak, llm, out = sys.argv[1:8]
-groups = [json.load(open(p)) for p in (hot, chain, bfp, graph, soak, llm)]
+hot, chain, bfp, graph, soak, llm, abft, out = sys.argv[1:9]
+groups = [json.load(open(p)) for p in (hot, chain, bfp, graph, soak, llm, abft)]
 
 
 def thrpt(group, name):
@@ -59,15 +64,17 @@ def thrpt(group, name):
 
 
 summary = {
-    "artifact": "BENCH_PR7",
+    "artifact": "BENCH_PR8",
     "description": "packed+parallel functional executor vs re-streaming serial "
     "baseline, native bfp16 vs bf16 emulation on XDNA2, the graph "
     "compiler's DAG-aware fleet schedule vs isolated-dispatch and "
     "single-device-chain baselines, the two-tenant chaos soak "
-    "(sustained TOPS / p99 under seeded fault injection), and the "
+    "(sustained TOPS / p99 under seeded fault injection), the "
     "continuous-batching LLM serving runtime (tokens/s, p50/p99 token "
     "latency, coalesced-vs-per-session decode speedup on both "
-    "generations)",
+    "generations), and the ABFT integrity layer's device-time overhead "
+    "at the paper's Table 2-3 shapes (vs integrity-off and vs a full "
+    "reference recompute, both generations)",
     "gemms_per_s": thrpt(groups[0], "executor_gemms_per_s"),
     "functional_gb_per_s": thrpt(groups[0], "executor_functional_gb_s"),
     "packing_speedup_serial": thrpt(groups[0], "executor_packing_speedup"),
@@ -95,6 +102,12 @@ summary = {
     "llm_token_p50_ms_xdna": thrpt(groups[5], "llm_token_p50_ms_xdna"),
     "llm_token_p99_ms_xdna": thrpt(groups[5], "llm_token_p99_ms_xdna"),
     "llm_coalesce_speedup_xdna": thrpt(groups[5], "llm_coalesce_speedup_xdna"),
+    "abft_overhead_pct_xdna": thrpt(groups[6], "abft_overhead_pct_xdna"),
+    "abft_overhead_pct_xdna2": thrpt(groups[6], "abft_overhead_pct_xdna2"),
+    "full_verify_overhead_pct_xdna": thrpt(groups[6], "full_verify_overhead_pct_xdna"),
+    "full_verify_overhead_pct_xdna2": thrpt(groups[6], "full_verify_overhead_pct_xdna2"),
+    "full_over_abft_cost_ratio_xdna": thrpt(groups[6], "full_over_abft_cost_ratio_xdna"),
+    "full_over_abft_cost_ratio_xdna2": thrpt(groups[6], "full_over_abft_cost_ratio_xdna2"),
     "groups": groups,
 }
 with open(out, "w") as f:
