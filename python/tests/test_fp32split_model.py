@@ -1,0 +1,210 @@
+"""Transliteration of the PR-9 Ozaki fp32-split path (ISSUE 9).
+
+Mirrors, constant for constant:
+
+* the error-free two-limb split of `rust/src/dtype_split.rs` —
+  `hi = bf16(x)` (round-to-nearest-even), `lo = bf16(x - hi)`, residual
+  `|r| <= u^2 |x|` with u = 2^-9, non-finite values riding the hi limb;
+* the three-limb GEMM expansion `A.B ~ Ahi.Bhi + Ahi.Blo + Alo.Bhi`
+  (LIMB_GEMMS = 3, the O(u^2) `lo.lo` term dropped), each limb
+  accumulated ascending-k in f32 and rejoined `(hh + hl) + lh` in f32;
+* the derived worst-case `error_bound(k, max_a, max_b)` and the ISSUE-9
+  acceptance pin: >= 50x tighter than plain bf16 at <= 4x the device
+  dispatches;
+* the accuracy-budget economics of `graph/assign.rs` — the err-unit
+  table (fp32_split = 0.001, 50x below bf16's 0.05), the LIMB_GEMMS
+  time multiple, and the greedy's never-overdraw / typed-infeasible
+  contract.
+
+Keep in lock-step with `rust/src/dtype_split.rs` and
+`rust/src/graph/assign.rs` (see `rust/tests/fp32split_props.rs`).
+"""
+
+import numpy as np
+
+U_BF16 = 2.0 ** -9  # bf16 unit roundoff (8 mantissa bits + hidden one)
+LIMB_GEMMS = 3
+
+# graph/assign.rs err-unit table: error units per op at each precision
+# class. fp32_split sits 50x below bf16 — the recovery the split buys.
+ERR_COST = {
+    "i8i8": 1.0,
+    "i8i16": 0.5,
+    "i8i32": 0.25,
+    "bfp16": 0.25,
+    "bf16": 0.05,
+    "fp32_split": 0.001,
+}
+
+
+# ---- the limb codec (dtype_split::split_f32) ---------------------------
+
+
+def bf16(x):
+    """Round f32 values to bf16 (round-to-nearest-even), kept as f32."""
+    x = np.asarray(x, dtype=np.float32)
+    u = x.view(np.uint32)
+    nan = np.isnan(x)
+    rounded = (u + 0x7FFF + ((u >> np.uint32(16)) & np.uint32(1))) & np.uint32(0xFFFF0000)
+    out = np.where(nan, u | np.uint32(0x00400000), rounded).view(np.float32)
+    return out
+
+
+def split(x):
+    """hi/lo limb split; non-finite values carry entirely in hi."""
+    x = np.asarray(x, dtype=np.float32)
+    hi = bf16(x)
+    with np.errstate(invalid="ignore"):
+        lo = np.where(np.isfinite(x), bf16(np.float32(x - hi)), np.float32(0.0))
+    return hi, lo
+
+
+def gemm_f32(a, b):
+    """Ascending-k f32 accumulation (refimpl's reduction order)."""
+    m, k = a.shape
+    _, n = b.shape
+    acc = np.zeros((m, n), dtype=np.float32)
+    for kk in range(k):
+        acc += np.outer(a[:, kk], b[kk, :]).astype(np.float32)
+    return acc
+
+
+def split_gemm(a, b):
+    """The three bf16 limb GEMMs + fixed-order f32 rejoin."""
+    a_hi, a_lo = split(a)
+    b_hi, b_lo = split(b)
+    hh = gemm_f32(a_hi, b_hi)
+    hl = gemm_f32(a_hi, b_lo)
+    lh = gemm_f32(a_lo, b_hi)
+    return np.float32(np.float32(hh + hl) + lh)
+
+
+def error_bound(k, max_a, max_b):
+    """dtype_split::error_bound, term for term."""
+    split_term = 4.0 * 2.0 ** -18 * k * max_a * max_b
+    accum = 3.0 * (k + 2.0) * 2.0 ** -24 * k * max_a * max_b
+    subnormal = k * (max_a + max_b) * 2.0 ** -134
+    return split_term + accum + subnormal
+
+
+# ---- codec properties --------------------------------------------------
+
+
+def test_split_is_error_free_to_second_order():
+    rng = np.random.default_rng(9)
+    x = (rng.standard_normal(4096) * np.exp2(rng.integers(-100, 100, 4096))).astype(
+        np.float32
+    )
+    hi, lo = split(x)
+    resid = np.abs(x.astype(np.float64) - (hi.astype(np.float64) + lo.astype(np.float64)))
+    # 4u^2 = 2^-16: both roundings can land on the wide side of their
+    # half-ulp near a binade edge — the same bound the Rust tests pin.
+    bound = 2.0 ** -16 * np.abs(x).astype(np.float64) + 2.0 ** -134
+    assert (resid <= bound).all()
+    # hi alone is plain bf16: the lo limb recovers all but O(u^2).
+    worst_plain = np.max(np.abs(x.astype(np.float64) - hi.astype(np.float64)))
+    assert worst_plain > np.max(resid)
+
+
+def test_split_handles_nonfinite_and_denormals():
+    hi, lo = split(np.array([np.nan, np.inf, -np.inf], dtype=np.float32))
+    assert np.isnan(hi[0]) and hi[1] == np.inf and hi[2] == -np.inf
+    assert (lo == 0.0).all()
+    tiny = np.array([1e-40, -3.4e-41, 1.4e-45, 0.0], dtype=np.float32)
+    hi, lo = split(tiny)
+    back = hi.astype(np.float64) + lo.astype(np.float64)
+    assert np.isfinite(back).all()
+    assert (np.abs(tiny.astype(np.float64) - back) <= 2.0 ** -134 + U_BF16 ** 2 * 1e-40).all()
+
+
+# ---- GEMM accuracy -----------------------------------------------------
+
+
+def test_split_gemm_stays_inside_error_bound():
+    rng = np.random.default_rng(21)
+    for m, k, n in [(8, 32, 8), (4, 128, 4), (16, 64, 3)]:
+        a = (rng.standard_normal((m, k)) * np.exp2(rng.integers(-12, 12, (m, k)))).astype(
+            np.float32
+        )
+        b = (rng.standard_normal((k, n)) * np.exp2(rng.integers(-12, 12, (k, n)))).astype(
+            np.float32
+        )
+        c = split_gemm(a, b)
+        oracle = a.astype(np.float64) @ b.astype(np.float64)
+        err = np.max(np.abs(c.astype(np.float64) - oracle))
+        bound = error_bound(k, np.max(np.abs(a)), np.max(np.abs(b)))
+        assert err <= bound, f"{m}x{k}x{n}: {err} > {bound}"
+
+
+def test_recovery_is_at_least_50x_over_plain_bf16():
+    # The ISSUE-9 accuracy pin, mirrored: same f32 operands through the
+    # split path and through plain bf16 (quantized operands, bf16 C).
+    rng = np.random.default_rng(11)
+    m, k, n = (64, 512, 64)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    oracle = a.astype(np.float64) @ b.astype(np.float64)
+
+    c_split = split_gemm(a, b)
+    err_split = np.max(np.abs(c_split.astype(np.float64) - oracle))
+    assert err_split <= error_bound(k, np.max(np.abs(a)), np.max(np.abs(b)))
+
+    c_bf16 = bf16(gemm_f32(bf16(a), bf16(b)))
+    err_bf16 = np.max(np.abs(c_bf16.astype(np.float64) - oracle))
+
+    assert err_bf16 >= 50.0 * err_split, f"recovery {err_bf16 / err_split:.1f}x < 50x"
+    # ...at <= 4x the device dispatches (the simulated-time multiple the
+    # Rust cost sites charge per fp32_split op).
+    assert LIMB_GEMMS <= 4
+
+
+# ---- accuracy-budget economics (graph/assign.rs) -----------------------
+
+
+def test_err_cost_table_puts_split_50x_below_bf16():
+    assert ERR_COST["bf16"] / ERR_COST["fp32_split"] == 50.0
+    # fp32_split is the most accurate and (at 3 dispatches of the same
+    # bf16 design) the slowest tier: it only wins below bf16's floor.
+    assert ERR_COST["fp32_split"] == min(ERR_COST.values())
+
+
+def greedy_assign(n_nodes, budget_per_node):
+    """graph/assign.rs greedy, single component: fastest class whose
+    err fits the remaining budget; typed failure when even the most
+    accurate class does not fit."""
+    budget = budget_per_node * n_nodes
+    # (class, err units, relative time) fastest-first; fp32_split pays
+    # the LIMB_GEMMS multiple on the bf16 time.
+    cands = [("i8i8", 1.0, 1.0), ("bf16", 0.05, 2.0), ("fp32_split", 0.001, 2.0 * LIMB_GEMMS)]
+    remaining = budget
+    err = n_nodes * min(c[1] for c in cands)
+    picks = []
+    for _ in range(n_nodes):
+        err -= min(c[1] for c in cands)  # reserve for the nodes after me
+        pick = next((c for c in cands if c[1] <= remaining - err + 1e-12), None)
+        if pick is None:
+            cheapest = min(c[1] for c in cands)
+            raise ValueError(
+                f"accuracy budget infeasible: needs >= {cheapest} error units "
+                f"but only {remaining - err} of the {budget}-unit budget remains"
+            )
+        picks.append(pick[0])
+        remaining -= pick[1]
+    assert remaining >= -1e-12, "greedy overdrew the budget"
+    return picks
+
+
+def test_sub_bf16_budget_buys_fp32_split():
+    picks = greedy_assign(4, 0.01)
+    assert picks == ["fp32_split"] * 4
+    assert greedy_assign(4, 0.06) == ["bf16"] * 4
+    assert greedy_assign(4, 1.0) == ["i8i8"] * 4
+
+
+def test_infeasible_budget_is_a_typed_error_not_an_overdraw():
+    try:
+        greedy_assign(4, 0.0005)
+    except ValueError as e:
+        assert "infeasible" in str(e)
+    else:
+        raise AssertionError("expected the greedy to refuse the infeasible budget")

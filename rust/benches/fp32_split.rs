@@ -1,0 +1,101 @@
+//! ISSUE 9 acceptance artifact: fp32-accuracy GEMM via Ozaki
+//! precision-recovery splitting (DESIGN.md §15) vs the plain bf16 path
+//! it rides on.
+//!
+//! Three measurements:
+//! 1. *Accuracy recovery* — max |C − f64 oracle| of the split path vs
+//!    plain bf16 on the same f32 operands at a (reduced) Table-3
+//!    geometry. Gate: ≥ 50× tighter.
+//! 2. *Simulated cost* — the logical op costs LIMB_GEMMS bf16-design
+//!    dispatches on both generations. Gate: ≤ 4× the single bf16 GEMM.
+//! 3. *Functional wall-clock* — the split kernel (split + 3 limb GEMMs
+//!    + f32 rejoin) timed against the bf16 reference GEMM, single- and
+//!    multi-threaded.
+//!
+//! `BENCH_JSON=path` emits the machine-readable record `scripts/bench.sh`
+//! folds into `BENCH_PR9.json`.
+
+use xdna_gemm::arch::{balanced_config, Generation};
+use xdna_gemm::dtype::{Bf16, Layout, Precision};
+use xdna_gemm::dtype_split::{error_bound, gemm_f64, split_exec, split_gemm, LIMB_GEMMS};
+use xdna_gemm::gemm::refimpl;
+use xdna_gemm::mem::Matrix;
+use xdna_gemm::sim::{simulate_gemm, BdMode};
+use xdna_gemm::util::bench::{black_box, Bench};
+
+fn max_abs_err(c: &dyn Fn(usize, usize) -> f64, oracle: &[f64], m: usize, n: usize) -> f64 {
+    let mut worst = 0f64;
+    for i in 0..m {
+        for j in 0..n {
+            worst = worst.max((c(i, j) - oracle[i * n + j]).abs());
+        }
+    }
+    worst
+}
+
+fn main() {
+    let b = Bench::new("fp32_split");
+
+    // Accuracy at a reduced Table-3 bf16 geometry (the full 4K shape
+    // would only shrink the bf16 side's relative luck, not the gate).
+    let (m, k, n) = (128usize, 1024, 128);
+    let mut a = Matrix::zeroed(m, k, 4, Layout::RowMajor).unwrap();
+    let mut bm = Matrix::zeroed(k, n, 4, Layout::ColMajor).unwrap();
+    refimpl::fill_random(&mut a, Precision::Fp32Split, 21);
+    refimpl::fill_random(&mut bm, Precision::Fp32Split, 22);
+    let oracle = gemm_f64(&a, &bm);
+
+    let split_c = split_gemm(&a, &bm).unwrap();
+    let split_err = max_abs_err(&|i, j| split_c.get_f32(i, j) as f64, &oracle, m, n);
+    assert!(
+        split_err <= error_bound(k, 6.0, 6.0),
+        "split error {split_err:e} outside its derived bound"
+    );
+
+    let mut abf = Matrix::zeroed(m, k, 2, Layout::RowMajor).unwrap();
+    let mut bbf = Matrix::zeroed(k, n, 2, Layout::ColMajor).unwrap();
+    for i in 0..m {
+        for j in 0..k {
+            abf.set_bf16(i, j, Bf16::from_f32(a.get_f32(i, j)));
+        }
+    }
+    for i in 0..k {
+        for j in 0..n {
+            bbf.set_bf16(i, j, Bf16::from_f32(bm.get_f32(i, j)));
+        }
+    }
+    let bf16_c = refimpl::ref_gemm(&abf, &bbf, Precision::Bf16).unwrap();
+    let bf16_err = max_abs_err(&|i, j| bf16_c.get_bf16(i, j).to_f32() as f64, &oracle, m, n);
+    let recovery = bf16_err / split_err;
+    b.throughput("fp32_split_recovery_x", recovery, "x tighter than bf16");
+    assert!(recovery >= 50.0, "accuracy recovery gate: {recovery:.1}x < 50x");
+
+    // Simulated device cost on both generations: the logical op is
+    // LIMB_GEMMS dispatches of the bf16 balanced design.
+    for gen in [Generation::Xdna, Generation::Xdna2] {
+        let bf16 = balanced_config(gen, Precision::Bf16);
+        let split_cfg = balanced_config(gen, Precision::Fp32Split);
+        let (sm, sk, sn) = (4032usize, 4224, 4608); // paper Table-3 bf16 row
+        let t_bf16 = simulate_gemm(&bf16, sm, sk, sn, BdMode::Overlapped).t_total;
+        let t_split =
+            simulate_gemm(&split_cfg, sm, sk, sn, BdMode::Overlapped).t_total * LIMB_GEMMS as f64;
+        let ratio = t_split / t_bf16;
+        let tag = match gen {
+            Generation::Xdna => "xdna",
+            Generation::Xdna2 => "xdna2",
+        };
+        b.throughput(&format!("fp32_split_cost_ratio_{tag}"), ratio, "x bf16 device time");
+        assert!(ratio <= 4.0, "{gen}: simulated cost {ratio:.2}x > 4x budget");
+    }
+
+    // Functional wall-clock: the split kernel vs the bf16 reference.
+    b.case("split_gemm_1thread", || black_box(split_exec(&a, &bm, 1).unwrap()));
+    b.case("split_gemm_8threads", || black_box(split_exec(&a, &bm, 8).unwrap()));
+    b.case("bf16_ref_gemm", || black_box(refimpl::ref_gemm(&abf, &bbf, Precision::Bf16).unwrap()));
+
+    println!(
+        "fp32_split at {m}x{k}x{n}: max err {split_err:.3e} vs bf16 {bf16_err:.3e} \
+         -> {recovery:.0}x recovery at {LIMB_GEMMS}x dispatches"
+    );
+    b.finish();
+}

@@ -131,6 +131,12 @@ impl NpuSpec {
             (Generation::Xdna2, Precision::I8I32) => 448.0,
             (Generation::Xdna2, Precision::Bf16) => 192.0,
             (Generation::Xdna2, Precision::Bfp16) => 512.0,
+            // Logical fp32_split executes as bf16 limb GEMMs, so its
+            // per-dispatch peak is the bf16 rate; the 3× dispatch count
+            // is charged where dispatches are counted (assign / plan /
+            // partition), not here.
+            (Generation::Xdna, Precision::Fp32Split) => 128.0,
+            (Generation::Xdna2, Precision::Fp32Split) => 192.0,
         }
     }
 
@@ -204,6 +210,10 @@ pub static XDNA2: NpuSpec = NpuSpec {
 /// own balanced-search winners under the calibrated simulator, validated
 /// by `optimizer::balanced` tests and the `bfp16_vs_bf16` bench.
 pub fn balanced_config(gen: Generation, p: Precision) -> TilingConfig {
+    // fp32_split has no schedule of its own (`TilingConfig::validate`
+    // rejects it): it executes as bf16 limb GEMMs, so its balanced
+    // design *is* the bf16 design.
+    let p = if p == Precision::Fp32Split { Precision::Bf16 } else { p };
     let (m_ct, k_ct, n_ct, k_mt) = match (gen, p) {
         (Generation::Xdna, Precision::I8I8) => (112, 112, 112, 448),
         (Generation::Xdna, Precision::I8I16) => (96, 112, 96, 448),
@@ -215,6 +225,7 @@ pub fn balanced_config(gen: Generation, p: Precision) -> TilingConfig {
         (Generation::Xdna2, Precision::I8I32) => (96, 64, 96, 384),
         (Generation::Xdna2, Precision::Bf16) => (112, 48, 96, 384),
         (Generation::Xdna2, Precision::Bfp16) => (140, 40, 144, 440),
+        (_, Precision::Fp32Split) => unreachable!("remapped to bf16 above"),
     };
     let spec = gen.spec();
     TilingConfig::new(
@@ -252,6 +263,9 @@ pub const SKINNY_M_MAX: usize = 64;
 /// search (`optimizer::optimize_skinny`) confirms the landscape is flat
 /// (B traffic dominates at M ≤ 64) and these picks sit on its plateau.
 pub fn skinny_balanced_config(gen: Generation, p: Precision) -> TilingConfig {
+    // Same remap as `balanced_config`: the logical fp32_split precision
+    // schedules as bf16.
+    let p = if p == Precision::Fp32Split { Precision::Bf16 } else { p };
     let wide = balanced_config(gen, p);
     let spec = gen.spec();
     TilingConfig::new(
@@ -312,6 +326,25 @@ mod tests {
                 assert_eq!(cfg.m_rows, 4);
                 assert_eq!(cfg.n_cols, gen.spec().shim_cols);
             }
+        }
+    }
+
+    #[test]
+    fn fp32_split_maps_to_the_bf16_design() {
+        // The logical precision must never own a schedule: both config
+        // constructors hand back the bf16 design, and the per-dispatch
+        // peak is the bf16 rate on both generations.
+        for gen in Generation::ALL {
+            let split = balanced_config(gen, Precision::Fp32Split);
+            let bf16 = balanced_config(gen, Precision::Bf16);
+            assert_eq!(split.precision, Precision::Bf16);
+            assert_eq!(split.label(), bf16.label());
+            let skinny = skinny_balanced_config(gen, Precision::Fp32Split);
+            assert_eq!(skinny.precision, Precision::Bf16);
+            assert_eq!(
+                gen.spec().peak_macs_per_cycle(Precision::Fp32Split),
+                gen.spec().peak_macs_per_cycle(Precision::Bf16)
+            );
         }
     }
 

@@ -78,11 +78,18 @@ impl DesignKey {
     /// request actually carrying row-major bfp16 operands then fails
     /// the executor's layout check and is poisoned per request, instead
     /// of panicking a leader inside `balanced_config(..).with_b_layout`.
+    ///
+    /// Likewise the logical `fp32_split` precision has no datapath
+    /// schedule of its own (`TilingConfig::validate` rejects it): its
+    /// limb GEMMs run on the bf16 design, so the key maps to bf16 —
+    /// a hostile request naming fp32_split at the dispatch layer gets
+    /// the bf16 design and then a typed per-op error, never a leader
+    /// panic.
     pub fn normalized(self) -> DesignKey {
-        if self.precision == Precision::Bfp16 {
-            DesignKey { b_layout: Layout::ColMajor, ..self }
-        } else {
-            self
+        match self.precision {
+            Precision::Bfp16 => DesignKey { b_layout: Layout::ColMajor, ..self },
+            Precision::Fp32Split => DesignKey { precision: Precision::Bf16, ..self },
+            _ => self,
         }
     }
 }

@@ -42,6 +42,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::arch::Generation;
 use crate::dtype::{Layout, Precision};
+use crate::dtype_split;
 use crate::gemm::abft::{self, AbftChecksums};
 use crate::gemm::exec::{ExecOptions, Executor};
 use crate::gemm::refimpl;
@@ -662,10 +663,12 @@ impl Coordinator {
                     first.k
                 );
             }
-            // Element format must match the design's input dtype too — a
-            // mis-typed image would otherwise be reinterpreted as raw
-            // bytes and silently produce a wrong C.
-            let p = DesignKey::for_shape(first).precision;
+            // Element format must match the op's *logical* input dtype —
+            // a mis-typed image would otherwise be reinterpreted as raw
+            // bytes and silently produce a wrong C. Note the shape's own
+            // precision, not the design key's: fp32_split normalizes to
+            // the bf16 design but stages 4-byte f32 images.
+            let p = first.precision;
             let type_ok = if p == Precision::Bfp16 {
                 a0.is_bfp16()
             } else {
@@ -1329,7 +1332,13 @@ fn run_chain(
         let sim =
             simulate_gemm_with(&cfgs[i], op.shape.m, op.shape.k, op.shape.n, bd_mode, ovs[i]);
         let (m, k, n) = (op.shape.m, op.shape.k, op.shape.n);
-        let device_s = sim.t_total
+        // The op's logical precision; differs from the loaded design's
+        // only for fp32_split, which rides the bf16 design as LIMB_GEMMS
+        // dispatches and stages f32 images.
+        let logical_p = op.shape.precision;
+        let split = logical_p == Precision::Fp32Split;
+        let dispatches = if split { dtype_split::LIMB_GEMMS as f64 } else { 1.0 };
+        let device_s = sim.t_total * dispatches
             + reconfig_s
             + if i == 0 { stall_s } else { 0.0 }
             + integrity_seconds(opts.integrity, gen, cfgs[i].precision, m, k, n);
@@ -1364,11 +1373,17 @@ fn run_chain(
                         staged_edges += 1;
                         c
                     }
-                    _ => functional_a(&op.shape, cfgs[i].precision)?,
+                    _ => functional_a(&op.shape, logical_p)?,
                 };
-                Ok((a, functional_b(&op.shape, cfgs[i].precision)?))
+                Ok((a, functional_b(&op.shape, logical_p)?))
             })();
+            // fp32_split ops never enter the packed executor: the limb
+            // GEMMs + f32 rejoin run through dtype_split (bit-exact at
+            // every thread count, same kernel as the pure-executor path).
             let executed = match inputs {
+                Ok((a, b)) if split => dtype_split::split_exec(&a, &b, opts.exec_threads)
+                    .ok()
+                    .map(|c| (a, b, c)),
                 Ok((a, b)) => exec.execute(&a, &b).ok().map(|c| (a, b, c)),
                 Err(_) => None,
             };
@@ -1390,12 +1405,12 @@ fn run_chain(
                         IntegrityMode::Off => Some(true),
                         IntegrityMode::Abft => Some(
                             abft::validate(&c, sums.as_ref().expect("captured when checking"))
-                                && abft::operand_invariant(&a, &b, &c, cfgs[i].precision)
+                                && abft::operand_invariant(&a, &b, &c, logical_p)
                                     != Some(false),
                         ),
-                        IntegrityMode::Full => refimpl::ref_gemm(&a, &b, cfgs[i].precision)
+                        IntegrityMode::Full => refimpl::ref_gemm(&a, &b, logical_p)
                             .ok()
-                            .map(|w| refimpl::matrices_equal(&c, &w, cfgs[i].precision)),
+                            .map(|w| refimpl::matrices_equal(&c, &w, logical_p)),
                     };
                     match clean {
                         Some(true) => {

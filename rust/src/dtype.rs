@@ -96,6 +96,16 @@ pub enum Precision {
     /// word-aligned repack of DESIGN.md §10), so the wire/buffer density
     /// is 12 bits/value over the dense format's 9.
     Bfp16,
+    /// *Logical* fp32-accuracy GEMM via Ozaki/Ootomo error-free operand
+    /// splitting (`dtype_split`, DESIGN.md §15): f32 operands decompose
+    /// into bf16 hi/lo limbs, each limb product runs as a plain bf16
+    /// GEMM on the existing datapath, and the f32 partials rejoin
+    /// elementwise. This precision never reaches a tiling schedule or a
+    /// device datapath — `TilingConfig::validate` rejects it and
+    /// `DesignKey::normalized` maps it to the bf16 design it physically
+    /// executes on; one logical dispatch costs
+    /// [`crate::dtype_split::LIMB_GEMMS`] bf16 dispatches.
+    Fp32Split,
 }
 
 impl Precision {
@@ -106,6 +116,9 @@ impl Precision {
 
     /// Every supported precision including the native-bfp16 extension
     /// (the Sec. 5.3.4 future-work path this crate implements).
+    /// [`Precision::Fp32Split`] is deliberately absent: it is a logical
+    /// precision with no device schedule, so design-cache warm loops and
+    /// table sweeps must never iterate it.
     pub const ALL_EXTENDED: [Precision; 5] = [
         Precision::I8I8,
         Precision::I8I16,
@@ -124,6 +137,7 @@ impl Precision {
         match self {
             Precision::Bf16 => 2,
             Precision::Bfp16 => panic!("bfp16 is a block format; use bytes_in/in_bits"),
+            Precision::Fp32Split => 4,
             _ => 1,
         }
     }
@@ -138,6 +152,7 @@ impl Precision {
             Precision::I8I32 => 4,
             Precision::Bf16 => 2,
             Precision::Bfp16 => panic!("bfp16 is a block format; use bytes_out/out_bits"),
+            Precision::Fp32Split => 4,
         }
     }
 
@@ -149,6 +164,7 @@ impl Precision {
         match self {
             Precision::Bf16 => 16,
             Precision::Bfp16 => 12,
+            Precision::Fp32Split => 32,
             _ => 8,
         }
     }
@@ -163,6 +179,7 @@ impl Precision {
             Precision::I8I32 => 32,
             Precision::Bf16 => 16,
             Precision::Bfp16 => 12,
+            Precision::Fp32Split => 32,
         }
     }
 
@@ -229,7 +246,9 @@ impl Precision {
     #[inline]
     pub fn micro_tile(self) -> (usize, usize, usize) {
         match self {
-            Precision::Bf16 => (4, 8, 4),
+            // Fp32Split reports the bf16 mode its limb GEMMs run in
+            // (it never owns a schedule of its own — see `validate`).
+            Precision::Bf16 | Precision::Fp32Split => (4, 8, 4),
             _ => (4, 8, 8),
         }
     }
@@ -242,6 +261,7 @@ impl Precision {
             Precision::I8I32 => "i8i32",
             Precision::Bf16 => "bf16",
             Precision::Bfp16 => "bfp16",
+            Precision::Fp32Split => "fp32_split",
         }
     }
 
@@ -253,6 +273,7 @@ impl Precision {
             Precision::I8I32 => "int8-int32",
             Precision::Bf16 => "bf16-bf16",
             Precision::Bfp16 => "bfp16-bfp16",
+            Precision::Fp32Split => "fp32-split",
         }
     }
 
@@ -263,6 +284,7 @@ impl Precision {
             "i8i32" | "int8-int32" => Some(Precision::I8I32),
             "bf16" | "bf16-bf16" => Some(Precision::Bf16),
             "bfp16" | "bfp16-bfp16" => Some(Precision::Bfp16),
+            "fp32_split" | "fp32-split" => Some(Precision::Fp32Split),
             _ => None,
         }
     }
@@ -353,6 +375,25 @@ mod tests {
             assert_eq!(Precision::parse(p.name()), Some(p));
             assert_eq!(Precision::parse(p.paper_name()), Some(p));
         }
+    }
+
+    #[test]
+    fn fp32_split_is_logical_and_parses() {
+        let p = Precision::Fp32Split;
+        assert_eq!(p.ty_in(), 4);
+        assert_eq!(p.ty_out(), 4);
+        assert_eq!(p.in_bits(), 32);
+        assert_eq!(p.out_bits(), 32);
+        assert_eq!(p.bytes_in(48), 192);
+        assert_eq!(p.micro_tile(), (4, 8, 4), "reports its limbs' bf16 mode");
+        assert_eq!(Precision::parse("fp32_split"), Some(p));
+        assert_eq!(Precision::parse("fp32-split"), Some(p));
+        assert_eq!(Precision::parse(p.name()), Some(p));
+        assert_eq!(Precision::parse(p.paper_name()), Some(p));
+        // Logical-only: table sweeps and design-cache warm loops must
+        // never see it.
+        assert!(!Precision::ALL.contains(&p));
+        assert!(!Precision::ALL_EXTENDED.contains(&p));
     }
 
     #[test]

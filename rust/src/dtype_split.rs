@@ -1,0 +1,347 @@
+//! Ozaki/Ootomo precision-recovery splitting: fp32-accuracy GEMM out of
+//! bf16 limb GEMMs (DESIGN.md §15).
+//!
+//! The NPUs have no fp32 MAC path (Sec. 5 evaluates int8 and bf16 only),
+//! so `Precision::Fp32Split` synthesizes one: each f32 operand element
+//! splits *error-free* into a bf16 hi limb and a bf16 lo limb,
+//!
+//! ```text
+//!   x  =  hi + lo + r,   hi = bf16(x),  lo = bf16(x − hi),
+//!   |r| ≤ u²·|x|,        u = 2⁻⁹  (bf16 unit roundoff)
+//! ```
+//!
+//! where `x − hi` is exactly representable in f32 (the classic
+//! error-free transformation: `hi` is `x` rounded to a shorter mantissa
+//! of the same exponent format). The product then expands into limb
+//! GEMMs; dropping the second-order `lo·lo` term leaves three:
+//!
+//! ```text
+//!   A·B  ≈  Ahi·Bhi + Ahi·Blo + Alo·Bhi          (LIMB_GEMMS = 3)
+//! ```
+//!
+//! Each limb GEMM is a plain bf16 GEMM — bf16×bf16 products are *exact*
+//! in f32 (8+8 significand bits < 24) — accumulated in f32 ascending-k,
+//! exactly like [`crate::gemm::refimpl::ref_gemm`]'s bf16 path. The
+//! rejoin is the fixed-order elementwise f32 sum `(hh + hl) + lh`.
+//! Crucially the limb partials and the joined C stay f32: a bf16 store
+//! of the `hh` term alone would reintroduce the 2⁻⁹ error the split
+//! exists to remove.
+//!
+//! Everything here is deterministic and row-independent, so
+//! [`split_exec`] reproduces [`split_gemm`] bit-for-bit at every thread
+//! count — the same contract the packed executor gives bf16.
+
+use anyhow::{ensure, Result};
+
+use crate::dtype::{Bf16, Layout, Precision};
+use crate::mem::Matrix;
+use crate::workload::GemmShape;
+
+/// bf16 limb GEMMs per logical fp32_split GEMM (the `lo·lo` term is
+/// dropped — it is O(u²) relative, below the rejoin's own f32 noise).
+pub const LIMB_GEMMS: usize = 3;
+
+/// Error-free two-limb split of one f32 value. Non-finite inputs carry
+/// entirely in the hi limb (`lo = 0`), so NaN/Inf propagate through the
+/// hi·hi limb GEMM exactly once.
+#[inline]
+pub fn split_f32(x: f32) -> (Bf16, Bf16) {
+    let hi = Bf16::from_f32(x);
+    if !x.is_finite() {
+        return (hi, Bf16::ZERO);
+    }
+    let lo = Bf16::from_f32(x - hi.to_f32());
+    (hi, lo)
+}
+
+/// Split an f32 operand image into its bf16 hi/lo limb images (same
+/// dims and layout). The input must be a 4-byte-element image; the
+/// bf16 images need word-aligned 2-byte storage rows, so the split
+/// inherits `Matrix::zeroed`'s alignment rules.
+pub fn split_operand(m: &Matrix) -> Result<(Matrix, Matrix)> {
+    ensure!(m.elem_bytes == 4, "split_operand needs an f32 image (4-byte elements)");
+    let mut hi = Matrix::zeroed(m.rows, m.cols, 2, m.layout)?;
+    let mut lo = Matrix::zeroed(m.rows, m.cols, 2, m.layout)?;
+    for i in 0..m.rows {
+        for j in 0..m.cols {
+            let (h, l) = split_f32(m.get_f32(i, j));
+            hi.set_bf16(i, j, h);
+            lo.set_bf16(i, j, l);
+        }
+    }
+    Ok((hi, lo))
+}
+
+/// The three bf16 limb GEMM shapes a logical fp32_split `shape` lowers
+/// to, in rejoin order (`hh`, `hl`, `lh`) — the `Lowered::splits`
+/// metadata the graph compiler exposes.
+pub fn limb_shapes(shape: &GemmShape) -> [GemmShape; 3] {
+    let limb = |suffix: &str| GemmShape {
+        name: format!("{}.{suffix}", shape.name),
+        m: shape.m,
+        k: shape.k,
+        n: shape.n,
+        precision: Precision::Bf16,
+        b_layout: shape.b_layout,
+    };
+    [limb("hh"), limb("hl"), limb("lh")]
+}
+
+/// One output row of the limb-GEMM rejoin: three ascending-k f32
+/// accumulations over the packed limb panels, then the fixed-order
+/// elementwise join `(hh + hl) + lh`. Shared verbatim by the serial and
+/// threaded paths — the bit-exactness anchor.
+fn split_row(
+    ap_hi: &[f32],
+    ap_lo: &[f32],
+    bp_hi: &[f32],
+    bp_lo: &[f32],
+    k: usize,
+    n: usize,
+    i: usize,
+    out: &mut [f32],
+) {
+    let mut hh = vec![0f32; n];
+    let mut hl = vec![0f32; n];
+    let mut lh = vec![0f32; n];
+    let arow_hi = &ap_hi[i * k..(i + 1) * k];
+    let arow_lo = &ap_lo[i * k..(i + 1) * k];
+    for kk in 0..k {
+        let (ah, al) = (arow_hi[kk], arow_lo[kk]);
+        let brow_hi = &bp_hi[kk * n..(kk + 1) * n];
+        let brow_lo = &bp_lo[kk * n..(kk + 1) * n];
+        for j in 0..n {
+            hh[j] += ah * brow_hi[j];
+            hl[j] += ah * brow_lo[j];
+            lh[j] += al * brow_hi[j];
+        }
+    }
+    for j in 0..n {
+        out[j] = (hh[j] + hl[j]) + lh[j];
+    }
+}
+
+fn split_panels(a: &Matrix, b: &Matrix) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+    ensure!(a.layout == Layout::RowMajor, "A must be row-major");
+    ensure!(a.elem_bytes == 4 && b.elem_bytes == 4, "fp32_split operands must be f32 images");
+    ensure!(a.cols == b.rows, "shape mismatch: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (a_hi, a_lo) = split_operand(a)?;
+    let (b_hi, b_lo) = split_operand(b)?;
+    Ok((a_hi.packed_f32(), a_lo.packed_f32(), b_hi.packed_f32(), b_lo.packed_f32()))
+}
+
+/// The logical fp32_split GEMM: split both operands, run the three bf16
+/// limb GEMMs, rejoin in f32. Returns a row-major f32 C image.
+pub fn split_gemm(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    split_exec(a, b, 1)
+}
+
+/// [`split_gemm`] with the output rows fanned across `threads` OS
+/// threads. Rows are computed by the identical per-row kernel, so the
+/// result is bit-exact for every thread count.
+pub fn split_exec(a: &Matrix, b: &Matrix, threads: usize) -> Result<Matrix> {
+    let (m, k) = (a.rows, a.cols);
+    let n = b.cols;
+    let (ap_hi, ap_lo, bp_hi, bp_lo) = split_panels(a, b)?;
+    let mut c = Matrix::zeroed(m, n, 4, Layout::RowMajor)?;
+    let mut rows = vec![0f32; m * n];
+    let threads = threads.max(1).min(m.max(1));
+    if threads <= 1 {
+        for i in 0..m {
+            split_row(&ap_hi, &ap_lo, &bp_hi, &bp_lo, k, n, i, &mut rows[i * n..(i + 1) * n]);
+        }
+    } else {
+        let chunk_rows = m.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (t, chunk) in rows.chunks_mut(chunk_rows * n).enumerate() {
+                let (ap_hi, ap_lo, bp_hi, bp_lo) = (&ap_hi, &ap_lo, &bp_hi, &bp_lo);
+                scope.spawn(move || {
+                    let i0 = t * chunk_rows;
+                    for (r, row) in chunk.chunks_mut(n).enumerate() {
+                        split_row(ap_hi, ap_lo, bp_hi, bp_lo, k, n, i0 + r, row);
+                    }
+                });
+            }
+        });
+    }
+    for i in 0..m {
+        for j in 0..n {
+            c.set_f32(i, j, rows[i * n + j]);
+        }
+    }
+    Ok(c)
+}
+
+/// Dense logical-row-major f64 widening of an operand image: bf16
+/// (2-byte) or f32 (4-byte) elements, either layout — the oracle's view.
+pub fn packed_f64(m: &Matrix) -> Vec<f64> {
+    let mut out = vec![0f64; m.rows * m.cols];
+    for i in 0..m.rows {
+        for j in 0..m.cols {
+            out[i * m.cols + j] = match m.elem_bytes {
+                2 => m.get_bf16(i, j).to_f32() as f64,
+                4 => m.get_f32(i, j) as f64,
+                _ => panic!("packed_f64: {}-byte elements", m.elem_bytes),
+            };
+        }
+    }
+    out
+}
+
+/// f64 oracle GEMM over f32/bf16 operand images (ascending-k, like every
+/// reference path). Returns the dense row-major result.
+pub fn gemm_f64(a: &Matrix, b: &Matrix) -> Vec<f64> {
+    let (m, k) = (a.rows, a.cols);
+    let n = b.cols;
+    let ap = packed_f64(a);
+    let bp = packed_f64(b);
+    let mut out = vec![0f64; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = ap[i * k + kk];
+            for j in 0..n {
+                out[i * n + j] += av * bp[kk * n + j];
+            }
+        }
+    }
+    out
+}
+
+/// Derived worst-case bound on `|split_gemm − f64 oracle|` for a
+/// K-deep reduction with operand magnitudes ≤ `max_a` / `max_b`
+/// (DESIGN.md §15 walks the derivation):
+///
+/// * dropped `lo·lo` + split residuals: ≤ 4·u²·|a||b| per product,
+///   u = 2⁻⁹ → `4·2⁻¹⁸·K·max_a·max_b`;
+/// * three f32 accumulations + the 2-step rejoin: ≤ (K+2)·2⁻²⁴ on each
+///   limb's running magnitude, bounded by `3·(K+2)·2⁻²⁴·K·max_a·max_b`;
+/// * bf16 subnormal floor: a lo limb below 2⁻¹³³ quantizes with ≤ 2⁻¹³⁴
+///   absolute error → `K·(max_a + max_b)·2⁻¹³⁴`.
+pub fn error_bound(k: usize, max_a: f64, max_b: f64) -> f64 {
+    let kf = k as f64;
+    let split = 4.0 * 2f64.powi(-18) * kf * max_a * max_b;
+    let accum = 3.0 * (kf + 2.0) * 2f64.powi(-24) * kf * max_a * max_b;
+    let subnormal = kf * (max_a + max_b) * 2f64.powi(-134);
+    split + accum + subnormal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_error_free_to_second_order() {
+        for x in [1.0f32, -3.140625, 1.0e-3, 6.5e7, -2.0e-20, 1.9999999] {
+            let (hi, lo) = split_f32(x);
+            let back = hi.to_f32() + lo.to_f32();
+            let err = (x - back).abs() as f64;
+            assert!(
+                err <= 2f64.powi(-16) * x.abs() as f64 + 2f64.powi(-134),
+                "{x}: residual {err}"
+            );
+        }
+        // hi alone is the plain bf16 rounding; lo recovers most of it.
+        let (hi, lo) = split_f32(1.0039062);
+        assert!(hi.to_f32() == 1.0 && lo.to_f32() > 0.0);
+    }
+
+    #[test]
+    fn split_nonfinite_rides_hi_limb() {
+        for x in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let (hi, lo) = split_f32(x);
+            assert_eq!(lo.to_bits(), 0);
+            if x.is_nan() {
+                assert!(hi.to_f32().is_nan());
+            } else {
+                assert_eq!(hi.to_f32(), x);
+            }
+        }
+    }
+
+    #[test]
+    fn limb_shapes_are_bf16_same_geometry() {
+        let shape = GemmShape {
+            name: "qkv".into(),
+            m: 512,
+            k: 768,
+            n: 768,
+            precision: Precision::Fp32Split,
+            b_layout: Layout::ColMajor,
+        };
+        let limbs = limb_shapes(&shape);
+        assert_eq!(limbs.len(), LIMB_GEMMS);
+        let names: Vec<&str> = limbs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["qkv.hh", "qkv.hl", "qkv.lh"]);
+        for l in &limbs {
+            assert_eq!(l.precision, Precision::Bf16);
+            assert_eq!((l.m, l.k, l.n), (512, 768, 768));
+            assert_eq!(l.b_layout, Layout::ColMajor);
+        }
+    }
+
+    #[test]
+    fn tiny_split_gemm_matches_oracle_closely() {
+        let (m, k, n) = (4, 8, 4);
+        let mut a = Matrix::zeroed(m, k, 4, Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(k, n, 4, Layout::ColMajor).unwrap();
+        let mut rng = crate::util::rng::Rng::seeded(9);
+        for i in 0..m {
+            for j in 0..k {
+                a.set_f32(i, j, rng.normal() as f32);
+            }
+        }
+        for i in 0..k {
+            for j in 0..n {
+                b.set_f32(i, j, rng.normal() as f32);
+            }
+        }
+        let c = split_gemm(&a, &b).unwrap();
+        let oracle = gemm_f64(&a, &b);
+        let bound = error_bound(k, 4.0, 4.0);
+        for i in 0..m {
+            for j in 0..n {
+                let err = (c.get_f32(i, j) as f64 - oracle[i * n + j]).abs();
+                assert!(err <= bound, "({i},{j}): {err} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_split_exec_is_bitexact() {
+        let (m, k, n) = (12, 16, 8);
+        let mut a = Matrix::zeroed(m, k, 4, Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(k, n, 4, Layout::RowMajor).unwrap();
+        let mut rng = crate::util::rng::Rng::seeded(17);
+        for i in 0..m {
+            for j in 0..k {
+                a.set_f32(i, j, (rng.normal() * 100.0) as f32);
+            }
+        }
+        for i in 0..k {
+            for j in 0..n {
+                b.set_f32(i, j, (rng.normal() * 1e-3) as f32);
+            }
+        }
+        let serial = split_gemm(&a, &b).unwrap();
+        for threads in [2usize, 3, 8] {
+            let t = split_exec(&a, &b, threads).unwrap();
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(
+                        serial.get_f32(i, j).to_bits(),
+                        t.get_f32(i, j).to_bits(),
+                        "threads={threads} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_rejects_non_f32_images() {
+        let a = Matrix::zeroed(4, 8, 2, Layout::RowMajor).unwrap();
+        let b = Matrix::zeroed(8, 4, 4, Layout::ColMajor).unwrap();
+        assert!(split_gemm(&a, &b).is_err());
+        assert!(split_operand(&a).is_err());
+    }
+}

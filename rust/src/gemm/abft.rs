@@ -45,6 +45,10 @@ fn rel_term(p: Precision) -> Option<f64> {
     match p {
         Precision::Bf16 => Some(1.0 / 512.0),  // 2^-9
         Precision::Bfp16 => Some(1.0 / 16.0),  // 2^-4 = 8 · (0.5/64)
+        // Ozaki-split C is f32 with ~4·u² = 2^-16 relative residual
+        // (dropped lo·lo + split rounding, DESIGN.md §15) — far inside
+        // the bf16 tolerance, but not exact.
+        Precision::Fp32Split => Some(1.0 / 65536.0),
         Precision::I8I32 => Some(0.0),         // exact — checked in i64
         Precision::I8I8 | Precision::I8I16 => None, // saturation: nonlinear
     }
@@ -116,7 +120,7 @@ pub fn operand_invariant(a: &Matrix, b: &Matrix, c: &Matrix, p: Precision) -> Op
             }
             Some(got == want)
         }
-        Precision::Bf16 | Precision::Bfp16 => {
+        Precision::Bf16 | Precision::Bfp16 | Precision::Fp32Split => {
             let av = dense_f32(a);
             let bv = dense_f32(b);
             let cv = dense_f32(c);
@@ -149,13 +153,21 @@ pub fn operand_invariant(a: &Matrix, b: &Matrix, c: &Matrix, p: Precision) -> Op
 }
 
 /// Dense logical-row-major f32 view of a float operand (bf16 element
-/// grid or decoded bfp16 block image).
+/// grid, decoded bfp16 block image, or fp32_split's dense f32 image).
 fn dense_f32(m: &Matrix) -> Vec<f32> {
     if m.is_bfp16() {
-        packed_f32_bfp(m)
-    } else {
-        m.packed_f32()
+        return packed_f32_bfp(m);
     }
+    if m.elem_bytes == 4 {
+        let mut out = vec![0f32; m.rows * m.cols];
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                out[i * m.cols + j] = m.get_f32(i, j);
+            }
+        }
+        return out;
+    }
+    m.packed_f32()
 }
 
 /// Column sums of a logical int8 image (`eᵀA`).

@@ -644,7 +644,7 @@ impl Executor {
                         out[lane] = acc_i[i * kt.n_ct + j] as u32;
                         lane += 1;
                     }),
-                    Precision::Bf16 | Precision::Bfp16 => {
+                    Precision::Bf16 | Precision::Bfp16 | Precision::Fp32Split => {
                         unreachable!("float precisions use the f32 panels")
                     }
                 }

@@ -63,6 +63,12 @@ pub fn ref_gemm(a: &Matrix, b: &Matrix, p: Precision) -> Result<Matrix> {
     let (m, k) = logical_dims(a);
     let (bk, n) = logical_dims(b);
     ensure!(k == bk, "shape mismatch: {m}x{k} @ {bk}x{n}");
+    // The logical Ozaki-split precision: f32 operand images through the
+    // three bf16 limb GEMMs + f32 rejoin (a row-major 4-byte C image,
+    // matching `out_matrix`'s allocation for this precision).
+    if p == Precision::Fp32Split {
+        return crate::dtype_split::split_gemm(a, b);
+    }
     let mut c = out_matrix(m, n, p)?;
     match p {
         Precision::Bfp16 => {
@@ -141,7 +147,9 @@ pub fn store_narrowed(c: &mut Matrix, i: usize, j: usize, acc: i32, p: Precision
         Precision::I8I8 => c.set_i8(i, j, sat_i8(acc)),
         Precision::I8I16 => c.set_i16(i, j, sat_i16(acc)),
         Precision::I8I32 => c.set_i32(i, j, acc),
-        Precision::Bf16 | Precision::Bfp16 => unreachable!("float precisions use the f32 path"),
+        Precision::Bf16 | Precision::Bfp16 | Precision::Fp32Split => {
+            unreachable!("float precisions use the f32 path")
+        }
     }
 }
 
@@ -198,6 +206,9 @@ pub fn fill_random(mat: &mut Matrix, p: Precision, seed: u64) {
         for j in 0..mat.cols {
             match p {
                 Precision::Bf16 => mat.set_bf16(i, j, Bf16::from_f32(rng.normal() as f32)),
+                // fp32_split operands are dense f32 images; full-precision
+                // unit normals exercise the lo limbs the split recovers.
+                Precision::Fp32Split => mat.set_f32(i, j, rng.normal() as f32),
                 _ => mat.set_i8(i, j, rng.i8()),
             }
         }
@@ -218,6 +229,7 @@ pub fn matrices_equal(x: &Matrix, y: &Matrix, p: Precision) -> bool {
                 Precision::I8I32 => x.get_i32(i, j) == y.get_i32(i, j),
                 Precision::Bf16 => x.get_bf16(i, j).to_bits() == y.get_bf16(i, j).to_bits(),
                 Precision::Bfp16 => x.get_bfp_block(i, j) == y.get_bfp_block(i, j),
+                Precision::Fp32Split => x.get_f32(i, j).to_bits() == y.get_f32(i, j).to_bits(),
             };
             if !same {
                 return false;

@@ -10,11 +10,14 @@
 //!
 //! The budget is an abstract error allowance: each node charges
 //! [`err_cost`] units for its assigned precision (int8 the lossiest,
-//! bf16 the most faithful). Components are processed largest-ops first;
-//! each takes the *fastest* legal candidate whose error still leaves the
-//! most-accurate option affordable for every remaining component (a
-//! budget below even that floor is overdrawn at minimum error and
-//! reported: `err_spent > err_budget`). Time
+//! fp32_split the most faithful). Components are processed largest-ops
+//! first; each takes the *fastest* legal candidate whose error still
+//! leaves the most-accurate option affordable for every remaining
+//! component. A budget below even that floor is *infeasible* and the
+//! pass returns a typed [`AssignError`] naming the component and the
+//! cheapest error still available — it never panics and never silently
+//! overdraws (ISSUE 9 bugfix; the old path `expect`ed its way past the
+//! shortfall and reported `err_spent > err_budget` after the fact). Time
 //! estimates come from the calibrated simulator at the balanced design
 //! of the generation the fleet router would pick — the PR-4 load model:
 //! a precision routes to the fleet generation with the highest
@@ -25,18 +28,26 @@
 //! bfp16 candidates additionally require block-aligned shapes
 //! (K, N multiples of 8), column-major B, and a join-free component
 //! (blocks have no elementwise rejoin — [`super::ir::joinable`]).
+//! fp32_split is always legal (f32 Cs rejoin elementwise, no alignment
+//! constraint) but always slowest: the logical op lowers to
+//! [`dtype_split::LIMB_GEMMS`] bf16 dispatches, so it only wins when the
+//! budget is below the plain-bf16 floor.
+
+use std::fmt;
 
 use anyhow::Result;
 
 use crate::arch::{balanced_config, Generation};
 use crate::dtype::{Layout, Precision};
+use crate::dtype_split;
 use crate::sim::{simulate_gemm, BdMode};
 use crate::util::json::{num, obj, s, Json};
 
 use super::ir::ModelGraph;
 
 /// Relative per-node quantization-error units charged against the
-/// accuracy budget.
+/// accuracy budget. fp32_split's 0.001 is the 50× Ozaki recovery over
+/// bf16's 0.05 (DESIGN.md §15).
 pub fn err_cost(p: Precision) -> f64 {
     match p {
         Precision::I8I8 => 1.0,
@@ -44,8 +55,45 @@ pub fn err_cost(p: Precision) -> f64 {
         Precision::I8I32 => 0.25,
         Precision::Bfp16 => 0.25,
         Precision::Bf16 => 0.05,
+        Precision::Fp32Split => 0.001,
     }
 }
+
+/// The budget cannot cover even the most accurate candidate of some
+/// component: the typed infeasibility report [`assign`] returns instead
+/// of panicking or silently overdrawing (ISSUE 9 bugfix).
+#[derive(Clone, Debug)]
+pub struct AssignError {
+    /// Component id (matches [`Assignment::component`] numbering).
+    pub component: usize,
+    /// Names of the nodes in the starved component.
+    pub nodes: Vec<String>,
+    /// Error units of the cheapest (most accurate) candidate offered.
+    pub cheapest_err: f64,
+    /// Budget still affordable for this component after reserving the
+    /// floor for every component not yet assigned.
+    pub affordable: f64,
+    /// The total budget (`budget_per_node · nodes`).
+    pub budget: f64,
+}
+
+impl fmt::Display for AssignError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "accuracy budget infeasible: component {} ({}) needs >= {:.4} error units \
+             at its most accurate candidate but only {:.4} of the {:.4}-unit budget \
+             remains affordable; raise the per-node budget",
+            self.component,
+            self.nodes.join(", "),
+            self.cheapest_err,
+            self.affordable,
+            self.budget
+        )
+    }
+}
+
+impl std::error::Error for AssignError {}
 
 #[derive(Clone, Debug)]
 pub struct AssignOptions {
@@ -128,8 +176,11 @@ pub fn route_gen(fleet: &[Generation], p: Precision) -> Generation {
 
 fn est_node(gen: Generation, p: Precision, m: usize, k: usize, n: usize, layout: Layout) -> f64 {
     let layout = if p == Precision::Bfp16 { Layout::ColMajor } else { layout };
+    // fp32_split costs at the bf16 balanced design (balanced_config
+    // remaps), once per limb GEMM.
+    let dispatches = if p == Precision::Fp32Split { dtype_split::LIMB_GEMMS as f64 } else { 1.0 };
     let cfg = balanced_config(gen, p).with_b_layout(layout);
-    simulate_gemm(&cfg, m, k, n, BdMode::Overlapped).t_total
+    simulate_gemm(&cfg, m, k, n, BdMode::Overlapped).t_total * dispatches
 }
 
 /// Weakly-connected components over tensor edges, in first-node order.
@@ -173,7 +224,7 @@ fn candidates(g: &ModelGraph, nodes: &[usize], fleet: &[Generation]) -> Vec<Cand
                 && g.node(id).inputs.len() <= 1
         });
     let mut out = Vec::new();
-    for class in [Precision::I8I8, Precision::Bfp16, Precision::Bf16] {
+    for class in [Precision::I8I8, Precision::Bfp16, Precision::Bf16, Precision::Fp32Split] {
         if class == Precision::Bfp16 && !bfp_legal {
             continue;
         }
@@ -258,19 +309,27 @@ pub fn assign(g: &ModelGraph, opts: &AssignOptions) -> Result<Assignment> {
     let mut err_spent = 0.0;
     for &ci in &order {
         reserve -= min_err[ci];
-        // Fastest candidate whose error the budget can still absorb; if
-        // even the most accurate class cannot (budget below the bf16
-        // floor), take minimum-error anyway — the overdraw is visible
-        // as `err_spent > err_budget` in the returned report.
-        let pick = cands[ci]
-            .iter()
-            .find(|c| c.err <= remaining - reserve + 1e-12)
-            .unwrap_or_else(|| {
-                cands[ci]
-                    .iter()
-                    .min_by(|a, b| a.err.total_cmp(&b.err))
-                    .expect("every component has candidates")
-            });
+        // Fastest candidate whose error the budget can still absorb. If
+        // even the most accurate class cannot, the budget is infeasible:
+        // report it as a typed error (never panic, never overdraw).
+        let pick = match cands[ci].iter().find(|c| c.err <= remaining - reserve + 1e-12) {
+            Some(c) => c,
+            None => {
+                let cheapest_err =
+                    cands[ci].iter().map(|c| c.err).fold(f64::INFINITY, f64::min);
+                return Err(AssignError {
+                    component: ci,
+                    nodes: members[ci]
+                        .iter()
+                        .map(|&id| g.node(id).shape.name.clone())
+                        .collect(),
+                    cheapest_err,
+                    affordable: remaining - reserve,
+                    budget,
+                }
+                .into());
+            }
+        };
         for (slot, &id) in members[ci].iter().enumerate() {
             precisions[id] = pick.precisions[slot];
         }
@@ -411,16 +470,43 @@ mod tests {
     }
 
     #[test]
-    fn infeasible_budget_overdraws_visibly_at_minimum_error() {
-        // A budget below even the bf16 floor: the pass still returns the
-        // most accurate assignment, and the overdraw is observable —
-        // err_spent > err_budget — instead of silently "fitting".
+    fn sub_bf16_budget_buys_fp32_split_accuracy_with_limb_time() {
+        // A budget below the bf16 floor (0.05/node) but above the
+        // fp32_split floor (0.001/node): the pass escalates to the
+        // Ozaki-split class — within budget, no overdraw — and pays the
+        // LIMB_GEMMS dispatch multiple for it.
         let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
         let g = attention_graph(&cfg).unwrap();
         let a = assign(&g, &AssignOptions { budget_per_node: 0.01, ..xdna2() }).unwrap();
         legal_edges(&a);
-        assert!(a.graph.nodes().iter().all(|n| n.shape.precision == Precision::Bf16));
-        assert!(a.err_spent > a.err_budget, "{} !> {}", a.err_spent, a.err_budget);
+        assert!(a.graph.nodes().iter().all(|n| n.shape.precision == Precision::Fp32Split));
+        assert!(a.err_spent <= a.err_budget + 1e-9, "{} > {}", a.err_spent, a.err_budget);
+        // 3 bf16 limb dispatches per node: exactly 3x the all-bf16 cost.
+        let bf = assign(&g, &AssignOptions { budget_per_node: 0.05, ..xdna2() }).unwrap();
+        assert!(bf.graph.nodes().iter().all(|n| n.shape.precision == Precision::Bf16));
+        let ratio = a.est_s / bf.est_s;
+        assert!((ratio - 3.0).abs() < 1e-9, "{ratio}");
+    }
+
+    #[test]
+    fn infeasible_budget_is_a_typed_error_not_a_panic() {
+        // Regression (ISSUE 9): below even the fp32_split floor the old
+        // greedy `expect`ed/overdrew; it must now return AssignError
+        // naming the starved component and the cheapest error on offer.
+        let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
+        let g = attention_graph(&cfg).unwrap();
+        let n = g.len() as f64;
+        let err = assign(&g, &AssignOptions { budget_per_node: 0.0005, ..xdna2() })
+            .expect_err("budget below the minimum-error floor must not fit");
+        let ae = err.downcast_ref::<AssignError>().expect("typed AssignError");
+        assert_eq!(ae.component, 0, "attention graph is one component");
+        assert_eq!(ae.nodes.len(), g.len());
+        assert!((ae.cheapest_err - 0.001 * n).abs() < 1e-12, "{}", ae.cheapest_err);
+        assert!((ae.budget - 0.0005 * n).abs() < 1e-12, "{}", ae.budget);
+        assert!(ae.affordable < ae.cheapest_err);
+        let msg = err.to_string();
+        assert!(msg.contains("infeasible") && msg.contains("budget"), "{msg}");
+        assert!(msg.contains("lm_head"), "names the starved nodes: {msg}");
     }
 
     #[test]

@@ -70,6 +70,20 @@ pub fn join_images(parts: &[Matrix], p: Precision) -> Result<Matrix> {
                 }
             }
         }
+        // fp32_split Cs are f32 images; their rejoin is the plain f32
+        // add (no narrowing step — DESIGN.md §15).
+        Precision::Fp32Split => {
+            for m in parts {
+                ensure!(m.elem_bytes == 4, "fp32_split join needs f32 images");
+            }
+            for m in &parts[1..] {
+                for i in 0..rows {
+                    for j in 0..cols {
+                        acc.set_f32(i, j, acc.get_f32(i, j) + m.get_f32(i, j));
+                    }
+                }
+            }
+        }
         _ => bail!("{p} images have no elementwise rejoin"),
     }
     Ok(acc)
@@ -108,6 +122,22 @@ pub fn execute_functional(
     let mut results: Vec<Matrix> = Vec::with_capacity(g.len());
     for id in 0..g.len() {
         let node = g.node(id);
+        // Logical fp32_split ops never enter the packed executor: the
+        // limb GEMMs + f32 rejoin run through dtype_split (same per-row
+        // kernel as the coordinator path, bit-exact at every thread
+        // count). Operands are generated at the *logical* precision —
+        // f32 images — not the normalized bf16 design's.
+        if node.shape.precision == Precision::Fp32Split {
+            let a = match staged_a(g, &results, id)? {
+                Some(a) => a,
+                None => functional_a(&node.shape, Precision::Fp32Split)?,
+            };
+            let b = functional_b(&node.shape, Precision::Fp32Split)?;
+            let c = crate::dtype_split::split_exec(&a, &b, threads)
+                .with_context(|| format!("node '{}'", node.shape.name))?;
+            results.push(c);
+            continue;
+        }
         let cfg = node_design(gen, &node.shape);
         let exec = Executor::with_options(cfg, ExecOptions { threads, ..Default::default() });
         let a = match staged_a(g, &results, id)? {

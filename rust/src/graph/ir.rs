@@ -53,8 +53,9 @@ pub struct ModelGraph {
 }
 
 /// Dtypes with a defined elementwise rejoin (`graph::exec::join_images`).
+/// fp32_split Cs are f32 images, whose rejoin is the plain f32 add.
 pub fn joinable(p: Precision) -> bool {
-    matches!(p, Precision::I8I8 | Precision::Bf16)
+    matches!(p, Precision::I8I8 | Precision::Bf16 | Precision::Fp32Split)
 }
 
 impl ModelGraph {

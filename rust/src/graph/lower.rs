@@ -37,8 +37,11 @@
 //! producer, as every DAG generator here does); those nodes carry
 //! in-edges, so the glue rule never applies to them.
 
+use crate::dtype::Precision;
+use crate::dtype_split;
 use crate::plan::{ChainOp, GemmChain};
 use crate::util::json::{num, obj, s, Json};
+use crate::workload::GemmShape;
 
 use super::ir::{ModelGraph, NodeId};
 
@@ -50,6 +53,19 @@ pub struct StagedEdge {
     pub consumer: NodeId,
 }
 
+/// The limb expansion a logical `fp32_split` node lowers to: three bf16
+/// GEMMs (`.hh`/`.hl`/`.lh`, [`dtype_split::limb_shapes`]) whose f32
+/// partials rejoin by the plain f32 add that staged fan-in edges already
+/// perform. The node itself stays in its chain as the single logical op
+/// (the executor runs the limbs via [`dtype_split::split_exec`] and cost
+/// sites charge [`dtype_split::LIMB_GEMMS`] dispatches); this record is
+/// the scheduling-visible expansion.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SplitExpansion {
+    pub node: NodeId,
+    pub limbs: [GemmShape; 3],
+}
+
 /// The lowered form: linear chains plus the staged cross-chain edges.
 #[derive(Clone, Debug, Default)]
 pub struct Lowered {
@@ -57,6 +73,8 @@ pub struct Lowered {
     /// `node_pos[id]` → (chain index, op index within the chain).
     pub node_pos: Vec<(usize, usize)>,
     pub staged: Vec<StagedEdge>,
+    /// Limb expansions for every `fp32_split` node (empty otherwise).
+    pub splits: Vec<SplitExpansion>,
     /// First node id per chain (kept alongside the chains so scheduler
     /// hot loops don't rescan `node_pos`).
     heads: Vec<NodeId>,
@@ -120,8 +138,31 @@ impl Lowered {
                 ])
             })
             .collect();
-        obj(vec![("chains", Json::Arr(chains)), ("staged_edges", Json::Arr(staged))])
+        let splits: Vec<Json> = self
+            .splits
+            .iter()
+            .map(|sx| {
+                obj(vec![
+                    ("node", num(sx.node as f64)),
+                    ("limbs", Json::Arr(sx.limbs.iter().map(|l| s(&l.name)).collect())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("chains", Json::Arr(chains)),
+            ("staged_edges", Json::Arr(staged)),
+            ("splits", Json::Arr(splits)),
+        ])
     }
+}
+
+/// Limb expansions for every `fp32_split` node in `g` (shared by
+/// [`lower`] and [`isolate`] so both forms expose the same metadata).
+fn split_expansions(g: &ModelGraph) -> Vec<SplitExpansion> {
+    (0..g.len())
+        .filter(|&id| g.node(id).shape.precision == Precision::Fp32Split)
+        .map(|id| SplitExpansion { node: id, limbs: dtype_split::limb_shapes(&g.node(id).shape) })
+        .collect()
 }
 
 /// Lower `g` into maximal linear chains (see the module docs for the
@@ -130,9 +171,17 @@ impl Lowered {
 /// graph round-trips [`GemmChain::detect`] including the name.
 pub fn lower(g: &ModelGraph) -> Lowered {
     let mut out = Lowered::default();
+    out.splits = split_expansions(g);
     for id in 0..g.len() {
         let node = g.node(id);
-        let extendable = id > 0
+        // A logical fp32_split node always cuts: it lowers to LIMB_GEMMS
+        // bf16 dispatches whose f32 C must be a chain boundary (the rejoin
+        // is the staged-edge f32 add), so it neither extends a neighbour's
+        // chain nor lets the glue rule pack a follower onto it.
+        let split_cut = node.shape.precision == Precision::Fp32Split
+            || (id > 0 && g.node(id - 1).shape.precision == Precision::Fp32Split);
+        let extendable = !split_cut
+            && id > 0
             && node.inputs.iter().all(|&p| p + 1 == id)
             && g.consumers(id - 1).iter().all(|&c| c == id);
         if extendable {
@@ -172,6 +221,7 @@ pub fn lower(g: &ModelGraph) -> Lowered {
 /// this under the *same* fleet scheduler.
 pub fn isolate(g: &ModelGraph) -> Lowered {
     let mut out = Lowered::default();
+    out.splits = split_expansions(g);
     for id in 0..g.len() {
         let node = g.node(id);
         let mut chain = GemmChain::new(&format!("{}.n{id}.{}", g.name, node.shape.name));
@@ -248,6 +298,48 @@ mod tests {
         assert_eq!(low.chains.len(), 3);
         assert_eq!(low.staged.len(), 2);
         assert_eq!(low.chain_edges(), 0);
+    }
+
+    #[test]
+    fn fp32_split_nodes_always_cut_and_carry_limb_expansions() {
+        // Linear fs→fs→fs: every logical split op is its own chain with
+        // staged f32 rejoin edges between them — never a fused edge.
+        let mut g = ModelGraph::new("t");
+        let a = g.add(GemmShape::new("a", 64, 64, 64, Precision::Fp32Split));
+        let b = g
+            .add_after(&[a], GemmShape::new("b", 64, 64, 64, Precision::Fp32Split))
+            .unwrap();
+        g.add_after(&[b], GemmShape::new("c", 64, 64, 64, Precision::Fp32Split)).unwrap();
+        let low = lower(&g);
+        assert_eq!(low.chains.len(), 3);
+        assert_eq!(low.staged.len(), 2);
+        assert_eq!(low.chain_edges(), 0);
+        assert_eq!(low.splits.len(), 3);
+        let limbs: Vec<&str> = low.splits[1].limbs.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(limbs, vec!["b.hh", "b.hl", "b.lh"]);
+        assert!(low.splits.iter().all(|sx| sx
+            .limbs
+            .iter()
+            .all(|l| l.precision == Precision::Bf16)));
+        // isolate() exposes the same expansion metadata.
+        assert_eq!(isolate(&g).splits, low.splits);
+    }
+
+    #[test]
+    fn glue_rule_never_packs_across_an_fp32_split_boundary() {
+        // Edge-free sources normally glue into one sequential chain; a
+        // logical split op must stay a chain of its own on both sides.
+        let mut g = ModelGraph::new("t");
+        g.add(GemmShape::new("a", 64, 64, 64, Precision::Bf16));
+        g.add(GemmShape::new("b", 64, 64, 64, Precision::Fp32Split));
+        g.add(GemmShape::new("c", 64, 64, 64, Precision::Bf16));
+        let low = lower(&g);
+        assert_eq!(low.chains.len(), 3);
+        assert_eq!(low.splits.len(), 1);
+        assert_eq!(low.splits[0].node, 1);
+        // A split-free graph reports no expansions.
+        let cfg = TransformerConfig { n_layers: 1, ..Default::default() };
+        assert!(lower(&attention_graph(&cfg).unwrap()).splits.is_empty());
     }
 
     #[test]

@@ -35,12 +35,12 @@ pub mod ir;
 pub mod lower;
 pub mod partition;
 
-pub use assign::{assign, err_cost, route_gen, AssignOptions, Assignment, NodeChoice};
+pub use assign::{assign, err_cost, route_gen, AssignError, AssignOptions, Assignment, NodeChoice};
 pub use exec::{execute_functional, join_images, reference_results, serve_graph};
 pub use ir::{
     attention_graph, joinable, moe_graph, transformer_graph, ModelGraph, ModelNode, NodeId,
 };
-pub use lower::{isolate, lower, Lowered, StagedEdge};
+pub use lower::{isolate, lower, Lowered, SplitExpansion, StagedEdge};
 pub use partition::{
     chain_exec_s, partition, staged_bytes, Partition, PartitionOptions, ScheduledChain,
 };

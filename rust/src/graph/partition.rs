@@ -33,6 +33,7 @@
 
 use crate::arch::{balanced_config, Generation};
 use crate::coordinator::DesignKey;
+use crate::dtype::Precision;
 use crate::plan::{overrides_for, GemmChain};
 use crate::sim::dram::DramModel;
 use crate::sim::{simulate_gemm_with, BdMode};
@@ -156,7 +157,13 @@ pub fn chain_exec_s(
             BdMode::Overlapped,
             ovs[i],
         );
-        t += r.t_total;
+        // fp32_split rides the bf16 design as LIMB_GEMMS dispatches —
+        // the same multiple run_chain charges.
+        if op.shape.precision == Precision::Fp32Split {
+            t += r.t_total * crate::dtype_split::LIMB_GEMMS as f64;
+        } else {
+            t += r.t_total;
+        }
     }
     (t, cur)
 }

@@ -44,6 +44,7 @@ pub mod dma;
 pub mod harness;
 pub mod dtype;
 pub mod dtype_bfp16;
+pub mod dtype_split;
 pub mod gemm;
 pub mod graph;
 pub mod mem;

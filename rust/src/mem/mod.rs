@@ -164,6 +164,20 @@ impl Matrix {
         self.data[b / 4] = v as u32;
     }
 
+    /// Read an f32 element (4-byte, word-aligned image — the
+    /// `fp32_split` logical dtype's operand/result format).
+    pub fn get_f32(&self, i: usize, j: usize) -> f32 {
+        let b = self.byte_index(i, j);
+        debug_assert_eq!(b % 4, 0);
+        f32::from_bits(self.data[b / 4])
+    }
+
+    pub fn set_f32(&mut self, i: usize, j: usize, v: f32) {
+        let b = self.byte_index(i, j);
+        debug_assert_eq!(b % 4, 0);
+        self.data[b / 4] = v.to_bits();
+    }
+
     pub fn get_bf16(&self, i: usize, j: usize) -> Bf16 {
         Bf16::from_bits(self.get_i16(i, j) as u16)
     }
@@ -355,6 +369,23 @@ mod tests {
         let mut w = Matrix::zeroed(2, 2, 4, Layout::RowMajor).unwrap();
         w.set_i32(1, 1, i32::MIN);
         assert_eq!(w.get_i32(1, 1), i32::MIN);
+    }
+
+    #[test]
+    fn f32_roundtrip_bitexact() {
+        let mut m = Matrix::zeroed(2, 4, 4, Layout::RowMajor).unwrap();
+        for (idx, v) in
+            [1.5f32, -0.0, f32::MIN_POSITIVE / 2.0, 3.4e38, -1.0e-40, f32::INFINITY]
+                .into_iter()
+                .enumerate()
+        {
+            m.set_f32(idx / 4, idx % 4, v);
+            assert_eq!(m.get_f32(idx / 4, idx % 4).to_bits(), v.to_bits(), "{v}");
+        }
+        let mut c = Matrix::zeroed(4, 2, 4, Layout::ColMajor).unwrap();
+        c.set_f32(3, 1, -2.75);
+        assert_eq!(c.get_f32(3, 1), -2.75);
+        assert_eq!(c.get_f32(0, 0), 0.0);
     }
 
     #[test]

@@ -18,9 +18,15 @@ use crate::workload::{GemmShape, TransformerConfig};
 /// wider than any input dtype, and block/byte formats never mix.
 pub fn out_feeds_in(prev: Precision, next: Precision) -> bool {
     match prev {
-        Precision::I8I8 => !matches!(next, Precision::Bf16 | Precision::Bfp16),
+        Precision::I8I8 => {
+            !matches!(next, Precision::Bf16 | Precision::Bfp16 | Precision::Fp32Split)
+        }
         Precision::Bf16 => next == Precision::Bf16,
         Precision::Bfp16 => next == Precision::Bfp16,
+        // An fp32_split C is an f32 image; a consuming fp32_split op
+        // re-splits it into fresh bf16 limbs. No other precision reads
+        // 4-byte float elements as its A.
+        Precision::Fp32Split => next == Precision::Fp32Split,
         Precision::I8I16 | Precision::I8I32 => false,
     }
 }
@@ -185,6 +191,13 @@ mod tests {
         assert!(feeds(&bfp, &GemmShape::new("q", 64, 256, 64, Precision::Bfp16)));
         assert!(!feeds(&bfp, &GemmShape::new("q", 64, 256, 64, Precision::Bf16)));
         assert!(!feeds(&a, &GemmShape::new("q", 64, 256, 64, Precision::Bfp16)));
+        // fp32_split's f32 C feeds only another fp32_split op (which
+        // re-splits it); no byte/block format mixes with it.
+        let fs = GemmShape::new("s", 64, 128, 256, Precision::Fp32Split);
+        assert!(feeds(&fs, &GemmShape::new("t", 64, 256, 64, Precision::Fp32Split)));
+        assert!(!feeds(&fs, &GemmShape::new("t", 64, 256, 64, Precision::Bf16)));
+        assert!(!feeds(&a, &GemmShape::new("t", 64, 256, 64, Precision::Fp32Split)));
+        assert!(!feeds(&bf, &GemmShape::new("t", 64, 256, 64, Precision::Fp32Split)));
     }
 
     #[test]

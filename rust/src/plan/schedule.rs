@@ -17,7 +17,8 @@
 
 use crate::arch::{balanced_config, Generation};
 use crate::coordinator::router::{DesignKey, DeviceState};
-use crate::dtype::Layout;
+use crate::dtype::{Layout, Precision};
+use crate::dtype_split;
 use crate::sim::{simulate_gemm_with, BdMode, DispatchOverrides};
 use crate::tiling::TilingConfig;
 use crate::workload::GemmShape;
@@ -283,14 +284,24 @@ pub fn evaluate(plan: &ChainPlan, mode: BdMode) -> PlanReport {
         let reconfig_s = device.switch_to(plan.gen, key);
         let r =
             simulate_gemm_with(&d.cfg, d.shape.m, d.shape.k, d.shape.n, mode, d.overrides);
+        // A logical fp32_split dispatch is LIMB_GEMMS bf16 dispatches on
+        // the wire: every device-side phase (and the bytes moved) scales
+        // by the limb count. `ops` stays the logical 2·m·k·n — useful
+        // work, not dispatched work — so its TOPS reflect the real
+        // precision-recovery overhead.
+        let mult = if d.shape.precision == Precision::Fp32Split {
+            dtype_split::LIMB_GEMMS as f64
+        } else {
+            1.0
+        };
         rep.ops += 2.0 * (d.shape.m * d.shape.k * d.shape.n) as f64;
-        rep.dram_bytes += r.a_bytes + r.b_bytes + r.c_bytes;
-        rep.t_steady += r.t_comp.max(r.t_mem);
-        rep.t_prologue += r.t_prologue;
-        rep.t_stall += r.t_stall;
-        rep.t_dispatch += r.t_dispatch;
+        rep.dram_bytes += (r.a_bytes + r.b_bytes + r.c_bytes) * mult;
+        rep.t_steady += r.t_comp.max(r.t_mem) * mult;
+        rep.t_prologue += r.t_prologue * mult;
+        rep.t_stall += r.t_stall * mult;
+        rep.t_dispatch += r.t_dispatch * mult;
         rep.t_reconfig += reconfig_s;
-        rep.per_chain_s[d.chain] += r.t_total + reconfig_s;
+        rep.per_chain_s[d.chain] += r.t_total * mult + reconfig_s;
     }
     rep.reconfigurations = device.reconfigurations;
     rep

@@ -39,6 +39,13 @@ pub fn beta(gen: Generation, p: Precision) -> f64 {
         // in-core repack.
         (Generation::Xdna2, Precision::Bfp16) => 0.085,
         (Generation::Xdna, Precision::Bfp16) => 0.13,
+        // The logical fp32_split precision has no kernels of its own —
+        // its limb GEMMs run the bf16 design, so cost probes that reach
+        // this model (e.g. the optimizer's IP enumeration) see bf16's
+        // fitted overhead. The dispatch-count multiple is charged at the
+        // scheduling layer, never here.
+        (Generation::Xdna, Precision::Fp32Split) => 0.117,
+        (Generation::Xdna2, Precision::Fp32Split) => 0.115,
     }
 }
 

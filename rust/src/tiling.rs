@@ -128,6 +128,16 @@ impl TilingConfig {
 
     /// Check every structural constraint the paper imposes.
     pub fn validate(&self) -> Result<()> {
+        // A *logical* precision is rejected, never scheduled: fp32_split
+        // exists only above the graph compiler, which lowers it to bf16
+        // limb GEMMs. A hostile trace/JSON naming it at the dispatch
+        // layer poisons the op here instead of panicking a leader.
+        if self.precision == Precision::Fp32Split {
+            bail!(
+                "fp32_split is a logical precision with no datapath schedule; \
+                 lower it to bf16 limb GEMMs via the graph compile path"
+            );
+        }
         let spec = self.gen.spec();
         let k = &self.kernel;
         if !k.aligned(self.precision) {
@@ -394,6 +404,27 @@ mod tests {
             Layout::ColMajor
         )
         .is_err());
+    }
+
+    #[test]
+    fn validation_rejects_the_logical_fp32_split_precision() {
+        // A hostile config naming fp32_split at the dispatch layer must
+        // poison the op (typed error), never panic or schedule: the
+        // precision only exists above the graph compiler.
+        let err = TilingConfig::new(
+            Generation::Xdna2,
+            Precision::Fp32Split,
+            112,
+            48,
+            96,
+            384,
+            4,
+            8,
+            Layout::ColMajor,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("logical precision"), "{err}");
     }
 
     #[test]

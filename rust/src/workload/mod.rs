@@ -9,7 +9,7 @@ use crate::tiling::TilingConfig;
 use crate::util::rng::Rng;
 
 /// One GEMM in a workload trace.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct GemmShape {
     pub name: String,
     pub m: usize,
@@ -308,6 +308,14 @@ pub fn parse_trace(text: &str) -> anyhow::Result<Vec<GemmShape>> {
             Some(s) => Layout::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("line {}: unknown layout '{s}'", lineno + 1))?,
         };
+        if precision == Precision::Fp32Split {
+            anyhow::bail!(
+                "line {}: fp32_split is a logical precision with no dispatch-layer \
+                 schedule; route the op through the graph/compile path, which lowers \
+                 it to bf16 limb GEMMs",
+                lineno + 1
+            );
+        }
         if precision == Precision::Bfp16 && b_layout == Layout::RowMajor {
             anyhow::bail!(
                 "line {}: bfp16 requires column-major B (blocks run along K)",
@@ -377,6 +385,22 @@ blk0.ffn_down 512 11008 4096 bf16  # trailing comment
         assert!(parse_trace("x 1 2 3 i8i8 diagonal").is_err());
         // Comments and blanks alone are fine.
         assert!(parse_trace("# nothing\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_fp32_split_at_the_dispatch_layer_with_guidance() {
+        // fp32_split parses as a Precision (graph JSON needs it) but has
+        // no datapath schedule: a hostile/stale trace naming it must get
+        // a typed line-numbered error steering at the compile path — not
+        // a panic later in TilingConfig::validate.
+        for spelled in ["fp32_split", "fp32-split"] {
+            let err = parse_trace(&format!("ok 1 2 3 i8i8\nx 64 64 64 {spelled}"))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("line 2"), "{err}");
+            assert!(err.contains("logical precision"), "{err}");
+            assert!(err.contains("graph"), "{err}");
+        }
     }
 
     #[test]

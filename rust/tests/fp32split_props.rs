@@ -1,0 +1,360 @@
+//! Property and acceptance tests for the Ozaki fp32-split path
+//! (ISSUE 9, DESIGN.md §15).
+//!
+//! Four contracts:
+//!
+//! 1. the hi/lo limb codec is error-free to second order across the
+//!    whole f32 range — wide exponents, denormals, non-finite values —
+//!    and `split_gemm` stays inside `error_bound` for wide-dynamic-range
+//!    and exponent-spread operands;
+//! 2. `split_exec` is bit-exact across thread counts, directly and
+//!    through the graph executor (`exec_threads` ∈ {1, 2, 8});
+//! 3. accuracy recovery is real: at a (reduced) Table-3 geometry the
+//!    split result is ≥ 50× closer to the f64 oracle than plain bf16,
+//!    and the same logical op runs bit-identically through the pure
+//!    executor dataflow and the live coordinator fleet;
+//! 4. the hardening satellites hold: an infeasible accuracy budget is a
+//!    typed [`AssignError`] (not a panic or an overdraw), and hostile
+//!    trace/config/key inputs naming fp32_split at the dispatch layer
+//!    get typed errors.
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::coordinator::{Backend, Coordinator, CoordinatorOptions, DesignKey};
+use xdna_gemm::dtype::{Layout, Precision};
+use xdna_gemm::dtype_split::{
+    error_bound, gemm_f64, split_exec, split_f32, split_gemm, LIMB_GEMMS,
+};
+use xdna_gemm::gemm::refimpl;
+use xdna_gemm::graph::{
+    assign, execute_functional, lower, partition, reference_results, serve_graph, AssignError,
+    AssignOptions, ModelGraph, PartitionOptions,
+};
+use xdna_gemm::mem::Matrix;
+use xdna_gemm::tiling::TilingConfig;
+use xdna_gemm::util::prop::prop_check;
+use xdna_gemm::util::rng::Rng;
+use xdna_gemm::workload::{parse_trace, GemmShape};
+
+/// Fill an f32 image with unit-normal values times a per-element scale
+/// drawn from `2^[lo, hi]` — the exponent-spread generator.
+fn fill_spread(m: &mut Matrix, rng: &mut Rng, lo: i64, hi: i64) -> f64 {
+    let mut max = 0f64;
+    for i in 0..m.rows {
+        for j in 0..m.cols {
+            let v = rng.normal() as f32 * 2f32.powi(rng.range_i64(lo, hi) as i32);
+            m.set_f32(i, j, v);
+            max = max.max(v.abs() as f64);
+        }
+    }
+    max
+}
+
+fn max_abs_err_vs_oracle(c: &Matrix, oracle: &[f64]) -> f64 {
+    let mut worst = 0f64;
+    for i in 0..c.rows {
+        for j in 0..c.cols {
+            worst = worst.max((c.get_f32(i, j) as f64 - oracle[i * c.cols + j]).abs());
+        }
+    }
+    worst
+}
+
+// ---------------------------------------------------------------- codec
+
+#[test]
+fn split_recovers_values_across_the_wide_exponent_range() {
+    // hi + lo must reconstruct x to within u² relative (u = 2⁻⁹) plus
+    // the bf16 subnormal floor, over the whole normal f32 range — not
+    // just unit-scale values.
+    prop_check("fp32 split codec, wide range", 300, |rng| {
+        let x = rng.normal() as f32 * 2f32.powi(rng.range_i64(-120, 120) as i32);
+        let (hi, lo) = split_f32(x);
+        let err = (x as f64 - (hi.to_f32() as f64 + lo.to_f32() as f64)).abs();
+        let bound = 2f64.powi(-16) * x.abs() as f64 + 2f64.powi(-134);
+        assert!(err <= bound, "{x:e}: residual {err:e} > {bound:e}");
+    });
+}
+
+#[test]
+fn split_handles_denormal_inputs_gracefully() {
+    // Subnormal f32 inputs land in (or below) bf16's subnormal range:
+    // the split must stay finite, never amplify, and reconstruct to the
+    // absolute floor.
+    for x in [1.0e-40f32, -3.4e-41, 9.2e-41, f32::MIN_POSITIVE, -1.4e-45, 0.0] {
+        let (hi, lo) = split_f32(x);
+        let back = hi.to_f32() as f64 + lo.to_f32() as f64;
+        assert!(back.is_finite());
+        assert!(back.abs() <= 2.0 * x.abs() as f64 + 2f64.powi(-134), "{x:e} -> {back:e}");
+        assert!((x as f64 - back).abs() <= 2f64.powi(-16) * x.abs() as f64 + 2f64.powi(-134));
+    }
+}
+
+#[test]
+fn nonfinite_operands_poison_only_their_rows_without_panicking() {
+    let (m, k, n) = (4usize, 6, 5);
+    let mut a = Matrix::zeroed(m, k, 4, Layout::RowMajor).unwrap();
+    let mut b = Matrix::zeroed(k, n, 4, Layout::RowMajor).unwrap();
+    let mut rng = Rng::seeded(33);
+    fill_spread(&mut a, &mut rng, -2, 2);
+    fill_spread(&mut b, &mut rng, -2, 2);
+    for bad in [f32::NAN, f32::INFINITY] {
+        let mut a2 = a.clone();
+        a2.set_f32(1, 3, bad);
+        let c = split_gemm(&a2, &b).unwrap(); // must not panic
+        for j in 0..n {
+            assert!(!c.get_f32(1, j).is_finite(), "row 1 col {j} should be poisoned");
+        }
+        for i in [0usize, 2, 3] {
+            for j in 0..n {
+                assert!(c.get_f32(i, j).is_finite(), "({i},{j}) leaked non-finite");
+            }
+        }
+    }
+}
+
+#[test]
+fn split_gemm_stays_inside_error_bound_for_spread_operands() {
+    // Random geometry, per-element exponents spread over 2^[-20, 20]:
+    // |split_gemm − f64 oracle| ≤ error_bound(k, max|A|, max|B|).
+    prop_check("split_gemm vs bound, exponent spread", 40, |rng| {
+        let m = 1 + rng.below(6);
+        let k = 1 + rng.below(24);
+        let n = 1 + rng.below(6);
+        let mut a = Matrix::zeroed(m, k, 4, Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(k, n, 4, Layout::RowMajor).unwrap();
+        let ma = fill_spread(&mut a, rng, -20, 20).max(1e-30);
+        let mb = fill_spread(&mut b, rng, -20, 20).max(1e-30);
+        let c = split_gemm(&a, &b).unwrap();
+        let err = max_abs_err_vs_oracle(&c, &gemm_f64(&a, &b));
+        let bound = error_bound(k, ma, mb);
+        assert!(err <= bound, "{m}x{k}x{n}: {err:e} > {bound:e}");
+    });
+}
+
+#[test]
+fn split_gemm_bound_holds_with_one_denormal_scale_operand() {
+    // A near bf16's subnormal floor (lo limbs quantize with ≤ 2⁻¹³⁴
+    // absolute error), B at unit scale — the bound's subnormal term is
+    // the binding one.
+    prop_check("split_gemm vs bound, denormal-limb scale", 20, |rng| {
+        let (m, k, n) = (3usize, 8, 3);
+        let mut a = Matrix::zeroed(m, k, 4, Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(k, n, 4, Layout::RowMajor).unwrap();
+        let ma = fill_spread(&mut a, rng, -122, -118).max(1e-40);
+        let mb = fill_spread(&mut b, rng, -1, 1).max(1e-30);
+        let c = split_gemm(&a, &b).unwrap();
+        let err = max_abs_err_vs_oracle(&c, &gemm_f64(&a, &b));
+        let bound = error_bound(k, ma, mb);
+        assert!(err <= bound, "{err:e} > {bound:e}");
+    });
+}
+
+// -------------------------------------------------------- determinism
+
+#[test]
+fn split_exec_is_bit_exact_across_thread_counts() {
+    prop_check("split_exec thread determinism", 10, |rng| {
+        let m = 1 + rng.below(24);
+        let k = 1 + rng.below(32);
+        let n = 1 + rng.below(16);
+        let mut a = Matrix::zeroed(m, k, 4, Layout::RowMajor).unwrap();
+        let mut b = Matrix::zeroed(k, n, 4, Layout::RowMajor).unwrap();
+        fill_spread(&mut a, rng, -10, 10);
+        fill_spread(&mut b, rng, -10, 10);
+        let baseline = split_exec(&a, &b, 1).unwrap();
+        for threads in [2usize, 8] {
+            let t = split_exec(&a, &b, threads).unwrap();
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(
+                        baseline.get_f32(i, j).to_bits(),
+                        t.get_f32(i, j).to_bits(),
+                        "threads={threads} ({i},{j})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// A 4-node fp32_split DAG with a fan-out and a 2-input join — every
+/// node forced into its own chain by the lowering cut rule.
+fn split_diamond() -> ModelGraph {
+    let mut g = ModelGraph::new("split-diamond");
+    let s = |name: &str| GemmShape::new(name, 32, 32, 32, Precision::Fp32Split);
+    let a = g.add(s("a"));
+    let b = g.add_after(&[a], s("b")).unwrap();
+    let c = g.add_after(&[a], s("c")).unwrap();
+    g.add_after(&[b, c], s("d")).unwrap();
+    g
+}
+
+#[test]
+fn graph_executor_is_thread_deterministic_on_split_graphs() {
+    let g = split_diamond();
+    let gen = Generation::Xdna2;
+    let base = execute_functional(&g, gen, 1).unwrap();
+    for threads in [2usize, 8] {
+        let got = execute_functional(&g, gen, threads).unwrap();
+        for (id, (x, y)) in base.iter().zip(&got).enumerate() {
+            assert!(
+                refimpl::matrices_equal(x, y, Precision::Fp32Split),
+                "node {id}: exec_threads={threads} changed fp32_split bits"
+            );
+        }
+    }
+    // And the executor dataflow agrees bit-for-bit with the reference
+    // oracle (ref_gemm routes fp32_split through the same split kernel).
+    let want = reference_results(&g).unwrap();
+    for (id, (x, y)) in base.iter().zip(&want).enumerate() {
+        assert!(
+            refimpl::matrices_equal(x, y, Precision::Fp32Split),
+            "node {id} differs from refimpl"
+        );
+    }
+}
+
+// ------------------------------------------------- accuracy + serving
+
+#[test]
+fn split_recovers_50x_accuracy_over_bf16_within_4x_simulated_time() {
+    // The ISSUE 9 pin at a (debug-build reduced) Table-3 geometry:
+    // max |C − f64 oracle| must be ≥ 50× smaller than plain bf16's on
+    // the same f32 operands, for ≤ LIMB_GEMMS× the device dispatches.
+    let (m, k, n) = (64usize, 512, 64);
+    let mut a = Matrix::zeroed(m, k, 4, Layout::RowMajor).unwrap();
+    let mut b = Matrix::zeroed(k, n, 4, Layout::ColMajor).unwrap();
+    refimpl::fill_random(&mut a, Precision::Fp32Split, 11);
+    refimpl::fill_random(&mut b, Precision::Fp32Split, 12);
+    let oracle = gemm_f64(&a, &b);
+
+    let split_c = split_gemm(&a, &b).unwrap();
+    let split_err = max_abs_err_vs_oracle(&split_c, &oracle);
+    assert!(split_err <= error_bound(k, 6.0, 6.0), "split outside its own bound");
+
+    // Plain bf16: quantize the same operands, run the bf16 reference.
+    let mut abf = Matrix::zeroed(m, k, 2, Layout::RowMajor).unwrap();
+    let mut bbf = Matrix::zeroed(k, n, 2, Layout::ColMajor).unwrap();
+    for i in 0..m {
+        for j in 0..k {
+            abf.set_bf16(i, j, xdna_gemm::dtype::Bf16::from_f32(a.get_f32(i, j)));
+        }
+    }
+    for i in 0..k {
+        for j in 0..n {
+            bbf.set_bf16(i, j, xdna_gemm::dtype::Bf16::from_f32(b.get_f32(i, j)));
+        }
+    }
+    let bf16_c = refimpl::ref_gemm(&abf, &bbf, Precision::Bf16).unwrap();
+    let mut bf16_err = 0f64;
+    for i in 0..m {
+        for j in 0..n {
+            let got = bf16_c.get_bf16(i, j).to_f32() as f64;
+            bf16_err = bf16_err.max((got - oracle[i * n + j]).abs());
+        }
+    }
+    assert!(
+        bf16_err >= 50.0 * split_err,
+        "recovery only {:.1}x (bf16 {bf16_err:e} vs split {split_err:e})",
+        bf16_err / split_err
+    );
+    assert!(LIMB_GEMMS <= 4, "dispatch multiple blew the 4x budget");
+}
+
+#[test]
+fn split_graph_serves_bit_identically_through_the_coordinator() {
+    // End-to-end acceptance: the same fp32_split DAG through (a) the
+    // pure executor dataflow and (b) the live coordinator fleet with
+    // staged f32 tensors must produce the very same bytes — including
+    // across chains pinned to different devices and exec_threads > 1.
+    let g = split_diamond();
+    let gen = Generation::Xdna;
+    let fleet = vec![gen, gen];
+    let pure = execute_functional(&g, gen, 1).unwrap();
+    let lowered = lower(&g);
+    // Every fp32_split node is its own chain, and the lowering exposes
+    // one 3-limb expansion per node.
+    assert_eq!(lowered.chains.len(), g.len());
+    assert_eq!(lowered.splits.len(), g.len());
+    for s in &lowered.splits {
+        assert_eq!(s.limbs.len(), LIMB_GEMMS);
+        assert!(s.limbs.iter().all(|l| l.precision == Precision::Bf16));
+    }
+    let part = partition(&g, &lowered, &PartitionOptions::fleet(fleet.clone()));
+    let coord = Coordinator::start(CoordinatorOptions {
+        devices: fleet,
+        backend: Backend::Functional,
+        exec_threads: 2,
+        ..Default::default()
+    });
+    let responses = serve_graph(&coord, &g, &lowered, &part, true).unwrap();
+    assert_eq!(responses.len(), lowered.chains.len());
+    for (ci, resp) in responses.iter().enumerate() {
+        let tail = lowered.chain_tail(ci);
+        let out = resp.result.as_ref().expect("functional chain result");
+        assert_eq!(out.elem_bytes, 4, "fp32_split C must stay an f32 image");
+        assert!(
+            refimpl::matrices_equal(out, &pure[tail], Precision::Fp32Split),
+            "chain {ci} tail differs from the pure-executor dataflow"
+        );
+    }
+    let metrics = coord.shutdown().unwrap();
+    assert!(metrics.all_verified(), "ABFT/functional verification failed on a split chain");
+}
+
+// ------------------------------------------------------- hardening
+
+#[test]
+fn infeasible_budget_is_a_typed_error_at_the_public_api() {
+    let g = split_diamond();
+    let err = assign(
+        &g,
+        &AssignOptions { budget_per_node: 0.0001, fleet: vec![Generation::Xdna2] },
+    )
+    .unwrap_err();
+    let ae = err.downcast_ref::<AssignError>().expect("AssignError, not a panic string");
+    assert!(ae.affordable < ae.cheapest_err);
+    assert!(ae.to_string().contains("budget"), "{ae}");
+    // The same graph is feasible once the budget covers the split tier.
+    let ok = assign(
+        &g,
+        &AssignOptions { budget_per_node: 0.01, fleet: vec![Generation::Xdna2] },
+    )
+    .unwrap();
+    assert!(ok
+        .graph
+        .nodes()
+        .iter()
+        .all(|n| n.shape.precision == Precision::Fp32Split));
+    assert!(ok.err_spent <= ok.err_budget + 1e-9);
+}
+
+#[test]
+fn hostile_dispatch_layer_fp32_split_gets_typed_errors() {
+    // A trace line naming the logical precision at the dispatch layer.
+    for spelling in ["fp32_split", "fp32-split"] {
+        let text = format!("ok 64 64 64 bf16\nbad 64 64 64 {spelling}\n");
+        let e = parse_trace(&text).unwrap_err().to_string();
+        assert!(e.contains("line 2") && e.contains("logical"), "{e}");
+    }
+    // A hand-built tiling config naming it is rejected by validation.
+    let e = TilingConfig::new(
+        Generation::Xdna2,
+        Precision::Fp32Split,
+        48,
+        152,
+        48,
+        1248,
+        4,
+        8,
+        Layout::ColMajor,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("logical precision"), "{e}");
+    // A design-cache key for a split shape routes to the bf16 design
+    // instead of panicking the leader.
+    let key =
+        DesignKey::for_shape(&GemmShape::new("hostile", 64, 64, 64, Precision::Fp32Split));
+    assert_eq!(key.precision, Precision::Bf16);
+}

@@ -1,24 +1,25 @@
 #!/usr/bin/env bash
-# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–8): run the
+# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–9): run the
 # hotpath, chain_vs_isolated, bfp16_vs_bf16, graph_vs_chain, soak,
-# llm_serving and abft_overhead benches with JSON recording enabled and
-# merge them into BENCH_PR8.json — GEMM/s, functional GB/s,
+# llm_serving, abft_overhead and fp32_split benches with JSON recording
+# enabled and merge them into BENCH_PR9.json — GEMM/s, functional GB/s,
 # packing/threading speedups, the native-bfp16 vs bf16-emulation
 # speedup, the graph compiler's DAG-aware-schedule speedups, the
 # chaos-soak's sustained TOPS / p99 / fault counters, the
 # continuous-batching LLM serving tokens/s + p50/p99 token latency +
-# coalescing speedup, and the ABFT integrity layer's device-time
-# overhead vs integrity-off and vs a full reference recompute — so
-# future PRs can diff against a machine-readable baseline.
+# coalescing speedup, the ABFT integrity layer's device-time overhead
+# vs integrity-off and vs a full reference recompute, and the Ozaki
+# fp32-split path's accuracy recovery over bf16 + its simulated device
+# cost — so future PRs can diff against a machine-readable baseline.
 #
-# usage: scripts/bench.sh [out.json]     (default: BENCH_PR8.json)
+# usage: scripts/bench.sh [out.json]     (default: BENCH_PR9.json)
 #        BENCH_MS=500 scripts/bench.sh   (longer per-case budget)
 #        SOAK_OPS=1500 scripts/bench.sh  (shorter soak horizon)
 #        LLM_SESSIONS=6 scripts/bench.sh (lighter serving load)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-out="${1:-BENCH_PR8.json}"
+out="${1:-BENCH_PR9.json}"
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
 
@@ -46,14 +47,17 @@ BENCH_JSON="$tmp/llm.json" cargo bench --bench llm_serving
 echo "==> cargo bench --bench abft_overhead"
 BENCH_JSON="$tmp/abft.json" cargo bench --bench abft_overhead
 
+echo "==> cargo bench --bench fp32_split"
+BENCH_JSON="$tmp/fp32split.json" cargo bench --bench fp32_split
+
 echo "==> merging into $out"
 python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$tmp/bfp16.json" "$tmp/graph.json" \
-    "$tmp/soak.json" "$tmp/llm.json" "$tmp/abft.json" "$out" <<'PY'
+    "$tmp/soak.json" "$tmp/llm.json" "$tmp/abft.json" "$tmp/fp32split.json" "$out" <<'PY'
 import json
 import sys
 
-hot, chain, bfp, graph, soak, llm, abft, out = sys.argv[1:9]
-groups = [json.load(open(p)) for p in (hot, chain, bfp, graph, soak, llm, abft)]
+hot, chain, bfp, graph, soak, llm, abft, fp32split, out = sys.argv[1:10]
+groups = [json.load(open(p)) for p in (hot, chain, bfp, graph, soak, llm, abft, fp32split)]
 
 
 def thrpt(group, name):
@@ -64,7 +68,7 @@ def thrpt(group, name):
 
 
 summary = {
-    "artifact": "BENCH_PR8",
+    "artifact": "BENCH_PR9",
     "description": "packed+parallel functional executor vs re-streaming serial "
     "baseline, native bfp16 vs bf16 emulation on XDNA2, the graph "
     "compiler's DAG-aware fleet schedule vs isolated-dispatch and "
@@ -74,7 +78,9 @@ summary = {
     "latency, coalesced-vs-per-session decode speedup on both "
     "generations), and the ABFT integrity layer's device-time overhead "
     "at the paper's Table 2-3 shapes (vs integrity-off and vs a full "
-    "reference recompute, both generations)",
+    "reference recompute, both generations), and the fp32-split "
+    "path's accuracy recovery over plain bf16 at its LIMB_GEMMS-dispatch "
+    "simulated device cost",
     "gemms_per_s": thrpt(groups[0], "executor_gemms_per_s"),
     "functional_gb_per_s": thrpt(groups[0], "executor_functional_gb_s"),
     "packing_speedup_serial": thrpt(groups[0], "executor_packing_speedup"),
@@ -108,6 +114,9 @@ summary = {
     "full_verify_overhead_pct_xdna2": thrpt(groups[6], "full_verify_overhead_pct_xdna2"),
     "full_over_abft_cost_ratio_xdna": thrpt(groups[6], "full_over_abft_cost_ratio_xdna"),
     "full_over_abft_cost_ratio_xdna2": thrpt(groups[6], "full_over_abft_cost_ratio_xdna2"),
+    "fp32_split_recovery_x": thrpt(groups[7], "fp32_split_recovery_x"),
+    "fp32_split_cost_ratio_xdna": thrpt(groups[7], "fp32_split_cost_ratio_xdna"),
+    "fp32_split_cost_ratio_xdna2": thrpt(groups[7], "fp32_split_cost_ratio_xdna2"),
     "groups": groups,
 }
 with open(out, "w") as f:
