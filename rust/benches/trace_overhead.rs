@@ -1,0 +1,88 @@
+//! PR 10 acceptance artifact: the cost of the flight recorder.
+//!
+//! Serves the same workload through the coordinator twice per
+//! generation — recorder off, recorder on — and compares the *virtual
+//! device time* the fleet accounted. The recorder records facts on the
+//! host side only; the simulated device clock must not move at all, so
+//! the gate is strict:
+//!
+//! * recorder-enabled device time is within 1% of disabled (the CI
+//!   check job enforces this; in practice the two are bit-identical,
+//!   which is also asserted — a drift would mean the recorder leaked
+//!   into the timing model).
+//! * the recorded trace is non-trivial (facts actually flowed), so the
+//!   comparison is not vacuous.
+//!
+//! The run is strictly sequential (`batch_window: 1`, `max_in_flight:
+//! 1`, one device): execution order is then exactly submission order,
+//! which makes the *runtime* reconfiguration sequence — and hence the
+//! summed device seconds — deterministic, so the bit-equality assert
+//! cannot flake on scheduler timing. (The exported trace is
+//! byte-identical even for racy batched runs — that replay-level
+//! determinism is pinned by `tests/trace_golden.rs`; this bench pins
+//! the stronger clock-unchanged property on a schedule where it holds
+//! exactly.)
+//!
+//! Host wall-clock per request is reported for both modes as an
+//! informational line (it is hardware-dependent and not gated).
+//!
+//! `BENCH_JSON` emits the machine-readable record `scripts/bench.sh`
+//! folds into `BENCH_PR10.json`.
+
+use std::time::Instant;
+
+use xdna_gemm::arch::Generation;
+use xdna_gemm::coordinator::{CoordinatorOptions, IntegrityMode};
+use xdna_gemm::harness;
+use xdna_gemm::trace::Recorder;
+use xdna_gemm::util::bench::Bench;
+use xdna_gemm::workload::skewed_trace;
+
+fn main() {
+    let b = Bench::new("trace_overhead");
+    let n = 128;
+    for gen in [Generation::Xdna, Generation::Xdna2] {
+        let trace = skewed_trace(n, 7);
+        let run = |recorder: Recorder| {
+            let opts = CoordinatorOptions {
+                gen,
+                devices: vec![gen],
+                integrity: IntegrityMode::Abft,
+                batch_window: 1,
+                max_in_flight: 1,
+                recorder: recorder.clone(),
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let m = harness::serve_trace(opts, &trace, n).expect("serve");
+            (m.total_device_s(), t0.elapsed().as_secs_f64(), recorder.facts().len())
+        };
+        let (dev_off, wall_off, _) = run(Recorder::Off);
+        let (dev_on, wall_on, facts) = run(Recorder::on());
+        assert!(facts > n, "{gen}: the recorder must have captured the run ({facts} facts)");
+        let dev_pct = 100.0 * (dev_on - dev_off).abs() / dev_off;
+        assert!(
+            dev_pct <= 1.0,
+            "{gen}: recorder moved the virtual device clock by {dev_pct:.4}% \
+             (off {dev_off:.6}s, on {dev_on:.6}s)"
+        );
+        assert_eq!(
+            dev_off.to_bits(),
+            dev_on.to_bits(),
+            "{gen}: device time must be bit-identical — the recorder is host-side only"
+        );
+        let wall_pct = 100.0 * (wall_on - wall_off) / wall_off;
+        println!(
+            "[{gen}] device time: off {:.3} ms | on {:.3} ms (+{dev_pct:.4}%) | \
+             host wall/req: off {:.1} us | on {:.1} us ({wall_pct:+.1}%) | {facts} facts",
+            dev_off * 1e3,
+            dev_on * 1e3,
+            wall_off / n as f64 * 1e6,
+            wall_on / n as f64 * 1e6,
+        );
+        let g = gen.name();
+        b.throughput(&format!("trace_device_time_overhead_pct_{g}"), dev_pct, "%");
+        b.throughput(&format!("trace_facts_per_request_{g}"), facts as f64 / n as f64, "facts");
+    }
+    b.finish();
+}

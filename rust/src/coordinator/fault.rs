@@ -67,6 +67,16 @@ impl FaultKind {
             FaultKind::CorruptResult { .. } => "corrupt_result",
         }
     }
+
+    /// Device-clock seconds the fault adds to its tagged unit (nonzero
+    /// only for `DmaStall`); the flight recorder charges this onto the
+    /// unit's `fault-stall` child span.
+    pub fn stall_seconds(&self) -> f64 {
+        match self {
+            FaultKind::DmaStall { stall_s } => *stall_s,
+            _ => 0.0,
+        }
+    }
 }
 
 /// One scheduled fault: fires when the device's forward counter reaches

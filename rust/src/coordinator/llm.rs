@@ -25,6 +25,7 @@
 
 use anyhow::Result;
 
+use crate::util::json::{num, obj, Json};
 use crate::util::stats::percentile;
 use crate::workload::llm::{decode_step_chain, prefill_chain, LlmLoad, SessionSpec};
 
@@ -100,6 +101,32 @@ impl LlmReport {
     pub fn conserved(&self) -> bool {
         self.tokens_completed + self.tokens_failed + self.tokens_pending
             == self.tokens_submitted
+    }
+
+    /// The run as a [`Json`] value (`serve-llm --json`); same serializer
+    /// as the fleet rollup and the trace exporter.
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
+        obj(vec![
+            ("sessions", num(self.sessions as f64)),
+            ("sessions_completed", num(self.sessions_completed as f64)),
+            ("sessions_failed", num(self.sessions_failed as f64)),
+            ("tokens_submitted", num(self.tokens_submitted as f64)),
+            ("tokens_completed", num(self.tokens_completed as f64)),
+            ("tokens_failed", num(self.tokens_failed as f64)),
+            ("tokens_pending", num(self.tokens_pending as f64)),
+            ("token_lat_p50_seconds", opt(self.token_lat_p50_s)),
+            ("token_lat_p99_seconds", opt(self.token_lat_p99_s)),
+            ("ttft_p50_seconds", opt(self.ttft_p50_s)),
+            ("ttft_p99_seconds", opt(self.ttft_p99_s)),
+            ("tokens_per_second", num(self.tokens_per_s)),
+            ("makespan_seconds", num(self.makespan_s)),
+            ("decode_busy_seconds", num(self.decode_busy_s)),
+            ("decode_rounds", num(self.decode_rounds as f64)),
+            ("mean_batch", num(self.mean_batch)),
+            ("coalesced", Json::Bool(self.coalesced)),
+            ("conserved", Json::Bool(self.conserved())),
+        ])
     }
 
     pub fn summary(&self) -> String {

@@ -10,6 +10,7 @@
 //!   which is what adding devices improves.
 
 use crate::arch::Generation;
+use crate::util::json::{num, obj, s, Json};
 use crate::util::stats;
 
 use super::fault::FaultRecord;
@@ -47,6 +48,16 @@ impl Integrity {
     /// Whether any integrity check ran on this unit.
     pub fn checked(&self) -> bool {
         *self != Integrity::NotChecked
+    }
+
+    /// Stable lowercase label (trace args, metrics labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Integrity::NotChecked => "not_checked",
+            Integrity::Passed => "passed",
+            Integrity::Recovered { .. } => "recovered",
+            Integrity::Failed => "failed",
+        }
     }
 }
 
@@ -462,6 +473,129 @@ impl FleetMetrics {
             .map(|r| r.device_s)
             .collect();
         stats::percentile(&xs, p)
+    }
+
+    /// The full fleet rollup — device, tenant, chain, fault, and
+    /// integrity breakdowns included — as a [`Json`] value
+    /// (`serve --json`). Shares the serializer with the trace exporter
+    /// ([`crate::trace::chrome`]), so number formatting is identical
+    /// across every machine-readable artifact the CLI emits.
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
+        let devices: Vec<Json> = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(d, dm)| {
+                obj(vec![
+                    ("device", num(d as f64)),
+                    ("gen", s(dm.gen.name())),
+                    ("requests", num(dm.metrics.count() as f64)),
+                    ("ops", num(dm.metrics.total_ops())),
+                    ("device_seconds", num(dm.metrics.total_device_s())),
+                    ("device_tops", num(dm.metrics.device_tops())),
+                    ("reconfigurations", num(dm.metrics.reconfigurations() as f64)),
+                    (
+                        "cache",
+                        obj(vec![
+                            ("hits", num(dm.cache.hits as f64)),
+                            ("misses", num(dm.cache.misses as f64)),
+                            ("evictions", num(dm.cache.evictions as f64)),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                obj(vec![
+                    ("name", s(&t.name)),
+                    ("priority", num(t.priority as f64)),
+                    ("quota", num(t.quota as f64)),
+                    ("submitted", num(t.submitted as f64)),
+                    ("completed", num(t.completed as f64)),
+                    ("failed", num(t.failed as f64)),
+                    ("requeued", num(t.requeued as f64)),
+                    ("pending", num(t.pending as f64)),
+                    ("max_in_flight", num(t.max_in_flight as f64)),
+                    (
+                        "integrity",
+                        obj(vec![
+                            ("checked", num(t.integrity_checked as f64)),
+                            ("passed", num(t.integrity_passed as f64)),
+                            ("recovered", num(t.integrity_recovered as f64)),
+                            ("failed", num(t.integrity_failed as f64)),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        let chains: Vec<Json> = self
+            .chains
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("id", num(c.id as f64)),
+                    ("name", s(&c.name)),
+                    ("device", num(c.device as f64)),
+                    ("ops_count", num(c.ops_count as f64)),
+                    ("fused_edges", num(c.fused_edges as f64)),
+                    ("elided_dispatches", num(c.elided_dispatches as f64)),
+                    ("device_seconds", num(c.device_s)),
+                ])
+            })
+            .collect();
+        let faults: Vec<Json> = self
+            .fault_log()
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("device", num(f.device as f64)),
+                    ("seq", num(f.seq as f64)),
+                    ("kind", s(f.kind.name())),
+                ])
+            })
+            .collect();
+        let (checked, passed, recovered, failed) = self.integrity_totals();
+        obj(vec![
+            ("requests", num(self.count() as f64)),
+            ("ops", num(self.total_ops())),
+            ("device_seconds", num(self.total_device_s())),
+            ("makespan_seconds", num(self.makespan_s())),
+            ("device_tops", num(self.device_tops())),
+            ("fleet_tops", num(self.fleet_tops())),
+            ("reconfigurations", num(self.reconfigurations() as f64)),
+            ("latency_p50_seconds", opt(self.latency_percentile(0.50))),
+            ("latency_p99_seconds", opt(self.latency_percentile(0.99))),
+            ("device_time_p99_seconds", opt(self.device_time_percentile(0.99))),
+            (
+                "router",
+                obj(vec![
+                    ("hits", num(self.router_hits as f64)),
+                    ("misses", num(self.router_misses as f64)),
+                    ("spills", num(self.router_spills as f64)),
+                    ("hit_rate", num(self.router_hit_rate())),
+                ]),
+            ),
+            ("leader_respawns", num(self.leader_respawns as f64)),
+            ("requeued", num(self.total_requeued() as f64)),
+            (
+                "integrity",
+                obj(vec![
+                    ("checked", num(checked as f64)),
+                    ("passed", num(passed as f64)),
+                    ("recovered", num(recovered as f64)),
+                    ("failed", num(failed as f64)),
+                ]),
+            ),
+            ("conserves", Json::Bool(self.conserves())),
+            ("devices", Json::Arr(devices)),
+            ("tenants", Json::Arr(tenants)),
+            ("chains", Json::Arr(chains)),
+            ("faults", Json::Arr(faults)),
+        ])
     }
 
     /// Total ops served for one tenant.

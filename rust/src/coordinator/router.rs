@@ -330,6 +330,17 @@ pub enum RouteKind {
     Spill,
 }
 
+impl RouteKind {
+    /// Stable lowercase label (trace args, metrics labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouteKind::Affinity => "affinity",
+            RouteKind::LeastLoaded => "least_loaded",
+            RouteKind::Spill => "spill",
+        }
+    }
+}
+
 /// One routing decision.
 #[derive(Clone, Copy, Debug)]
 pub struct RouteDecision {

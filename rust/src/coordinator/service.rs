@@ -50,6 +50,8 @@ use crate::mem::Matrix;
 use crate::plan::{overrides_for, GemmChain};
 use crate::sim::{simulate_gemm, simulate_gemm_with, BdMode, GemmReport};
 use crate::tiling::TilingConfig;
+use crate::trace::model::{DispatchFact, RequeueReason, TraceFact};
+use crate::trace::{roofline, Recorder};
 use crate::workload::GemmShape;
 
 use super::fault::{FaultKind, FaultPlan, FaultRecord};
@@ -303,6 +305,11 @@ pub struct CoordinatorOptions {
     /// consume before the unit fails visibly ([`Integrity::Failed`],
     /// `result: None`) — a corrupted result is never served silently.
     pub max_integrity_retries: usize,
+    /// The flight recorder (`serve --trace-out`): every clone —
+    /// router and leaders alike — feeds one shared fact sink. The
+    /// default [`Recorder::Off`] costs a discriminant test and zero
+    /// allocations per unit (DESIGN.md §16).
+    pub recorder: Recorder,
 }
 
 impl Default for CoordinatorOptions {
@@ -321,6 +328,7 @@ impl Default for CoordinatorOptions {
             max_leader_respawns: 16,
             integrity: IntegrityMode::Off,
             max_integrity_retries: 2,
+            recorder: Recorder::Off,
         }
     }
 }
@@ -475,6 +483,15 @@ impl Unit {
         }
     }
 
+    /// Coordinator-assigned unit id (request or chain id) — the span
+    /// identity the flight recorder keys facts on.
+    fn id(&self) -> u64 {
+        match self {
+            Unit::Req(p) => p.id,
+            Unit::Chain(c) => c.id,
+        }
+    }
+
     fn was_requeued(&self) -> bool {
         match self {
             Unit::Req(p) => p.requeued,
@@ -539,21 +556,28 @@ pub struct Coordinator {
     next_id: std::sync::atomic::AtomicU64,
     n_devices: usize,
     n_tenants: usize,
+    recorder: Recorder,
 }
 
 impl Coordinator {
     pub fn start(opts: CoordinatorOptions) -> Coordinator {
         let n_devices = opts.device_gens().len();
         let n_tenants = opts.tenant_specs().len();
+        let recorder = opts.recorder.clone();
         let (tx, rx) = sync_channel::<Msg>(opts.admission_capacity.max(1));
         let done_tx = tx.clone();
         let handle = std::thread::spawn(move || router_loop(opts, rx, done_tx));
-        Coordinator { tx, handle: Some(handle), next_id: 0.into(), n_devices, n_tenants }
+        Coordinator { tx, handle: Some(handle), next_id: 0.into(), n_devices, n_tenants, recorder }
     }
 
     /// Devices in the running fleet.
     pub fn n_devices(&self) -> usize {
         self.n_devices
+    }
+
+    /// The fleet's flight recorder (shares the sink with every leader).
+    pub fn recorder(&self) -> &Recorder {
+        &self.recorder
     }
 
     /// Configured tenants (1 when only the implicit default exists).
@@ -931,22 +955,27 @@ impl RouterCore {
     /// Routing decision for a unit (requires a live device). A chain
     /// pinned to a dead device falls back to free chain routing.
     fn place(&mut self, unit: &Unit) -> usize {
-        match unit {
+        let decision = match unit {
             Unit::Req(p) => {
                 let key = DesignKey::for_shape(&p.req.shape);
-                self.fleet.route(key, p.req.shape.ops()).device
+                self.fleet.route(key, p.req.shape.ops())
             }
             Unit::Chain(c) => {
                 let key = DesignKey::for_shape(&c.chain.ops[0].shape);
                 let ops = c.chain.total_ops();
                 match c.staging.device {
-                    Some(d) if self.leader_txs[d].is_some() => {
-                        self.fleet.route_to(d, key, ops).device
-                    }
-                    _ => self.fleet.route_chain(key, ops).device,
+                    Some(d) if self.leader_txs[d].is_some() => self.fleet.route_to(d, key, ops),
+                    _ => self.fleet.route_chain(key, ops),
                 }
             }
-        }
+        };
+        self.opts.recorder.with(|| TraceFact::Route {
+            unit: unit.id(),
+            device: decision.device,
+            kind: decision.kind,
+            est_s: decision.est_s,
+        });
+        decision.device
     }
 
     /// Record a unit's terminal outcome for its tenant.
@@ -1003,6 +1032,12 @@ impl RouterCore {
                     fault = Some(ev.kind);
                     self.next_event[d] += 1;
                     self.faults.push(FaultRecord { device: d, seq, kind: ev.kind });
+                    self.opts.recorder.with(|| TraceFact::Fault {
+                        device: d,
+                        seq,
+                        kind: ev.kind,
+                        unit: unit.id(),
+                    });
                 }
             }
         }
@@ -1020,6 +1055,7 @@ impl RouterCore {
             return;
         }
         let d = self.fleet.warm(key);
+        self.opts.recorder.with(|| TraceFact::Warm { device: d, key });
         if let Some(tx) = &self.leader_txs[d] {
             let _ = tx.send(DeviceMsg::Warm(key));
         }
@@ -1085,6 +1121,7 @@ impl RouterCore {
         if self.respawns_left[dev] > 0 {
             self.respawns_left[dev] -= 1;
             self.leader_respawns += 1;
+            self.opts.recorder.record(TraceFact::Respawn { device: dev });
             let o = self.opts.clone();
             let done = self.respawn_tx.clone();
             let gen = self.gens[dev];
@@ -1131,6 +1168,7 @@ impl RouterCore {
     fn requeue_elsewhere(&mut self, unit: Unit) {
         let t = unit.tenant();
         self.tstats[t].requeued += 1;
+        self.opts.recorder.with(|| TraceFact::Spill { unit: unit.id() });
         if self.live() == 0 {
             // Nowhere left to run: the unit's response channel drops
             // (the client sees a closed channel) and the tenant's
@@ -1306,6 +1344,10 @@ fn run_chain(
     let mut elided = 0;
     let mut reports = Vec::with_capacity(chain.len());
     let mut chain_recs: Vec<RequestRecord> = Vec::with_capacity(chain.len());
+    // Dispatch facts ride the same buffer-then-commit discipline as
+    // `chain_recs`: a retried chain leaves no trace spans — only the
+    // clean re-execution is replayed.
+    let mut chain_facts: Vec<TraceFact> = Vec::new();
     // A staged entry A (DAG cross-chain edge) pre-loads the slot the
     // first op consumes; intra-chain edges refill it op by op.
     let mut staged: Option<Matrix> = staging.a0;
@@ -1338,10 +1380,9 @@ fn run_chain(
         let logical_p = op.shape.precision;
         let split = logical_p == Precision::Fp32Split;
         let dispatches = if split { dtype_split::LIMB_GEMMS as f64 } else { 1.0 };
-        let device_s = sim.t_total * dispatches
-            + reconfig_s
-            + if i == 0 { stall_s } else { 0.0 }
-            + integrity_seconds(opts.integrity, gen, cfgs[i].precision, m, k, n);
+        let op_stall_s = if i == 0 { stall_s } else { 0.0 };
+        let integrity_s = integrity_seconds(opts.integrity, gen, cfgs[i].precision, m, k, n);
+        let device_s = sim.t_total * dispatches + reconfig_s + op_stall_s + integrity_s;
         chain_s += device_s;
         fused += ovs[i].a_in_l2 as usize;
         elided += ovs[i].elide_dispatch as usize;
@@ -1440,6 +1481,37 @@ fn run_chain(
                 }
             }
         }
+        if opts.recorder.is_on() {
+            let rl = roofline::tag(gen, cfgs[i].precision, &sim);
+            chain_facts.push(TraceFact::Dispatch(Box::new(DispatchFact {
+                unit: id,
+                op: i,
+                chain: Some(id),
+                device: dev,
+                gen,
+                name: op.shape.name.clone(),
+                tenant,
+                m,
+                k,
+                n,
+                key,
+                precision: logical_p,
+                dispatches,
+                t_comp: sim.t_comp,
+                t_mem: sim.t_mem,
+                t_prologue: sim.t_prologue,
+                t_stall: sim.t_stall,
+                t_dispatch: sim.t_dispatch,
+                t_total: sim.t_total,
+                fault_stall_s: op_stall_s,
+                integrity_s,
+                arithmetic_intensity: rl.arithmetic_intensity,
+                ridge: rl.ridge,
+                tops: sim.tops,
+                bound: rl.bound,
+                integrity: op_integrity,
+            })));
+        }
         chain_recs.push(RequestRecord {
             id,
             name: op.shape.name.clone(),
@@ -1472,6 +1544,9 @@ fn run_chain(
         }));
     }
     records.append(&mut chain_recs);
+    for f in chain_facts {
+        opts.recorder.record(f);
+    }
     let record = ChainRecord {
         id,
         name: chain.name.clone(),
@@ -1606,10 +1681,39 @@ fn run_request(
         },
     };
     let (m, k, n) = (req.shape.m, req.shape.k, req.shape.n);
-    let device_s = sim.t_total
-        + reconfig_s
-        + stall_s
-        + integrity_seconds(opts.integrity, gen, cfg.precision, m, k, n);
+    let integrity_s = integrity_seconds(opts.integrity, gen, cfg.precision, m, k, n);
+    let device_s = sim.t_total + reconfig_s + stall_s + integrity_s;
+    opts.recorder.with(|| {
+        let rl = roofline::tag(gen, cfg.precision, &sim);
+        TraceFact::Dispatch(Box::new(DispatchFact {
+            unit: id,
+            op: 0,
+            chain: None,
+            device: dev,
+            gen,
+            name: req.shape.name.clone(),
+            tenant,
+            m,
+            k,
+            n,
+            key,
+            precision: req.shape.precision,
+            dispatches: 1.0,
+            t_comp: sim.t_comp,
+            t_mem: sim.t_mem,
+            t_prologue: sim.t_prologue,
+            t_stall: sim.t_stall,
+            t_dispatch: sim.t_dispatch,
+            t_total: sim.t_total,
+            fault_stall_s: stall_s,
+            integrity_s,
+            arithmetic_intensity: rl.arithmetic_intensity,
+            ridge: rl.ridge,
+            tops: sim.tops,
+            bound: rl.bound,
+            integrity,
+        }))
+    });
     let record = RequestRecord {
         id,
         name: req.shape.name.clone(),
@@ -1687,6 +1791,14 @@ fn leader_loop(
                     // batch, and the rest of the batch go back to the
                     // router (in batch order, so requeue-at-front
                     // preserves it).
+                    // Only the tagged unit gets a requeue span: the
+                    // collateral remainder's membership is a batch-timing
+                    // accident and would break trace determinism.
+                    opts.recorder.with(|| TraceFact::Requeue {
+                        unit: unit.id(),
+                        device: dev,
+                        reason: RequeueReason::LeaderKill,
+                    });
                     let mut rq = std::mem::take(&mut dropped);
                     rq.push(unit);
                     rq.extend(it.by_ref().map(|(u, _)| u));
@@ -1697,6 +1809,11 @@ fn leader_loop(
                     // Lost response: the unit is not executed here; the
                     // router re-serves it, so the client still gets
                     // exactly one reply.
+                    opts.recorder.with(|| TraceFact::Requeue {
+                        unit: unit.id(),
+                        device: dev,
+                        reason: RequeueReason::DropResponse,
+                    });
                     dropped.push(unit);
                     continue;
                 }
@@ -1729,6 +1846,11 @@ fn leader_loop(
                         }
                         Ok(ChainOutcome::Retry(pc)) => {
                             retired -= unit_len;
+                            opts.recorder.with(|| TraceFact::Requeue {
+                                unit: pc.id,
+                                device: dev,
+                                reason: RequeueReason::IntegrityRetry,
+                            });
                             dropped.push(Unit::Chain(pc));
                         }
                         Err(_) => completions.push((tenant, true)),
@@ -1747,6 +1869,11 @@ fn leader_loop(
                         }
                         Ok(ReqOutcome::Retry(p)) => {
                             retired -= unit_len;
+                            opts.recorder.with(|| TraceFact::Requeue {
+                                unit: p.id,
+                                device: dev,
+                                reason: RequeueReason::IntegrityRetry,
+                            });
                             dropped.push(Unit::Req(p));
                         }
                         Err(_) => completions.push((tenant, true)),

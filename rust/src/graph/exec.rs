@@ -35,6 +35,7 @@ use crate::gemm::abft;
 use crate::gemm::exec::{ExecOptions, Executor};
 use crate::gemm::refimpl;
 use crate::mem::Matrix;
+use crate::trace::TraceFact;
 
 use super::ir::ModelGraph;
 use super::lower::Lowered;
@@ -247,7 +248,21 @@ pub fn serve_graph(
         let resp = rx.recv().map_err(|e| anyhow::anyhow!("coordinator dropped: {e}"))?;
         responses[ci] = Some(resp);
     }
-    Ok(responses.into_iter().map(|r| r.expect("every chain scheduled")).collect())
+    let responses: Vec<ChainResponse> =
+        responses.into_iter().map(|r| r.expect("every chain scheduled")).collect();
+    // Chains that consumed a staged cross-chain edge leave an instant
+    // on the trace's fault/annotation lane (chain-index order, so the
+    // fact log is deterministic regardless of completion order).
+    for resp in &responses {
+        if resp.staged_edges > 0 {
+            coord.recorder().with(|| TraceFact::Stage {
+                unit: resp.id,
+                device: resp.device,
+                edges: resp.staged_edges,
+            });
+        }
+    }
+    Ok(responses)
 }
 
 #[cfg(test)]

@@ -419,6 +419,35 @@ pub fn serve_llm(
     Ok((report?, metrics))
 }
 
+/// Write the observability artifacts of a finished serving run: the
+/// Chrome trace-event JSON (`--trace-out`, loadable in Perfetto) and
+/// the Prometheus-text metrics (`--metrics-out`). A `None` path skips
+/// that artifact; `llm` folds the LLM report's metric families on top
+/// of the fleet projection. Shared by `serve`, `serve-llm`, and
+/// `compile --serve`.
+pub fn write_trace_artifacts(
+    recorder: &crate::trace::Recorder,
+    devices: &[Generation],
+    metrics: &crate::coordinator::FleetMetrics,
+    llm: Option<&crate::coordinator::LlmReport>,
+    trace_out: Option<&str>,
+    metrics_out: Option<&str>,
+) -> crate::Result<()> {
+    if let Some(path) = trace_out {
+        std::fs::write(path, crate::trace::render(&recorder.facts(), devices))
+            .map_err(|e| anyhow::anyhow!("writing trace to {path}: {e}"))?;
+    }
+    if let Some(path) = metrics_out {
+        let mut reg = crate::trace::MetricsRegistry::from_fleet(metrics);
+        if let Some(rep) = llm {
+            reg.absorb_llm(rep);
+        }
+        std::fs::write(path, reg.render_prometheus())
+            .map_err(|e| anyhow::anyhow!("writing metrics to {path}: {e}"))?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -34,6 +34,9 @@
 //! * [`coordinator`] — sharded GEMM-as-a-service: admission queue,
 //!   design-affinity fleet router, per-device leader threads with
 //!   batching and backpressure, fleet metrics (`docs/serving.md`).
+//! * [`trace`] — virtual-time flight recorder: deterministic span
+//!   tracing, Chrome/Perfetto trace export, Prometheus-text metrics,
+//!   per-dispatch roofline attribution (`docs/observability.md`).
 //! * [`workload`] — DL GEMM traces (transformer / MLP / sweeps).
 //! * [`report`] — table and CSV emitters used by the bench harness.
 //! * [`util`] — offline stand-ins for clap/criterion/proptest/serde_json.
@@ -55,6 +58,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod tiling;
+pub mod trace;
 pub mod util;
 pub mod workload;
 pub mod xform;

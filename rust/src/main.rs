@@ -20,11 +20,15 @@
 //!                 [--chaos SEED [--chaos-events E] [--chaos-horizon H]
 //!                  [--chaos-corrupt C]]
 //!                 [--integrity off|abft|full] [--integrity-retries R]
+//!                 [--trace-out T.json] [--metrics-out M.prom] [--json]
 //!                                             sharded coordinator load demo
 //!                                             (multi-tenant admission,
-//!                                             seeded fault injection, and
-//!                                             checksum-verified results,
-//!                                             docs/serving.md)
+//!                                             seeded fault injection,
+//!                                             checksum-verified results, and
+//!                                             the flight recorder's Perfetto
+//!                                             trace / Prometheus metrics,
+//!                                             docs/serving.md,
+//!                                             docs/observability.md)
 //! xdna-gemm serve-llm [--sessions S] [--rate R] [--decode-min A] [--decode-max B]
 //!                 [--seed SEED] [--devices D] [--mix xdna:xdna2] [--gen G]
 //!                 [--no-coalesce] [--max-batch M] [--precision P]
@@ -32,6 +36,7 @@
 //!                 [--chaos SEED [--chaos-events E] [--chaos-horizon H]
 //!                  [--chaos-corrupt C]]
 //!                 [--integrity off|abft|full] [--integrity-retries R]
+//!                 [--trace-out T.json] [--metrics-out M.prom] [--json]
 //!                                             continuous-batching LLM serving:
 //!                                             prefill chains (wide designs) +
 //!                                             coalesced decode rounds (skinny
@@ -49,6 +54,7 @@
 //!                   [--precision P] [--seq S] [--layers L] [--d-model D]
 //!                   [--d-ffn F] [--vocab V] [--experts E] [--json]
 //!                   [--serve] [--functional] [--threads T]
+//!                   [--trace-out T.json] [--metrics-out M.prom]
 //!                                             graph compiler: DAG → assigned,
 //!                                             lowered, fleet-partitioned plan
 //!                                             (docs/graphs.md)
@@ -286,6 +292,15 @@ fn main() -> Result<()> {
                 None => Vec::new(),
             };
             let chaos = parse_chaos(&args, devices.len())?;
+            // `--trace-out t.json` arms the flight recorder (zero-cost
+            // when absent) and writes a Perfetto-loadable Chrome trace;
+            // `--metrics-out m.prom` writes Prometheus-text metrics.
+            let recorder = if args.get("trace-out").is_some() {
+                xdna_gemm::trace::Recorder::on()
+            } else {
+                xdna_gemm::trace::Recorder::Off
+            };
+            let device_gens = devices.clone();
             let opts = CoordinatorOptions {
                 gen,
                 devices,
@@ -303,6 +318,7 @@ fn main() -> Result<()> {
                     Backend::SimOnly
                 },
                 exec_threads: args.usize_opt("threads", 1)?,
+                recorder: recorder.clone(),
                 ..Default::default()
             };
             // Workload: a GGML-style trace file (`--trace shapes.txt`,
@@ -317,7 +333,19 @@ fn main() -> Result<()> {
                 None => TransformerConfig::default().trace(),
             };
             let m = harness::serve_trace(opts, &trace, n)?;
-            println!("{}", m.summary());
+            harness::write_trace_artifacts(
+                &recorder,
+                &device_gens,
+                &m,
+                None,
+                args.get("trace-out"),
+                args.get("metrics-out"),
+            )?;
+            if args.flag("json") {
+                println!("{}", m.to_json().to_string_pretty());
+            } else {
+                println!("{}", m.summary());
+            }
         }
         "serve-llm" => {
             use xdna_gemm::coordinator::LlmOptions;
@@ -369,20 +397,45 @@ fn main() -> Result<()> {
             // to silently ignore the plan (ISSUE 8 satellite fix); token
             // conservation is still checked below.
             let chaos = parse_chaos(&args, devices.len())?;
+            let recorder = if args.get("trace-out").is_some() {
+                xdna_gemm::trace::Recorder::on()
+            } else {
+                xdna_gemm::trace::Recorder::Off
+            };
+            let device_gens = devices.clone();
             let opts = CoordinatorOptions {
                 gen,
                 devices,
                 chaos,
                 integrity: parse_integrity(args.get("integrity").unwrap_or("off"))?,
                 max_integrity_retries: args.usize_opt("integrity-retries", 2)?,
+                recorder: recorder.clone(),
                 ..Default::default()
             };
             let (report, metrics) = harness::serve_llm(opts, &llm)?;
-            println!("{}", report.summary());
+            harness::write_trace_artifacts(
+                &recorder,
+                &device_gens,
+                &metrics,
+                Some(&report),
+                args.get("trace-out"),
+                args.get("metrics-out"),
+            )?;
+            if args.flag("json") {
+                let doc = xdna_gemm::util::json::obj(vec![
+                    ("llm", report.to_json()),
+                    ("fleet", metrics.to_json()),
+                ]);
+                println!("{}", doc.to_string_pretty());
+            } else {
+                println!("{}", report.summary());
+            }
             if !report.conserved() {
                 bail!("token conservation violated: {report:?}");
             }
-            println!("{}", metrics.summary());
+            if !args.flag("json") {
+                println!("{}", metrics.summary());
+            }
         }
         "plan" => {
             let gen = parse_gen(args.get("gen").unwrap_or("xdna2"))?;
@@ -597,6 +650,11 @@ fn main() -> Result<()> {
                 single.makespan_s * 1e3
             );
             if args.flag("serve") {
+                let recorder = if args.get("trace-out").is_some() {
+                    xdna_gemm::trace::Recorder::on()
+                } else {
+                    xdna_gemm::trace::Recorder::Off
+                };
                 let opts = CoordinatorOptions {
                     devices: fleet.clone(),
                     backend: if args.flag("functional") {
@@ -605,6 +663,7 @@ fn main() -> Result<()> {
                         Backend::SimOnly
                     },
                     exec_threads: args.usize_opt("threads", 1)?,
+                    recorder: recorder.clone(),
                     ..Default::default()
                 };
                 let coord = xdna_gemm::coordinator::Coordinator::start(opts);
@@ -618,6 +677,14 @@ fn main() -> Result<()> {
                 let staged: usize = responses.iter().map(|r| r.staged_edges).sum();
                 let fused: usize = responses.iter().map(|r| r.fused_edges).sum();
                 let m = coord.shutdown()?;
+                harness::write_trace_artifacts(
+                    &recorder,
+                    &fleet,
+                    &m,
+                    None,
+                    args.get("trace-out"),
+                    args.get("metrics-out"),
+                )?;
                 println!(
                     "\nserved through the coordinator fleet ({} chains, {} staged tensors, \
                      {} fused edges):\n{}",

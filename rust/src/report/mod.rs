@@ -198,4 +198,63 @@ mod tests {
         assert_eq!(s.max_y(), 7.0);
         assert!(s.to_csv().lines().count() == 51);
     }
+
+    // Byte-exact goldens (ISSUE 10): the emitters feed committed CSV
+    // artifacts and the docs, so their output format is a contract —
+    // alignment, separator widths, and float formatting are pinned
+    // character-for-character, not just substring-probed.
+
+    #[test]
+    fn table_markdown_golden() {
+        let mut t = Table::new("Golden", &["shape", "TOPS"]);
+        t.row(vec!["4096x4096".into(), "22.63".into()]);
+        t.row(vec!["1x2048".into(), "0.91".into()]);
+        assert_eq!(
+            t.to_markdown(),
+            "### Golden\n\
+             | shape     | TOPS  |\n\
+             |-----------|-------|\n\
+             | 4096x4096 | 22.63 |\n\
+             | 1x2048    | 0.91  |\n"
+        );
+    }
+
+    #[test]
+    fn table_csv_golden() {
+        let mut t = Table::new("Golden", &["shape", "TOPS"]);
+        t.row(vec!["4096x4096".into(), "22.63".into()]);
+        t.row(vec!["1x2048".into(), "0.91".into()]);
+        assert_eq!(t.to_csv(), "shape,TOPS\n4096x4096,22.63\n1x2048,0.91\n");
+    }
+
+    #[test]
+    fn series_ascii_golden() {
+        let mut s = Series::new("diag", "x", "y");
+        s.push(0.0, 0.0);
+        s.push(1.0, 1.0);
+        s.push(2.0, 2.0);
+        assert_eq!(
+            s.to_ascii(3, 3),
+            "diag — y vs x\n\
+             y: [0.00, 2.00]  x: [0, 2]\n\
+             |  *\n\
+             | * \n\
+             |*  \n"
+        );
+        assert_eq!(Series::new("empty", "x", "y").to_ascii(3, 3), "(empty series)\n");
+    }
+
+    #[test]
+    fn series_csv_golden() {
+        let mut s = Series::new("diag", "x", "y");
+        s.push(0.0, 0.0);
+        s.push(1.5, 2.25);
+        assert_eq!(s.to_csv(), "x,y\n0,0\n1.5,2.25\n");
+    }
+
+    #[test]
+    fn ratio_cell_golden() {
+        assert_eq!(ratio_cell(2.0, 1.6), "2.00 (+25.0%)");
+        assert_eq!(ratio_cell(1.2, 1.6), "1.20 (-25.0%)");
+    }
 }

@@ -42,6 +42,16 @@ pub enum Bound {
     Memory,
 }
 
+impl Bound {
+    /// Stable label used in trace-span annotations and metrics.
+    pub fn name(self) -> &'static str {
+        match self {
+            Bound::Compute => "compute-bound",
+            Bound::Memory => "memory-bound",
+        }
+    }
+}
+
 /// Chain-aware dispatch context (`crate::plan`): which DRAM round-trips
 /// and host costs this dispatch skips because a chain planner proved the
 /// operand already resident or the submission shared. The default (all
@@ -105,6 +115,17 @@ pub struct GemmReport {
     pub arithmetic_intensity: f64,
     /// Per-core trace-unit view.
     pub trace: CoreTrace,
+}
+
+impl GemmReport {
+    /// The steady-state phase of the dispatch: total minus prologue,
+    /// BD stalls and host dispatch — `max(t_comp, t_mem)` by
+    /// construction, but computed by subtraction so the flight
+    /// recorder's phase partition (`dma-in` + steady + `bd-stall` +
+    /// `dispatch` == `t_total`) holds exactly in floating point.
+    pub fn steady_seconds(&self) -> f64 {
+        self.t_total - self.t_prologue - self.t_stall - self.t_dispatch
+    }
 }
 
 /// Modeled cost of the coordinator's ABFT checksum pass at one shape

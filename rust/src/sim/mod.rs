@@ -20,5 +20,6 @@ pub mod engine;
 pub mod trace;
 
 pub use engine::{
-    abft_check_seconds, simulate_gemm, simulate_gemm_with, BdMode, DispatchOverrides, GemmReport,
+    abft_check_seconds, simulate_gemm, simulate_gemm_with, BdMode, Bound, DispatchOverrides,
+    GemmReport,
 };

@@ -1,0 +1,571 @@
+//! Chrome trace-event export (Perfetto / `chrome://tracing` loadable).
+//!
+//! The exporter *replays* the recorded fact multiset on a canonical
+//! virtual timeline instead of trusting runtime order: per device, the
+//! dispatch facts are sorted by `(unit, op)` and laid out back-to-back
+//! on a per-device virtual clock, with design residency replayed along
+//! the way (a reconfiguration span whenever the design key changes,
+//! residency invalidated before a unit tagged by a `CacheStorm` or
+//! `LeaderKill` fault). Leaders race each other for batch membership at
+//! runtime, so the *append order* of facts is nondeterministic — but
+//! the multiset is seed-determined, and every bucket is sorted by a
+//! deterministic key here, which is what makes the exported file
+//! byte-identical across runs (pinned by `tests/trace_golden.rs` and
+//! the CI determinism job).
+//!
+//! Layout per device (`pid = device + 1`):
+//! * `tid 0` ("engine") — the occupancy timeline: reconfiguration
+//!   spans and one complete (`ph: "X"`) span per dispatched op,
+//!   annotated with the roofline attribution, containing child spans
+//!   for the sim's phase breakdown (`dma-in`, `compute`/`dma`,
+//!   `bd-stall`, `dispatch`, `fault-stall`, `integrity`).
+//! * `tid 1` ("faults") — instant (`ph: "i"`) events for injected
+//!   faults, leader respawns, route/spill/stage marks, and `X` spans
+//!   covering the re-execution window of every requeued unit.
+//!
+//! Timestamps are microseconds of *virtual device time* (the same
+//! clock `FleetMetrics` accounts), not wall-clock.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::arch::Generation;
+use crate::coordinator::{DesignKey, FaultKind};
+use crate::util::json::{self, Json};
+
+use super::model::{key_label, DispatchFact, TraceFact};
+
+/// One unit's replayed execution window: (device, start_s, end_s).
+type Window = (usize, f64, f64);
+
+fn event(
+    name: &str,
+    ph: &str,
+    pid: usize,
+    tid: usize,
+    ts_us: f64,
+    dur_us: Option<f64>,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    let mut fields = vec![
+        ("name", json::s(name)),
+        ("ph", json::s(ph)),
+        ("pid", json::num(pid as f64)),
+        ("tid", json::num(tid as f64)),
+        ("ts", json::num(ts_us)),
+    ];
+    if let Some(d) = dur_us {
+        fields.push(("dur", json::num(d)));
+    }
+    if ph == "i" {
+        // Instant scope: thread.
+        fields.push(("s", json::s("t")));
+    }
+    if !args.is_empty() {
+        fields.push(("args", json::obj(args)));
+    }
+    json::obj(fields)
+}
+
+fn meta(name: &str, pid: usize, tid: Option<usize>, value: &str) -> Json {
+    let mut fields = vec![
+        ("name", json::s(name)),
+        ("ph", json::s("M")),
+        ("pid", json::num(pid as f64)),
+    ];
+    if let Some(t) = tid {
+        fields.push(("tid", json::num(t as f64)));
+    }
+    fields.push(("args", json::obj(vec![("name", json::s(value))])));
+    json::obj(fields)
+}
+
+/// The parent span duration of one dispatch fact: exactly what the
+/// leader charged to the virtual device clock for the op, minus the
+/// reconfiguration (replayed as its own span).
+fn span_seconds(f: &DispatchFact) -> f64 {
+    f.t_total * f.dispatches + f.fault_stall_s + f.integrity_s
+}
+
+/// Append the phase-breakdown child spans of a dispatch. The children
+/// partition the parent: their durations sum to [`span_seconds`] (the
+/// steady phase is computed by subtraction, so the partition is exact
+/// up to float associativity).
+fn push_phases(events: &mut Vec<Json>, pid: usize, start_s: f64, f: &DispatchFact) {
+    let steady = f.t_total - f.t_prologue - f.t_stall - f.t_dispatch;
+    let steady_name = match f.bound {
+        crate::sim::Bound::Compute => "compute",
+        crate::sim::Bound::Memory => "dma",
+    };
+    let phases: [(&str, f64); 6] = [
+        ("dma-in", f.t_prologue * f.dispatches),
+        (steady_name, steady * f.dispatches),
+        ("bd-stall", f.t_stall * f.dispatches),
+        ("dispatch", f.t_dispatch * f.dispatches),
+        ("fault-stall", f.fault_stall_s),
+        ("integrity", f.integrity_s),
+    ];
+    let mut t = start_s;
+    for (name, dur) in phases {
+        if dur <= 0.0 {
+            continue;
+        }
+        events.push(event(
+            name,
+            "X",
+            pid,
+            0,
+            t * 1e6,
+            Some(dur * 1e6),
+            vec![("phase", json::s(name))],
+        ));
+        t += dur;
+    }
+}
+
+fn dispatch_span(pid: usize, start_s: f64, f: &DispatchFact) -> Json {
+    let dur = span_seconds(f);
+    let mut args = vec![
+        ("unit", json::num(f.unit as f64)),
+        ("op", json::num(f.op as f64)),
+        ("tenant", json::num(f.tenant as f64)),
+        ("m", json::num(f.m as f64)),
+        ("k", json::num(f.k as f64)),
+        ("n", json::num(f.n as f64)),
+        ("design", Json::Str(key_label(f.key))),
+        ("precision", json::s(f.precision.name())),
+        ("dispatches", json::num(f.dispatches)),
+        ("tops", json::num(f.tops)),
+        ("arithmetic_intensity", json::num(f.arithmetic_intensity)),
+        ("ridge_point", json::num(f.ridge)),
+        ("bound", json::s(f.bound.name())),
+        ("integrity", json::s(f.integrity.name())),
+        ("device_seconds", json::num(dur)),
+    ];
+    if let Some(c) = f.chain {
+        args.push(("chain", json::num(c as f64)));
+    }
+    event(&f.name, "X", pid, 0, start_s * 1e6, Some(dur * 1e6), args)
+}
+
+/// Build the Chrome trace-event document for a recorded fact log.
+/// `devices` is the fleet's generation list (`CoordinatorOptions::
+/// device_gens()`); every fact's `device` indexes into it.
+pub fn chrome_trace(facts: &[TraceFact], devices: &[Generation]) -> Json {
+    // ---- bucket the fact multiset by kind, then sort each bucket by
+    // its deterministic key (append order is runtime-dependent).
+    let mut dispatches: BTreeMap<usize, Vec<&DispatchFact>> = BTreeMap::new();
+    let mut routes: Vec<(u64, usize, &'static str, f64)> = Vec::new();
+    let mut requeues: Vec<(u64, usize, &'static str)> = Vec::new();
+    let mut faults: BTreeMap<usize, Vec<(u64, FaultKind, u64)>> = BTreeMap::new();
+    let mut respawns: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut spills: Vec<u64> = Vec::new();
+    let mut warms: BTreeMap<usize, Vec<DesignKey>> = BTreeMap::new();
+    let mut stages: Vec<(u64, usize, usize)> = Vec::new();
+    for fact in facts {
+        match fact {
+            TraceFact::Dispatch(f) => dispatches.entry(f.device).or_default().push(f),
+            TraceFact::Route { unit, device, kind, est_s } => {
+                routes.push((*unit, *device, kind.name(), *est_s))
+            }
+            TraceFact::Requeue { unit, device, reason } => {
+                requeues.push((*unit, *device, reason.name()))
+            }
+            TraceFact::Fault { device, seq, kind, unit } => {
+                faults.entry(*device).or_default().push((*seq, *kind, *unit))
+            }
+            TraceFact::Respawn { device } => *respawns.entry(*device).or_default() += 1,
+            TraceFact::Spill { unit } => spills.push(*unit),
+            TraceFact::Warm { device, key } => warms.entry(*device).or_default().push(*key),
+            TraceFact::Stage { unit, device, edges } => stages.push((*unit, *device, *edges)),
+        }
+    }
+    for bucket in dispatches.values_mut() {
+        bucket.sort_by(|a, b| (a.unit, a.op).cmp(&(b.unit, b.op)));
+    }
+    for bucket in faults.values_mut() {
+        bucket.sort_by(|a, b| a.0.cmp(&b.0));
+    }
+    routes.sort_by(|a, b| (a.0, a.1, a.2).cmp(&(b.0, b.1, b.2)));
+    requeues.sort_by(|a, b| (a.0, a.2, a.1).cmp(&(b.0, b.2, b.1)));
+    spills.sort_unstable();
+    spills.dedup();
+    stages.sort_unstable();
+
+    let mut events: Vec<Json> = Vec::new();
+    for (d, gen) in devices.iter().enumerate() {
+        let pid = d + 1;
+        events.push(meta("process_name", pid, None, &format!("device{d} ({})", gen.name())));
+        events.push(meta("thread_name", pid, Some(0), "engine"));
+        events.push(meta("thread_name", pid, Some(1), "faults"));
+    }
+
+    // ---- engine lanes: canonical replay of each device's dispatches.
+    let mut windows: HashMap<u64, Window> = HashMap::new();
+    let mut dev_end = vec![0.0_f64; devices.len()];
+    for (d, gen) in devices.iter().enumerate() {
+        let pid = d + 1;
+        let reconfig_s = gen.spec().reconfig_s;
+        let mut t = 0.0_f64;
+        let mut resident: Option<DesignKey> = None;
+        for key in warms.get(&d).map(Vec::as_slice).unwrap_or(&[]) {
+            events.push(event(
+                "warm",
+                "i",
+                pid,
+                0,
+                t * 1e6,
+                None,
+                vec![("design", Json::Str(key_label(*key)))],
+            ));
+            resident = Some(*key);
+        }
+        // Units tagged by a storm or kill run on cold design state.
+        let invalidated: HashSet<u64> = faults
+            .get(&d)
+            .map(|fs| {
+                fs.iter()
+                    .filter(|(_, kind, _)| {
+                        matches!(kind, FaultKind::CacheStorm | FaultKind::LeaderKill)
+                    })
+                    .map(|(_, _, unit)| *unit)
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut last_unit = None;
+        for f in dispatches.get(&d).map(Vec::as_slice).unwrap_or(&[]) {
+            if last_unit != Some(f.unit) && invalidated.contains(&f.unit) {
+                resident = None;
+            }
+            last_unit = Some(f.unit);
+            if resident != Some(f.key) {
+                events.push(event(
+                    "reconfig",
+                    "X",
+                    pid,
+                    0,
+                    t * 1e6,
+                    Some(reconfig_s * 1e6),
+                    vec![("design", Json::Str(key_label(f.key)))],
+                ));
+                t += reconfig_s;
+                resident = Some(f.key);
+            }
+            let dur = span_seconds(f);
+            events.push(dispatch_span(pid, t, f));
+            push_phases(&mut events, pid, t, f);
+            windows
+                .entry(f.unit)
+                .and_modify(|w| {
+                    if w.0 != d {
+                        // Spilled unit: its window restarts on the
+                        // device that finally served it.
+                        w.1 = t;
+                    }
+                    w.0 = d;
+                    w.2 = t + dur;
+                })
+                .or_insert((d, t, t + dur));
+            t += dur;
+        }
+        dev_end[d] = t;
+    }
+
+    // ---- fault lanes: instants + requeue windows, sorted per device
+    // by (ts, name, unit) so the emission order is canonical.
+    let mut lanes: Vec<Vec<(f64, String, u64, Json)>> = vec![Vec::new(); devices.len()];
+    let at = |unit: u64, d: usize| -> f64 {
+        match windows.get(&unit) {
+            Some(&(wd, start, _)) if wd == d => start,
+            _ => dev_end.get(d).copied().unwrap_or(0.0),
+        }
+    };
+    for (&d, fs) in &faults {
+        let pid = d + 1;
+        for (seq, kind, unit) in fs {
+            let ts = at(*unit, d);
+            let mut args = vec![
+                ("kind", json::s(kind.name())),
+                ("seq", json::num(*seq as f64)),
+                ("unit", json::num(*unit as f64)),
+            ];
+            if kind.stall_seconds() > 0.0 {
+                args.push(("stall_s", json::num(kind.stall_seconds())));
+            }
+            let name = format!("fault:{}", kind.name());
+            let ev = event(&name, "i", pid, 1, ts * 1e6, None, args);
+            lanes[d].push((ts, name, *unit, ev));
+        }
+    }
+    // The k-th respawn on a device answers its k-th injected kill (a
+    // respawn without a recorded kill — a genuine leader panic — lands
+    // at the end of the device timeline).
+    for (&d, &n) in &respawns {
+        let kills: Vec<u64> = faults
+            .get(&d)
+            .map(|fs| {
+                fs.iter()
+                    .filter(|(_, kind, _)| matches!(kind, FaultKind::LeaderKill))
+                    .map(|(_, _, unit)| *unit)
+                    .collect()
+            })
+            .unwrap_or_default();
+        for i in 0..n {
+            let ts = kills.get(i).map(|&u| at(u, d)).unwrap_or(dev_end[d]);
+            lanes[d].push((
+                ts,
+                "leader-respawn".into(),
+                i as u64,
+                event("leader-respawn", "i", d + 1, 1, ts * 1e6, None, vec![]),
+            ));
+        }
+    }
+    for (unit, device, kind, est_s) in &routes {
+        if *device >= devices.len() {
+            continue;
+        }
+        let ts = at(*unit, *device);
+        let name = format!("route:{kind}");
+        let args = vec![("unit", json::num(*unit as f64)), ("est_s", json::num(*est_s))];
+        lanes[*device].push((
+            ts,
+            name.clone(),
+            *unit,
+            event(&name, "i", device + 1, 1, ts * 1e6, None, args),
+        ));
+    }
+    for (unit, _requeued_from, reason) in &requeues {
+        // The span covers the unit's eventual re-execution window, on
+        // the device that finally served it (usually the same one it
+        // was requeued from; a spilled unit lands elsewhere).
+        let Some(&(wd, start, end)) = windows.get(unit) else { continue };
+        let name = format!("requeue:{reason}");
+        let args = vec![("unit", json::num(*unit as f64)), ("reason", json::s(reason))];
+        lanes[wd].push((
+            start,
+            name.clone(),
+            *unit,
+            event(&name, "X", wd + 1, 1, start * 1e6, Some((end - start) * 1e6), args),
+        ));
+    }
+    for unit in &spills {
+        let Some(&(wd, start, _)) = windows.get(unit) else { continue };
+        let args = vec![("unit", json::num(*unit as f64))];
+        let ev = event("spill", "i", wd + 1, 1, start * 1e6, None, args);
+        lanes[wd].push((start, "spill".into(), *unit, ev));
+    }
+    for (unit, device, edges) in &stages {
+        if *device >= devices.len() {
+            continue;
+        }
+        let ts = at(*unit, *device);
+        lanes[*device].push((
+            ts,
+            "staged-edges".into(),
+            *unit,
+            event(
+                "staged-edges",
+                "i",
+                device + 1,
+                1,
+                ts * 1e6,
+                None,
+                vec![("unit", json::num(*unit as f64)), ("edges", json::num(*edges as f64))],
+            ),
+        ));
+    }
+    for lane in &mut lanes {
+        lane.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        for (_, _, _, e) in lane.drain(..) {
+            events.push(e);
+        }
+    }
+
+    json::obj(vec![
+        ("displayTimeUnit", json::s("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Serialize the trace document: stable key order, stable number
+/// formatting — the byte-identical artifact `--trace-out` writes.
+pub fn render(facts: &[TraceFact], devices: &[Generation]) -> String {
+    let mut s = chrome_trace(facts, devices).to_string_pretty();
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Integrity;
+    use crate::dtype::Precision;
+    use crate::sim::Bound;
+    use crate::trace::model::RequeueReason;
+    use crate::workload::GemmShape;
+
+    fn fact(unit: u64, op: usize, device: usize) -> DispatchFact {
+        let shape = GemmShape::new("op", 512, 512, 512, Precision::I8I8);
+        DispatchFact {
+            unit,
+            op,
+            chain: None,
+            device,
+            gen: Generation::Xdna2,
+            name: format!("op#{unit}"),
+            tenant: 0,
+            m: 512,
+            k: 512,
+            n: 512,
+            key: DesignKey::for_shape(&shape),
+            precision: Precision::I8I8,
+            dispatches: 1.0,
+            t_comp: 4e-3,
+            t_mem: 3e-3,
+            t_prologue: 5e-4,
+            t_stall: 0.0,
+            t_dispatch: 1e-4,
+            t_total: 4.6e-3,
+            fault_stall_s: 0.0,
+            integrity_s: 0.0,
+            arithmetic_intensity: 170.0,
+            ridge: 836.6,
+            tops: 20.0,
+            bound: Bound::Compute,
+            integrity: Integrity::NotChecked,
+        }
+    }
+
+    fn spans(doc: &Json) -> Vec<&Json> {
+        doc.get("traceEvents")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect()
+    }
+
+    #[test]
+    fn replay_is_independent_of_fact_order() {
+        let a = TraceFact::Dispatch(Box::new(fact(0, 0, 0)));
+        let b = TraceFact::Dispatch(Box::new(fact(1, 0, 0)));
+        let devs = [Generation::Xdna2];
+        let fwd = render(&[a.clone(), b.clone()], &devs);
+        let rev = render(&[b, a], &devs);
+        assert_eq!(fwd, rev, "canonical sort must erase append order");
+    }
+
+    #[test]
+    fn dispatches_lay_out_back_to_back_with_one_reconfig() {
+        let doc = chrome_trace(
+            &[
+                TraceFact::Dispatch(Box::new(fact(0, 0, 0))),
+                TraceFact::Dispatch(Box::new(fact(1, 0, 0))),
+            ],
+            &[Generation::Xdna2],
+        );
+        let xs = spans(&doc);
+        // reconfig + 2 parents + phase children (dma-in, compute,
+        // dispatch per parent).
+        let reconfigs: Vec<_> = xs
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("reconfig"))
+            .collect();
+        assert_eq!(reconfigs.len(), 1, "same key: exactly one reconfiguration");
+        let parents: Vec<_> = xs
+            .iter()
+            .filter(|e| e.get("args").and_then(|a| a.get("bound")).is_some())
+            .collect();
+        assert_eq!(parents.len(), 2);
+        // Unit 0 starts after the reconfig; unit 1 starts where 0 ends.
+        let reconfig_us = Generation::Xdna2.spec().reconfig_s * 1e6;
+        let t0 = parents[0].get("ts").and_then(Json::as_f64).unwrap();
+        let d0 = parents[0].get("dur").and_then(Json::as_f64).unwrap();
+        let t1 = parents[1].get("ts").and_then(Json::as_f64).unwrap();
+        assert!((t0 - reconfig_us).abs() < 1e-6);
+        assert!((t1 - (t0 + d0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn phase_children_partition_the_parent_span() {
+        let mut f = fact(7, 0, 0);
+        f.fault_stall_s = 2e-3;
+        f.integrity_s = 1e-4;
+        let doc = chrome_trace(&[TraceFact::Dispatch(Box::new(f.clone()))], &[Generation::Xdna2]);
+        let xs = spans(&doc);
+        let parent = xs
+            .iter()
+            .find(|e| e.get("args").and_then(|a| a.get("bound")).is_some())
+            .expect("parent span");
+        let dur = parent.get("dur").and_then(Json::as_f64).unwrap();
+        let child_sum: f64 = xs
+            .iter()
+            .filter(|e| e.get("args").and_then(|a| a.get("phase")).is_some())
+            .map(|e| e.get("dur").and_then(Json::as_f64).unwrap())
+            .sum();
+        assert!((child_sum - dur).abs() < 1e-6 * dur.max(1.0), "{child_sum} vs {dur}");
+        assert!((dur / 1e6 - span_seconds(&f)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn storm_invalidates_residency_and_fault_marks_the_unit_window() {
+        let doc = chrome_trace(
+            &[
+                TraceFact::Dispatch(Box::new(fact(0, 0, 0))),
+                TraceFact::Dispatch(Box::new(fact(1, 0, 0))),
+                TraceFact::Fault { device: 0, seq: 2, kind: FaultKind::CacheStorm, unit: 1 },
+            ],
+            &[Generation::Xdna2],
+        );
+        let xs = spans(&doc);
+        let reconfigs: Vec<_> = xs
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("reconfig"))
+            .collect();
+        assert_eq!(reconfigs.len(), 2, "storm before unit 1 forces a second reconfig");
+        let all = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let inst = all
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("fault:cache_storm"))
+            .expect("fault instant");
+        assert_eq!(inst.get("ph").and_then(Json::as_str), Some("i"));
+        // The instant sits at unit 1's (second) parent span start.
+        let parents: Vec<_> = xs
+            .iter()
+            .filter(|e| e.get("args").and_then(|a| a.get("bound")).is_some())
+            .collect();
+        let t1 = parents[1].get("ts").and_then(Json::as_f64).unwrap();
+        assert_eq!(inst.get("ts").and_then(Json::as_f64), Some(t1));
+    }
+
+    #[test]
+    fn requeue_spans_cover_the_reexecution_window() {
+        let doc = chrome_trace(
+            &[
+                TraceFact::Dispatch(Box::new(fact(3, 0, 0))),
+                TraceFact::Requeue { unit: 3, device: 0, reason: RequeueReason::DropResponse },
+            ],
+            &[Generation::Xdna2],
+        );
+        let all = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let rq = all
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("requeue:drop_response"))
+            .expect("requeue span");
+        assert_eq!(rq.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(rq.get("tid").and_then(Json::as_f64), Some(1.0));
+        assert!(rq.get("dur").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn metadata_names_every_device_and_lane() {
+        let doc = chrome_trace(&[], &[Generation::Xdna, Generation::Xdna2]);
+        let all = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let metas: Vec<_> =
+            all.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("M")).collect();
+        assert_eq!(metas.len(), 6, "process_name + 2 thread_names per device");
+        assert!(all.iter().any(|e| {
+            e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
+                == Some("device1 (xdna2)")
+        }));
+    }
+}

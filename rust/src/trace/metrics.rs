@@ -1,0 +1,261 @@
+//! Counters + fixed-bucket histograms with Prometheus-text rendering.
+//!
+//! The registry is a *projection*, not a hot-path participant: it is
+//! built once at export time from the rollups the coordinator already
+//! keeps (`FleetMetrics`, `LlmReport`), so `--metrics-out` costs the
+//! serving loop nothing and works even with the recorder off. Counter
+//! and histogram names follow Prometheus conventions (`*_total`,
+//! `*_seconds`); labels use the `{name="value"}` form. Everything is
+//! stored in `BTreeMap`s, so a render is deterministically ordered.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::coordinator::{FleetMetrics, LlmReport};
+
+/// Fixed histogram bucket upper bounds, in seconds. Chosen to straddle
+/// the simulated device times of the paper's Table 2–3 shapes (~0.1–10
+/// ms) with headroom for chains and stalls; mirrored verbatim by
+/// `python/tests/test_trace_model.py`.
+pub const LATENCY_BUCKETS_S: [f64; 16] = [
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 1e-1, 2.5e-1, 5e-1, 1.0, 2.5,
+    5.0, 10.0,
+];
+
+/// One fixed-bucket histogram: `counts[i]` observations landed in
+/// `(bounds[i-1], bounds[i]]`; the final slot is the `+Inf` overflow.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// `LATENCY_BUCKETS_S.len() + 1` slots (last = +Inf).
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { counts: vec![0; LATENCY_BUCKETS_S.len() + 1], sum: 0.0, count: 0 }
+    }
+}
+
+impl Histogram {
+    /// Index of the bucket `v` lands in: the first bound `>= v`, or the
+    /// overflow slot.
+    pub fn bucket_index(v: f64) -> usize {
+        LATENCY_BUCKETS_S.iter().position(|&b| v <= b).unwrap_or(LATENCY_BUCKETS_S.len())
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Cumulative count at bucket `i` (Prometheus `le` semantics).
+    pub fn cumulative(&self, i: usize) -> u64 {
+        self.counts[..=i].iter().sum()
+    }
+}
+
+/// A counter + histogram registry rendered as Prometheus text.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn inc(&mut self, name: &str, by: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += by;
+    }
+
+    /// Set a counter outright (used for gauges-reported-as-counters
+    /// like busy seconds, where the rollup already holds the total).
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().observe(v);
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Project a finished fleet run into the registry. Pure function of
+    /// the rollup: calling it twice on the same metrics doubles nothing
+    /// because it starts from the rollup's absolute totals each time
+    /// (`set`) for scalar families and rebuilds histograms from the
+    /// per-record streams.
+    pub fn from_fleet(m: &FleetMetrics) -> MetricsRegistry {
+        let mut r = MetricsRegistry::default();
+        r.set("gemm_requests_total", m.count() as f64);
+        r.set("gemm_ops_total", m.total_ops());
+        r.set("gemm_reconfigurations_total", m.reconfigurations() as f64);
+        r.set("gemm_chains_total", m.chains.len() as f64);
+        r.set("router_affinity_hits_total", m.router_hits as f64);
+        r.set("router_misses_total", m.router_misses as f64);
+        r.set("router_spills_total", m.router_spills as f64);
+        r.set("leader_respawns_total", m.leader_respawns as f64);
+        r.set("requeues_total", m.total_requeued() as f64);
+        let (checked, passed, recovered, failed) = m.integrity_totals();
+        r.set("integrity_checked_total", checked as f64);
+        r.set("integrity_passed_total", passed as f64);
+        r.set("integrity_recovered_total", recovered as f64);
+        r.set("integrity_failed_total", failed as f64);
+        for f in m.fault_log() {
+            r.inc(&format!("faults_total{{kind=\"{}\"}}", f.kind.name()), 1.0);
+        }
+        for (d, dm) in m.devices.iter().enumerate() {
+            let label = format!("device=\"{d}\",gen=\"{}\"", dm.gen.name());
+            r.set(&format!("device_requests_total{{{label}}}"), dm.metrics.count() as f64);
+            r.set(&format!("device_busy_seconds{{{label}}}"), dm.metrics.total_device_s());
+            r.set(&format!("design_cache_hits_total{{{label}}}"), dm.cache.hits as f64);
+            r.set(&format!("design_cache_misses_total{{{label}}}"), dm.cache.misses as f64);
+            r.set(&format!("design_cache_evictions_total{{{label}}}"), dm.cache.evictions as f64);
+            for rec in &dm.metrics.records {
+                r.observe("gemm_device_seconds", rec.device_s);
+                r.observe("gemm_host_latency_seconds", rec.host_latency_s);
+            }
+        }
+        for t in &m.tenants {
+            let label = format!("tenant=\"{}\"", t.name);
+            r.set(&format!("tenant_submitted_total{{{label}}}"), t.submitted as f64);
+            r.set(&format!("tenant_completed_total{{{label}}}"), t.completed as f64);
+            r.set(&format!("tenant_failed_total{{{label}}}"), t.failed as f64);
+            r.set(&format!("tenant_requeued_total{{{label}}}"), t.requeued as f64);
+        }
+        r
+    }
+
+    /// Fold an LLM serving report in on top of the fleet projection.
+    pub fn absorb_llm(&mut self, rep: &LlmReport) {
+        self.set("llm_sessions_total", rep.sessions as f64);
+        self.set("llm_sessions_completed_total", rep.sessions_completed as f64);
+        self.set("llm_sessions_failed_total", rep.sessions_failed as f64);
+        self.set("llm_tokens_submitted_total", rep.tokens_submitted as f64);
+        self.set("llm_tokens_completed_total", rep.tokens_completed as f64);
+        self.set("llm_tokens_failed_total", rep.tokens_failed as f64);
+        self.set("llm_tokens_per_second", rep.tokens_per_s);
+        self.set("llm_decode_busy_seconds", rep.decode_busy_s);
+        self.set("llm_decode_rounds_total", rep.decode_rounds as f64);
+    }
+
+    /// Prometheus text exposition. Families are sorted by name; within
+    /// a family, label sets are sorted (the `BTreeMap` key order).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for (key, v) in &self.counters {
+            let family = key.split('{').next().unwrap_or(key);
+            if family != last_family {
+                let _ = writeln!(out, "# TYPE {family} counter");
+                last_family = family.to_string();
+            }
+            let _ = writeln!(out, "{key} {}", fmt_num(*v));
+        }
+        for (name, h) in &self.histograms {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            for (i, bound) in LATENCY_BUCKETS_S.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "{name}_bucket{{le=\"{}\"}} {}",
+                    fmt_num(*bound),
+                    h.cumulative(i)
+                );
+            }
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+            let _ = writeln!(out, "{name}_sum {}", fmt_num(h.sum));
+            let _ = writeln!(out, "{name}_count {}", h.count);
+        }
+        out
+    }
+}
+
+/// Deterministic number formatting shared with the JSON layer: integral
+/// values print without a trailing `.0`, everything else uses Rust's
+/// shortest-roundtrip `f64` `Display`.
+fn fmt_num(n: f64) -> String {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_inclusive_upper() {
+        // `le` semantics: a value equal to a bound lands in that bucket.
+        assert_eq!(Histogram::bucket_index(1e-4), 0);
+        assert_eq!(Histogram::bucket_index(1.0000001e-4), 1);
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(10.0), 15);
+        assert_eq!(Histogram::bucket_index(10.1), 16, "overflow slot");
+        assert_eq!(LATENCY_BUCKETS_S.len(), 16);
+        assert!(LATENCY_BUCKETS_S.windows(2).all(|w| w[0] < w[1]), "sorted");
+    }
+
+    #[test]
+    fn histogram_observes_and_accumulates() {
+        let mut h = Histogram::default();
+        h.observe(2e-4); // bucket 1
+        h.observe(2e-4);
+        h.observe(3.0); // bucket 14 (<= 5.0)
+        assert_eq!(h.count, 3);
+        assert!((h.sum - 3.0004).abs() < 1e-12);
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[14], 1);
+        assert_eq!(h.cumulative(0), 0);
+        assert_eq!(h.cumulative(1), 2);
+        assert_eq!(h.cumulative(14), 3);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_deterministic_and_typed() {
+        let mut r = MetricsRegistry::default();
+        r.inc("b_total", 2.0);
+        r.inc("a_total", 1.0);
+        r.inc("a_total", 1.0);
+        r.observe("lat_seconds", 2e-3);
+        let text = r.render_prometheus();
+        let again = r.render_prometheus();
+        assert_eq!(text, again);
+        // Sorted families, each typed once.
+        let a = text.find("# TYPE a_total counter").expect("a family");
+        let b = text.find("# TYPE b_total counter").expect("b family");
+        assert!(a < b);
+        assert!(text.contains("a_total 2\n"));
+        assert!(text.contains("# TYPE lat_seconds histogram"));
+        assert!(text.contains("lat_seconds_bucket{le=\"0.0025\"} 1"));
+        assert!(text.contains("lat_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("lat_seconds_count 1"));
+    }
+
+    #[test]
+    fn labeled_counters_share_one_type_line() {
+        let mut r = MetricsRegistry::default();
+        r.inc("faults_total{kind=\"leader_kill\"}", 1.0);
+        r.inc("faults_total{kind=\"cache_storm\"}", 2.0);
+        let text = r.render_prometheus();
+        assert_eq!(text.matches("# TYPE faults_total counter").count(), 1);
+        assert!(text.contains("faults_total{kind=\"cache_storm\"} 2"));
+    }
+
+    #[test]
+    fn fleet_projection_is_idempotent() {
+        let m = FleetMetrics::default();
+        let r1 = MetricsRegistry::from_fleet(&m);
+        let r2 = MetricsRegistry::from_fleet(&m);
+        assert_eq!(r1.render_prometheus(), r2.render_prometheus());
+        assert_eq!(r1.counter("gemm_requests_total"), 0.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! Virtual-time flight recorder for the serving stack (DESIGN.md §16).
+//!
+//! Answers *why a run was slow*: every served unit leaves a span chain
+//! (route → \[requeue\] → reconfig → dispatch with the sim's phase
+//! breakdown → integrity), every device an occupancy timeline, and
+//! every chaos incident (injected fault, leader respawn, spill) an
+//! instant event — all on the coordinator's deterministic virtual
+//! clock, exportable as Chrome trace-event JSON (`--trace-out`,
+//! loadable in Perfetto) and as Prometheus-text metrics
+//! (`--metrics-out`).
+//!
+//! Layering:
+//! * [`model`]    — the deterministic fact types hooks record.
+//! * [`recorder`] — the enum-gated sink (`Recorder::Off` costs one
+//!   discriminant test and zero allocations on the unit hot path).
+//! * [`chrome`]   — canonical-replay Chrome trace-event exporter
+//!   (same seed ⇒ byte-identical file).
+//! * [`metrics`]  — `MetricsRegistry`: counters + fixed-bucket
+//!   histograms, projected from `FleetMetrics` at export time.
+//! * [`roofline`] — ridge points and per-dispatch bound attribution
+//!   (the paper's Figs. 7–8 lens).
+//!
+//! Not to be confused with [`crate::sim::trace`], the per-core cycle
+//! accounting inside the simulator: this module traces the *serving
+//! stack* above it.
+
+pub mod chrome;
+pub mod metrics;
+pub mod model;
+pub mod recorder;
+pub mod roofline;
+
+pub use chrome::{chrome_trace, render};
+pub use metrics::{Histogram, MetricsRegistry, LATENCY_BUCKETS_S};
+pub use model::{key_label, DispatchFact, RequeueReason, TraceFact};
+pub use recorder::{Recorder, TraceSink};
+pub use roofline::{ridge_point, RooflineTag};

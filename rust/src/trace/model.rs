@@ -1,0 +1,172 @@
+//! The fact model of the flight recorder (DESIGN.md §16).
+//!
+//! The recorder does **not** log wall-clock timestamps. Leaders race the
+//! router for batch membership, so anything stamped at runtime (arrival
+//! order, batch composition, which op triggered an LRU eviction) is
+//! timing-dependent and would break the byte-identical-trace contract.
+//! Instead every hook records a *fact*: a value that is fully determined
+//! by (seed, options, workload) — the simulated phase costs of a
+//! dispatch, the seed-scheduled fault that fired at forward `seq`, the
+//! requeue verdict a leader reached. The exporter
+//! ([`crate::trace::chrome`]) then *replays* the fact multiset on a
+//! canonical virtual timeline; the append order observed at runtime is
+//! irrelevant because every fact bucket is sorted by its own
+//! deterministic key before layout.
+
+use crate::arch::Generation;
+use crate::coordinator::{DesignKey, FaultKind, Integrity, MClass, RouteKind};
+use crate::dtype::Precision;
+use crate::sim::Bound;
+
+/// Everything deterministic about one executed GEMM dispatch: identity,
+/// shape, design, the sim's phase breakdown, and the roofline
+/// attribution the span is annotated with. For a chain, one fact per op
+/// (`op` = position, `chain` = the chain id); for a plain request a
+/// single fact with `op == 0`.
+///
+/// `t_*` are the per-dispatch phase costs from [`crate::sim::GemmReport`];
+/// the device charge for the op is
+/// `t_total * dispatches + fault_stall_s + integrity_s` — the exact
+/// expression `run_request` / `run_chain` put on the virtual device
+/// clock, which the exporter re-partitions into child phase spans.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DispatchFact {
+    /// Coordinator unit id (request or chain id).
+    pub unit: u64,
+    /// Op index within the unit (0 for plain requests).
+    pub op: usize,
+    /// Chain id when this op executed as part of a chain.
+    pub chain: Option<u64>,
+    pub device: usize,
+    pub gen: Generation,
+    pub name: String,
+    pub tenant: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Executed design class (normalized: fp32-split runs as bf16 limbs).
+    pub key: DesignKey,
+    /// Logical precision of the op as submitted (may be `Fp32Split`).
+    pub precision: Precision,
+    /// Physical host submissions: `LIMB_GEMMS` for an fp32-split op,
+    /// else 1.
+    pub dispatches: f64,
+    pub t_comp: f64,
+    pub t_mem: f64,
+    pub t_prologue: f64,
+    pub t_stall: f64,
+    pub t_dispatch: f64,
+    pub t_total: f64,
+    /// Injected `DmaStall` charge (chain op 0 / request only).
+    pub fault_stall_s: f64,
+    /// Integrity-check charge (`integrity_seconds`).
+    pub integrity_s: f64,
+    /// Roofline x-coordinate: ops per DRAM byte.
+    pub arithmetic_intensity: f64,
+    /// Ridge point of (gen, executed precision): ops/byte where peak
+    /// compute meets peak DRAM bandwidth.
+    pub ridge: f64,
+    pub tops: f64,
+    pub bound: Bound,
+    pub integrity: Integrity,
+}
+
+/// Why a leader sent a unit back to the router.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RequeueReason {
+    /// `FaultKind::DropResponse` swallowed the reply.
+    DropResponse,
+    /// The unit was tagged by a `FaultKind::LeaderKill`.
+    LeaderKill,
+    /// Integrity verification failed and a retry budget remained.
+    IntegrityRetry,
+}
+
+impl RequeueReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            RequeueReason::DropResponse => "drop_response",
+            RequeueReason::LeaderKill => "leader_kill",
+            RequeueReason::IntegrityRetry => "integrity_retry",
+        }
+    }
+}
+
+/// One deterministic event observed by the serving stack. See the
+/// module docs for why these carry no timestamps.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceFact {
+    /// Router placement decision for a unit (fresh admit or spill
+    /// re-route after a leader death).
+    Route {
+        unit: u64,
+        device: usize,
+        kind: RouteKind,
+        est_s: f64,
+    },
+    /// An executed dispatch with full phase + roofline attribution.
+    Dispatch(Box<DispatchFact>),
+    /// A leader handed the unit back to the router.
+    Requeue {
+        unit: u64,
+        device: usize,
+        reason: RequeueReason,
+    },
+    /// A seed-scheduled fault fired at forward `seq` on `device`,
+    /// tagged onto `unit`.
+    Fault {
+        device: usize,
+        seq: u64,
+        kind: FaultKind,
+        unit: u64,
+    },
+    /// The router respawned a dead leader in place.
+    Respawn { device: usize },
+    /// A unit was orphaned by a dead leader and re-routed elsewhere.
+    Spill { unit: u64 },
+    /// An explicit cache warm landed `key` on `device`.
+    Warm { device: usize, key: DesignKey },
+    /// A staged-graph chain retired with `edges` fused staging edges
+    /// (recorded by `graph::exec::serve_graph`).
+    Stage { unit: u64, device: usize, edges: usize },
+}
+
+/// Stable human label for a design key, used for span args and metric
+/// labels: `precision/layout/mclass`.
+pub fn key_label(key: DesignKey) -> String {
+    format!(
+        "{}/{}/{}",
+        key.precision.name(),
+        key.b_layout.name(),
+        match key.m_class {
+            MClass::Skinny => "skinny",
+            MClass::Wide => "wide",
+        }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::Layout;
+
+    #[test]
+    fn requeue_reason_names_are_stable() {
+        assert_eq!(RequeueReason::DropResponse.name(), "drop_response");
+        assert_eq!(RequeueReason::LeaderKill.name(), "leader_kill");
+        assert_eq!(RequeueReason::IntegrityRetry.name(), "integrity_retry");
+    }
+
+    #[test]
+    fn key_label_is_stable() {
+        let key = DesignKey::for_shape(&crate::workload::GemmShape::new(
+            "t",
+            512,
+            512,
+            512,
+            Precision::I8I8,
+        ));
+        assert_eq!(key.b_layout, Layout::RowMajor);
+        assert_eq!(key_label(key), "i8i8/rowmajor/wide");
+    }
+}

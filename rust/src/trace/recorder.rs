@@ -1,0 +1,108 @@
+//! The enum-gated fact sink.
+//!
+//! `Recorder::Off` is a unit variant: a disabled recorder is one enum
+//! discriminant test on the hot path and allocates nothing — the
+//! coordinator clones it into every leader at spawn, so there is no
+//! `Option<Mutex<..>>` to poke per unit. `Recorder::On` shares one
+//! `TraceSink` across the router and all leaders via `Arc`; facts are
+//! appended under a mutex that is only ever contended by design (a few
+//! pushes per unit, far off the per-element hot loops).
+
+use std::sync::{Arc, Mutex};
+
+use super::model::TraceFact;
+
+/// Shared fact log behind a [`Recorder::On`].
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    facts: Mutex<Vec<TraceFact>>,
+}
+
+impl TraceSink {
+    fn push(&self, fact: TraceFact) {
+        self.facts.lock().expect("trace sink poisoned").push(fact);
+    }
+
+    fn snapshot(&self) -> Vec<TraceFact> {
+        self.facts.lock().expect("trace sink poisoned").clone()
+    }
+}
+
+/// The recorder handle threaded through `CoordinatorOptions`. Cloning
+/// is cheap (unit variant or `Arc` bump) and every clone feeds the same
+/// sink, so the handle kept by `main` sees the facts leaders recorded.
+#[derive(Clone, Debug, Default)]
+pub enum Recorder {
+    /// Disabled: every hook is a discriminant test, zero allocations.
+    #[default]
+    Off,
+    /// Enabled: facts append to the shared sink.
+    On(Arc<TraceSink>),
+}
+
+impl Recorder {
+    /// A fresh enabled recorder with an empty sink.
+    pub fn on() -> Recorder {
+        Recorder::On(Arc::new(TraceSink::default()))
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, Recorder::On(_))
+    }
+
+    /// Record an already-built fact.
+    pub fn record(&self, fact: TraceFact) {
+        if let Recorder::On(sink) = self {
+            sink.push(fact);
+        }
+    }
+
+    /// Record lazily: the closure (and any allocation inside it) only
+    /// runs when the recorder is on. This is the hook used on the unit
+    /// hot path.
+    pub fn with<F: FnOnce() -> TraceFact>(&self, build: F) {
+        if let Recorder::On(sink) = self {
+            sink.push(build());
+        }
+    }
+
+    /// Snapshot of every fact recorded so far. Call after
+    /// `Coordinator::shutdown` for a complete log (leaders are joined
+    /// by then, so nothing is still in flight).
+    pub fn facts(&self) -> Vec<TraceFact> {
+        match self {
+            Recorder::Off => Vec::new(),
+            Recorder::On(sink) => sink.snapshot(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_records_nothing_and_never_runs_the_closure() {
+        let r = Recorder::Off;
+        assert!(!r.is_on());
+        r.with(|| unreachable!("closure must not run when off"));
+        assert!(r.facts().is_empty());
+    }
+
+    #[test]
+    fn clones_share_one_sink() {
+        let r = Recorder::on();
+        let c = r.clone();
+        c.record(TraceFact::Respawn { device: 3 });
+        r.with(|| TraceFact::Spill { unit: 7 });
+        let facts = r.facts();
+        assert_eq!(facts.len(), 2);
+        assert_eq!(facts[0], TraceFact::Respawn { device: 3 });
+        assert_eq!(facts[1], TraceFact::Spill { unit: 7 });
+    }
+
+    #[test]
+    fn default_is_off() {
+        assert!(!Recorder::default().is_on());
+    }
+}

@@ -1,63 +1,54 @@
 #!/usr/bin/env bash
-# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–9): run the
+# Perf-trajectory artifact (ISSUE 3, extended by ISSUEs 4–10): run the
 # hotpath, chain_vs_isolated, bfp16_vs_bf16, graph_vs_chain, soak,
-# llm_serving, abft_overhead and fp32_split benches with JSON recording
-# enabled and merge them into BENCH_PR9.json — GEMM/s, functional GB/s,
-# packing/threading speedups, the native-bfp16 vs bf16-emulation
-# speedup, the graph compiler's DAG-aware-schedule speedups, the
-# chaos-soak's sustained TOPS / p99 / fault counters, the
+# llm_serving, abft_overhead, fp32_split and trace_overhead benches with
+# JSON recording enabled and merge them into BENCH_PR${PR}.json —
+# GEMM/s, functional GB/s, packing/threading speedups, the native-bfp16
+# vs bf16-emulation speedup, the graph compiler's DAG-aware-schedule
+# speedups, the chaos-soak's sustained TOPS / p99 / fault counters, the
 # continuous-batching LLM serving tokens/s + p50/p99 token latency +
 # coalescing speedup, the ABFT integrity layer's device-time overhead
-# vs integrity-off and vs a full reference recompute, and the Ozaki
+# vs integrity-off and vs a full reference recompute, the Ozaki
 # fp32-split path's accuracy recovery over bf16 + its simulated device
-# cost — so future PRs can diff against a machine-readable baseline.
+# cost, and the flight recorder's device-time overhead (gated ≤1%, and
+# bit-identical in practice) — so future PRs can diff against a
+# machine-readable baseline. scripts/bench_trend.py reads every
+# BENCH_PR*.json in the repo root and prints the per-key trajectory.
 #
-# usage: scripts/bench.sh [out.json]     (default: BENCH_PR9.json)
+# usage: scripts/bench.sh [out.json]     (default: BENCH_PR${PR}.json)
+#        PR=11 scripts/bench.sh          (stamp a different PR number)
 #        BENCH_MS=500 scripts/bench.sh   (longer per-case budget)
 #        SOAK_OPS=1500 scripts/bench.sh  (shorter soak horizon)
 #        LLM_SESSIONS=6 scripts/bench.sh (lighter serving load)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-out="${1:-BENCH_PR9.json}"
+PR="${PR:-10}"
+out="${1:-BENCH_PR${PR}.json}"
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
 
 export BENCH_MS="${BENCH_MS:-200}"
 export SOAK_OPS="${SOAK_OPS:-10000}"
 
-echo "==> cargo bench --bench hotpath"
-BENCH_JSON="$tmp/hotpath.json" cargo bench --bench hotpath
-
-echo "==> cargo bench --bench chain_vs_isolated"
-BENCH_JSON="$tmp/chain.json" cargo bench --bench chain_vs_isolated
-
-echo "==> cargo bench --bench bfp16_vs_bf16"
-BENCH_JSON="$tmp/bfp16.json" cargo bench --bench bfp16_vs_bf16
-
-echo "==> cargo bench --bench graph_vs_chain"
-BENCH_JSON="$tmp/graph.json" cargo bench --bench graph_vs_chain
-
-echo "==> cargo bench --bench soak (SOAK_OPS=$SOAK_OPS)"
-BENCH_JSON="$tmp/soak.json" cargo bench --bench soak
-
-echo "==> cargo bench --bench llm_serving"
-BENCH_JSON="$tmp/llm.json" cargo bench --bench llm_serving
-
-echo "==> cargo bench --bench abft_overhead"
-BENCH_JSON="$tmp/abft.json" cargo bench --bench abft_overhead
-
-echo "==> cargo bench --bench fp32_split"
-BENCH_JSON="$tmp/fp32split.json" cargo bench --bench fp32_split
+benches=(hotpath chain_vs_isolated bfp16_vs_bf16 graph_vs_chain soak \
+    llm_serving abft_overhead fp32_split trace_overhead)
+json_args=()
+for bench in "${benches[@]}"; do
+    echo "==> cargo bench --bench $bench"
+    BENCH_JSON="$tmp/$bench.json" cargo bench --bench "$bench"
+    json_args+=("$tmp/$bench.json")
+done
 
 echo "==> merging into $out"
-python3 - "$tmp/hotpath.json" "$tmp/chain.json" "$tmp/bfp16.json" "$tmp/graph.json" \
-    "$tmp/soak.json" "$tmp/llm.json" "$tmp/abft.json" "$tmp/fp32split.json" "$out" <<'PY'
+python3 - "$PR" "${json_args[@]}" "$out" <<'PY'
 import json
 import sys
 
-hot, chain, bfp, graph, soak, llm, abft, fp32split, out = sys.argv[1:10]
-groups = [json.load(open(p)) for p in (hot, chain, bfp, graph, soak, llm, abft, fp32split)]
+pr = sys.argv[1]
+*paths, out = sys.argv[2:]
+groups = [json.load(open(p)) for p in paths]
+hot, chain, bfp, graph, soak, llm, abft, fp32split, trace = groups
 
 
 def thrpt(group, name):
@@ -68,7 +59,7 @@ def thrpt(group, name):
 
 
 summary = {
-    "artifact": "BENCH_PR9",
+    "artifact": f"BENCH_PR{pr}",
     "description": "packed+parallel functional executor vs re-streaming serial "
     "baseline, native bfp16 vs bf16 emulation on XDNA2, the graph "
     "compiler's DAG-aware fleet schedule vs isolated-dispatch and "
@@ -76,50 +67,61 @@ summary = {
     "(sustained TOPS / p99 under seeded fault injection), the "
     "continuous-batching LLM serving runtime (tokens/s, p50/p99 token "
     "latency, coalesced-vs-per-session decode speedup on both "
-    "generations), and the ABFT integrity layer's device-time overhead "
+    "generations), the ABFT integrity layer's device-time overhead "
     "at the paper's Table 2-3 shapes (vs integrity-off and vs a full "
-    "reference recompute, both generations), and the fp32-split "
+    "reference recompute, both generations), the fp32-split "
     "path's accuracy recovery over plain bf16 at its LIMB_GEMMS-dispatch "
-    "simulated device cost",
-    "gemms_per_s": thrpt(groups[0], "executor_gemms_per_s"),
-    "functional_gb_per_s": thrpt(groups[0], "executor_functional_gb_s"),
-    "packing_speedup_serial": thrpt(groups[0], "executor_packing_speedup"),
-    "threads8_speedup": thrpt(groups[0], "executor_threads8_speedup"),
-    "bfp16_vs_bf16_speedup": thrpt(groups[2], "bfp16_vs_bf16_speedup"),
-    "bfp16_vs_bf16_aligned_speedup": thrpt(groups[2], "bfp16_vs_bf16_aligned_speedup"),
-    "bfp16_table3_tops": thrpt(groups[2], "bfp16_table3_tops"),
-    "graph_vs_isolated_speedup_xdna": thrpt(groups[3], "graph_vs_isolated_speedup_xdna"),
-    "graph_vs_isolated_speedup_xdna2": thrpt(groups[3], "graph_vs_isolated_speedup_xdna2"),
-    "graph_vs_chain_speedup_xdna": thrpt(groups[3], "graph_vs_chain_speedup_xdna"),
-    "graph_vs_chain_speedup_xdna2": thrpt(groups[3], "graph_vs_chain_speedup_xdna2"),
-    "moe_vs_isolated_speedup_xdna2": thrpt(groups[3], "moe_vs_isolated_speedup_xdna2"),
-    "moe_vs_chain_speedup_xdna2": thrpt(groups[3], "moe_vs_chain_speedup_xdna2"),
-    "soak_ops_per_s": thrpt(groups[4], "soak_ops_per_s"),
-    "soak_fleet_tops": thrpt(groups[4], "soak_fleet_tops"),
-    "soak_sustained_tops": thrpt(groups[4], "soak_sustained_tops"),
-    "soak_p99_device_ms": thrpt(groups[4], "soak_p99_device_ms"),
-    "soak_faults_fired": thrpt(groups[4], "soak_faults_fired"),
-    "soak_requeues": thrpt(groups[4], "soak_requeues"),
-    "llm_tokens_per_s_xdna2": thrpt(groups[5], "llm_tokens_per_s_xdna2"),
-    "llm_token_p50_ms_xdna2": thrpt(groups[5], "llm_token_p50_ms_xdna2"),
-    "llm_token_p99_ms_xdna2": thrpt(groups[5], "llm_token_p99_ms_xdna2"),
-    "llm_coalesce_speedup_xdna2": thrpt(groups[5], "llm_coalesce_speedup_xdna2"),
-    "llm_tokens_per_s_xdna": thrpt(groups[5], "llm_tokens_per_s_xdna"),
-    "llm_token_p50_ms_xdna": thrpt(groups[5], "llm_token_p50_ms_xdna"),
-    "llm_token_p99_ms_xdna": thrpt(groups[5], "llm_token_p99_ms_xdna"),
-    "llm_coalesce_speedup_xdna": thrpt(groups[5], "llm_coalesce_speedup_xdna"),
-    "abft_overhead_pct_xdna": thrpt(groups[6], "abft_overhead_pct_xdna"),
-    "abft_overhead_pct_xdna2": thrpt(groups[6], "abft_overhead_pct_xdna2"),
-    "full_verify_overhead_pct_xdna": thrpt(groups[6], "full_verify_overhead_pct_xdna"),
-    "full_verify_overhead_pct_xdna2": thrpt(groups[6], "full_verify_overhead_pct_xdna2"),
-    "full_over_abft_cost_ratio_xdna": thrpt(groups[6], "full_over_abft_cost_ratio_xdna"),
-    "full_over_abft_cost_ratio_xdna2": thrpt(groups[6], "full_over_abft_cost_ratio_xdna2"),
-    "fp32_split_recovery_x": thrpt(groups[7], "fp32_split_recovery_x"),
-    "fp32_split_cost_ratio_xdna": thrpt(groups[7], "fp32_split_cost_ratio_xdna"),
-    "fp32_split_cost_ratio_xdna2": thrpt(groups[7], "fp32_split_cost_ratio_xdna2"),
+    "simulated device cost, and the flight recorder's virtual-device-time "
+    "overhead (host-side recorder; gated at 1% and bit-identical in "
+    "practice, both generations)",
+    "gemms_per_s": thrpt(hot, "executor_gemms_per_s"),
+    "functional_gb_per_s": thrpt(hot, "executor_functional_gb_s"),
+    "packing_speedup_serial": thrpt(hot, "executor_packing_speedup"),
+    "threads8_speedup": thrpt(hot, "executor_threads8_speedup"),
+    "bfp16_vs_bf16_speedup": thrpt(bfp, "bfp16_vs_bf16_speedup"),
+    "bfp16_vs_bf16_aligned_speedup": thrpt(bfp, "bfp16_vs_bf16_aligned_speedup"),
+    "bfp16_table3_tops": thrpt(bfp, "bfp16_table3_tops"),
+    "graph_vs_isolated_speedup_xdna": thrpt(graph, "graph_vs_isolated_speedup_xdna"),
+    "graph_vs_isolated_speedup_xdna2": thrpt(graph, "graph_vs_isolated_speedup_xdna2"),
+    "graph_vs_chain_speedup_xdna": thrpt(graph, "graph_vs_chain_speedup_xdna"),
+    "graph_vs_chain_speedup_xdna2": thrpt(graph, "graph_vs_chain_speedup_xdna2"),
+    "moe_vs_isolated_speedup_xdna2": thrpt(graph, "moe_vs_isolated_speedup_xdna2"),
+    "moe_vs_chain_speedup_xdna2": thrpt(graph, "moe_vs_chain_speedup_xdna2"),
+    "soak_ops_per_s": thrpt(soak, "soak_ops_per_s"),
+    "soak_fleet_tops": thrpt(soak, "soak_fleet_tops"),
+    "soak_sustained_tops": thrpt(soak, "soak_sustained_tops"),
+    "soak_p99_device_ms": thrpt(soak, "soak_p99_device_ms"),
+    "soak_faults_fired": thrpt(soak, "soak_faults_fired"),
+    "soak_requeues": thrpt(soak, "soak_requeues"),
+    "llm_tokens_per_s_xdna2": thrpt(llm, "llm_tokens_per_s_xdna2"),
+    "llm_token_p50_ms_xdna2": thrpt(llm, "llm_token_p50_ms_xdna2"),
+    "llm_token_p99_ms_xdna2": thrpt(llm, "llm_token_p99_ms_xdna2"),
+    "llm_coalesce_speedup_xdna2": thrpt(llm, "llm_coalesce_speedup_xdna2"),
+    "llm_tokens_per_s_xdna": thrpt(llm, "llm_tokens_per_s_xdna"),
+    "llm_token_p50_ms_xdna": thrpt(llm, "llm_token_p50_ms_xdna"),
+    "llm_token_p99_ms_xdna": thrpt(llm, "llm_token_p99_ms_xdna"),
+    "llm_coalesce_speedup_xdna": thrpt(llm, "llm_coalesce_speedup_xdna"),
+    "abft_overhead_pct_xdna": thrpt(abft, "abft_overhead_pct_xdna"),
+    "abft_overhead_pct_xdna2": thrpt(abft, "abft_overhead_pct_xdna2"),
+    "full_verify_overhead_pct_xdna": thrpt(abft, "full_verify_overhead_pct_xdna"),
+    "full_verify_overhead_pct_xdna2": thrpt(abft, "full_verify_overhead_pct_xdna2"),
+    "full_over_abft_cost_ratio_xdna": thrpt(abft, "full_over_abft_cost_ratio_xdna"),
+    "full_over_abft_cost_ratio_xdna2": thrpt(abft, "full_over_abft_cost_ratio_xdna2"),
+    "fp32_split_recovery_x": thrpt(fp32split, "fp32_split_recovery_x"),
+    "fp32_split_cost_ratio_xdna": thrpt(fp32split, "fp32_split_cost_ratio_xdna"),
+    "fp32_split_cost_ratio_xdna2": thrpt(fp32split, "fp32_split_cost_ratio_xdna2"),
+    "trace_device_time_overhead_pct_xdna": thrpt(trace, "trace_device_time_overhead_pct_xdna"),
+    "trace_device_time_overhead_pct_xdna2": thrpt(trace, "trace_device_time_overhead_pct_xdna2"),
+    "trace_facts_per_request_xdna": thrpt(trace, "trace_facts_per_request_xdna"),
+    "trace_facts_per_request_xdna2": thrpt(trace, "trace_facts_per_request_xdna2"),
     "groups": groups,
 }
 with open(out, "w") as f:
     json.dump(summary, f, indent=2)
 print(f"wrote {out}")
 PY
+
+echo "==> trend across BENCH_PR*.json"
+# Fails (exit 1) if a pinned speedup key regressed >10% vs the previous
+# PR's artifact, so a perf regression is caught at bench time.
+python3 scripts/bench_trend.py

@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Perf trajectory across PR bench artifacts.
+
+Loads every ``BENCH_PR*.json`` in the repo root (the artifacts
+``scripts/bench.sh`` writes, one per PR), prints a per-key trajectory
+table ordered by PR number, and gates the pinned speedup keys: if the
+newest artifact regressed more than ``REGRESSION_PCT`` (10%) below the
+previous artifact on any key in ``PINNED`` that both artifacts carry,
+the script exits nonzero with the offending keys named.
+
+Keys only present in newer artifacts (each PR extends the schema) are
+shown with ``-`` for the PRs that predate them and are never treated as
+regressions. With fewer than two artifacts there is nothing to compare;
+the table (if any) still prints and the gate passes.
+
+usage: scripts/bench_trend.py [root-dir]
+"""
+
+import glob
+import json
+import os
+import re
+import sys
+
+REGRESSION_PCT = 10.0
+
+# Higher-is-better keys gated against the previous PR's artifact. Pure
+# measurements (TOPS, tokens/s) wobble with runner hardware, so the gate
+# pins the *ratios* — speedups and recovery factors are self-normalizing
+# (numerator and denominator run on the same machine).
+PINNED = [
+    "packing_speedup_serial",
+    "threads8_speedup",
+    "bfp16_vs_bf16_speedup",
+    "graph_vs_isolated_speedup_xdna",
+    "graph_vs_isolated_speedup_xdna2",
+    "graph_vs_chain_speedup_xdna",
+    "graph_vs_chain_speedup_xdna2",
+    "llm_coalesce_speedup_xdna",
+    "llm_coalesce_speedup_xdna2",
+    "fp32_split_recovery_x",
+]
+
+
+def load_artifacts(root):
+    arts = []
+    for path in glob.glob(os.path.join(root, "BENCH_PR*.json")):
+        m = re.fullmatch(r"BENCH_PR(\d+)\.json", os.path.basename(path))
+        if not m:
+            continue
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping unreadable {path}: {e}", file=sys.stderr)
+            continue
+        arts.append((int(m.group(1)), os.path.basename(path), data))
+    arts.sort()
+    return arts
+
+
+def numeric_keys(arts):
+    """Every scalar key across all artifacts, first-seen order."""
+    keys = []
+    for _, _, data in arts:
+        for k, v in data.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool) and k not in keys:
+                keys.append(k)
+    return keys
+
+
+def fmt(v):
+    if v is None:
+        return "-"
+    if abs(v) >= 1000:
+        return f"{v:.0f}"
+    return f"{v:.3g}"
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.join(os.path.dirname(__file__), "..")
+    arts = load_artifacts(root)
+    if not arts:
+        print("no BENCH_PR*.json artifacts found — run scripts/bench.sh first")
+        return 0
+
+    keys = numeric_keys(arts)
+    cols = [f"PR{pr}" for pr, _, _ in arts]
+    width = max(len(k) for k in keys)
+    print(f"{'key':<{width}}  " + "  ".join(f"{c:>10}" for c in cols))
+    for k in keys:
+        row = [fmt(data.get(k)) for _, _, data in arts]
+        print(f"{k:<{width}}  " + "  ".join(f"{v:>10}" for v in row))
+
+    if len(arts) < 2:
+        print("\nonly one artifact — nothing to gate against")
+        return 0
+
+    (_, prev_name, prev), (_, cur_name, cur) = arts[-2], arts[-1]
+    regressions = []
+    for k in PINNED:
+        a, b = prev.get(k), cur.get(k)
+        if not isinstance(a, (int, float)) or not isinstance(b, (int, float)) or a <= 0:
+            continue
+        drop_pct = 100.0 * (a - b) / a
+        if drop_pct > REGRESSION_PCT:
+            regressions.append((k, a, b, drop_pct))
+
+    if regressions:
+        print(f"\nREGRESSION: {cur_name} vs {prev_name} (>{REGRESSION_PCT:.0f}% drop):")
+        for k, a, b, drop in regressions:
+            print(f"  {k}: {fmt(a)} -> {fmt(b)}  ({drop:.1f}% drop)")
+        return 1
+
+    print(f"\nok: no pinned key regressed >{REGRESSION_PCT:.0f}% ({cur_name} vs {prev_name})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
